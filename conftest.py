@@ -1,0 +1,8 @@
+"""Pytest bootstrap: make `python/` importable so the suite runs both as
+`cd python && pytest tests/` and as `pytest python/tests/` from the repo
+root."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,16 @@
+use nsim::config::{RunConfig, Strategy};
+use nsim::engine::simulate;
+use nsim::models;
+fn main() {
+    let spec = models::sanity_net(300, 4).unwrap();
+    for seed in [12u64, 91856] {
+        let cfg = RunConfig { strategy: Strategy::Conventional, m_ranks: 2, threads_per_rank: 2,
+            t_model_ms: 200.0, seed, record_spikes: true, ..Default::default() };
+        let res = simulate(&spec, &cfg).unwrap();
+        println!("seed {}: {} spikes, rate {:.3}", seed, res.n_spikes(), res.mean_rate_hz(1200));
+    }
+    // how strong is the drive vs weights?
+    use nsim::network::spec::LifParams;
+    let p = LifParams { i_e_pa: LifParams::default().i_e_for_rate(8.0), ..Default::default() };
+    println!("drive/step = {:.5} mV, w = 0.25 mV, k_intra={} k_inter={}", p.drive(0.1), spec.k_intra, spec.k_inter);
+}

@@ -1,0 +1,135 @@
+//! The real-world model: the 32-area macaque visual cortex model (MAM)
+//! in its ground state.
+//!
+//! Functionally simulates a downscaled MAM (LIF neurons, heterogeneous
+//! area sizes and drives) under all three strategies — conventional,
+//! intermediate, structure-aware — optionally pushing the update phase
+//! through the AOT-compiled XLA artifact (`--update-path xla`), then
+//! reproduces the paper's Fig 9 comparison at full scale on both machine
+//! profiles with the virtual cluster.
+//!
+//!     cargo run --release --example mam_ground_state
+//!     cargo run --release --example mam_ground_state -- --update-path xla
+
+use nsim::config::{RunConfig, Strategy, UpdatePath};
+use nsim::engine::simulate;
+use nsim::models;
+use nsim::util::cli::Args;
+use nsim::util::tablefmt::{fnum, Table};
+use nsim::util::timers::Phase;
+use nsim::vcluster::{run_cluster, MachineProfile, VcOptions, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let scale = args.f64_or("scale", 0.002)?;
+    let t_model = args.f64_or("t-model", 200.0)?;
+    let update_path = match args.str_or("update-path", "native").as_str() {
+        "xla" => UpdatePath::Xla,
+        _ => UpdatePath::Native,
+    };
+    args.finish()?;
+
+    let spec = models::mam(scale, 1.0)?;
+    println!(
+        "MAM ground state: {} areas, {} neurons (scale {}), D = {}",
+        spec.n_areas(),
+        spec.total_neurons(),
+        scale,
+        spec.delay_ratio()
+    );
+
+    // ---------- functional simulation, M=8 ranks (4 areas each) --------
+    let mut table = Table::new(&[
+        "strategy", "spikes", "rate/s", "deliver", "update", "collocate",
+        "sync", "data",
+    ]);
+    let mut rates = Vec::new();
+    for strategy in [
+        Strategy::Conventional,
+        Strategy::Intermediate,
+        Strategy::StructureAware,
+    ] {
+        let cfg = RunConfig {
+            strategy,
+            m_ranks: 8,
+            threads_per_rank: 2,
+            t_model_ms: t_model,
+            seed: 12,
+            update_path,
+            record_spikes: true,
+            record_cycle_times: false,
+        };
+        let res = simulate(&spec, &cfg)?;
+        let rate = res.mean_rate_hz(spec.total_neurons() as usize);
+        table.row(vec![
+            strategy.name().into(),
+            res.n_spikes().to_string(),
+            fnum(rate),
+            fnum(res.mean_times.get(Phase::Deliver)),
+            fnum(res.mean_times.get(Phase::Update)),
+            fnum(res.mean_times.get(Phase::Collocate)),
+            fnum(res.mean_times.get(Phase::Synchronize)),
+            fnum(res.mean_times.get(Phase::DataExchange)),
+        ]);
+        rates.push(rate);
+    }
+    println!("{}", table.render());
+    // the MAM draws random (non-binary-fraction) weights; spike trains
+    // may differ in float ulps across strategies, rates must agree
+    let spread = rates
+        .iter()
+        .cloned()
+        .fold(f64::MIN, f64::max)
+        - rates.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(
+        spread < 0.05 * rates[0].max(0.1),
+        "strategy rate spread too large: {rates:?}"
+    );
+    println!("rates agree across strategies: {rates:?}\n");
+
+    // ---------- paper scale (Fig 9): both machines, three strategies ---
+    println!("== Fig 9 protocol at paper scale (virtual cluster) ==");
+    let spec_full = models::mam(1.0, 1.0)?;
+    let mut table = Table::new(&[
+        "machine/strategy",
+        "RTF",
+        "deliver",
+        "update",
+        "collocate",
+        "sync",
+        "data",
+    ]);
+    for machine in [MachineProfile::supermuc_ng(), MachineProfile::jureca_dc()]
+    {
+        for strategy in [
+            Strategy::Conventional,
+            Strategy::Intermediate,
+            Strategy::StructureAware,
+        ] {
+            let w =
+                Workload::derive(&spec_full, strategy, 32, machine.t_m)?;
+            let res = run_cluster(
+                &machine,
+                &w,
+                &VcOptions {
+                    t_model_ms: 2_000.0,
+                    h_ms: spec_full.h_ms,
+                    seed: 654,
+                    record_cycle_times: false,
+                },
+            )?;
+            let t_s = 2.0;
+            table.row(vec![
+                format!("{}/{}", machine.name, strategy.name()),
+                fnum(res.rtf()),
+                fnum(res.mean_times.get(Phase::Deliver) / t_s),
+                fnum(res.mean_times.get(Phase::Update) / t_s),
+                fnum(res.mean_times.get(Phase::Collocate) / t_s),
+                fnum(res.mean_times.get(Phase::Synchronize) / t_s),
+                fnum(res.mean_times.get(Phase::DataExchange) / t_s),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: build a small multi-area network, run it under the
+//! conventional and the structure-aware strategy, and verify that the
+//! two produce *identical* spike trains while communicating globally
+//! 10x less often.
+//!
+//!     cargo run --release --example quickstart
+
+use nsim::config::{RunConfig, Strategy};
+use nsim::engine::simulate;
+use nsim::models;
+use nsim::util::timers::Phase;
+
+fn main() -> anyhow::Result<()> {
+    // a 4-area LIF network, 300 neurons per area, intra-area delays
+    // >= 0.1 ms, inter-area delays >= 1.0 ms  =>  delay ratio D = 10
+    let spec = models::sanity_net(300, 4)?;
+    println!(
+        "model: {} | {} neurons | {} areas | D = {}",
+        spec.name,
+        spec.total_neurons(),
+        spec.n_areas(),
+        spec.delay_ratio()
+    );
+
+    let mut spike_trains = Vec::new();
+    for strategy in [Strategy::Conventional, Strategy::StructureAware] {
+        let cfg = RunConfig {
+            strategy,
+            m_ranks: 4,
+            threads_per_rank: 2,
+            t_model_ms: 500.0,
+            seed: 12,
+            record_spikes: true,
+            ..RunConfig::default()
+        };
+        let res = simulate(&spec, &cfg)?;
+        println!(
+            "\n{}: {} spikes, {:.2} spikes/s/neuron, \
+             {} global exchanges, {} local swaps",
+            strategy.name(),
+            res.n_spikes(),
+            res.mean_rate_hz(spec.total_neurons() as usize),
+            res.comm_stats.0,
+            res.comm_stats.1,
+        );
+        for p in Phase::ALL {
+            println!("  {:<13} {:.4} s", p.name(), res.mean_times.get(p));
+        }
+        spike_trains.push(res.spikes);
+    }
+
+    assert_eq!(
+        spike_trains[0], spike_trains[1],
+        "strategies must be observationally equivalent"
+    );
+    println!(
+        "\nOK: identical spike trains ({} events) — the structure-aware \
+         strategy changed the communication schedule, not the dynamics.",
+        spike_trains[0].len()
+    );
+    Ok(())
+}

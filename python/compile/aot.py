@@ -1,0 +1,107 @@
+"""AOT pipeline: lower the L2 jax step functions to HLO text artifacts.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` Rust crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per entry in ``ARTIFACTS`` plus a
+``manifest.json`` describing shapes so the Rust artifact registry
+(`rust/src/runtime/registry.rs`) can pick executables without re-parsing
+HLO.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs(batches=(512, 2048, 8192), multistep_k=(10,),
+                   multistep_b=(2048,)):
+    """Enumerate (name, fn, example_args, meta) artifact specs."""
+    specs = []
+    for b in batches:
+        specs.append((
+            f"lif_step_b{b}",
+            model.lif_step_fn,
+            (_f32(model.PARAM_LEN), _f32(b), _f32(b), _f32(b)),
+            {"kind": "lif_step", "batch": b,
+             "inputs": ["params", "v", "refr", "syn"],
+             "outputs": ["v", "refr", "spikes"]},
+        ))
+        specs.append((
+            f"ianf_step_b{b}",
+            model.ianf_step_fn,
+            (_f32(b), _f32(b), _f32(b)),
+            {"kind": "ianf_step", "batch": b,
+             "inputs": ["phase", "interval", "syn"],
+             "outputs": ["phase", "spikes"]},
+        ))
+    for k in multistep_k:
+        for b in multistep_b:
+            specs.append((
+                f"lif_multistep_k{k}_b{b}",
+                model.lif_multistep_fn,
+                (_f32(model.PARAM_LEN), _f32(b), _f32(b), _f32(k, b)),
+                {"kind": "lif_multistep", "batch": b, "steps": k,
+                 "inputs": ["params", "v", "refr", "syn_steps"],
+                 "outputs": ["v", "refr", "spikes"]},
+            ))
+    return specs
+
+
+def build(out_dir: str, specs=None, verbose: bool = True) -> dict:
+    specs = specs if specs is not None else artifact_specs()
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, args, meta in specs:
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {"name": name, "file": fname, **meta}
+        manifest["artifacts"].append(entry)
+        if verbose:
+            print(f"  wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"  wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="directory for *.hlo.txt + manifest.json")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

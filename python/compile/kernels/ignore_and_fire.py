@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: ignore-and-fire neuron update (MAM-benchmark, §4.2).
+
+The MAM-benchmark's neuron receives and emits spikes like an
+integrate-and-fire neuron but does not propagate a membrane potential: it
+fires at a predefined interval and phase, independent of synaptic input.
+This keeps the update cost independent of activity so that weak-scaling
+experiments hold workload constant.
+
+State per neuron (all f32):
+    phase     current position within the firing interval, in steps
+    interval  firing interval in steps (integer-valued float, per neuron)
+
+Update:  phase' = phase + 1;  spike where phase' >= interval; spiking
+neurons wrap phase' to 0.  Synaptic input is accepted (so that delivery
+workload is realistic) but ignored.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .lif import pick_block
+
+
+def _ianf_kernel(phase_ref, interval_ref, syn_ref, phase_out_ref,
+                 spk_out_ref):
+    phase = phase_ref[...] + 1.0
+    interval = interval_ref[...]
+    _ = syn_ref[...]  # delivered but deliberately ignored
+    spike = phase >= interval
+    phase_out_ref[...] = jnp.where(spike, 0.0, phase)
+    spk_out_ref[...] = spike.astype(jnp.float32)
+
+
+def ianf_step(phase, interval, syn, *, block: int | None = None):
+    """One resolution step for a batch of ignore-and-fire neurons.
+
+    Args:
+        phase, interval, syn: f32[B].
+
+    Returns:
+        (phase', spikes) — each f32[B]; spikes is a 0/1 mask.
+    """
+    (batch,) = phase.shape
+    if block is None:
+        block = pick_block(batch)
+    if batch % block != 0:
+        raise ValueError(f"block {block} does not divide batch {batch}")
+    grid = (batch // block,)
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = [jax.ShapeDtypeStruct((batch,), jnp.float32)] * 2
+    return pl.pallas_call(
+        _ianf_kernel,
+        grid=grid,
+        in_specs=[vec_spec, vec_spec, vec_spec],
+        out_specs=[vec_spec, vec_spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(phase, interval, syn)

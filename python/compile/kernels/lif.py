@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: leaky integrate-and-fire (iaf_psc_delta) state update.
+
+The paper's update phase advances, per simulation cycle, the membrane state
+of every process-local neuron by one resolution step ``h`` (0.1 ms).  This is
+the arithmetic hot-spot of the update phase, expressed here as a Pallas
+kernel so that the same code lowers into the model HLO at build time.
+
+Exact-integration update for delta-current synapses (Rotter & Diesmann 1999
+as used by NEST's ``iaf_psc_delta``), in terms of the deviation ``v`` of the
+membrane potential from resting potential:
+
+    non-refractory:  v' = p22 * v + drive + syn_in
+    refractory:      v' = v_reset, input discarded, counter decrements
+    threshold:       v' >= theta  ->  spike, v' := v_reset, refr := ref_steps
+
+All state is f32 (the refractory counter holds small integers exactly) so
+that a single dtype crosses the PJRT boundary.
+
+Parameter vector layout (f32[PARAM_LEN]):
+    [0] p22       membrane propagator  exp(-h / tau_m)
+    [1] drive     constant external drive per step, (1 - p22) * R_m * I_e
+    [2] theta     spike threshold (relative to resting potential)
+    [3] v_reset   reset value (relative to resting potential)
+    [4] ref_steps refractory period in steps (integer-valued float)
+    [5..7]        reserved
+
+TPU note (DESIGN.md §Hardware-Adaptation): the op is elementwise over the
+neuron axis; blocks of 512 neurons keep each operand at 2 KiB in VMEM and the
+update runs on the VPU.  ``interpret=True`` is mandatory on CPU PJRT.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PARAM_LEN = 8
+#: default neuron-axis block; multiples keep HBM->VMEM streams aligned
+DEFAULT_BLOCK = 512
+
+
+def _lif_kernel(params_ref, v_ref, refr_ref, syn_ref, v_out_ref,
+                refr_out_ref, spk_out_ref):
+    """Single-step LIF update on one neuron block."""
+    p22 = params_ref[0]
+    drive = params_ref[1]
+    theta = params_ref[2]
+    v_reset = params_ref[3]
+    ref_steps = params_ref[4]
+
+    v = v_ref[...]
+    refr = refr_ref[...]
+    syn = syn_ref[...]
+
+    is_ref = refr > 0.0
+    # exact integration; refractory neurons are clamped and discard input
+    v_int = p22 * v + drive + syn
+    v_new = jnp.where(is_ref, v_reset, v_int)
+    spike = jnp.logical_and(jnp.logical_not(is_ref), v_new >= theta)
+    v_out_ref[...] = jnp.where(spike, v_reset, v_new)
+    refr_out_ref[...] = jnp.where(spike, ref_steps,
+                                  jnp.maximum(refr - 1.0, 0.0))
+    spk_out_ref[...] = spike.astype(jnp.float32)
+
+
+def pick_block(batch: int, preferred: int = DEFAULT_BLOCK) -> int:
+    """Largest block <= preferred that divides ``batch``."""
+    if batch <= 0:
+        raise ValueError(f"batch must be positive, got {batch}")
+    b = min(batch, preferred)
+    while batch % b != 0:
+        b -= 1
+    return b
+
+
+def lif_step(params, v, refr, syn, *, block: int | None = None):
+    """One resolution step for a batch of LIF neurons via Pallas.
+
+    Args:
+        params: f32[PARAM_LEN] parameter vector (see module docstring).
+        v, refr, syn: f32[B] membrane deviation, refractory counter,
+            accumulated synaptic delta input for this step.
+        block: neuron-axis block size; must divide B (default: largest
+            divisor of B that is <= 512).
+
+    Returns:
+        (v', refr', spikes) — each f32[B]; spikes is a 0/1 mask.
+    """
+    (batch,) = v.shape
+    if block is None:
+        block = pick_block(batch)
+    if batch % block != 0:
+        raise ValueError(f"block {block} does not divide batch {batch}")
+    grid = (batch // block,)
+    out_shape = [jax.ShapeDtypeStruct((batch,), jnp.float32)] * 3
+    param_spec = pl.BlockSpec((PARAM_LEN,), lambda i: (0,))
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _lif_kernel,
+        grid=grid,
+        in_specs=[param_spec, vec_spec, vec_spec, vec_spec],
+        out_specs=[vec_spec, vec_spec, vec_spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(params, v, refr, syn)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def lif_step_jit(params, v, refr, syn, block: int | None = None):
+    return lif_step(params, v, refr, syn, block=block)

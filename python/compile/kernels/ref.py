@@ -1,0 +1,40 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth semantics the kernels (and the Rust native
+implementation in ``rust/src/engine/neuron.rs``) must match.  Written in
+straight-line jnp with the same operation order as the kernels so that f32
+results agree bit-for-bit in practice.
+"""
+
+import jax.numpy as jnp
+
+
+def lif_step_ref(params, v, refr, syn):
+    """Reference single-step iaf_psc_delta update.  See kernels/lif.py."""
+    p22, drive, theta, v_reset, ref_steps = (
+        params[0], params[1], params[2], params[3], params[4])
+    is_ref = refr > 0.0
+    v_int = p22 * v + drive + syn
+    v_new = jnp.where(is_ref, v_reset, v_int)
+    spike = jnp.logical_and(jnp.logical_not(is_ref), v_new >= theta)
+    v_out = jnp.where(spike, v_reset, v_new)
+    refr_out = jnp.where(spike, ref_steps, jnp.maximum(refr - 1.0, 0.0))
+    return v_out, refr_out, spike.astype(jnp.float32)
+
+
+def lif_multistep_ref(params, v, refr, syn_steps):
+    """Reference K-step update; syn_steps is f32[K, B]."""
+    spikes = []
+    for k in range(syn_steps.shape[0]):
+        v, refr, spk = lif_step_ref(params, v, refr, syn_steps[k])
+        spikes.append(spk)
+    return v, refr, jnp.stack(spikes)
+
+
+def ianf_step_ref(phase, interval, syn):
+    """Reference ignore-and-fire update.  See kernels/ignore_and_fire.py."""
+    del syn
+    phase = phase + 1.0
+    spike = phase >= interval
+    phase_out = jnp.where(spike, 0.0, phase)
+    return phase_out, spike.astype(jnp.float32)

@@ -1,0 +1,79 @@
+"""L2: jax step functions for the simulation's update phase.
+
+These wrap the L1 Pallas kernels into the exact computations the Rust
+coordinator executes per simulation cycle via PJRT:
+
+* ``lif_step_fn``       — one resolution step for B LIF neurons,
+* ``lif_multistep_fn``  — K consecutive steps (a whole communication epoch of
+                          the structure-aware strategy) via ``lax.scan``,
+* ``ianf_step_fn``      — one step for B ignore-and-fire neurons.
+
+Every function here is lowered once by ``aot.py`` to HLO text; Python never
+runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lif import lif_step, PARAM_LEN
+from .kernels.ignore_and_fire import ianf_step
+
+__all__ = [
+    "PARAM_LEN",
+    "lif_step_fn",
+    "lif_multistep_fn",
+    "ianf_step_fn",
+    "lif_params",
+]
+
+
+def lif_params(tau_m=10.0, c_m=250.0, t_ref=2.0, theta_rel=15.0,
+               v_reset_rel=0.0, i_e=0.0, h=0.1):
+    """Build the f32[PARAM_LEN] parameter vector for the LIF kernel.
+
+    All potentials are relative to the resting potential E_L.
+
+    Args:
+        tau_m: membrane time constant [ms].
+        c_m: membrane capacitance [pF].
+        t_ref: refractory period [ms].
+        theta_rel: spike threshold above rest [mV].
+        v_reset_rel: reset potential above rest [mV].
+        i_e: constant external current [pA].
+        h: resolution step [ms].
+    """
+    import math
+    p22 = math.exp(-h / tau_m)
+    r_m = tau_m / c_m  # GOhm when tau in ms, c in pF -> mV/pA
+    drive = (1.0 - p22) * r_m * i_e
+    ref_steps = round(t_ref / h)
+    vec = [p22, drive, theta_rel, v_reset_rel, float(ref_steps)]
+    vec += [0.0] * (PARAM_LEN - len(vec))
+    return jnp.asarray(vec, dtype=jnp.float32)
+
+
+def lif_step_fn(params, v, refr, syn):
+    """One LIF resolution step.  Returns (v', refr', spikes)."""
+    return tuple(lif_step(params, v, refr, syn))
+
+
+def lif_multistep_fn(params, v, refr, syn_steps):
+    """K consecutive LIF steps; ``syn_steps`` is f32[K, B].
+
+    Returns (v', refr', spikes f32[K, B]).  Used by the structure-aware
+    strategy when a rank can advance a whole epoch from pre-delivered
+    intra-area input.
+    """
+
+    def body(carry, syn_k):
+        v, refr = carry
+        v, refr, spk = lif_step(params, v, refr, syn_k)
+        return (v, refr), spk
+
+    (v, refr), spikes = jax.lax.scan(body, (v, refr), syn_steps)
+    return v, refr, spikes
+
+
+def ianf_step_fn(phase, interval, syn):
+    """One ignore-and-fire step.  Returns (phase', spikes)."""
+    return tuple(ianf_step(phase, interval, syn))

@@ -1,0 +1,64 @@
+"""Pallas ignore-and-fire kernel vs oracle and schedule semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ignore_and_fire as ianf
+from compile.kernels import ref
+
+
+class TestIanfStep:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(3)
+        b = 512
+        phase = jnp.asarray(rng.integers(0, 10, b).astype(np.float32))
+        interval = jnp.asarray(rng.integers(5, 20, b).astype(np.float32))
+        syn = jnp.asarray(rng.normal(size=b).astype(np.float32))
+        got = ianf.ianf_step(phase, interval, syn)
+        want = ref.ianf_step_ref(phase, interval, syn)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_input_is_ignored(self):
+        phase = jnp.asarray([3.0], jnp.float32)
+        interval = jnp.asarray([10.0], jnp.float32)
+        a = ianf.ianf_step(phase, interval, jnp.asarray([0.0], jnp.float32))
+        b = ianf.ianf_step(phase, interval, jnp.asarray([1e6], jnp.float32))
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+    def test_fires_exactly_at_interval(self):
+        """A neuron with interval k spikes every k-th step."""
+        k = 7
+        phase = jnp.asarray([0.0], jnp.float32)
+        interval = jnp.asarray([float(k)], jnp.float32)
+        syn = jnp.zeros(1, jnp.float32)
+        spikes = []
+        for _ in range(3 * k):
+            phase, spk = ianf.ianf_step(phase, interval, syn)
+            spikes.append(int(spk[0]))
+        assert sum(spikes) == 3
+        idx = [i for i, s in enumerate(spikes) if s]
+        assert np.diff(idx).tolist() == [k, k]
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        steps=st.integers(1, 50),
+        interval=st.integers(2, 25),
+    )
+    def test_rate_matches_interval_property(self, seed, steps, interval):
+        rng = np.random.default_rng(seed)
+        b = 64
+        phase = jnp.asarray(rng.integers(0, interval, b).astype(np.float32))
+        iv = jnp.full((b,), float(interval), jnp.float32)
+        syn = jnp.zeros(b, jnp.float32)
+        total = 0
+        for _ in range(steps):
+            phase, spk = ref.ianf_step_ref(phase, iv, syn)
+            total += int(np.asarray(spk).sum())
+        # each neuron fires floor/ceil(steps/interval) times
+        lo = b * (steps // interval)
+        hi = b * (steps // interval + 1)
+        assert lo <= total <= hi

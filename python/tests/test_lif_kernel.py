@@ -1,0 +1,127 @@
+"""Pallas LIF kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import lif, ref
+
+
+def _allclose(actual, expected):
+    for a, e in zip(actual, expected):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def _rand_state(rng, batch):
+    v = rng.normal(5.0, 4.0, batch).astype(np.float32)
+    refr = rng.integers(0, 4, batch).astype(np.float32)
+    syn = rng.normal(0.2, 1.0, batch).astype(np.float32)
+    return jnp.asarray(v), jnp.asarray(refr), jnp.asarray(syn)
+
+
+class TestPickBlock:
+    def test_small_batch_uses_batch(self):
+        assert lif.pick_block(17) == 17
+
+    def test_divisor_of_large_batch(self):
+        b = lif.pick_block(2048)
+        assert b == 512 and 2048 % b == 0
+
+    def test_prime_batch_falls_back(self):
+        b = lif.pick_block(1021)  # prime > 512
+        assert 1021 % b == 0
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            lif.pick_block(0)
+
+
+class TestLifStep:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(1)
+        p = model.lif_params(i_e=380.0)
+        state = _rand_state(rng, 1024)
+        _allclose(lif.lif_step(p, *state), ref.lif_step_ref(p, *state))
+
+    def test_block_not_dividing_batch_raises(self):
+        p = model.lif_params()
+        z = jnp.zeros(100, jnp.float32)
+        with pytest.raises(ValueError):
+            lif.lif_step(p, z, z, z, block=33)
+
+    def test_threshold_crossing_emits_spike_and_resets(self):
+        p = model.lif_params(theta_rel=15.0, v_reset_rel=0.0)
+        v = jnp.asarray([20.0, 1.0], jnp.float32)
+        refr = jnp.zeros(2, jnp.float32)
+        syn = jnp.zeros(2, jnp.float32)
+        v2, refr2, spk = lif.lif_step(p, v, refr, syn)
+        assert spk[0] == 1.0 and spk[1] == 0.0
+        assert v2[0] == 0.0  # reset
+        assert refr2[0] == 20.0  # t_ref=2ms / h=0.1ms
+
+    def test_refractory_neuron_ignores_input(self):
+        p = model.lif_params()
+        v = jnp.asarray([0.0], jnp.float32)
+        refr = jnp.asarray([5.0], jnp.float32)
+        syn = jnp.asarray([100.0], jnp.float32)
+        v2, refr2, spk = lif.lif_step(p, v, refr, syn)
+        assert v2[0] == 0.0 and refr2[0] == 4.0 and spk[0] == 0.0
+
+    def test_refractory_neuron_never_spikes(self):
+        p = model.lif_params()
+        v = jnp.asarray([50.0], jnp.float32)
+        refr = jnp.asarray([1.0], jnp.float32)
+        _, _, spk = lif.lif_step(p, v, refr, jnp.zeros(1, jnp.float32))
+        assert spk[0] == 0.0
+
+    def test_subthreshold_decay(self):
+        p = model.lif_params(i_e=0.0)
+        v = jnp.asarray([10.0], jnp.float32)
+        z = jnp.zeros(1, jnp.float32)
+        v2, _, _ = lif.lif_step(p, v, z, z)
+        # exp(-0.1/10) * 10
+        assert abs(float(v2[0]) - 10.0 * np.exp(-0.01)) < 1e-5
+
+    def test_constant_drive_converges_to_ri(self):
+        # with i_e only, fixed point of v' = p22 v + (1-p22) R I is R*I
+        p = model.lif_params(i_e=200.0, theta_rel=1e9)
+        v = jnp.zeros(1, jnp.float32)
+        refr = jnp.zeros(1, jnp.float32)
+        syn = jnp.zeros(1, jnp.float32)
+        for _ in range(5000):
+            v, refr, _ = ref.lif_step_ref(p, v, refr, syn)
+        r_i = (10.0 / 250.0) * 200.0  # R_m * I_e = 8 mV
+        assert abs(float(v[0]) - r_i) < 1e-2
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nblocks=st.integers(1, 4),
+        block=st.sampled_from([8, 32, 128, 512]),
+        seed=st.integers(0, 2**31 - 1),
+        i_e=st.floats(0.0, 500.0),
+        tau_m=st.floats(5.0, 30.0),
+    )
+    def test_matches_ref_property(self, nblocks, block, seed, i_e, tau_m):
+        batch = nblocks * block
+        rng = np.random.default_rng(seed)
+        p = model.lif_params(i_e=i_e, tau_m=tau_m)
+        state = _rand_state(rng, batch)
+        _allclose(lif.lif_step(p, *state, block=block),
+                  ref.lif_step_ref(p, *state))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 30))
+    def test_iterated_step_is_stable(self, seed, steps):
+        """State stays finite and refractory counter stays in range."""
+        rng = np.random.default_rng(seed)
+        p = model.lif_params(i_e=450.0)
+        v, refr, _ = _rand_state(rng, 256)
+        for _ in range(steps):
+            syn = jnp.asarray(rng.normal(0.3, 0.8, 256).astype(np.float32))
+            v, refr, spk = ref.lif_step_ref(p, v, refr, syn)
+        assert np.isfinite(np.asarray(v)).all()
+        assert (np.asarray(refr) >= 0).all()
+        assert (np.asarray(refr) <= 20).all()

@@ -1,0 +1,70 @@
+"""L2 model-level tests: composition, parameter builder, multi-step scan."""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestLifParams:
+    def test_propagator(self):
+        p = model.lif_params(tau_m=10.0, h=0.1)
+        assert abs(float(p[0]) - math.exp(-0.01)) < 1e-7
+
+    def test_ref_steps_rounding(self):
+        p = model.lif_params(t_ref=2.0, h=0.1)
+        assert float(p[4]) == 20.0
+
+    def test_drive_scaling(self):
+        p0 = model.lif_params(i_e=0.0)
+        p1 = model.lif_params(i_e=250.0)
+        assert float(p0[1]) == 0.0
+        # (1-p22) * R * I with R = tau/C = 0.04 GOhm
+        want = (1 - math.exp(-0.01)) * 0.04 * 250.0
+        assert abs(float(p1[1]) - want) < 1e-7
+
+    def test_length(self):
+        assert model.lif_params().shape == (model.PARAM_LEN,)
+
+
+class TestMultistep:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 12))
+    def test_scan_equals_iterated_single_step(self, seed, k):
+        rng = np.random.default_rng(seed)
+        b = 256
+        p = model.lif_params(i_e=420.0)
+        v = jnp.asarray(rng.normal(5, 4, b).astype(np.float32))
+        refr = jnp.asarray(rng.integers(0, 4, b).astype(np.float32))
+        syn = jnp.asarray(rng.normal(0.2, 1.0, (k, b)).astype(np.float32))
+
+        v_m, refr_m, spk_m = model.lif_multistep_fn(p, v, refr, syn)
+        v_r, refr_r, spk_r = ref.lif_multistep_ref(p, v, refr, syn)
+        np.testing.assert_allclose(np.asarray(v_m), np.asarray(v_r),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(refr_m), np.asarray(refr_r))
+        np.testing.assert_allclose(np.asarray(spk_m), np.asarray(spk_r))
+
+    def test_spike_shape_is_k_by_b(self):
+        p = model.lif_params()
+        b, k = 128, 5
+        z = jnp.zeros((b,), jnp.float32)
+        _, _, spk = model.lif_multistep_fn(p, z, z, jnp.zeros((k, b)))
+        assert spk.shape == (k, b)
+
+
+class TestStepFunctions:
+    def test_lif_step_fn_returns_triple(self):
+        p = model.lif_params()
+        z = jnp.zeros(64, jnp.float32)
+        out = model.lif_step_fn(p, z, z, z)
+        assert isinstance(out, tuple) and len(out) == 3
+
+    def test_ianf_step_fn_returns_pair(self):
+        z = jnp.zeros(64, jnp.float32)
+        out = model.ianf_step_fn(z, jnp.full((64,), 10.0), z)
+        assert isinstance(out, tuple) and len(out) == 2

@@ -1,0 +1,46 @@
+//! Figure-regeneration benchmark: one entry per paper table/figure.
+//!
+//! Runs every figure harness end-to-end (virtual cluster at shortened
+//! model time, full analysis pipeline) and reports wall time per figure
+//! plus the figure's headline numbers, so `cargo bench` doubles as the
+//! reproduction driver:
+//!
+//!     cargo bench --bench figures            # quick (1 s model time)
+//!     NSIM_BENCH_TMODEL=10000 cargo bench    # full paper protocol
+
+use nsim::figures::{run_figure, FigOptions, ALL_FIGURES};
+use std::time::Instant;
+
+fn main() {
+    let t_model_ms: f64 = std::env::var("NSIM_BENCH_TMODEL")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000.0);
+    let opts = FigOptions { t_model_ms, seed: 654 };
+    let out_dir = "results";
+
+    println!(
+        "regenerating all {} figures (T_model = {t_model_ms} ms)\n",
+        ALL_FIGURES.len()
+    );
+    let mut total = 0.0;
+    for name in ALL_FIGURES {
+        let t0 = Instant::now();
+        match run_figure(name, &opts) {
+            Ok(fig) => {
+                let secs = t0.elapsed().as_secs_f64();
+                total += secs;
+                if let Err(e) = fig.emit(out_dir) {
+                    eprintln!("{name}: emit failed: {e:#}");
+                }
+                println!("[bench] {name:<6} {secs:>8.2} s");
+            }
+            Err(e) => {
+                eprintln!("[bench] {name}: FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        println!();
+    }
+    println!("[bench] total figure regeneration: {total:.2} s");
+}

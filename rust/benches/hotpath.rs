@@ -1,0 +1,174 @@
+//! Micro-benchmarks of the L3 hot paths (EXPERIMENTS.md §Perf).
+//!
+//! No criterion in the offline registry, so this uses a small in-tree
+//! harness: warmup, then timed batches until ≥ 0.25 s elapsed, reporting
+//! ns/op and throughput.
+//!
+//!     cargo bench --bench hotpath
+
+use nsim::config::{RunConfig, Strategy};
+use nsim::engine::neuron::NeuronBlock;
+use nsim::engine::ringbuffer::RingBuffer;
+use nsim::engine::simulate;
+use nsim::models;
+use nsim::network::spec::{LifParams, NeuronKind};
+use nsim::tables::{ConnTable, LocalConn};
+use nsim::util::rng::Pcg64;
+use nsim::vcluster::{run_cluster, MachineProfile, VcOptions, Workload};
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Time `f` (which performs `ops_per_call` operations) and report.
+fn bench(name: &str, ops_per_call: u64, mut f: impl FnMut()) {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut calls = 0u64;
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < 0.25 {
+        f();
+        calls += 1;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let ops = calls * ops_per_call;
+    let ns_per_op = secs * 1e9 / ops as f64;
+    println!(
+        "{name:<42} {ns_per_op:>9.2} ns/op  {:>10.2} Mops/s",
+        ops as f64 / secs / 1e6
+    );
+}
+
+fn main() {
+    println!("== L3 hot-path micro-benchmarks ==\n");
+
+    // --- RNG ---------------------------------------------------------
+    let mut rng = Pcg64::seed_from_u64(1);
+    bench("rng: next_u64", 1024, || {
+        for _ in 0..1024 {
+            black_box(rng.next_u64());
+        }
+    });
+    bench("rng: normal", 1024, || {
+        for _ in 0..1024 {
+            black_box(rng.normal());
+        }
+    });
+
+    // --- connection-table lookup (spike delivery core) ---------------
+    let mut rng = Pcg64::seed_from_u64(2);
+    let n_sources = 10_000u32;
+    let entries: Vec<(u32, LocalConn)> = (0..600_000)
+        .map(|i| {
+            (
+                rng.below(n_sources as u64) as u32,
+                LocalConn {
+                    target_local: i as u32 % 4096,
+                    weight: 0.125,
+                    delay_steps: 1 + (i % 50) as u16,
+                },
+            )
+        })
+        .collect();
+    let table = ConnTable::build(entries);
+    let probes: Vec<u32> =
+        (0..1024).map(|_| rng.below(n_sources as u64) as u32).collect();
+    bench("tables: ConnTable::lookup", probes.len() as u64, || {
+        for &p in &probes {
+            black_box(table.lookup(p));
+        }
+    });
+
+    // --- ring buffer -------------------------------------------------
+    let mut ring = RingBuffer::new(4096, 64);
+    bench("ring: add", 4096, || {
+        for i in 0..4096u32 {
+            ring.add((i % 60) as u64, i % 4096, 0.125);
+        }
+    });
+    let mut row = vec![0.0f32; 4096];
+    bench("ring: take_row (4096 lanes)", 4096, || {
+        ring.take_row(black_box(7), &mut row);
+        black_box(&row);
+    });
+
+    // --- delivery: lookup + ring add combined ------------------------
+    bench("deliver: spike -> conns -> ring", probes.len() as u64, || {
+        for &p in &probes {
+            for c in table.lookup(p) {
+                ring.add(10 + c.delay_steps as u64, c.target_local, c.weight);
+            }
+        }
+    });
+
+    // --- neuron update ------------------------------------------------
+    let gids: Vec<u32> = (0..8192).collect();
+    let params = LifParams {
+        i_e_pa: LifParams::default().i_e_for_rate(8.0),
+        ..Default::default()
+    };
+    let mut block =
+        NeuronBlock::build(&gids, 0.1, |_| NeuronKind::Lif(params));
+    let syn = vec![0.01f32; 8192];
+    let mut spikes = Vec::new();
+    bench("update: LIF step (8192 lanes)", 8192, || {
+        spikes.clear();
+        block.step_native(&syn, &mut spikes);
+        black_box(&spikes);
+    });
+    let mut ianf = NeuronBlock::build(&gids, 0.1, |_| {
+        NeuronKind::IgnoreAndFire { interval_steps: 4000 }
+    });
+    bench("update: ignore-and-fire step (8192)", 8192, || {
+        spikes.clear();
+        ianf.step_native(&syn, &mut spikes);
+        black_box(&spikes);
+    });
+
+    // --- virtual cluster throughput -----------------------------------
+    println!("\n== macro benchmarks ==\n");
+    let machine = MachineProfile::supermuc_ng();
+    let spec = models::mam_benchmark(128, 1.0, 1.0).unwrap();
+    let w = Workload::derive(&spec, Strategy::Conventional, 128, 48).unwrap();
+    let t0 = Instant::now();
+    let opts = VcOptions {
+        t_model_ms: 1_000.0,
+        h_ms: 0.1,
+        seed: 654,
+        record_cycle_times: false,
+    };
+    let res = run_cluster(&machine, &w, &opts).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    let rank_cycles = 128.0 * res.s_cycles as f64;
+    println!(
+        "vcluster: M=128 x {} cycles in {secs:.3} s = {:.2} M rank-cycles/s",
+        res.s_cycles,
+        rank_cycles / secs / 1e6
+    );
+
+    // --- functional engine end-to-end ---------------------------------
+    let spec = models::mam_benchmark(4, 0.01, 1.0).unwrap();
+    for strategy in [Strategy::Conventional, Strategy::StructureAware] {
+        let cfg = RunConfig {
+            strategy,
+            m_ranks: 4,
+            threads_per_rank: 2,
+            t_model_ms: 100.0,
+            seed: 654,
+            ..RunConfig::default()
+        };
+        let t0 = Instant::now();
+        let res = simulate(&spec, &cfg).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let neuron_steps =
+            spec.total_neurons() as f64 * res.s_cycles as f64;
+        println!(
+            "engine: {} {} neurons x {} cycles in {secs:.3} s = \
+             {:.2} M neuron-cycles/s",
+            strategy.name(),
+            spec.total_neurons(),
+            res.s_cycles,
+            neuron_steps / secs / 1e6
+        );
+    }
+}

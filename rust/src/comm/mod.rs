@@ -1,0 +1,384 @@
+//! Simulated MPI layer: collective spike exchange between ranks that live
+//! as OS threads in one address space.
+//!
+//! Semantics follow the paper's communication scheme (§4.1):
+//!
+//! * [`Communicator::alltoall`] — the global exchange.  An explicit
+//!   barrier in front of the collective separates *synchronization*
+//!   (waiting for the slowest rank) from the *data exchange* proper,
+//!   exactly like the instrumentation NEST uses (§4.1).  Spike buffers
+//!   grow via the two-round resize protocol: if any rank exceeds the
+//!   current quota, all ranks double their buffers and a secondary
+//!   exchange round follows.
+//! * [`Communicator::local_swap`] — the structure-aware local pathway: a
+//!   rank-local swap of send and receive buffers, no synchronization.
+//!
+//! The transport is shared-memory mailboxes; the *timing* of a real
+//! interconnect is modelled separately by `vcluster::interconnect` (the
+//! hardware substitution of DESIGN.md §2).
+
+use crate::network::Gid;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+/// One spike on the wire: source neuron and emission cycle.  The paper's
+/// spikes carry only the source id; we add the cycle so that lumped
+/// epoch-wise delivery of the structure-aware scheme stays explicit (and
+/// assertable).  Wire size is accounted as 8 bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpikeMsg {
+    pub source: Gid,
+    pub cycle: u32,
+}
+
+pub const SPIKE_WIRE_BYTES: usize = 8;
+
+/// Aggregate communication statistics across all ranks.
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub alltoall_calls: AtomicU64,
+    pub local_swaps: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    pub resize_rounds: AtomicU64,
+    pub max_send_per_pair: AtomicUsize,
+}
+
+impl CommStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.alltoall_calls.load(Ordering::Relaxed),
+            self.local_swaps.load(Ordering::Relaxed),
+            self.bytes_sent.load(Ordering::Relaxed),
+            self.resize_rounds.load(Ordering::Relaxed),
+        )
+    }
+}
+
+struct WorldInner {
+    m: usize,
+    barrier: Barrier,
+    /// mailboxes[dest][src]
+    mailboxes: Vec<Vec<Mutex<Vec<SpikeMsg>>>>,
+    /// Current buffer quota in spikes per rank pair (grows on overflow).
+    quota: AtomicUsize,
+    overflow: AtomicBool,
+    stats: CommStats,
+}
+
+/// Shared communication world; create once, then [`World::communicator`]
+/// per rank thread.
+#[derive(Clone)]
+pub struct World {
+    inner: Arc<WorldInner>,
+}
+
+impl World {
+    /// `initial_quota` is the starting spike-buffer size per rank pair
+    /// (NEST starts small and grows; tests exercise the resize protocol).
+    pub fn new(m: usize, initial_quota: usize) -> World {
+        assert!(m >= 1);
+        let mailboxes = (0..m)
+            .map(|_| (0..m).map(|_| Mutex::new(Vec::new())).collect())
+            .collect();
+        World {
+            inner: Arc::new(WorldInner {
+                m,
+                barrier: Barrier::new(m),
+                mailboxes,
+                quota: AtomicUsize::new(initial_quota.max(1)),
+                overflow: AtomicBool::new(false),
+                stats: CommStats::default(),
+            }),
+        }
+    }
+
+    pub fn communicator(&self, rank: usize) -> Communicator {
+        assert!(rank < self.inner.m);
+        Communicator { world: self.inner.clone(), rank }
+    }
+
+    pub fn m_ranks(&self) -> usize {
+        self.inner.m
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.inner.stats
+    }
+
+    pub fn current_quota(&self) -> usize {
+        self.inner.quota.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-rank handle into the [`World`].
+pub struct Communicator {
+    world: Arc<WorldInner>,
+    rank: usize,
+}
+
+/// Timing of one collective call, in seconds of real wall clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExchangeTiming {
+    /// Waiting at the barrier in front of the collective.
+    pub sync_secs: f64,
+    /// The data exchange itself (write + release + read).
+    pub data_secs: f64,
+}
+
+impl Communicator {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn m_ranks(&self) -> usize {
+        self.world.m
+    }
+
+    /// Collective all-to-all spike exchange.  `send[d]` is the buffer for
+    /// destination rank `d` (must have length M); returns the received
+    /// buffers indexed by source rank (per-source order preserved) — and
+    /// the timing split into sync and data-exchange parts.
+    ///
+    /// All ranks must call this the same number of times (collective
+    /// semantics); mismatch deadlocks, as real MPI would.
+    pub fn alltoall(
+        &self,
+        send: &mut [Vec<SpikeMsg>],
+    ) -> (Vec<Vec<SpikeMsg>>, ExchangeTiming) {
+        assert_eq!(send.len(), self.world.m, "send buffer per rank required");
+        let w = &*self.world;
+
+        // --- synchronization: explicit barrier in front of the collective
+        let t0 = Instant::now();
+        w.barrier.wait();
+        let t1 = Instant::now();
+        let sync_secs = (t1 - t0).as_secs_f64();
+
+        // --- overflow detection (two-round resize protocol)
+        let quota = w.quota.load(Ordering::Relaxed);
+        let my_max = send.iter().map(|v| v.len()).max().unwrap_or(0);
+        if my_max > quota {
+            w.overflow.store(true, Ordering::Relaxed);
+        }
+        w.stats
+            .max_send_per_pair
+            .fetch_max(my_max, Ordering::Relaxed);
+        w.barrier.wait();
+        // after the barrier every rank observes the same flag; the reset
+        // happens strictly between two further barriers so no rank can
+        // read a half-updated flag (all ranks take the same branch)
+        let need_resize = w.overflow.load(Ordering::Relaxed);
+        if need_resize {
+            // every rank grows its buffers until the largest message fits,
+            // then a secondary exchange round follows (paper §4.1)
+            w.barrier.wait();
+            if self.rank == 0 {
+                let mut q = w.quota.load(Ordering::Relaxed);
+                let need = w.stats.max_send_per_pair.load(Ordering::Relaxed);
+                while q < need {
+                    q *= 2;
+                }
+                w.quota.store(q, Ordering::Relaxed);
+                w.overflow.store(false, Ordering::Relaxed);
+                w.stats.resize_rounds.fetch_add(1, Ordering::Relaxed);
+            }
+            w.barrier.wait();
+        }
+
+        // --- data exchange: write own column, then read own row
+        let mut bytes = 0usize;
+        for (dest, buf) in send.iter_mut().enumerate() {
+            bytes += buf.len() * SPIKE_WIRE_BYTES;
+            let mut slot = w.mailboxes[dest][self.rank].lock().unwrap();
+            debug_assert!(slot.is_empty(), "mailbox not drained");
+            std::mem::swap(&mut *slot, buf);
+        }
+        w.stats
+            .bytes_sent
+            .fetch_add(bytes as u64, Ordering::Relaxed);
+        w.barrier.wait();
+        let mut recv = Vec::with_capacity(w.m);
+        for src in 0..w.m {
+            let mut slot = w.mailboxes[self.rank][src].lock().unwrap();
+            recv.push(std::mem::take(&mut *slot));
+        }
+        w.stats.alltoall_calls.fetch_add(1, Ordering::Relaxed);
+        // final barrier so nobody races ahead into the next call's writes
+        w.barrier.wait();
+        let data_secs = t1.elapsed().as_secs_f64();
+        (recv, ExchangeTiming { sync_secs, data_secs })
+    }
+
+    /// Rank-local exchange of the structure-aware short-range pathway:
+    /// swap send and receive buffer, no synchronization with other ranks.
+    pub fn local_swap(&self, send: &mut Vec<SpikeMsg>) -> Vec<SpikeMsg> {
+        self.world.stats.local_swaps.fetch_add(1, Ordering::Relaxed);
+        std::mem::take(send)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn msg(source: Gid, cycle: u32) -> SpikeMsg {
+        SpikeMsg { source, cycle }
+    }
+
+    /// Run `f(rank, comm)` on m rank threads, collect results by rank.
+    fn run_ranks<F, R>(m: usize, quota: usize, f: F) -> Vec<R>
+    where
+        F: Fn(usize, Communicator) -> R + Send + Sync,
+        R: Send,
+    {
+        let world = World::new(m, quota);
+        thread::scope(|s| {
+            let handles: Vec<_> = (0..m)
+                .map(|rank| {
+                    let comm = world.communicator(rank);
+                    let f = &f;
+                    s.spawn(move || f(rank, comm))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn alltoall_routes_messages() {
+        let results = run_ranks(4, 64, |rank, comm| {
+            // rank r sends spike (source=100*r + d) to each dest d
+            let mut send: Vec<Vec<SpikeMsg>> = (0..4)
+                .map(|d| vec![msg((100 * rank + d) as Gid, 7)])
+                .collect();
+            let (recv, _) = comm.alltoall(&mut send);
+            recv
+        });
+        for (rank, recv) in results.iter().enumerate() {
+            assert_eq!(recv.len(), 4);
+            for (src, buf) in recv.iter().enumerate() {
+                assert_eq!(buf.len(), 1);
+                assert_eq!(buf[0].source, (100 * src + rank) as Gid);
+                assert_eq!(buf[0].cycle, 7);
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_preserves_per_source_order() {
+        let results = run_ranks(2, 64, |rank, comm| {
+            let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+                .map(|_| (0..10).map(|i| msg(rank as Gid, i)).collect())
+                .collect();
+            let (recv, _) = comm.alltoall(&mut send);
+            recv
+        });
+        for recv in &results {
+            // per source rank, cycles ascend
+            for (src, buf) in recv.iter().enumerate() {
+                let cycles: Vec<u32> = buf.iter().map(|m| m.cycle).collect();
+                assert_eq!(cycles, (0..10).collect::<Vec<_>>());
+                assert!(buf.iter().all(|m| m.source == src as Gid));
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_rounds_do_not_leak() {
+        let results = run_ranks(3, 64, |rank, comm| {
+            let mut total = 0usize;
+            for round in 0..5u32 {
+                let mut send: Vec<Vec<SpikeMsg>> = (0..3)
+                    .map(|_| vec![msg(rank as Gid, round)])
+                    .collect();
+                let (recv, _) = comm.alltoall(&mut send);
+                assert!(recv
+                    .iter()
+                    .flatten()
+                    .all(|m| m.cycle == round));
+                total += recv.iter().map(|b| b.len()).sum::<usize>();
+            }
+            total
+        });
+        assert!(results.iter().all(|&t| t == 15));
+    }
+
+    #[test]
+    fn overflow_triggers_resize_round() {
+        let world = World::new(2, 4);
+        let w2 = world.clone();
+        thread::scope(|s| {
+            for rank in 0..2 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    // rank 0 sends 10 spikes/pair, above the quota of 4
+                    let n = if rank == 0 { 10 } else { 1 };
+                    let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+                        .map(|_| (0..n).map(|i| msg(rank as Gid, i)).collect())
+                        .collect();
+                    let (recv, _) = comm.alltoall(&mut send);
+                    let n: usize = recv.iter().map(|b| b.len()).sum();
+                    assert_eq!(n, 10 + 1);
+                });
+            }
+        });
+        let (_, _, _, resizes) = w2.stats().snapshot();
+        assert_eq!(resizes, 1);
+        assert!(w2.current_quota() >= 10);
+    }
+
+    #[test]
+    fn local_swap_returns_buffer_without_barrier() {
+        let world = World::new(1, 4);
+        let comm = world.communicator(0);
+        let mut send = vec![msg(1, 2), msg(3, 4)];
+        let recv = comm.local_swap(&mut send);
+        assert_eq!(recv, vec![msg(1, 2), msg(3, 4)]);
+        assert!(send.is_empty());
+        let (a2a, swaps, _, _) = world.stats().snapshot();
+        assert_eq!(a2a, 0);
+        assert_eq!(swaps, 1);
+    }
+
+    #[test]
+    fn stats_count_bytes() {
+        let world = World::new(2, 64);
+        thread::scope(|s| {
+            for rank in 0..2 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+                        .map(|_| vec![msg(rank as Gid, 0); 3])
+                        .collect();
+                    comm.alltoall(&mut send);
+                });
+            }
+        });
+        let (calls, _, bytes, _) = world.stats().snapshot();
+        assert_eq!(calls, 2);
+        // 2 ranks x 2 dests x 3 spikes x 8 bytes
+        assert_eq!(bytes, 96);
+    }
+
+    #[test]
+    fn timing_fields_populated() {
+        let results = run_ranks(2, 64, |rank, comm| {
+            // rank 1 works longer before the barrier -> rank 0 waits
+            if rank == 1 {
+                std::hint::black_box(
+                    (0..2_000_000u64).map(|x| x.wrapping_mul(7)).sum::<u64>(),
+                );
+            }
+            let mut send: Vec<Vec<SpikeMsg>> =
+                (0..2).map(|_| Vec::new()).collect();
+            let (_, timing) = comm.alltoall(&mut send);
+            timing
+        });
+        for t in &results {
+            assert!(t.sync_secs >= 0.0);
+            assert!(t.data_secs >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Run-level configuration: strategy selection, topology of the (simulated)
+//! machine, model time, seeds and the update-execution path.
+//!
+//! Configs can be built programmatically, loaded from a JSON file, and
+//! overridden from CLI options — the launcher (`main.rs`) composes all
+//! three.
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+
+/// The three simulation strategies compared in the paper (Figs 7/9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Round-robin neuron distribution, global communication every cycle.
+    Conventional,
+    /// Structure-aware neuron distribution, but conventional global
+    /// communication every `d_min` (middle bars of Fig 9).
+    Intermediate,
+    /// Structure-aware distribution + dual local/global pathways with
+    /// global communication every D-th cycle.
+    StructureAware,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        Ok(match s {
+            "conventional" | "conv" => Strategy::Conventional,
+            "intermediate" | "inter" => Strategy::Intermediate,
+            "structure-aware" | "struct" | "structure_aware" => {
+                Strategy::StructureAware
+            }
+            other => bail!("unknown strategy {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Conventional => "conventional",
+            Strategy::Intermediate => "intermediate",
+            Strategy::StructureAware => "structure-aware",
+        }
+    }
+
+    /// Does this strategy place whole areas on single ranks?
+    pub fn structure_aware_placement(&self) -> bool {
+        !matches!(self, Strategy::Conventional)
+    }
+
+    /// Does this strategy use the dual local/global communication scheme?
+    pub fn dual_pathways(&self) -> bool {
+        matches!(self, Strategy::StructureAware)
+    }
+}
+
+/// How the update phase executes the neuron model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdatePath {
+    /// Native Rust arithmetic (bit-identical to the Pallas kernel's op
+    /// order) — the performance path.
+    Native,
+    /// Through the AOT-compiled XLA artifact via PJRT — proves the
+    /// three-layer composition; serialized by a global client lock.
+    Xla,
+}
+
+impl UpdatePath {
+    pub fn parse(s: &str) -> Result<UpdatePath> {
+        Ok(match s {
+            "native" => UpdatePath::Native,
+            "xla" | "pjrt" => UpdatePath::Xla,
+            other => bail!("unknown update path {other:?}"),
+        })
+    }
+}
+
+/// Full run configuration for the functional engine.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub strategy: Strategy,
+    /// Number of (simulated) MPI ranks.
+    pub m_ranks: usize,
+    /// Virtual threads per rank (NEST's T_M); affects table partitioning.
+    pub threads_per_rank: usize,
+    /// Biological model time to simulate, in ms.
+    pub t_model_ms: f64,
+    /// Master seed for connectivity and model construction.
+    pub seed: u64,
+    pub update_path: UpdatePath,
+    /// Record (cycle, gid) spike events for verification.
+    pub record_spikes: bool,
+    /// Record per-rank per-cycle times for the distribution figures.
+    pub record_cycle_times: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            strategy: Strategy::Conventional,
+            m_ranks: 2,
+            threads_per_rank: 2,
+            t_model_ms: 100.0,
+            seed: 12,
+            update_path: UpdatePath::Native,
+            record_spikes: false,
+            record_cycle_times: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply `--strategy --ranks --threads --t-model --seed --update-path
+    /// --record-spikes --record-cycle-times` CLI overrides.
+    pub fn override_from_args(mut self, args: &Args) -> Result<RunConfig> {
+        if let Some(s) = args.str_opt("strategy") {
+            self.strategy = Strategy::parse(&s)?;
+        }
+        self.m_ranks = args.usize_or("ranks", self.m_ranks)?;
+        self.threads_per_rank =
+            args.usize_or("threads", self.threads_per_rank)?;
+        self.t_model_ms = args.f64_or("t-model", self.t_model_ms)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        if let Some(s) = args.str_opt("update-path") {
+            self.update_path = UpdatePath::parse(&s)?;
+        }
+        if args.flag("record-spikes") {
+            self.record_spikes = true;
+        }
+        if args.flag("record-cycle-times") {
+            self.record_cycle_times = true;
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Load from a JSON object (all fields optional, defaults apply).
+    pub fn from_json(v: &Json) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(s) = v.get("strategy").and_then(Json::as_str) {
+            cfg.strategy = Strategy::parse(s)?;
+        }
+        if let Some(x) = v.get("ranks").and_then(Json::as_usize) {
+            cfg.m_ranks = x;
+        }
+        if let Some(x) = v.get("threads").and_then(Json::as_usize) {
+            cfg.threads_per_rank = x;
+        }
+        if let Some(x) = v.get("t_model_ms").and_then(Json::as_f64) {
+            cfg.t_model_ms = x;
+        }
+        if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+            cfg.seed = x as u64;
+        }
+        if let Some(s) = v.get("update_path").and_then(Json::as_str) {
+            cfg.update_path = UpdatePath::parse(s)?;
+        }
+        if let Some(b) = v.get("record_spikes").and_then(Json::as_bool) {
+            cfg.record_spikes = b;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing config {path}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.m_ranks == 0 {
+            bail!("ranks must be >= 1");
+        }
+        if self.threads_per_rank == 0 {
+            bail!("threads must be >= 1");
+        }
+        if self.t_model_ms <= 0.0 {
+            bail!("t_model_ms must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [
+            Strategy::Conventional,
+            Strategy::Intermediate,
+            Strategy::StructureAware,
+        ] {
+            assert_eq!(Strategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(Strategy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn strategy_semantics() {
+        assert!(!Strategy::Conventional.structure_aware_placement());
+        assert!(Strategy::Intermediate.structure_aware_placement());
+        assert!(!Strategy::Intermediate.dual_pathways());
+        assert!(Strategy::StructureAware.dual_pathways());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse([
+            "run",
+            "--strategy",
+            "struct",
+            "--ranks",
+            "8",
+            "--t-model",
+            "250.0",
+        ])
+        .unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert_eq!(cfg.strategy, Strategy::StructureAware);
+        assert_eq!(cfg.m_ranks, 8);
+        assert_eq!(cfg.t_model_ms, 250.0);
+        assert_eq!(cfg.threads_per_rank, 2); // default preserved
+    }
+
+    #[test]
+    fn json_config() {
+        let v = json::parse(
+            r#"{"strategy": "intermediate", "ranks": 4, "seed": 654}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.strategy, Strategy::Intermediate);
+        assert_eq!(cfg.m_ranks, 4);
+        assert_eq!(cfg.seed, 654);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = RunConfig::default();
+        cfg.m_ranks = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.t_model_ms = -1.0;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! The functional distributed simulation engine.
+//!
+//! [`simulate`] spawns one OS thread per (simulated) MPI rank, builds the
+//! rank-local data structures collectively (including the target-table
+//! exchange of the preparation phase) and iterates the cycle loop of
+//! paper Fig 3.  Results are merged into a [`SimResult`] containing phase
+//! breakdowns, recorded spikes and per-cycle times.
+
+pub mod neuron;
+pub mod rank;
+pub mod ringbuffer;
+pub mod update;
+
+use crate::comm::World;
+use crate::config::{RunConfig, Strategy, UpdatePath};
+use crate::network::{Gid, ModelSpec};
+use crate::placement::Placement;
+use crate::util::timers::PhaseTimes;
+use anyhow::{Context, Result};
+use rank::{RankResult, RankState};
+use update::Updater;
+
+/// Outcome of a functional simulation.
+pub struct SimResult {
+    pub strategy: Strategy,
+    pub m_ranks: usize,
+    /// Per-rank phase times.
+    pub rank_times: Vec<PhaseTimes>,
+    /// Mean phase times across ranks (the paper's reporting convention).
+    pub mean_times: PhaseTimes,
+    /// All recorded spikes sorted by (step, gid) — empty unless
+    /// `record_spikes`.
+    pub spikes: Vec<(u64, Gid)>,
+    /// Per-rank per-cycle (deliver+update+collocate) times — empty unless
+    /// `record_cycle_times`.
+    pub cycle_times: Vec<Vec<f64>>,
+    /// Simulated cycles.
+    pub s_cycles: u64,
+    /// Simulated model time in ms.
+    pub t_model_ms: f64,
+    /// Per-rank neuron counts.
+    pub rank_neurons: Vec<usize>,
+    /// Per-rank synapse counts (short, long pathway).
+    pub rank_conns: Vec<(usize, usize)>,
+    /// (alltoall calls, local swaps, bytes sent, resize rounds).
+    pub comm_stats: (u64, u64, u64, u64),
+}
+
+impl SimResult {
+    /// Wall-clock real-time factor, averaged across ranks.
+    pub fn rtf(&self) -> f64 {
+        self.mean_times.rtf(self.t_model_ms / 1000.0)
+    }
+
+    /// Total spike count.
+    pub fn n_spikes(&self) -> usize {
+        self.spikes.len()
+    }
+
+    /// Mean firing rate in spikes/s per neuron.
+    pub fn mean_rate_hz(&self, n_neurons: usize) -> f64 {
+        if n_neurons == 0 || self.t_model_ms <= 0.0 {
+            return 0.0;
+        }
+        self.spikes.len() as f64 / n_neurons as f64
+            / (self.t_model_ms / 1000.0)
+    }
+}
+
+/// Build the placement implied by the strategy.
+pub fn placement_for(
+    spec: &ModelSpec,
+    cfg: &RunConfig,
+) -> Result<Placement> {
+    if cfg.strategy.structure_aware_placement() {
+        Placement::area_aligned(spec, cfg.m_ranks, cfg.threads_per_rank)
+    } else {
+        Ok(Placement::round_robin(cfg.m_ranks, cfg.threads_per_rank))
+    }
+}
+
+/// Run the functional engine on `spec` with `cfg`.
+///
+/// `updater_factory` builds the update executor once; `None` selects it
+/// from `cfg.update_path` (Native, or the XLA path via the runtime).
+pub fn simulate(spec: &ModelSpec, cfg: &RunConfig) -> Result<SimResult> {
+    let updater = match cfg.update_path {
+        UpdatePath::Native => Updater::Native,
+        UpdatePath::Xla => crate::runtime::updater::xla_updater(spec)
+            .context("building XLA updater (run `make artifacts`?)")?,
+    };
+    simulate_with(spec, cfg, &updater)
+}
+
+/// As [`simulate`], with an explicit update executor.
+pub fn simulate_with(
+    spec: &ModelSpec,
+    cfg: &RunConfig,
+    updater: &Updater,
+) -> Result<SimResult> {
+    cfg.validate()?;
+    let placement = placement_for(spec, cfg)?;
+    let steps_per_cycle = spec.d_min_steps() as u64;
+    let total_steps =
+        (cfg.t_model_ms / spec.h_ms).round().max(1.0) as u64;
+    let s_cycles = total_steps / steps_per_cycle;
+    anyhow::ensure!(
+        s_cycles >= 1,
+        "t_model shorter than one simulation cycle"
+    );
+
+    let world = World::new(cfg.m_ranks, 1024);
+    let results: Vec<RankResult> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.m_ranks)
+            .map(|r| {
+                let comm = world.communicator(r);
+                let placement = &placement;
+                let updater = &updater;
+                scope.spawn(move || {
+                    let state = RankState::build(
+                        spec,
+                        placement,
+                        cfg.strategy,
+                        cfg.seed,
+                        &comm,
+                        cfg.record_spikes,
+                    );
+                    state.run(
+                        &comm,
+                        s_cycles,
+                        updater,
+                        cfg.record_cycle_times,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    });
+
+    let mut rank_times = vec![PhaseTimes::new(); cfg.m_ranks];
+    let mut cycle_times = vec![Vec::new(); cfg.m_ranks];
+    let mut rank_neurons = vec![0usize; cfg.m_ranks];
+    let mut rank_conns = vec![(0usize, 0usize); cfg.m_ranks];
+    let mut spikes = Vec::new();
+    for r in results {
+        rank_times[r.rank] = r.phase_times;
+        cycle_times[r.rank] = r.cycle_times;
+        rank_neurons[r.rank] = r.n_neurons;
+        rank_conns[r.rank] = (r.n_conns_short, r.n_conns_long);
+        spikes.extend(r.spikes);
+    }
+    spikes.sort_unstable();
+    let mean_times = PhaseTimes::mean_of(&rank_times);
+
+    Ok(SimResult {
+        strategy: cfg.strategy,
+        m_ranks: cfg.m_ranks,
+        rank_times,
+        mean_times,
+        spikes,
+        cycle_times,
+        s_cycles,
+        t_model_ms: cfg.t_model_ms,
+        rank_neurons,
+        rank_conns,
+        comm_stats: world.stats().snapshot(),
+    })
+}

@@ -1,0 +1,327 @@
+//! Native neuron-state propagation, arithmetically identical to the L1
+//! Pallas kernels (`python/compile/kernels/`).
+//!
+//! The operation order matches the kernel exactly — `p22*v + drive + syn`
+//! in f32, `where`-style selects — so that the Native and Xla update paths
+//! produce bit-identical trajectories (verified by the runtime parity
+//! test).  Per-neuron external drive is folded into the synaptic input
+//! (the kernel's scalar `drive` parameter stays 0), which lets one AOT
+//! artifact serve areas with heterogeneous `i_e`.
+
+use crate::network::spec::{LifParams, NeuronKind};
+use crate::network::Gid;
+
+/// Scalar LIF parameters shared by a thread block (f32, as in the kernel).
+#[derive(Clone, Copy, Debug)]
+pub struct LifScalars {
+    pub p22: f32,
+    pub theta: f32,
+    pub v_reset: f32,
+    pub ref_steps: f32,
+}
+
+impl LifScalars {
+    pub fn from_params(p: &LifParams, h_ms: f64) -> LifScalars {
+        LifScalars {
+            p22: p.p22(h_ms),
+            theta: p.theta_mv as f32,
+            v_reset: p.v_reset_mv as f32,
+            ref_steps: p.ref_steps(h_ms),
+        }
+    }
+}
+
+/// State of all neurons of one (rank, thread) partition.
+#[derive(Clone, Debug)]
+pub enum NeuronBlock {
+    Lif {
+        scalars: LifScalars,
+        /// Per-neuron constant drive per step, added to the synaptic input.
+        drive: Vec<f32>,
+        v: Vec<f32>,
+        refr: Vec<f32>,
+    },
+    IgnoreAndFire {
+        phase: Vec<f32>,
+        interval: Vec<f32>,
+    },
+}
+
+/// Deterministic, placement-independent initial phase for ignore-and-fire
+/// neurons: a hash of the GID modulo the interval.  Spreads spikes evenly
+/// over the interval so aggregate rate is constant per cycle.
+pub fn ianf_phase(gid: Gid, interval_steps: u32) -> f32 {
+    // splitmix64 finalizer
+    let mut z = gid as u64 ^ 0x9e37_79b9_7f4a_7c15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z % interval_steps.max(1) as u64) as f32
+}
+
+/// Deterministic membrane jitter in `[0, 1)` from the GID (splitmix64),
+/// placement-independent.  Multi-area models initialize `V_m` randomly to
+/// avoid an artificial synchronous onset volley.
+pub fn vm_jitter(gid: Gid) -> f32 {
+    let mut z = (gid as u64).wrapping_add(0x1234_5678_9abc_def0)
+        ^ 0x9e37_79b9_7f4a_7c15;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z >> 40) as f32 / (1u64 << 24) as f32
+}
+
+impl NeuronBlock {
+    /// Initialize LIF membranes with GID-derived jitter spanning
+    /// `[0, frac * theta)` — placement-independent (keyed by GID), so the
+    /// strategy-equivalence invariant is preserved.  No-op for
+    /// ignore-and-fire blocks (their phase is already GID-jittered).
+    pub fn init_membrane_jitter(&mut self, gids: &[Gid], frac: f32) {
+        if let NeuronBlock::Lif { scalars, v, .. } = self {
+            debug_assert_eq!(gids.len(), v.len());
+            let span = frac * scalars.theta;
+            for (vi, &g) in v.iter_mut().zip(gids) {
+                *vi = vm_jitter(g) * span;
+            }
+        }
+    }
+
+    /// Build the block for `gids`, taking per-area parameters from
+    /// `area_params(gid) -> NeuronKind` (must be homogeneous in kind).
+    pub fn build(
+        gids: &[Gid],
+        h_ms: f64,
+        kind_of: impl Fn(Gid) -> NeuronKind,
+    ) -> NeuronBlock {
+        if gids.is_empty() {
+            // kind is irrelevant for an empty block
+            return NeuronBlock::Lif {
+                scalars: LifScalars::from_params(&LifParams::default(), h_ms),
+                drive: vec![],
+                v: vec![],
+                refr: vec![],
+            };
+        }
+        match kind_of(gids[0]) {
+            NeuronKind::Lif(_) => {
+                let mut drive = Vec::with_capacity(gids.len());
+                let mut scalars = None;
+                for &g in gids {
+                    match kind_of(g) {
+                        NeuronKind::Lif(p) => {
+                            let s = LifScalars::from_params(&p, h_ms);
+                            let sc = scalars.get_or_insert(s);
+                            assert!(
+                                sc.p22 == s.p22
+                                    && sc.theta == s.theta
+                                    && sc.v_reset == s.v_reset
+                                    && sc.ref_steps == s.ref_steps,
+                                "intrinsic LIF parameters must be \
+                                 homogeneous across areas (as in the MAM)"
+                            );
+                            drive.push(p.drive(h_ms));
+                        }
+                        _ => panic!("mixed neuron kinds in one model"),
+                    }
+                }
+                NeuronBlock::Lif {
+                    scalars: scalars.unwrap(),
+                    drive,
+                    v: vec![0.0; gids.len()],
+                    refr: vec![0.0; gids.len()],
+                }
+            }
+            NeuronKind::IgnoreAndFire { .. } => {
+                let mut phase = Vec::with_capacity(gids.len());
+                let mut interval = Vec::with_capacity(gids.len());
+                for &g in gids {
+                    match kind_of(g) {
+                        NeuronKind::IgnoreAndFire { interval_steps } => {
+                            interval.push(interval_steps as f32);
+                            phase.push(ianf_phase(g, interval_steps));
+                        }
+                        _ => panic!("mixed neuron kinds in one model"),
+                    }
+                }
+                NeuronBlock::IgnoreAndFire { phase, interval }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            NeuronBlock::Lif { v, .. } => v.len(),
+            NeuronBlock::IgnoreAndFire { phase, .. } => phase.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Advance all neurons one resolution step.  `syn[i]` is the summed
+    /// delta input for neuron `i` this step; indices of spiking neurons
+    /// are appended to `spikes_out`.
+    ///
+    /// Mirrors `_lif_kernel` / `_ianf_kernel` op-for-op.
+    pub fn step_native(&mut self, syn: &[f32], spikes_out: &mut Vec<u32>) {
+        match self {
+            NeuronBlock::Lif { scalars, drive, v, refr } => {
+                let LifScalars { p22, theta, v_reset, ref_steps } = *scalars;
+                debug_assert_eq!(syn.len(), v.len());
+                // zipped iteration elides bounds checks in the hot loop
+                for (i, (((vi, ri), &s), &d)) in v
+                    .iter_mut()
+                    .zip(refr.iter_mut())
+                    .zip(syn.iter())
+                    .zip(drive.iter())
+                    .enumerate()
+                {
+                    let input = s + d;
+                    let is_ref = *ri > 0.0;
+                    let v_int = p22 * *vi + 0.0f32 + input;
+                    let v_new = if is_ref { v_reset } else { v_int };
+                    let spike = !is_ref && v_new >= theta;
+                    *vi = if spike { v_reset } else { v_new };
+                    *ri = if spike {
+                        ref_steps
+                    } else {
+                        (*ri - 1.0).max(0.0)
+                    };
+                    if spike {
+                        spikes_out.push(i as u32);
+                    }
+                }
+            }
+            NeuronBlock::IgnoreAndFire { phase, interval } => {
+                for i in 0..phase.len() {
+                    let ph = phase[i] + 1.0;
+                    let spike = ph >= interval[i];
+                    phase[i] = if spike { 0.0 } else { ph };
+                    if spike {
+                        spikes_out.push(i as u32);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::spec::LifParams;
+
+    fn lif_block(n: usize, i_e: f64) -> NeuronBlock {
+        let gids: Vec<Gid> = (0..n as Gid).collect();
+        let params = LifParams { i_e_pa: i_e, ..Default::default() };
+        NeuronBlock::build(&gids, 0.1, |_| NeuronKind::Lif(params))
+    }
+
+    #[test]
+    fn lif_decays_without_input() {
+        let mut b = lif_block(1, 0.0);
+        if let NeuronBlock::Lif { v, .. } = &mut b {
+            v[0] = 10.0;
+        }
+        let mut spk = Vec::new();
+        b.step_native(&[0.0], &mut spk);
+        if let NeuronBlock::Lif { v, .. } = &b {
+            let want = 10.0f32 * (-0.01f64).exp() as f32;
+            assert!((v[0] - want).abs() < 1e-5);
+        }
+        assert!(spk.is_empty());
+    }
+
+    #[test]
+    fn lif_spikes_and_goes_refractory() {
+        let mut b = lif_block(2, 0.0);
+        let mut spk = Vec::new();
+        b.step_native(&[20.0, 1.0], &mut spk);
+        assert_eq!(spk, vec![0]);
+        if let NeuronBlock::Lif { v, refr, .. } = &b {
+            assert_eq!(v[0], 0.0);
+            assert_eq!(refr[0], 20.0);
+            assert!(refr[1] == 0.0);
+        }
+        // refractory: massive input ignored, no spike
+        spk.clear();
+        b.step_native(&[100.0, 0.0], &mut spk);
+        assert!(spk.is_empty());
+        if let NeuronBlock::Lif { v, refr, .. } = &b {
+            assert_eq!(v[0], 0.0);
+            assert_eq!(refr[0], 19.0);
+        }
+    }
+
+    #[test]
+    fn tonic_rate_matches_f_i_inverse() {
+        // drive calibrated for 10 Hz must produce ~10 Hz over 1 s
+        let params = LifParams::default();
+        let i_e = params.i_e_for_rate(10.0);
+        let mut b = lif_block(1, 0.0);
+        if let NeuronBlock::Lif { drive, .. } = &mut b {
+            let p = LifParams { i_e_pa: i_e, ..Default::default() };
+            drive[0] = p.drive(0.1);
+        }
+        let mut count = 0;
+        let mut spk = Vec::new();
+        for _ in 0..10_000 {
+            spk.clear();
+            b.step_native(&[0.0], &mut spk);
+            count += spk.len();
+        }
+        assert!((9..=11).contains(&count), "rate {count}/s");
+    }
+
+    #[test]
+    fn ianf_fires_at_interval_with_gid_phase() {
+        let gids: Vec<Gid> = (0..100).collect();
+        let mut b = NeuronBlock::build(&gids, 0.1, |_| {
+            NeuronKind::IgnoreAndFire { interval_steps: 10 }
+        });
+        let syn = vec![0.0; 100];
+        let mut per_step = Vec::new();
+        for _ in 0..100 {
+            let mut spk = Vec::new();
+            b.step_native(&syn, &mut spk);
+            per_step.push(spk.len());
+        }
+        let total: usize = per_step.iter().sum();
+        assert_eq!(total, 100 * 10); // each neuron 10 times in 100 steps
+        // phases spread: no step gets all 100 spikes
+        assert!(per_step.iter().all(|&n| n < 40), "{per_step:?}");
+    }
+
+    #[test]
+    fn ianf_phase_is_deterministic_and_in_range() {
+        for gid in 0..1000u32 {
+            let p = ianf_phase(gid, 4000);
+            assert_eq!(p, ianf_phase(gid, 4000));
+            assert!(p >= 0.0 && p < 4000.0);
+        }
+    }
+
+    #[test]
+    fn empty_block_is_noop() {
+        let mut b = NeuronBlock::build(&[], 0.1, |_| {
+            NeuronKind::Lif(LifParams::default())
+        });
+        let mut spk = Vec::new();
+        b.step_native(&[], &mut spk);
+        assert!(spk.is_empty());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "homogeneous")]
+    fn heterogeneous_intrinsic_params_rejected() {
+        let gids: Vec<Gid> = vec![0, 1];
+        NeuronBlock::build(&gids, 0.1, |g| {
+            NeuronKind::Lif(LifParams {
+                tau_m_ms: if g == 0 { 10.0 } else { 20.0 },
+                ..Default::default()
+            })
+        });
+    }
+}

@@ -1,0 +1,364 @@
+//! Per-rank simulation state and the cycle loop (paper Fig 3).
+//!
+//! Each rank owns its thread partitions (virtual threads — executed
+//! sequentially inside the rank's OS thread for determinism on any host),
+//! the dual connection/source/target tables, spike registers, MPI buffers
+//! and ring buffers.  `run()` iterates deliver → update → collocate →
+//! communicate for `S` cycles, with the communicate step depending on the
+//! strategy: global exchange every cycle (conventional/intermediate) or
+//! local swap + global exchange every D-th cycle (structure-aware).
+
+use crate::comm::{Communicator, SpikeMsg};
+use crate::config::Strategy;
+use crate::engine::neuron::NeuronBlock;
+use crate::engine::ringbuffer::RingBuffer;
+use crate::engine::update::Updater;
+use crate::network::{incoming_connections, Gid, ModelSpec};
+use crate::placement::Placement;
+use crate::tables::{ConnTable, LocalConn, Pathways, TargetTable};
+use crate::util::timers::{Phase, PhaseTimes, Stopwatch};
+use std::collections::HashMap;
+
+/// One virtual thread's worth of state.
+pub struct ThreadState {
+    /// Ascending thread-local GIDs; index in this vec = local index.
+    pub gids: Vec<Gid>,
+    pub block: NeuronBlock,
+    pub ring: RingBuffer,
+    pub conn: Pathways<ConnTable>,
+    pub targets: Pathways<TargetTable>,
+    /// Scratch: per-step synaptic input row.
+    syn_buf: Vec<f32>,
+    /// Scratch: spiking local indices of the current step.
+    spike_idx: Vec<u32>,
+    /// Spike registers (local index, emission step), split by pathway.
+    register: Pathways<Vec<(u32, u64)>>,
+}
+
+/// Measurements returned by a rank after the run.
+pub struct RankResult {
+    pub rank: usize,
+    pub phase_times: PhaseTimes,
+    /// (deliver+update+collocate) wall seconds per cycle (paper eq 18).
+    pub cycle_times: Vec<f64>,
+    /// Recorded spikes (emission step, gid), in emission order.
+    pub spikes: Vec<(u64, Gid)>,
+    /// Synapses hosted by this rank, by pathway.
+    pub n_conns_short: usize,
+    pub n_conns_long: usize,
+    /// Local neurons (real, not ghosts).
+    pub n_neurons: usize,
+}
+
+/// Full per-rank state.
+pub struct RankState {
+    rank: usize,
+    strategy: Strategy,
+    /// Cycles between global exchanges (1 unless structure-aware).
+    epoch_cycles: u64,
+    steps_per_cycle: u64,
+    threads: Vec<ThreadState>,
+    /// gid -> (thread, local index) for neurons hosted here.
+    local_index: HashMap<Gid, (u16, u32)>,
+    global_send: Vec<Vec<SpikeMsg>>,
+    local_send: Vec<SpikeMsg>,
+    recv_short: Vec<SpikeMsg>,
+    recv_long: Vec<SpikeMsg>,
+    record_spikes: bool,
+    spikes: Vec<(u64, Gid)>,
+}
+
+impl RankState {
+    /// Build tables and state for `rank`.  Collective: performs the
+    /// target-table construction exchange, so *all* ranks must call this
+    /// concurrently (as NEST's preparation phase does, §4.1.2).
+    pub fn build(
+        spec: &ModelSpec,
+        placement: &Placement,
+        strategy: Strategy,
+        seed: u64,
+        comm: &Communicator,
+        record_spikes: bool,
+    ) -> RankState {
+        let rank = comm.rank();
+        let m = comm.m_ranks();
+        let t_m = placement.threads_per_rank();
+        let dual = strategy.dual_pathways();
+        let steps_per_cycle = spec.d_min_steps() as u64;
+        let epoch_cycles =
+            if dual { spec.delay_ratio() as u64 } else { 1 }.max(1);
+
+        // --- thread partitions and local index
+        let mut threads = Vec::with_capacity(t_m);
+        let mut local_index: HashMap<Gid, (u16, u32)> = HashMap::new();
+        for th in 0..t_m {
+            let gids = placement.local_gids(spec, rank, th);
+            for (i, &g) in gids.iter().enumerate() {
+                local_index.insert(g, (th as u16, i as u32));
+            }
+            threads.push(gids);
+        }
+
+        // --- connection tables + target-table notifications
+        // notification (dest rank) -> set of (source, long_range)
+        let mut notify: Vec<std::collections::HashSet<(Gid, bool)>> =
+            vec![Default::default(); m];
+        let mut built_threads = Vec::with_capacity(t_m);
+        for gids in threads {
+            let mut entries_short: Vec<(Gid, LocalConn)> = Vec::new();
+            let mut entries_long: Vec<(Gid, LocalConn)> = Vec::new();
+            let mut max_delay: u16 = 1;
+            for (idx, &target) in gids.iter().enumerate() {
+                for c in incoming_connections(spec, seed, target) {
+                    let long_range = dual && !c.intra;
+                    let lc = LocalConn {
+                        target_local: idx as u32,
+                        weight: c.weight,
+                        delay_steps: c.delay_steps,
+                    };
+                    max_delay = max_delay.max(c.delay_steps);
+                    if long_range {
+                        entries_long.push((c.source, lc));
+                    } else {
+                        entries_short.push((c.source, lc));
+                    }
+                    let src_rank = placement.rank_of(spec, c.source);
+                    notify[src_rank].insert((c.source, long_range));
+                }
+            }
+            let conn = Pathways {
+                short: ConnTable::build(entries_short),
+                long: ConnTable::build(entries_long),
+            };
+            let n_slots = max_delay as usize
+                + (epoch_cycles * steps_per_cycle) as usize
+                + 2;
+            let ring = RingBuffer::new(gids.len(), n_slots);
+            let mut block = NeuronBlock::build(&gids, spec.h_ms, |g| {
+                spec.areas[spec.area_of(g)].neuron
+            });
+            // desynchronize the onset (NEST models randomize V_m); keyed
+            // by GID so all placements/strategies see the same state
+            block.init_membrane_jitter(&gids, 0.95);
+            let syn_len = gids.len();
+            built_threads.push(ThreadState {
+                gids,
+                block,
+                ring,
+                conn,
+                targets: Pathways {
+                    short: TargetTable::new(syn_len),
+                    long: TargetTable::new(syn_len),
+                },
+                syn_buf: vec![0.0; syn_len],
+                spike_idx: Vec::new(),
+                register: Pathways::default(),
+            });
+        }
+        let mut threads = built_threads;
+
+        // --- collective target-table construction: tell each source's
+        // host rank that we have targets of it (pathway encoded in cycle)
+        let mut send: Vec<Vec<SpikeMsg>> = notify
+            .into_iter()
+            .map(|set| {
+                let mut v: Vec<SpikeMsg> = set
+                    .into_iter()
+                    .map(|(source, long)| SpikeMsg {
+                        source,
+                        cycle: long as u32,
+                    })
+                    .collect();
+                v.sort_by_key(|msg| (msg.source, msg.cycle));
+                v
+            })
+            .collect();
+        let (recv, _) = comm.alltoall(&mut send);
+        for (src_rank, buf) in recv.iter().enumerate() {
+            for msg in buf {
+                let (th, idx) = local_index[&msg.source];
+                threads[th as usize]
+                    .targets
+                    .get_mut(msg.cycle == 1)
+                    .add(idx as usize, src_rank as u16);
+            }
+        }
+
+        RankState {
+            rank,
+            strategy,
+            epoch_cycles,
+            steps_per_cycle,
+            threads,
+            local_index,
+            global_send: (0..m).map(|_| Vec::new()).collect(),
+            local_send: Vec::new(),
+            recv_short: Vec::new(),
+            recv_long: Vec::new(),
+            record_spikes,
+            spikes: Vec::new(),
+        }
+    }
+
+    pub fn n_local_neurons(&self) -> usize {
+        self.local_index.len()
+    }
+
+    /// Deliver a batch of spikes through the given pathway's tables.
+    /// Spikes are sorted by (source, step) first so ring-buffer
+    /// accumulation order is canonical (DESIGN.md §6).
+    fn deliver(&mut self, long_range: bool, mut batch: Vec<SpikeMsg>, first_step: u64) {
+        batch.sort_unstable_by_key(|msg| (msg.source, msg.cycle));
+        for th in &mut self.threads {
+            let table = th.conn.get(long_range);
+            for msg in &batch {
+                for c in table.lookup(msg.source) {
+                    let arrive = msg.cycle as u64 + c.delay_steps as u64;
+                    debug_assert!(
+                        arrive >= first_step,
+                        "causality violation: spike from {} arrives at \
+                         step {arrive} < current step {first_step}",
+                        msg.source
+                    );
+                    th.ring.add(arrive, c.target_local, c.weight);
+                }
+            }
+        }
+    }
+
+    /// Run the state-propagation loop for `s_cycles` cycles.
+    pub fn run(
+        mut self,
+        comm: &Communicator,
+        s_cycles: u64,
+        updater: &Updater,
+        record_cycle_times: bool,
+    ) -> RankResult {
+        let mut phase_times = PhaseTimes::new();
+        let mut cycle_times =
+            Vec::with_capacity(if record_cycle_times { s_cycles as usize } else { 0 });
+        let dual = self.strategy.dual_pathways();
+
+        for s in 0..s_cycles {
+            let first_step = s * self.steps_per_cycle;
+            let mut sw = Stopwatch::start();
+            let mut cycle_secs = 0.0;
+
+            // ---- deliver -------------------------------------------------
+            let short_batch = std::mem::take(&mut self.recv_short);
+            if !short_batch.is_empty() {
+                self.deliver(false, short_batch, first_step);
+            }
+            let long_batch = std::mem::take(&mut self.recv_long);
+            if !long_batch.is_empty() {
+                self.deliver(dual, long_batch, first_step);
+            }
+            cycle_secs += sw.charge(&mut phase_times, Phase::Deliver);
+
+            // ---- update --------------------------------------------------
+            for th in &mut self.threads {
+                for step in first_step..first_step + self.steps_per_cycle {
+                    th.ring.take_row(step, &mut th.syn_buf);
+                    th.spike_idx.clear();
+                    updater.step(&mut th.block, &th.syn_buf, &mut th.spike_idx);
+                    for &idx in &th.spike_idx {
+                        if self.record_spikes {
+                            self.spikes.push((step, th.gids[idx as usize]));
+                        }
+                        if dual {
+                            if !th.targets.short.ranks(idx as usize).is_empty()
+                            {
+                                th.register.short.push((idx, step));
+                            }
+                            if !th.targets.long.ranks(idx as usize).is_empty()
+                            {
+                                th.register.long.push((idx, step));
+                            }
+                        } else if !th
+                            .targets
+                            .short
+                            .ranks(idx as usize)
+                            .is_empty()
+                        {
+                            th.register.short.push((idx, step));
+                        }
+                    }
+                }
+            }
+            cycle_secs += sw.charge(&mut phase_times, Phase::Update);
+
+            // ---- collocate -----------------------------------------------
+            if dual {
+                // short-range spikes into the local exchange buffer
+                for th in &mut self.threads {
+                    for &(idx, step) in &th.register.short {
+                        self.local_send.push(SpikeMsg {
+                            source: th.gids[idx as usize],
+                            cycle: step as u32,
+                        });
+                    }
+                    th.register.short.clear();
+                    // long-range spikes accumulate in the global MPI
+                    // buffers across the epoch
+                    for &(idx, step) in &th.register.long {
+                        let gid = th.gids[idx as usize];
+                        for &r in th.targets.long.ranks(idx as usize) {
+                            self.global_send[r as usize].push(SpikeMsg {
+                                source: gid,
+                                cycle: step as u32,
+                            });
+                        }
+                    }
+                    th.register.long.clear();
+                }
+            } else {
+                for th in &mut self.threads {
+                    for &(idx, step) in &th.register.short {
+                        let gid = th.gids[idx as usize];
+                        for &r in th.targets.short.ranks(idx as usize) {
+                            self.global_send[r as usize].push(SpikeMsg {
+                                source: gid,
+                                cycle: step as u32,
+                            });
+                        }
+                    }
+                    th.register.short.clear();
+                }
+            }
+            cycle_secs += sw.charge(&mut phase_times, Phase::Collocate);
+            if record_cycle_times {
+                cycle_times.push(cycle_secs);
+            }
+
+            // ---- communicate ---------------------------------------------
+            if dual {
+                self.recv_short = comm.local_swap(&mut self.local_send);
+            }
+            if (s + 1) % self.epoch_cycles == 0 {
+                let (recv, timing) = comm.alltoall(&mut self.global_send);
+                self.recv_long = recv.into_iter().flatten().collect();
+                phase_times.add(Phase::Synchronize, timing.sync_secs);
+                phase_times.add(Phase::DataExchange, timing.data_secs);
+                for buf in &mut self.global_send {
+                    buf.clear();
+                }
+            }
+        }
+
+        let (mut n_short, mut n_long, mut n_neurons) = (0usize, 0usize, 0usize);
+        for th in &self.threads {
+            n_short += th.conn.short.n_connections();
+            n_long += th.conn.long.n_connections();
+            n_neurons += th.gids.len();
+        }
+        RankResult {
+            rank: self.rank,
+            phase_times,
+            cycle_times,
+            spikes: self.spikes,
+            n_conns_short: n_short,
+            n_conns_long: n_long,
+            n_neurons,
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Delayed synaptic-input ring buffers.
+//!
+//! One buffer per (rank, thread): `n_slots` rows of `n_neurons` f64
+//! accumulators indexed by absolute simulation step modulo `n_slots`.
+//! Accumulation is f64 so that sums of the bundled models' binary-fraction
+//! weights are exact and therefore order-independent — the property the
+//! strategy-equivalence test relies on (DESIGN.md §6).
+
+/// Ring buffer of per-neuron delayed inputs.
+#[derive(Clone, Debug)]
+pub struct RingBuffer {
+    slots: Vec<f64>,
+    n_neurons: usize,
+    n_slots: usize,
+}
+
+impl RingBuffer {
+    /// `n_slots` must exceed the largest write-ahead distance
+    /// (max local delay + communication epoch).
+    pub fn new(n_neurons: usize, n_slots: usize) -> RingBuffer {
+        assert!(n_slots >= 1);
+        RingBuffer {
+            slots: vec![0.0; n_neurons * n_slots.max(1)],
+            n_neurons,
+            n_slots,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Add `weight` to the input of `neuron` arriving at absolute `step`.
+    #[inline]
+    pub fn add(&mut self, step: u64, neuron: u32, weight: f32) {
+        let slot = (step % self.n_slots as u64) as usize;
+        self.slots[slot * self.n_neurons + neuron as usize] += weight as f64;
+    }
+
+    /// Read out the input row for `step` into `out` (as f32, matching the
+    /// kernel's input dtype) and clear it for reuse.
+    pub fn take_row(&mut self, step: u64, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n_neurons);
+        let slot = (step % self.n_slots as u64) as usize;
+        let row = &mut self.slots[slot * self.n_neurons..][..self.n_neurons];
+        for (o, r) in out.iter_mut().zip(row.iter_mut()) {
+            *o = *r as f32;
+            *r = 0.0;
+        }
+    }
+
+    /// Sum of all pending input (diagnostics / leak detection in tests).
+    pub fn pending_total(&self) -> f64 {
+        self.slots.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_then_take() {
+        let mut rb = RingBuffer::new(3, 8);
+        rb.add(5, 0, 1.0);
+        rb.add(5, 2, 0.5);
+        rb.add(5, 2, 0.25);
+        let mut row = vec![0.0f32; 3];
+        rb.take_row(5, &mut row);
+        assert_eq!(row, vec![1.0, 0.0, 0.75]);
+        // cleared after take
+        rb.take_row(5, &mut row);
+        assert_eq!(row, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn wraps_modulo_slots() {
+        let mut rb = RingBuffer::new(1, 4);
+        rb.add(2, 0, 1.0);
+        rb.add(6, 0, 2.0); // same slot as step 2 (6 % 4 == 2)
+        let mut row = vec![0.0f32; 1];
+        rb.take_row(6, &mut row);
+        assert_eq!(row[0], 3.0); // collision by design if capacity too small
+    }
+
+    #[test]
+    fn distinct_slots_do_not_interfere() {
+        let mut rb = RingBuffer::new(2, 16);
+        for step in 0..16u64 {
+            rb.add(step, 0, step as f32);
+        }
+        let mut row = vec![0.0f32; 2];
+        for step in 0..16u64 {
+            rb.take_row(step, &mut row);
+            assert_eq!(row[0], step as f32);
+            assert_eq!(row[1], 0.0);
+        }
+        assert_eq!(rb.pending_total(), 0.0);
+    }
+
+    #[test]
+    fn f64_accumulation_is_order_independent_for_binary_weights() {
+        let weights = [0.125f32, -0.625, 0.125, 0.125, -0.625, 0.125];
+        let mut fwd = RingBuffer::new(1, 2);
+        for &w in &weights {
+            fwd.add(0, 0, w);
+        }
+        let mut rev = RingBuffer::new(1, 2);
+        for &w in weights.iter().rev() {
+            rev.add(0, 0, w);
+        }
+        let (mut a, mut b) = (vec![0.0f32], vec![0.0f32]);
+        fwd.take_row(0, &mut a);
+        rev.take_row(0, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a[0], -0.75);
+    }
+}

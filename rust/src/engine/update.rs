@@ -1,0 +1,62 @@
+//! Pluggable update-phase execution: native Rust arithmetic or any
+//! external executor (the PJRT/XLA path lives in `runtime::updater`).
+
+use crate::engine::neuron::NeuronBlock;
+
+/// A function advancing a [`NeuronBlock`] one step given summed synaptic
+/// input, appending spiking local indices.
+pub type StepFn =
+    Box<dyn Fn(&mut NeuronBlock, &[f32], &mut Vec<u32>) + Send + Sync>;
+
+/// Update-phase executor shared by all rank threads.
+pub enum Updater {
+    /// In-process f32 arithmetic (mirrors the L1 kernel op order).
+    Native,
+    /// External executor, e.g. the AOT-compiled XLA artifact via PJRT.
+    Custom(StepFn),
+}
+
+impl Updater {
+    #[inline]
+    pub fn step(
+        &self,
+        block: &mut NeuronBlock,
+        syn: &[f32],
+        spikes_out: &mut Vec<u32>,
+    ) {
+        match self {
+            Updater::Native => block.step_native(syn, spikes_out),
+            Updater::Custom(f) => f(block, syn, spikes_out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::spec::{LifParams, NeuronKind};
+
+    #[test]
+    fn custom_updater_is_called() {
+        let updater = Updater::Custom(Box::new(|_, _, out| out.push(42)));
+        let mut block = NeuronBlock::build(&[0], 0.1, |_| {
+            NeuronKind::Lif(LifParams::default())
+        });
+        let mut out = Vec::new();
+        updater.step(&mut block, &[0.0], &mut out);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn native_matches_block_step() {
+        let updater = Updater::Native;
+        let mut a = NeuronBlock::build(&[0, 1], 0.1, |_| {
+            NeuronKind::Lif(LifParams::default())
+        });
+        let mut b = a.clone();
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        updater.step(&mut a, &[20.0, 0.0], &mut oa);
+        b.step_native(&[20.0, 0.0], &mut ob);
+        assert_eq!(oa, ob);
+    }
+}

@@ -1,0 +1,103 @@
+//! Shared helpers for the figure harnesses.
+
+use crate::config::Strategy;
+use crate::network::ModelSpec;
+use crate::util::json::Json;
+use crate::util::timers::{Phase, PhaseTimes};
+use crate::vcluster::{run_cluster, MachineProfile, VcOptions, VcResult, Workload};
+use anyhow::Result;
+
+/// The paper's three benchmark seeds (§4.2).
+pub const SEEDS: [u64; 3] = [12, 654, 91856];
+
+/// Run the virtual cluster for (spec, strategy, m) on `machine`.
+pub fn vc_run(
+    machine: &MachineProfile,
+    spec: &ModelSpec,
+    strategy: Strategy,
+    m: usize,
+    t_model_ms: f64,
+    seed: u64,
+    record_cycle_times: bool,
+) -> Result<VcResult> {
+    let w = Workload::derive(spec, strategy, m, machine.t_m)?;
+    run_cluster(
+        machine,
+        &w,
+        &VcOptions {
+            t_model_ms,
+            h_ms: spec.h_ms,
+            seed,
+            record_cycle_times,
+        },
+    )
+}
+
+/// Mean RTF per phase over seeds; returns (phase RTFs in Phase::ALL
+/// order, total RTF).
+pub fn mean_phase_rtf(
+    machine: &MachineProfile,
+    spec: &ModelSpec,
+    strategy: Strategy,
+    m: usize,
+    t_model_ms: f64,
+    seeds: &[u64],
+) -> Result<([f64; 5], f64)> {
+    let mut acc = PhaseTimes::new();
+    for &seed in seeds {
+        let res = vc_run(machine, spec, strategy, m, t_model_ms, seed, false)?;
+        acc.merge(&res.mean_times);
+    }
+    let t_model_s = t_model_ms / 1000.0 * seeds.len() as f64;
+    let mut out = [0.0f64; 5];
+    for (i, p) in Phase::ALL.iter().enumerate() {
+        out[i] = acc.get(*p) / t_model_s;
+    }
+    Ok((out, acc.total() / t_model_s))
+}
+
+/// JSON row for a phase breakdown.
+pub fn phase_row_json(label: &str, m: usize, phases: &[f64; 5], total: f64) -> Json {
+    Json::obj(vec![
+        ("label", label.into()),
+        ("m", m.into()),
+        ("deliver", phases[0].into()),
+        ("update", phases[1].into()),
+        ("collocate", phases[2].into()),
+        ("synchronize", phases[3].into()),
+        ("data_exchange", phases[4].into()),
+        ("rtf", total.into()),
+    ])
+}
+
+/// Standard table header for phase breakdowns.
+pub const PHASE_HEADERS: [&str; 8] = [
+    "config",
+    "M",
+    "deliver",
+    "update",
+    "collocate",
+    "synchronize",
+    "data-exch",
+    "RTF",
+];
+
+/// Render a phase row into table cells.
+pub fn phase_row_cells(
+    label: &str,
+    m: usize,
+    phases: &[f64; 5],
+    total: f64,
+) -> Vec<String> {
+    use crate::util::tablefmt::fnum;
+    vec![
+        label.to_string(),
+        m.to_string(),
+        fnum(phases[0]),
+        fnum(phases[1]),
+        fnum(phases[2]),
+        fnum(phases[3]),
+        fnum(phases[4]),
+        fnum(total),
+    ]
+}

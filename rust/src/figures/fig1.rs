@@ -1,0 +1,100 @@
+//! Fig 1: strong scaling of the MAM (conventional strategy) and the
+//! decomposition of communication time into synchronization vs pure MPI
+//! data exchange.
+
+use super::common::{
+    mean_phase_rtf, phase_row_cells, phase_row_json, vc_run, PHASE_HEADERS,
+    SEEDS,
+};
+use super::{FigOptions, FigureOutput};
+use crate::config::Strategy;
+use crate::models;
+use crate::util::json::Json;
+use crate::util::tablefmt::{fnum, Table};
+use crate::vcluster::MachineProfile;
+use anyhow::Result;
+
+const MS: [usize; 4] = [16, 32, 64, 128];
+
+/// Fig 1a: per-phase real-time factors of the MAM under strong scaling,
+/// conventional strategy, SuperMUC-NG.
+pub fn fig1a(opts: &FigOptions) -> Result<FigureOutput> {
+    let machine = MachineProfile::supermuc_ng();
+    let spec = models::mam(1.0, 0.1)?; // no inter-area cutoff exploited
+    let mut table = Table::new(&PHASE_HEADERS);
+    let mut rows = Vec::new();
+    for &m in &MS {
+        let (phases, total) = mean_phase_rtf(
+            &machine,
+            &spec,
+            Strategy::Conventional,
+            m,
+            opts.t_model_ms,
+            &SEEDS,
+        )?;
+        table.row(phase_row_cells("MAM/conv", m, &phases, total));
+        rows.push(phase_row_json("MAM/conv", m, &phases, total));
+    }
+    Ok(FigureOutput {
+        name: "fig1a",
+        title: "MAM strong scaling, conventional strategy (per-phase RTF)"
+            .into(),
+        table: table.render(),
+        json: Json::obj(vec![("rows", Json::Arr(rows))]),
+    })
+}
+
+/// Fig 1b: communication RTF vs the pure-MPI estimate from the Alltoall
+/// benchmark (the dashed line) — exposing synchronization as the gap.
+pub fn fig1b(opts: &FigOptions) -> Result<FigureOutput> {
+    let machine = MachineProfile::supermuc_ng();
+    let spec = models::mam(1.0, 0.1)?;
+    let mut table = Table::new(&[
+        "M",
+        "comm RTF",
+        "pure-MPI RTF",
+        "sync share",
+        "bytes/pair",
+    ]);
+    let mut rows = Vec::new();
+    for &m in &MS {
+        let res = vc_run(
+            &machine,
+            &spec,
+            Strategy::Conventional,
+            m,
+            opts.t_model_ms,
+            opts.seed,
+            false,
+        )?;
+        use crate::util::timers::Phase;
+        let t_model_s = opts.t_model_ms / 1000.0;
+        let comm_rtf = (res.mean_times.get(Phase::Synchronize)
+            + res.mean_times.get(Phase::DataExchange))
+            / t_model_s;
+        let data_rtf = res.data_rtf();
+        let sync_share = 1.0 - data_rtf / comm_rtf;
+        table.row(vec![
+            m.to_string(),
+            fnum(comm_rtf),
+            fnum(data_rtf),
+            format!("{:.0}%", 100.0 * sync_share),
+            fnum(res.bytes_per_pair),
+        ]);
+        rows.push(Json::obj(vec![
+            ("m", m.into()),
+            ("comm_rtf", comm_rtf.into()),
+            ("pure_mpi_rtf", data_rtf.into()),
+            ("sync_share", sync_share.into()),
+            ("bytes_per_pair", res.bytes_per_pair.into()),
+        ]));
+    }
+    Ok(FigureOutput {
+        name: "fig1b",
+        title:
+            "communication RTF vs pure MPI data exchange (sync dominates)"
+                .into(),
+        table: table.render(),
+        json: Json::obj(vec![("rows", Json::Arr(rows))]),
+    })
+}

@@ -1,0 +1,40 @@
+//! Fig 11: strong-scaling comparison of the MAM and the MAM-benchmark
+//! (both 32 areas, conventional strategy).
+
+use super::common::{mean_phase_rtf, phase_row_cells, phase_row_json, PHASE_HEADERS, SEEDS};
+use super::{FigOptions, FigureOutput};
+use crate::config::Strategy;
+use crate::models;
+use crate::util::json::Json;
+use crate::util::tablefmt::Table;
+use crate::vcluster::MachineProfile;
+use anyhow::Result;
+
+pub fn fig11(opts: &FigOptions) -> Result<FigureOutput> {
+    let machine = MachineProfile::supermuc_ng();
+    let mam = models::mam(1.0, 0.1)?;
+    let mamb = models::mam_benchmark(32, 1.0, 0.1)?;
+    let mut table = Table::new(&PHASE_HEADERS);
+    let mut rows = Vec::new();
+    for (name, spec) in [("MAM", &mam), ("MAM-benchmark", &mamb)] {
+        for &m in &[16usize, 32, 64, 128] {
+            let (phases, total) = mean_phase_rtf(
+                &machine,
+                spec,
+                Strategy::Conventional,
+                m,
+                opts.t_model_ms,
+                &SEEDS,
+            )?;
+            table.row(phase_row_cells(name, m, &phases, total));
+            rows.push(phase_row_json(name, m, &phases, total));
+        }
+    }
+    Ok(FigureOutput {
+        name: "fig11",
+        title: "strong scaling: MAM vs MAM-benchmark (conventional, 32 areas)"
+            .into(),
+        table: table.render(),
+        json: Json::obj(vec![("rows", Json::Arr(rows))]),
+    })
+}

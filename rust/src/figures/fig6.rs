@@ -1,0 +1,109 @@
+//! Fig 6: the theoretical analyses — (a) cycle-time distributions and
+//! per-cycle maxima under lumping, (b) irregular-access fractions of the
+//! spike-delivery model.
+
+use super::FigureOutput;
+use crate::theory::delivery::{
+    f_irr_conventional, f_irr_structure, DeliveryScenario,
+};
+use crate::theory::sync::{maxima_tail_coverage, CycleTimeModel};
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::tablefmt::{fnum, Table};
+use anyhow::Result;
+
+/// Fig 6a: N(mu, sigma) cycle times, lumped D=10; expected maxima for
+/// M in {64, 128} and the upper-3.5 % quantile markers.
+pub fn fig6a() -> Result<FigureOutput> {
+    // parameterized like the measured MAM-benchmark distribution
+    let model = CycleTimeModel { mu: 1.6e-3, sigma: 0.09e-3 };
+    let lumped = model.lumped(10);
+    let mut table = Table::new(&[
+        "distribution",
+        "mu [ms]",
+        "sigma [ms]",
+        "CV",
+        "E[max] M=64 [ms]",
+        "E[max] M=128 [ms]",
+        "q96.5 [ms]",
+    ]);
+    for (name, m) in [("conventional", model), ("structure-aware D=10", lumped)]
+    {
+        let q = m.mu + stats::norm_ppf(0.965) * m.sigma;
+        table.row(vec![
+            name.into(),
+            fnum(m.mu * 1e3),
+            fnum(m.sigma * 1e3),
+            fnum(m.cv()),
+            fnum(m.expected_max(64) * 1e3),
+            fnum(m.expected_max(128) * 1e3),
+            fnum(q * 1e3),
+        ]);
+    }
+    let coverage = maxima_tail_coverage(0.035, 128);
+    let footer = format!(
+        "eq 12 at M=128: upper 3.5% of cycle times cover {:.1}% of \
+         per-cycle maxima; CV ratio = {:.3} (eq 7: 1/sqrt(10) = {:.3})",
+        coverage * 100.0,
+        lumped.cv() / model.cv(),
+        1.0 / 10f64.sqrt()
+    );
+    Ok(FigureOutput {
+        name: "fig6a",
+        title: "theoretical cycle-time distributions and maxima".into(),
+        table: format!("{}\n{footer}", table.render()),
+        json: Json::obj(vec![
+            ("cv_conv", model.cv().into()),
+            ("cv_struct", lumped.cv().into()),
+            ("maxima_tail_coverage", coverage.into()),
+            ("e_max_128_conv_ms", (model.expected_max(128) * 1e3).into()),
+            ("e_max_128_struct_ms", (lumped.expected_max(128) * 1e3).into()),
+        ]),
+    })
+}
+
+/// Fig 6b: predicted fraction of irregular memory access vs number of MPI
+/// processes, conventional vs structure-aware, T_M in {48, 128}.
+pub fn fig6b() -> Result<FigureOutput> {
+    let sc = DeliveryScenario::default();
+    let ms = [8usize, 16, 32, 64, 128, 256];
+    let mut table = Table::new(&[
+        "M",
+        "conv T=48",
+        "struct T=48",
+        "conv T=128",
+        "struct T=128",
+        "reduction T=48",
+        "reduction T=128",
+    ]);
+    let mut rows = Vec::new();
+    for &m in &ms {
+        let c48 = f_irr_conventional(&sc, m, 48);
+        let s48 = f_irr_structure(&sc, m, 48);
+        let c128 = f_irr_conventional(&sc, m, 128);
+        let s128 = f_irr_structure(&sc, m, 128);
+        table.row(vec![
+            m.to_string(),
+            fnum(c48),
+            fnum(s48),
+            fnum(c128),
+            fnum(s128),
+            format!("{:.0}%", 100.0 * (1.0 - s48 / c48)),
+            format!("{:.0}%", 100.0 * (1.0 - s128 / c128)),
+        ]);
+        rows.push(Json::obj(vec![
+            ("m", m.into()),
+            ("conv_t48", c48.into()),
+            ("struct_t48", s48.into()),
+            ("conv_t128", c128.into()),
+            ("struct_t128", s128.into()),
+        ]));
+    }
+    Ok(FigureOutput {
+        name: "fig6b",
+        title: "predicted fraction of irregular synapse accesses (eqs 13-17)"
+            .into(),
+        table: table.render(),
+        json: Json::obj(vec![("rows", Json::Arr(rows))]),
+    })
+}

@@ -1,0 +1,136 @@
+//! Fig 8: robustness of the structure-aware scheme to heterogeneity —
+//! (a) area-size variability, (b) spike-rate variability, (c) the delay
+//! ratio D.
+
+use super::common::{phase_row_cells, phase_row_json, PHASE_HEADERS};
+use super::{FigOptions, FigureOutput};
+use crate::config::Strategy;
+use crate::models;
+use crate::util::json::Json;
+use crate::util::tablefmt::Table;
+use crate::util::timers::Phase;
+use crate::vcluster::{run_cluster, MachineProfile, VcOptions, Workload};
+use anyhow::Result;
+
+const M: usize = 64;
+/// Sampling seeds for the heterogeneity draws (three per point, as in the
+/// paper).
+const SAMPLE_SEEDS: [u64; 3] = [1, 2, 3];
+
+fn run_het(
+    opts: &FigOptions,
+    cv_size: f64,
+    cv_rate: f64,
+    d_min_inter: f64,
+) -> Result<([f64; 5], f64)> {
+    let machine = MachineProfile::supermuc_ng();
+    let mut acc = [0.0f64; 5];
+    let mut total = 0.0;
+    for &ss in &SAMPLE_SEEDS {
+        let spec = models::mam_benchmark_heterogeneous(
+            M,
+            1.0,
+            d_min_inter,
+            cv_size,
+            cv_rate,
+            ss,
+        )?;
+        let w = Workload::derive(
+            &spec,
+            Strategy::StructureAware,
+            M,
+            machine.t_m,
+        )?;
+        let res = run_cluster(
+            &machine,
+            &w,
+            &VcOptions {
+                t_model_ms: opts.t_model_ms,
+                h_ms: spec.h_ms,
+                seed: opts.seed + ss,
+                record_cycle_times: false,
+            },
+        )?;
+        let t_model_s = opts.t_model_ms / 1000.0;
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            acc[i] += res.mean_times.get(*p) / t_model_s;
+        }
+        total += res.rtf();
+    }
+    let n = SAMPLE_SEEDS.len() as f64;
+    for a in &mut acc {
+        *a /= n;
+    }
+    Ok((acc, total / n))
+}
+
+/// Fig 8a: RTF vs CV of area size (fixed mean 130k, D=10).
+pub fn fig8a(opts: &FigOptions) -> Result<FigureOutput> {
+    let cvs = [0.0, 0.05, 0.1, 0.2, 0.3];
+    let mut table = Table::new(&PHASE_HEADERS);
+    let mut rows = Vec::new();
+    for &cv in &cvs {
+        let (phases, total) = run_het(opts, cv, 0.0, 1.0)?;
+        let label = format!("CV(size)={cv}");
+        table.row(phase_row_cells(&label, M, &phases, total));
+        rows.push(phase_row_json(&label, M, &phases, total));
+    }
+    Ok(FigureOutput {
+        name: "fig8a",
+        title: "structure-aware RTF vs area-size variability (M=64)".into(),
+        table: table.render(),
+        json: Json::obj(vec![("rows", Json::Arr(rows))]),
+    })
+}
+
+/// Fig 8b: RTF vs CV of per-area spike rate (fixed mean 2.5 /s, D=10).
+pub fn fig8b(opts: &FigOptions) -> Result<FigureOutput> {
+    let cvs = [0.0, 0.1, 0.25, 0.5, 1.0];
+    let mut table = Table::new(&PHASE_HEADERS);
+    let mut rows = Vec::new();
+    for &cv in &cvs {
+        let (phases, total) = run_het(opts, 0.0, cv, 1.0)?;
+        let label = format!("CV(rate)={cv}");
+        table.row(phase_row_cells(&label, M, &phases, total));
+        rows.push(phase_row_json(&label, M, &phases, total));
+    }
+    Ok(FigureOutput {
+        name: "fig8b",
+        title: "structure-aware RTF vs spike-rate variability (M=64)".into(),
+        table: table.render(),
+        json: Json::obj(vec![("rows", Json::Arr(rows))]),
+    })
+}
+
+/// Fig 8c: RTF vs the delay ratio D (d_min fixed at 0.1 ms).
+pub fn fig8c(opts: &FigOptions) -> Result<FigureOutput> {
+    let ds = [1u32, 2, 5, 10, 20, 50];
+    let mut table = Table::new(&PHASE_HEADERS);
+    let mut rows = Vec::new();
+    let mut comm_rtfs = Vec::new();
+    for &d in &ds {
+        let (phases, total) = run_het(opts, 0.0, 0.0, 0.1 * d as f64)?;
+        let label = format!("D={d}");
+        table.row(phase_row_cells(&label, M, &phases, total));
+        rows.push(phase_row_json(&label, M, &phases, total));
+        comm_rtfs.push(phases[3] + phases[4]);
+    }
+    let footer = format!(
+        "communication RTF by D: {} — rapid gain up to D~5-10, then \
+         saturation (eq 11)",
+        comm_rtfs
+            .iter()
+            .map(|c| format!("{c:.2}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    Ok(FigureOutput {
+        name: "fig8c",
+        title: "structure-aware RTF vs delay ratio D (M=64)".into(),
+        table: format!("{}\n{footer}", table.render()),
+        json: Json::obj(vec![
+            ("rows", Json::Arr(rows)),
+            ("comm_rtfs", Json::nums(&comm_rtfs)),
+        ]),
+    })
+}

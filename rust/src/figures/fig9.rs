@@ -1,0 +1,63 @@
+//! Fig 9: the real-world MAM at M=32 under all three strategies on both
+//! machine profiles.
+
+use super::common::{mean_phase_rtf, phase_row_cells, phase_row_json, PHASE_HEADERS, SEEDS};
+use super::{FigOptions, FigureOutput};
+use crate::config::Strategy;
+use crate::models;
+use crate::util::json::Json;
+use crate::util::tablefmt::Table;
+use crate::vcluster::MachineProfile;
+use anyhow::Result;
+
+pub fn fig9(opts: &FigOptions) -> Result<FigureOutput> {
+    let spec = models::mam(1.0, 1.0)?;
+    let mut table = Table::new(&PHASE_HEADERS);
+    let mut rows = Vec::new();
+    let mut totals = std::collections::BTreeMap::new();
+    for machine in [MachineProfile::supermuc_ng(), MachineProfile::jureca_dc()]
+    {
+        for strategy in [
+            Strategy::Conventional,
+            Strategy::Intermediate,
+            Strategy::StructureAware,
+        ] {
+            let (phases, total) = mean_phase_rtf(
+                &machine,
+                &spec,
+                strategy,
+                32,
+                opts.t_model_ms,
+                &SEEDS,
+            )?;
+            let label = format!("{}/{}", machine.name, strategy.name());
+            table.row(phase_row_cells(&label, 32, &phases, total));
+            rows.push(phase_row_json(&label, 32, &phases, total));
+            totals.insert(label, total);
+        }
+    }
+    let speedup_jureca = 1.0
+        - totals["JURECA-DC/structure-aware"]
+            / totals["JURECA-DC/conventional"];
+    let speedup_smng = 1.0
+        - totals["SuperMUC-NG/structure-aware"]
+            / totals["SuperMUC-NG/conventional"];
+    let footer = format!(
+        "net structure-aware speed-up: JURECA-DC {:.0}% (paper: 42%), \
+         SuperMUC-NG {:.0}% (paper: ~parity)",
+        100.0 * speedup_jureca,
+        100.0 * speedup_smng
+    );
+    Ok(FigureOutput {
+        name: "fig9",
+        title: "real-world MAM, M=32: conventional / intermediate / \
+                structure-aware on two machines"
+            .into(),
+        table: format!("{}\n{footer}", table.render()),
+        json: Json::obj(vec![
+            ("rows", Json::Arr(rows)),
+            ("speedup_jureca", speedup_jureca.into()),
+            ("speedup_supermuc", speedup_smng.into()),
+        ]),
+    })
+}

@@ -1,0 +1,84 @@
+//! Figure harnesses: regenerate every figure of the paper's evaluation
+//! as text tables (stdout) + JSON rows (`results/<fig>.json`).
+//!
+//! Each harness returns a [`FigureOutput`] so benches and tests can check
+//! the numbers without re-parsing stdout.
+
+pub mod common;
+pub mod fig1;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig11;
+pub mod fig12;
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// A rendered figure: human-readable table plus machine-readable rows.
+pub struct FigureOutput {
+    pub name: &'static str,
+    pub title: String,
+    pub table: String,
+    pub json: Json,
+}
+
+impl FigureOutput {
+    /// Print to stdout and write `results/<name>.json`.
+    pub fn emit(&self, results_dir: &str) -> Result<()> {
+        println!("== {} — {} ==", self.name, self.title);
+        println!("{}", self.table);
+        std::fs::create_dir_all(results_dir)?;
+        let path = format!("{results_dir}/{}.json", self.name);
+        std::fs::write(&path, crate::util::json::to_string_pretty(&self.json))?;
+        println!("[written {path}]\n");
+        Ok(())
+    }
+}
+
+/// Quick-mode scaling: figure harnesses accept a `t_model_ms` so CI runs
+/// stay fast while the full paper protocol (10 s) remains available.
+#[derive(Clone, Copy, Debug)]
+pub struct FigOptions {
+    pub t_model_ms: f64,
+    pub seed: u64,
+}
+
+impl Default for FigOptions {
+    fn default() -> Self {
+        Self { t_model_ms: 1_000.0, seed: 654 }
+    }
+}
+
+/// Run a figure by name.
+pub fn run_figure(name: &str, opts: &FigOptions) -> Result<FigureOutput> {
+    match name {
+        "fig1a" => fig1::fig1a(opts),
+        "fig1b" => fig1::fig1b(opts),
+        "fig4" => fig4::fig4(),
+        "fig5" => fig5::fig5(opts),
+        "fig6a" => fig6::fig6a(),
+        "fig6b" => fig6::fig6b(),
+        "fig7a" => fig7::fig7a(opts),
+        "fig7b" => fig7::fig7b(opts),
+        "fig8a" => fig8::fig8a(opts),
+        "fig8b" => fig8::fig8b(opts),
+        "fig8c" => fig8::fig8c(opts),
+        "fig9" => fig9::fig9(opts),
+        "fig11" => fig11::fig11(opts),
+        "fig12" => fig12::fig12(opts),
+        other => anyhow::bail!(
+            "unknown figure {other:?}; available: fig1a fig1b fig4 fig5 \
+             fig6a fig6b fig7a fig7b fig8a fig8b fig8c fig9 fig11 fig12"
+        ),
+    }
+}
+
+/// All figure names in paper order.
+pub const ALL_FIGURES: [&str; 14] = [
+    "fig1a", "fig1b", "fig4", "fig5", "fig6a", "fig6b", "fig7a", "fig7b",
+    "fig8a", "fig8b", "fig8c", "fig9", "fig11", "fig12",
+];

@@ -1,0 +1,47 @@
+//! # nsim — structure-aware brain-scale spiking-network simulation
+//!
+//! Reproduction of *Exploiting network topology in brain-scale simulations
+//! of spiking neural networks* (Lober, Diesmann, Kunkel; CS.DC 2026) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains two complementary execution substrates:
+//!
+//! * a **functional engine** ([`engine`]) — a NEST-like distributed
+//!   simulation kernel in which MPI ranks are OS threads communicating
+//!   through a simulated MPI layer ([`comm`]).  It executes real spiking
+//!   networks and proves that the conventional and structure-aware
+//!   strategies are *observationally equivalent* (identical spike trains);
+//! * a **virtual cluster** ([`vcluster`]) — a discrete-event performance
+//!   model of `M` ranks × `T_M` threads with calibrated per-phase cost
+//!   models, an `MPI_Alltoall` cost curve and serially-correlated
+//!   cycle-time noise, which reproduces the paper's figures at full
+//!   SuperMUC-NG / JURECA-DC scale (the hardware substitution documented in
+//!   `DESIGN.md` §2).
+//!
+//! The [`theory`] module implements the paper's analytical machinery
+//! (order statistics of cycle-time maxima, CLT lumping, irregular-access
+//! fractions), and [`figures`] regenerates every figure of the evaluation.
+//!
+//! Layer boundaries:
+//! * L1/L2 live in `python/compile` (Pallas kernel + jax step functions),
+//!   lowered once to `artifacts/*.hlo.txt`;
+//! * [`runtime`] loads those artifacts through PJRT (`xla` crate) so the
+//!   update phase can run the compiled XLA computation;
+//! * everything else — placement, tables, communication, scheduling — is
+//!   the L3 coordinator in this crate.
+
+pub mod util;
+pub mod config;
+pub mod network;
+pub mod models;
+pub mod placement;
+pub mod tables;
+pub mod comm;
+pub mod engine;
+pub mod runtime;
+pub mod vcluster;
+pub mod theory;
+pub mod figures;
+
+/// Simulation resolution step in ms (NEST default used throughout the paper).
+pub const H_MS: f64 = 0.1;

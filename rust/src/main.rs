@@ -1,0 +1,245 @@
+//! `nsim` — launcher for the structure-aware spiking-network simulation
+//! framework.
+//!
+//! Subcommands:
+//!   simulate   run the functional engine on a bundled model
+//!   figure     regenerate one figure of the paper (see --list)
+//!   figures    regenerate every figure
+//!   theory     print the analytical predictions (eqs 7/11/12/13-17)
+//!   info       print artifact/registry and model-zoo information
+
+use anyhow::{bail, Result};
+use nsim::config::{RunConfig, Strategy};
+use nsim::figures::{run_figure, FigOptions, ALL_FIGURES};
+use nsim::models;
+use nsim::util::cli::Args;
+use nsim::util::tablefmt::{fnum, Table};
+use nsim::util::timers::Phase;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("theory") => cmd_theory(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "nsim — structure-aware brain-scale spiking-network simulation\n\
+         \n\
+         usage: nsim <command> [options]\n\
+         \n\
+         commands:\n\
+           simulate --model <sanity|mam-benchmark|mam> [--strategy s]\n\
+                    [--ranks M] [--threads T] [--t-model ms] [--seed n]\n\
+                    [--scale f] [--areas n] [--update-path native|xla]\n\
+                    [--record-spikes]\n\
+           figure <name> [--t-model ms] [--seed n] [--out dir]\n\
+           figures [--t-model ms] [--out dir]\n\
+           theory [--d D] [--ranks M] [--threads T]\n\
+           info\n\
+         \n\
+         figures: {}",
+        ALL_FIGURES.join(" ")
+    );
+}
+
+fn build_model(
+    args: &Args,
+    m_ranks: usize,
+) -> Result<nsim::network::ModelSpec> {
+    let name = args.str_or("model", "sanity");
+    let scale = args.f64_or("scale", 0.01)?;
+    let d_min_inter = args.f64_or("d-min-inter", 1.0)?;
+    match name.as_str() {
+        "sanity" => {
+            let n = args.usize_or("n-per-area", 500)? as u32;
+            let areas = args.usize_or("areas", m_ranks.max(2))?;
+            models::sanity_net(n, areas)
+        }
+        "mam-benchmark" | "mamb" => {
+            let areas = args.usize_or("areas", m_ranks.max(2))?;
+            models::mam_benchmark(areas, scale, d_min_inter)
+        }
+        "mam" => models::mam(scale, d_min_inter),
+        other => bail!("unknown model {other:?}"),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = RunConfig {
+        record_spikes: true,
+        record_cycle_times: true,
+        ..RunConfig::default()
+    }
+    .override_from_args(args)?;
+    let spec = build_model(args, cfg.m_ranks)?;
+    args.finish()?;
+
+    println!(
+        "model {} | {} areas | {} neurons | strategy {} | M={} T={} | \
+         T_model {} ms | D={}",
+        spec.name,
+        spec.n_areas(),
+        spec.total_neurons(),
+        cfg.strategy.name(),
+        cfg.m_ranks,
+        cfg.threads_per_rank,
+        cfg.t_model_ms,
+        spec.delay_ratio(),
+    );
+    let t0 = std::time::Instant::now();
+    let res = nsim::engine::simulate(&spec, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut table = Table::new(&["phase", "seconds", "share"]);
+    let total = res.mean_times.total();
+    for p in Phase::ALL {
+        let secs = res.mean_times.get(p);
+        table.row(vec![
+            p.name().into(),
+            fnum(secs),
+            format!("{:.1}%", 100.0 * secs / total.max(1e-12)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "cycles {} | spikes {} | mean rate {:.2} /s | RTF {:.1} | \
+         wall {:.2}s | comm (a2a, swaps, bytes, resizes) {:?}",
+        res.s_cycles,
+        res.n_spikes(),
+        res.mean_rate_hz(spec.total_neurons() as usize),
+        res.rtf(),
+        wall,
+        res.comm_stats,
+    );
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: nsim figure <name>"))?;
+    let opts = FigOptions {
+        t_model_ms: args.f64_or("t-model", 1_000.0)?,
+        seed: args.u64_or("seed", 654)?,
+    };
+    let out = args.str_or("out", "results");
+    args.finish()?;
+    run_figure(&name, &opts)?.emit(&out)
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let opts = FigOptions {
+        t_model_ms: args.f64_or("t-model", 1_000.0)?,
+        seed: args.u64_or("seed", 654)?,
+    };
+    let out = args.str_or("out", "results");
+    args.finish()?;
+    for name in ALL_FIGURES {
+        run_figure(name, &opts)?.emit(&out)?;
+    }
+    Ok(())
+}
+
+fn cmd_theory(args: &Args) -> Result<()> {
+    use nsim::theory::{delivery, sync};
+    let d = args.usize_or("d", 10)? as u32;
+    let m = args.usize_or("ranks", 128)?;
+    let t_m = args.usize_or("threads", 48)?;
+    args.finish()?;
+
+    println!("== synchronization theory (eqs 2-12) ==");
+    println!(
+        "xi_M(M={m}) = {:.3} sd; sync ratio 1/sqrt(D={d}) = {:.3}",
+        nsim::util::stats::blom_xi(m),
+        sync::sync_ratio(d)
+    );
+    println!(
+        "upper 3.5% of cycle times cover {:.1}% of per-cycle maxima (eq 12)",
+        100.0 * sync::maxima_tail_coverage(0.035, m)
+    );
+    let sc = delivery::DeliveryScenario::default();
+    println!("\n== spike-delivery theory (eqs 13-17) ==");
+    println!(
+        "f_irr conventional(M={m}, T={t_m}) = {:.4}",
+        delivery::f_irr_conventional(&sc, m, t_m)
+    );
+    println!(
+        "f_irr structure-aware          = {:.4} ({:.0}% reduction)",
+        delivery::f_irr_structure(&sc, m, t_m),
+        100.0 * delivery::irregular_access_reduction(&sc, m, t_m)
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.finish()?;
+    println!("model zoo:");
+    for (name, spec) in [
+        ("sanity (2x500)", models::sanity_net(500, 2)?),
+        (
+            "mam-benchmark 32 areas (paper scale)",
+            models::mam_benchmark(32, 1.0, 1.0)?,
+        ),
+        ("mam (paper scale)", models::mam(1.0, 1.0)?),
+    ] {
+        println!(
+            "  {name}: {} areas, {} neurons, K={}, D={}",
+            spec.n_areas(),
+            spec.total_neurons(),
+            spec.k_total(),
+            spec.delay_ratio()
+        );
+    }
+    match nsim::runtime::registry::Registry::open_default() {
+        Ok(reg) => {
+            println!(
+                "artifacts ({}):",
+                nsim::runtime::registry::default_dir()
+            );
+            for m in reg.metas() {
+                println!(
+                    "  {} kind={} batch={}{}",
+                    m.name,
+                    m.kind,
+                    m.batch,
+                    m.steps
+                        .map(|k| format!(" steps={k}"))
+                        .unwrap_or_default()
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    for s in [
+        Strategy::Conventional,
+        Strategy::Intermediate,
+        Strategy::StructureAware,
+    ] {
+        println!(
+            "strategy {}: area placement={}, dual pathways={}",
+            s.name(),
+            s.structure_aware_placement(),
+            s.dual_pathways()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Per-area data table for the multi-area model of macaque visual cortex
+//! (32 areas; Schmidt et al. 2018).
+//!
+//! Neuron counts are representative full-scale values reproducing the
+//! paper's statistics: mean area size ≈ 130 000 with CV ≈ 0.2, total
+//! ≈ 4.1 M neurons.  Ground-state target rates average 2.5 spikes/s with
+//! V2 ≈ 68 % above the network mean (§2.4.3).  The counts stand in for
+//! the experimentally derived population sizes (substitution documented
+//! in DESIGN.md §2); the *distributional* properties the performance
+//! study depends on are preserved.
+
+/// Static per-area record.
+pub struct AreaData {
+    pub name: &'static str,
+    /// Full-scale neuron count (1 mm² column, both layers' populations).
+    pub n_full: u32,
+    /// Ground-state target firing rate [spikes/s].
+    pub rate_hz: f64,
+}
+
+/// The 32 vision-related areas of the MAM in the conventional parcellation
+/// order (FV91).
+pub const AREAS: [AreaData; 32] = [
+    AreaData { name: "V1", n_full: 197_936, rate_hz: 1.8 },
+    AreaData { name: "V2", n_full: 182_346, rate_hz: 4.2 },
+    AreaData { name: "VP", n_full: 168_120, rate_hz: 2.4 },
+    AreaData { name: "V3", n_full: 151_825, rate_hz: 2.2 },
+    AreaData { name: "V3A", n_full: 132_611, rate_hz: 2.0 },
+    AreaData { name: "MT", n_full: 146_128, rate_hz: 2.8 },
+    AreaData { name: "V4t", n_full: 141_152, rate_hz: 2.7 },
+    AreaData { name: "V4", n_full: 156_423, rate_hz: 3.0 },
+    AreaData { name: "VOT", n_full: 137_793, rate_hz: 2.5 },
+    AreaData { name: "MSTd", n_full: 119_546, rate_hz: 2.6 },
+    AreaData { name: "PIP", n_full: 121_369, rate_hz: 2.1 },
+    AreaData { name: "PO", n_full: 120_751, rate_hz: 1.9 },
+    AreaData { name: "DP", n_full: 123_490, rate_hz: 2.3 },
+    AreaData { name: "MIP", n_full: 119_650, rate_hz: 2.0 },
+    AreaData { name: "MDP", n_full: 118_752, rate_hz: 1.7 },
+    AreaData { name: "VIP", n_full: 117_010, rate_hz: 3.1 },
+    AreaData { name: "LIP", n_full: 122_607, rate_hz: 3.2 },
+    AreaData { name: "PITv", n_full: 124_954, rate_hz: 2.6 },
+    AreaData { name: "PITd", n_full: 124_453, rate_hz: 2.4 },
+    AreaData { name: "MSTl", n_full: 117_869, rate_hz: 2.3 },
+    AreaData { name: "CITv", n_full: 114_212, rate_hz: 2.2 },
+    AreaData { name: "CITd", n_full: 113_573, rate_hz: 2.1 },
+    AreaData { name: "FEF", n_full: 134_634, rate_hz: 3.4 },
+    AreaData { name: "TF", n_full: 130_302, rate_hz: 1.9 },
+    AreaData { name: "AITv", n_full: 110_221, rate_hz: 2.3 },
+    AreaData { name: "FST", n_full: 112_980, rate_hz: 2.5 },
+    AreaData { name: "7a", n_full: 127_524, rate_hz: 2.7 },
+    AreaData { name: "STPp", n_full: 116_852, rate_hz: 2.4 },
+    AreaData { name: "STPa", n_full: 109_795, rate_hz: 2.2 },
+    AreaData { name: "46", n_full: 139_243, rate_hz: 3.0 },
+    AreaData { name: "AITd", n_full: 108_980, rate_hz: 2.4 },
+    AreaData { name: "TH", n_full: 81_369, rate_hz: 1.6 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn thirty_two_unique_areas() {
+        assert_eq!(AREAS.len(), 32);
+        let names: std::collections::HashSet<_> =
+            AREAS.iter().map(|a| a.name).collect();
+        assert_eq!(names.len(), 32);
+    }
+
+    #[test]
+    fn mean_size_and_cv_match_paper() {
+        let sizes: Vec<f64> = AREAS.iter().map(|a| a.n_full as f64).collect();
+        let mean = stats::mean(&sizes);
+        assert!(
+            (120_000.0..140_000.0).contains(&mean),
+            "mean area size {mean}"
+        );
+        let cv = stats::cv(&sizes);
+        assert!((0.12..0.28).contains(&cv), "area-size CV {cv}");
+    }
+
+    #[test]
+    fn rates_average_ground_state_with_v2_hotspot() {
+        let rates: Vec<f64> = AREAS.iter().map(|a| a.rate_hz).collect();
+        let mean = stats::mean(&rates);
+        assert!((2.2..2.8).contains(&mean), "mean rate {mean}");
+        let v2 = AREAS.iter().find(|a| a.name == "V2").unwrap();
+        // V2 generates approximately 68% more spikes than average
+        let excess = v2.rate_hz / mean - 1.0;
+        assert!((0.5..0.9).contains(&excess), "V2 excess {excess}");
+        // V2 is the most active area
+        assert!(rates.iter().all(|&r| r <= v2.rate_hz));
+    }
+}

@@ -1,0 +1,234 @@
+//! Deterministic per-target connectivity instantiation.
+//!
+//! NEST instantiates fixed-indegree connectivity on the postsynaptic side:
+//! the rank hosting a target neuron draws that neuron's incoming synapses.
+//! We give every target GID its own RNG stream derived from
+//! `(master seed, gid)`, so the realized network — sources, weights,
+//! delays, and their order — is a pure function of `(spec, seed)` and is
+//! *independent of placement*.  This is the property the
+//! conventional ≡ structure-aware equivalence test rests on.
+
+use super::spec::ModelSpec;
+use super::Gid;
+use crate::util::rng::Pcg64;
+
+/// One synapse, stored on the postsynaptic side.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Conn {
+    pub source: Gid,
+    pub weight: f32,
+    pub delay_steps: u16,
+    /// Intra-area (short-range) or inter-area (long-range)?
+    pub intra: bool,
+}
+
+/// Draw the full incoming connection list of `target` (intra then inter,
+/// each in draw order).  Deterministic in `(spec, seed, target)`.
+pub fn incoming_connections(
+    spec: &ModelSpec,
+    seed: u64,
+    target: Gid,
+) -> Vec<Conn> {
+    let mut rng = Pcg64::new(seed, 0x636f_6e6e_0000_0000 | target as u64);
+    let area = spec.area_of(target);
+    let range = spec.area_range(area);
+    let n_area = (range.end - range.start) as u64;
+    let n_total = spec.total_neurons() as u64;
+    let n_extern = n_total - n_area;
+
+    let mut out = Vec::with_capacity((spec.k_intra + spec.k_inter) as usize);
+
+    // intra-area sources: uniform over own area, autapses rejected
+    if n_area > 1 {
+        for _ in 0..spec.k_intra {
+            let src = loop {
+                let cand = range.start + rng.below(n_area) as Gid;
+                if cand != target {
+                    break cand;
+                }
+            };
+            out.push(Conn {
+                source: src,
+                weight: spec.weight_of(src),
+                delay_steps: spec.delay_intra.draw_steps(&mut rng, spec.h_ms),
+                intra: true,
+            });
+        }
+    }
+
+    // inter-area sources: uniform over all external neurons
+    if n_extern > 0 {
+        for _ in 0..spec.k_inter {
+            let mut idx = rng.below(n_extern) as Gid;
+            // skip over the target's own area range
+            if idx >= range.start {
+                idx += range.end - range.start;
+            }
+            out.push(Conn {
+                source: idx,
+                weight: spec.weight_of(idx),
+                delay_steps: spec.delay_inter.draw_steps(&mut rng, spec.h_ms),
+                intra: false,
+            });
+        }
+    }
+    out
+}
+
+/// Total synapse count of the realized network (for reporting).
+pub fn count_synapses(spec: &ModelSpec) -> u64 {
+    let mut total = 0u64;
+    for a in 0..spec.n_areas() {
+        let r = spec.area_range(a);
+        let n = (r.end - r.start) as u64;
+        let k_intra = if n > 1 { spec.k_intra as u64 } else { 0 };
+        let k_inter = if spec.n_areas() > 1 { spec.k_inter as u64 } else { 0 };
+        total += n * (k_intra + k_inter);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::spec::{AreaSpec, DelayDist, LifParams, NeuronKind, WeightRule};
+    use crate::util::prop;
+
+    fn spec(n_areas: usize, n_per_area: u32) -> ModelSpec {
+        let areas = (0..n_areas)
+            .map(|i| AreaSpec {
+                name: format!("A{i}"),
+                n: n_per_area,
+                neuron: NeuronKind::Lif(LifParams::default()),
+            })
+            .collect();
+        ModelSpec::new(
+            "t",
+            areas,
+            30,
+            15,
+            WeightRule::default(),
+            DelayDist::new(1.25, 0.625, 0.1),
+            DelayDist::new(5.0, 2.5, 1.0),
+            0.1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn deterministic_per_target() {
+        let s = spec(3, 200);
+        for gid in [0u32, 150, 599] {
+            assert_eq!(
+                incoming_connections(&s, 42, gid),
+                incoming_connections(&s, 42, gid)
+            );
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let s = spec(3, 200);
+        assert_ne!(
+            incoming_connections(&s, 42, 0),
+            incoming_connections(&s, 43, 0)
+        );
+    }
+
+    #[test]
+    fn indegrees_respected() {
+        let s = spec(4, 100);
+        let conns = incoming_connections(&s, 7, 250);
+        assert_eq!(conns.iter().filter(|c| c.intra).count(), 30);
+        assert_eq!(conns.iter().filter(|c| !c.intra).count(), 15);
+    }
+
+    #[test]
+    fn no_autapses_and_correct_source_areas() {
+        let s = spec(4, 100);
+        prop::check(
+            "source-areas",
+            50,
+            |rng| rng.below(400) as Gid,
+            |&target| {
+                let ta = s.area_of(target);
+                for c in incoming_connections(&s, 11, target) {
+                    if c.source == target {
+                        return Err("autapse".into());
+                    }
+                    let sa = s.area_of(c.source);
+                    if c.intra != (sa == ta) {
+                        return Err(format!(
+                            "pathway flag wrong: src area {sa}, tgt {ta}"
+                        ));
+                    }
+                    if c.source >= s.total_neurons() {
+                        return Err("source out of range".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn delays_respect_pathway_cutoffs() {
+        let s = spec(3, 150);
+        for gid in 0..150u32 {
+            for c in incoming_connections(&s, 5, gid) {
+                if c.intra {
+                    assert!(c.delay_steps >= 1);
+                } else {
+                    assert!(
+                        c.delay_steps >= s.d_min_inter_steps(),
+                        "inter delay {} < cutoff",
+                        c.delay_steps
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weights_follow_ei_rule() {
+        let s = spec(2, 100);
+        for c in incoming_connections(&s, 9, 42) {
+            if s.is_inhibitory(c.source) {
+                assert!(c.weight < 0.0);
+            } else {
+                assert!(c.weight > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn single_area_has_no_inter_connections() {
+        let s = spec(1, 100);
+        let conns = incoming_connections(&s, 3, 10);
+        assert!(conns.iter().all(|c| c.intra));
+        assert_eq!(conns.len(), 30);
+    }
+
+    #[test]
+    fn synapse_count() {
+        let s = spec(4, 100);
+        assert_eq!(count_synapses(&s), 400 * 45);
+        let s1 = spec(1, 100);
+        assert_eq!(count_synapses(&s1), 100 * 30);
+    }
+
+    #[test]
+    fn intersource_distribution_covers_other_areas() {
+        let s = spec(4, 100);
+        let mut seen = [false; 4];
+        for gid in 0..100u32 {
+            for c in incoming_connections(&s, 1, gid) {
+                if !c.intra {
+                    seen[s.area_of(c.source)] = true;
+                }
+            }
+        }
+        assert!(!seen[0]); // own area never an inter source
+        assert!(seen[1] && seen[2] && seen[3]);
+    }
+}

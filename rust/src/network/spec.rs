@@ -1,0 +1,398 @@
+//! Model specification types: areas, neuron parameterizations, delay
+//! distributions and the multi-area wiring rule.
+
+use super::Gid;
+use anyhow::{bail, Result};
+
+/// Gaussian delay distribution with a hard lower cutoff (paper §4.2: both
+/// models impose a lower cutoff `d_min_inter` on inter-area delays).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DelayDist {
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+}
+
+impl DelayDist {
+    pub fn new(mean_ms: f64, std_ms: f64, min_ms: f64) -> Self {
+        Self { mean_ms, std_ms, min_ms }
+    }
+
+    /// Draw a delay in steps of `h_ms` (>= the cutoff in steps, >= 1).
+    pub fn draw_steps(&self, rng: &mut crate::util::rng::Pcg64, h_ms: f64) -> u16 {
+        let min_steps = self.min_steps(h_ms);
+        let d = rng.normal_truncated_low(self.mean_ms, self.std_ms, self.min_ms);
+        let steps = (d / h_ms).round() as i64;
+        steps.max(min_steps as i64).min(u16::MAX as i64) as u16
+    }
+
+    /// Cutoff in resolution steps (>= 1: a delay of zero steps would break
+    /// causality of the cycle-based exchange).
+    pub fn min_steps(&self, h_ms: f64) -> u16 {
+        ((self.min_ms / h_ms).round() as i64).max(1) as u16
+    }
+}
+
+/// Leaky integrate-and-fire parameters (`iaf_psc_delta`); potentials are
+/// relative to the resting potential.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LifParams {
+    pub tau_m_ms: f64,
+    pub c_m_pf: f64,
+    pub t_ref_ms: f64,
+    pub theta_mv: f64,
+    pub v_reset_mv: f64,
+    /// Constant external drive current [pA] — the deterministic stand-in
+    /// for the Poisson drive of the original models (DESIGN.md §2).
+    pub i_e_pa: f64,
+}
+
+impl Default for LifParams {
+    fn default() -> Self {
+        Self {
+            tau_m_ms: 10.0,
+            c_m_pf: 250.0,
+            t_ref_ms: 2.0,
+            theta_mv: 15.0,
+            v_reset_mv: 0.0,
+            i_e_pa: 0.0,
+        }
+    }
+}
+
+impl LifParams {
+    /// Membrane propagator for step `h` (f32, matching the L1 kernel).
+    pub fn p22(&self, h_ms: f64) -> f32 {
+        (-h_ms / self.tau_m_ms).exp() as f32
+    }
+
+    /// Per-step drive term `(1 - p22) * R_m * I_e` (f32).
+    pub fn drive(&self, h_ms: f64) -> f32 {
+        let p22 = (-h_ms / self.tau_m_ms).exp();
+        let r_m = self.tau_m_ms / self.c_m_pf;
+        ((1.0 - p22) * r_m * self.i_e_pa) as f32
+    }
+
+    pub fn ref_steps(&self, h_ms: f64) -> f32 {
+        (self.t_ref_ms / h_ms).round() as f32
+    }
+
+    /// Tonic firing rate under the constant drive `i_e_pa` alone (inverse
+    /// of [`Self::i_e_for_rate`]); 0 if subthreshold.
+    pub fn tonic_rate_hz(&self) -> f64 {
+        let r_m = self.tau_m_ms / self.c_m_pf;
+        let ri = r_m * self.i_e_pa;
+        if ri <= self.theta_mv {
+            return 0.0;
+        }
+        let t_int = -self.tau_m_ms * (1.0 - self.theta_mv / ri).ln();
+        1000.0 / (self.t_ref_ms + t_int)
+    }
+
+    /// The i_e required for tonic firing at `rate_hz` in the absence of
+    /// synaptic input (inverse LIF f-I curve, exact for the
+    /// exact-integration update).  Returns 0 for unachievable rates.
+    pub fn i_e_for_rate(&self, rate_hz: f64) -> f64 {
+        if rate_hz <= 0.0 {
+            return 0.0;
+        }
+        let isi_ms = 1000.0 / rate_hz;
+        let t_int = isi_ms - self.t_ref_ms; // integration time between spikes
+        if t_int <= 0.0 {
+            return 0.0;
+        }
+        // v(t) = R I (1 - exp(-t/tau)); threshold at t_int:
+        //   R I = theta / (1 - exp(-t_int/tau))
+        let r_m = self.tau_m_ms / self.c_m_pf;
+        let denom = 1.0 - (-t_int / self.tau_m_ms).exp();
+        self.theta_mv / (denom * r_m)
+    }
+}
+
+/// Neuron model of an area.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NeuronKind {
+    Lif(LifParams),
+    /// MAM-benchmark's ignore-and-fire: fires every `interval` steps with a
+    /// GID-derived phase; synaptic input is delivered but ignored.
+    IgnoreAndFire {
+        /// Firing interval in resolution steps (rate = 1e3/(interval*h) Hz).
+        interval_steps: u32,
+    },
+}
+
+impl NeuronKind {
+    pub fn ignore_and_fire_hz(rate_hz: f64, h_ms: f64) -> NeuronKind {
+        let interval = (1000.0 / (rate_hz * h_ms)).round().max(1.0) as u32;
+        NeuronKind::IgnoreAndFire { interval_steps: interval }
+    }
+}
+
+/// One cortical area: a contiguous GID range with homogeneous neuron
+/// parameters.
+#[derive(Clone, Debug)]
+pub struct AreaSpec {
+    pub name: String,
+    pub n: u32,
+    pub neuron: NeuronKind,
+}
+
+/// Synaptic weight rule: fixed excitatory weight; sources in the last
+/// `inh_fraction` of their area are inhibitory with weight `-g * w`.
+///
+/// Weights are chosen as exact binary fractions in the bundled models so
+/// that ring-buffer sums are order-independent in f64 (DESIGN.md §6).
+#[derive(Clone, Copy, Debug)]
+pub struct WeightRule {
+    pub w_mv: f32,
+    pub g: f32,
+    pub inh_fraction: f64,
+}
+
+impl Default for WeightRule {
+    fn default() -> Self {
+        Self { w_mv: 0.125, g: 5.0, inh_fraction: 0.2 }
+    }
+}
+
+/// A multi-area network specification.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub areas: Vec<AreaSpec>,
+    /// Incoming intra-area synapses per neuron.
+    pub k_intra: u32,
+    /// Incoming inter-area synapses per neuron.
+    pub k_inter: u32,
+    pub weights: WeightRule,
+    pub delay_intra: DelayDist,
+    pub delay_inter: DelayDist,
+    /// Resolution step [ms].
+    pub h_ms: f64,
+    /// Cached area GID offsets (areas[i] spans offsets[i]..offsets[i+1]).
+    offsets: Vec<Gid>,
+}
+
+impl ModelSpec {
+    pub fn new(
+        name: impl Into<String>,
+        areas: Vec<AreaSpec>,
+        k_intra: u32,
+        k_inter: u32,
+        weights: WeightRule,
+        delay_intra: DelayDist,
+        delay_inter: DelayDist,
+        h_ms: f64,
+    ) -> Result<ModelSpec> {
+        if areas.is_empty() {
+            bail!("model needs at least one area");
+        }
+        if delay_inter.min_ms < delay_intra.min_ms {
+            bail!(
+                "inter-area delay cutoff ({} ms) below intra-area cutoff \
+                 ({} ms) — violates the multi-area delay separation",
+                delay_inter.min_ms,
+                delay_intra.min_ms
+            );
+        }
+        let mut offsets = Vec::with_capacity(areas.len() + 1);
+        let mut acc: Gid = 0;
+        offsets.push(0);
+        for a in &areas {
+            if a.n == 0 {
+                bail!("area {} has zero neurons", a.name);
+            }
+            acc = acc
+                .checked_add(a.n)
+                .ok_or_else(|| anyhow::anyhow!("GID overflow"))?;
+            offsets.push(acc);
+        }
+        Ok(ModelSpec {
+            name: name.into(),
+            areas,
+            k_intra,
+            k_inter,
+            weights,
+            delay_intra,
+            delay_inter,
+            h_ms,
+            offsets,
+        })
+    }
+
+    pub fn n_areas(&self) -> usize {
+        self.areas.len()
+    }
+
+    pub fn total_neurons(&self) -> u32 {
+        *self.offsets.last().unwrap()
+    }
+
+    /// GID range of an area.
+    pub fn area_range(&self, area: usize) -> std::ops::Range<Gid> {
+        self.offsets[area]..self.offsets[area + 1]
+    }
+
+    /// Area index hosting a GID (binary search over offsets).
+    pub fn area_of(&self, gid: Gid) -> usize {
+        debug_assert!(gid < self.total_neurons());
+        match self.offsets.binary_search(&gid) {
+            Ok(i) if i == self.offsets.len() - 1 => i - 1,
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Overall minimum delay in steps — the simulation-cycle length.
+    pub fn d_min_steps(&self) -> u16 {
+        self.delay_intra
+            .min_steps(self.h_ms)
+            .min(self.delay_inter.min_steps(self.h_ms))
+    }
+
+    /// Minimum inter-area delay in steps.
+    pub fn d_min_inter_steps(&self) -> u16 {
+        self.delay_inter.min_steps(self.h_ms)
+    }
+
+    /// The paper's delay ratio `D = d_min_inter / d_min` (eq 1), in whole
+    /// cycles (floor — a fractional remainder cannot be exploited).
+    pub fn delay_ratio(&self) -> u32 {
+        (self.d_min_inter_steps() / self.d_min_steps()) as u32
+    }
+
+    /// Is `gid` an inhibitory source under the weight rule?
+    pub fn is_inhibitory(&self, gid: Gid) -> bool {
+        let area = self.area_of(gid);
+        let r = self.area_range(area);
+        let n = (r.end - r.start) as f64;
+        let exc = (n * (1.0 - self.weights.inh_fraction)).round() as Gid;
+        gid - r.start >= exc
+    }
+
+    /// Synaptic weight contributed by source `gid`.
+    pub fn weight_of(&self, gid: Gid) -> f32 {
+        if self.is_inhibitory(gid) {
+            -self.weights.g * self.weights.w_mv
+        } else {
+            self.weights.w_mv
+        }
+    }
+
+    /// Average incoming synapses per neuron (the paper's `K_N`).
+    pub fn k_total(&self) -> u32 {
+        self.k_intra + self.k_inter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_area_spec() -> ModelSpec {
+        ModelSpec::new(
+            "test",
+            vec![
+                AreaSpec {
+                    name: "A".into(),
+                    n: 100,
+                    neuron: NeuronKind::Lif(LifParams::default()),
+                },
+                AreaSpec {
+                    name: "B".into(),
+                    n: 50,
+                    neuron: NeuronKind::Lif(LifParams::default()),
+                },
+            ],
+            20,
+            10,
+            WeightRule::default(),
+            DelayDist::new(1.25, 0.625, 0.1),
+            DelayDist::new(5.0, 2.5, 1.0),
+            0.1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn gid_ranges_and_area_lookup() {
+        let m = two_area_spec();
+        assert_eq!(m.total_neurons(), 150);
+        assert_eq!(m.area_range(0), 0..100);
+        assert_eq!(m.area_range(1), 100..150);
+        assert_eq!(m.area_of(0), 0);
+        assert_eq!(m.area_of(99), 0);
+        assert_eq!(m.area_of(100), 1);
+        assert_eq!(m.area_of(149), 1);
+    }
+
+    #[test]
+    fn delay_ratio_matches_paper_default() {
+        let m = two_area_spec();
+        assert_eq!(m.d_min_steps(), 1);
+        assert_eq!(m.d_min_inter_steps(), 10);
+        assert_eq!(m.delay_ratio(), 10);
+    }
+
+    #[test]
+    fn delay_draws_respect_cutoff() {
+        let m = two_area_spec();
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(1);
+        for _ in 0..5000 {
+            let d = m.delay_inter.draw_steps(&mut rng, m.h_ms);
+            assert!(d >= 10, "inter delay {d} below cutoff");
+            let d = m.delay_intra.draw_steps(&mut rng, m.h_ms);
+            assert!(d >= 1);
+        }
+    }
+
+    #[test]
+    fn inhibitory_split() {
+        let m = two_area_spec();
+        // area A: 100 neurons, 20% inhibitory -> gids 80..100
+        assert!(!m.is_inhibitory(79));
+        assert!(m.is_inhibitory(80));
+        assert!(m.weight_of(0) > 0.0);
+        assert!(m.weight_of(85) < 0.0);
+        assert_eq!(m.weight_of(85), -5.0 * 0.125);
+    }
+
+    #[test]
+    fn rejects_inverted_cutoffs() {
+        let res = ModelSpec::new(
+            "bad",
+            vec![AreaSpec {
+                name: "A".into(),
+                n: 10,
+                neuron: NeuronKind::Lif(LifParams::default()),
+            }],
+            1,
+            1,
+            WeightRule::default(),
+            DelayDist::new(1.0, 0.1, 2.0),
+            DelayDist::new(1.0, 0.1, 0.5),
+            0.1,
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn lif_f_i_curve_inverse() {
+        let p = LifParams { i_e_pa: 0.0, ..Default::default() };
+        let i = p.i_e_for_rate(10.0);
+        // simulate: time to threshold with drive i should be ~ isi - t_ref
+        let r_m = p.tau_m_ms / p.c_m_pf;
+        let t = -p.tau_m_ms * (1.0 - p.theta_mv / (r_m * i)).ln();
+        assert!((t + p.t_ref_ms - 100.0).abs() < 0.5, "isi={}", t + 2.0);
+    }
+
+    #[test]
+    fn ignore_and_fire_rate_to_interval() {
+        match NeuronKind::ignore_and_fire_hz(2.5, 0.1) {
+            NeuronKind::IgnoreAndFire { interval_steps } => {
+                assert_eq!(interval_steps, 4000)
+            }
+            _ => unreachable!(),
+        }
+    }
+}

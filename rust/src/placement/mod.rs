@@ -1,0 +1,268 @@
+//! Neuron-to-rank/thread placement schemes (paper §2.1, §4.1.1).
+//!
+//! * [`Placement::RoundRobin`] — NEST's conventional scheme: virtual
+//!   process `vp = gid mod (M·T)`, rank `vp mod M`.  Balances workload but
+//!   scatters every area across all ranks.
+//! * [`Placement::AreaAligned`] — the structure-aware scheme: every area is
+//!   confined to one rank (`rank = area mod M`), neurons spread round-robin
+//!   over the rank's threads.  Heterogeneous area sizes then produce the
+//!   load imbalance the paper analyses; the implied padding of NEST's
+//!   en-bloc creation is reported as ghost neurons.
+
+use crate::network::spec::ModelSpec;
+use crate::network::Gid;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub enum Placement {
+    RoundRobin { m: usize, t: usize },
+    AreaAligned { m: usize, t: usize, area_rank: Vec<usize> },
+}
+
+impl Placement {
+    pub fn round_robin(m: usize, t: usize) -> Placement {
+        Placement::RoundRobin { m, t }
+    }
+
+    /// Area-aligned placement over `m` ranks: area `a` lives on rank
+    /// `a mod m`.  Errors if there are fewer areas than ranks (idle ranks
+    /// have no neurons to host — the paper never runs this regime).
+    pub fn area_aligned(spec: &ModelSpec, m: usize, t: usize) -> Result<Placement> {
+        if spec.n_areas() < m {
+            bail!(
+                "area-aligned placement needs >= {m} areas, model has {}",
+                spec.n_areas()
+            );
+        }
+        let area_rank = (0..spec.n_areas()).map(|a| a % m).collect();
+        Ok(Placement::AreaAligned { m, t, area_rank })
+    }
+
+    pub fn m_ranks(&self) -> usize {
+        match self {
+            Placement::RoundRobin { m, .. } => *m,
+            Placement::AreaAligned { m, .. } => *m,
+        }
+    }
+
+    pub fn threads_per_rank(&self) -> usize {
+        match self {
+            Placement::RoundRobin { t, .. } => *t,
+            Placement::AreaAligned { t, .. } => *t,
+        }
+    }
+
+    /// Rank hosting `gid`.
+    pub fn rank_of(&self, spec: &ModelSpec, gid: Gid) -> usize {
+        match self {
+            Placement::RoundRobin { m, t } => (gid as usize) % (m * t) % m,
+            Placement::AreaAligned { area_rank, .. } => {
+                area_rank[spec.area_of(gid)]
+            }
+        }
+    }
+
+    /// Thread within the hosting rank.
+    pub fn thread_of(&self, spec: &ModelSpec, gid: Gid) -> usize {
+        match self {
+            Placement::RoundRobin { m, t } => (gid as usize) % (m * t) / m,
+            Placement::AreaAligned { t, .. } => {
+                let area = spec.area_of(gid);
+                let local = (gid - spec.area_range(area).start) as usize;
+                local % t
+            }
+        }
+    }
+
+    /// All GIDs hosted by `(rank, thread)` in ascending order — the
+    /// canonical thread-local indexing used by state arrays and ring
+    /// buffers.
+    pub fn local_gids(
+        &self,
+        spec: &ModelSpec,
+        rank: usize,
+        thread: usize,
+    ) -> Vec<Gid> {
+        match self {
+            Placement::RoundRobin { m, t } => {
+                let vp = thread * m + rank;
+                let stride = (m * t) as Gid;
+                (0..spec.total_neurons())
+                    .skip(vp)
+                    .step_by(stride as usize)
+                    .take_while(|&g| g < spec.total_neurons())
+                    .collect()
+            }
+            Placement::AreaAligned { area_rank, t, .. } => {
+                let mut out = Vec::new();
+                for (a, &r) in area_rank.iter().enumerate() {
+                    if r != rank {
+                        continue;
+                    }
+                    let range = spec.area_range(a);
+                    for gid in range.clone() {
+                        if ((gid - range.start) as usize) % t == thread {
+                            out.push(gid);
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Real neurons per rank.
+    pub fn rank_counts(&self, spec: &ModelSpec) -> Vec<usize> {
+        let m = self.m_ranks();
+        let mut counts = vec![0usize; m];
+        match self {
+            Placement::RoundRobin { .. } => {
+                for gid in 0..spec.total_neurons() {
+                    counts[self.rank_of(spec, gid)] += 1;
+                }
+            }
+            Placement::AreaAligned { area_rank, .. } => {
+                for (a, &r) in area_rank.iter().enumerate() {
+                    let range = spec.area_range(a);
+                    counts[r] += (range.end - range.start) as usize;
+                }
+            }
+        }
+        counts
+    }
+
+    /// Ghost ("frozen") neurons per rank implied by NEST's en-bloc creation
+    /// trick (§4.1.1): every rank is padded to the size of the fullest
+    /// rank; ghosts exist but are excluded from the update phase.
+    pub fn ghost_counts(&self, spec: &ModelSpec) -> Vec<usize> {
+        let counts = self.rank_counts(spec);
+        let max = counts.iter().copied().max().unwrap_or(0);
+        counts.iter().map(|&c| max - c).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::spec::{AreaSpec, DelayDist, LifParams, NeuronKind, WeightRule};
+
+    fn spec(sizes: &[u32]) -> ModelSpec {
+        let areas = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| AreaSpec {
+                name: format!("A{i}"),
+                n,
+                neuron: NeuronKind::Lif(LifParams::default()),
+            })
+            .collect();
+        ModelSpec::new(
+            "t",
+            areas,
+            5,
+            5,
+            WeightRule::default(),
+            DelayDist::new(1.25, 0.625, 0.1),
+            DelayDist::new(5.0, 2.5, 1.0),
+            0.1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn round_robin_matches_nest_vp_rule() {
+        let s = spec(&[40, 40]);
+        let p = Placement::round_robin(2, 3);
+        // vp = gid % 6, rank = vp % 2, thread = vp / 2
+        assert_eq!(p.rank_of(&s, 0), 0);
+        assert_eq!(p.rank_of(&s, 1), 1);
+        assert_eq!(p.thread_of(&s, 0), 0);
+        assert_eq!(p.thread_of(&s, 2), 1);
+        assert_eq!(p.thread_of(&s, 5), 2);
+        assert_eq!(p.rank_of(&s, 5), 1);
+    }
+
+    #[test]
+    fn area_aligned_confines_areas() {
+        let s = spec(&[30, 20, 25]);
+        let p = Placement::area_aligned(&s, 3, 2).unwrap();
+        for gid in 0..30 {
+            assert_eq!(p.rank_of(&s, gid), 0);
+        }
+        for gid in 30..50 {
+            assert_eq!(p.rank_of(&s, gid), 1);
+        }
+        for gid in 50..75 {
+            assert_eq!(p.rank_of(&s, gid), 2);
+        }
+    }
+
+    #[test]
+    fn area_aligned_wraps_when_more_areas_than_ranks() {
+        let s = spec(&[10, 10, 10, 10]);
+        let p = Placement::area_aligned(&s, 2, 1).unwrap();
+        assert_eq!(p.rank_of(&s, 0), 0);
+        assert_eq!(p.rank_of(&s, 10), 1);
+        assert_eq!(p.rank_of(&s, 20), 0);
+        assert_eq!(p.rank_of(&s, 30), 1);
+    }
+
+    #[test]
+    fn rejects_fewer_areas_than_ranks() {
+        let s = spec(&[10, 10]);
+        assert!(Placement::area_aligned(&s, 3, 1).is_err());
+    }
+
+    #[test]
+    fn local_gids_partition_everything() {
+        let s = spec(&[33, 21, 17]);
+        for p in [
+            Placement::round_robin(2, 3),
+            Placement::area_aligned(&s, 3, 2).unwrap(),
+        ] {
+            let mut seen = vec![false; s.total_neurons() as usize];
+            for rank in 0..p.m_ranks() {
+                for thread in 0..p.threads_per_rank() {
+                    for gid in p.local_gids(&s, rank, thread) {
+                        assert_eq!(p.rank_of(&s, gid), rank);
+                        assert_eq!(p.thread_of(&s, gid), thread);
+                        assert!(!seen[gid as usize], "gid {gid} duplicated");
+                        seen[gid as usize] = true;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&x| x), "not all gids placed");
+        }
+    }
+
+    #[test]
+    fn local_gids_sorted_ascending() {
+        let s = spec(&[29, 31]);
+        let p = Placement::area_aligned(&s, 2, 3).unwrap();
+        for rank in 0..2 {
+            for th in 0..3 {
+                let gids = p.local_gids(&s, rank, th);
+                assert!(gids.windows(2).all(|w| w[0] < w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_balances_within_one() {
+        let s = spec(&[101, 57]);
+        let p = Placement::round_robin(4, 2);
+        let counts = p.rank_counts(&s);
+        let max = counts.iter().max().unwrap();
+        let min = counts.iter().min().unwrap();
+        assert!(max - min <= 2, "{counts:?}");
+        assert!(p.ghost_counts(&s).iter().all(|&g| g <= 2));
+    }
+
+    #[test]
+    fn area_aligned_ghosts_reflect_imbalance() {
+        let s = spec(&[100, 60]);
+        let p = Placement::area_aligned(&s, 2, 1).unwrap();
+        assert_eq!(p.rank_counts(&s), vec![100, 60]);
+        assert_eq!(p.ghost_counts(&s), vec![0, 40]);
+    }
+}

@@ -1,0 +1,88 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust coordinator.
+//!
+//! Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos (64-bit instruction ids), while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `xla::PjRtClient` is `Rc`-based and thus confined to one thread; the
+//! multi-rank engine therefore talks to a dedicated *XLA service thread*
+//! ([`updater::xla_updater`]) that owns the client and executables and
+//! serves update-step requests over channels.  The XLA path demonstrates
+//! the three-layer composition; the performance path is the native
+//! updater.
+
+pub mod registry;
+pub mod updater;
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact plus its manifest metadata.  Not `Send`: lives on
+/// the thread that created its client.
+pub struct Executable {
+    pub name: String,
+    pub batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Load `<dir>/<file>` (HLO text) and compile it on `client`.
+    pub fn load(
+        client: &xla::PjRtClient,
+        dir: &str,
+        file: &str,
+        name: &str,
+        batch: usize,
+    ) -> Result<Executable> {
+        let path = format!("{dir}/{file}");
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        Ok(Executable { name: name.to_string(), batch, exe })
+    }
+
+    /// Execute with f32 vector inputs; returns the flattened tuple of f32
+    /// vector outputs.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|x| xla::Literal::vec1(x)).collect();
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    /// Execute with a 2-D f32 input at position `pos2d` of shape
+    /// `[k, batch]` (row-major, passed flattened); all other inputs 1-D.
+    pub fn run_f32_with_2d(
+        &self,
+        inputs: &[&[f32]],
+        pos2d: usize,
+        k: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut literals: Vec<xla::Literal> =
+            Vec::with_capacity(inputs.len());
+        for (i, x) in inputs.iter().enumerate() {
+            let lit = xla::Literal::vec1(x);
+            if i == pos2d {
+                literals
+                    .push(lit.reshape(&[k as i64, (x.len() / k) as i64])?);
+            } else {
+                literals.push(lit);
+            }
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}

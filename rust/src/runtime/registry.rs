@@ -1,0 +1,164 @@
+//! Artifact registry: parse `artifacts/manifest.json`, lazily compile the
+//! executables the run needs, and pick the right batch size (smallest
+//! artifact batch that fits, with zero-padding handled by the updater).
+
+use super::Executable;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub batch: usize,
+    pub steps: Option<usize>,
+}
+
+/// Registry over an artifact directory.  Owns the PJRT client, so it is
+/// confined to the thread that created it (the XLA service thread).
+pub struct Registry {
+    dir: String,
+    metas: Vec<ArtifactMeta>,
+    client: RefCell<Option<xla::PjRtClient>>,
+    compiled: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+/// Default artifact directory: `$NSIM_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> String {
+    std::env::var("NSIM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+impl Registry {
+    pub fn open(dir: &str) -> Result<Registry> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} (run `make artifacts`)"))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts'")?;
+        let mut metas = Vec::new();
+        for a in arts {
+            metas.push(ArtifactMeta {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("artifact missing name")?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("artifact missing file")?
+                    .to_string(),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .context("artifact missing kind")?
+                    .to_string(),
+                batch: a
+                    .get("batch")
+                    .and_then(Json::as_usize)
+                    .context("artifact missing batch")?,
+                steps: a.get("steps").and_then(Json::as_usize),
+            });
+        }
+        Ok(Registry {
+            dir: dir.to_string(),
+            metas,
+            client: RefCell::new(None),
+            compiled: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn open_default() -> Result<Registry> {
+        Self::open(&default_dir())
+    }
+
+    pub fn metas(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    /// Smallest artifact of `kind` whose batch is >= `n` (or the largest
+    /// available if none fits — callers then chunk).
+    pub fn pick(&self, kind: &str, n: usize) -> Result<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> =
+            self.metas.iter().filter(|m| m.kind == kind).collect();
+        if candidates.is_empty() {
+            bail!("no artifact of kind {kind:?} in {}", self.dir);
+        }
+        candidates.sort_by_key(|m| m.batch);
+        Ok(candidates
+            .iter()
+            .find(|m| m.batch >= n)
+            .copied()
+            .unwrap_or_else(|| candidates.last().unwrap()))
+    }
+
+    /// Compile (or fetch the cached) executable for a manifest entry.
+    /// Creates the PJRT CPU client lazily on first use.
+    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Rc<Executable>> {
+        if let Some(e) = self.compiled.borrow().get(&meta.name) {
+            return Ok(e.clone());
+        }
+        if self.client.borrow().is_none() {
+            *self.client.borrow_mut() = Some(
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            );
+        }
+        let client_ref = self.client.borrow();
+        let client = client_ref.as_ref().unwrap();
+        let exe = Rc::new(Executable::load(
+            client, &self.dir, &meta.file, &meta.name, meta.batch,
+        )?);
+        self.compiled
+            .borrow_mut()
+            .insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn manifest_parses_and_lists_kinds() {
+        let reg = Registry::open(&artifacts_dir()).unwrap();
+        let kinds: std::collections::HashSet<_> =
+            reg.metas().iter().map(|m| m.kind.as_str()).collect();
+        assert!(kinds.contains("lif_step"));
+        assert!(kinds.contains("ianf_step"));
+        assert!(kinds.contains("lif_multistep"));
+    }
+
+    #[test]
+    fn pick_smallest_fitting_batch() {
+        let reg = Registry::open(&artifacts_dir()).unwrap();
+        assert_eq!(reg.pick("lif_step", 100).unwrap().batch, 512);
+        assert_eq!(reg.pick("lif_step", 513).unwrap().batch, 2048);
+        assert_eq!(reg.pick("lif_step", 3000).unwrap().batch, 8192);
+        // oversize request falls back to the largest
+        assert_eq!(reg.pick("lif_step", 100_000).unwrap().batch, 8192);
+        assert!(reg.pick("nonexistent", 1).is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        match Registry::open("/nonexistent-dir") {
+            Ok(_) => panic!("expected error for missing dir"),
+            Err(err) => {
+                assert!(err.to_string().contains("make artifacts"))
+            }
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! The XLA update path: an [`Updater`] that advances neuron blocks through
+//! the AOT-compiled Pallas kernels instead of native arithmetic.
+//!
+//! Because `xla::PjRtClient` is `Rc`-based (single-threaded), a dedicated
+//! *service thread* owns the client, registry and executables; the rank
+//! threads' update closures send step requests over an mpsc channel and
+//! block on the reply.  Executions are thereby serialized — acceptable
+//! for the composition-proof path (the performance path is
+//! [`Updater::Native`]).
+//!
+//! Blocks are zero-padded to the artifact batch size; padded LIF lanes
+//! are parked refractory (cannot spike), padded ignore-and-fire lanes get
+//! an unreachable interval.  Oversized blocks are chunked.
+
+use crate::engine::neuron::{LifScalars, NeuronBlock};
+use crate::engine::update::Updater;
+use crate::network::spec::NeuronKind;
+use crate::network::ModelSpec;
+use crate::runtime::registry::Registry;
+use crate::runtime::Executable;
+use anyhow::{Context, Result};
+use std::rc::Rc;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+const PARAM_LEN: usize = 8;
+
+type StepReply = Result<Vec<Vec<f32>>>;
+
+enum Request {
+    Lif {
+        scalars: LifScalars,
+        v: Vec<f32>,
+        refr: Vec<f32>,
+        /// syn + per-neuron drive, pre-summed by the caller.
+        input: Vec<f32>,
+        reply: mpsc::Sender<StepReply>,
+    },
+    Ianf {
+        phase: Vec<f32>,
+        interval: Vec<f32>,
+        syn: Vec<f32>,
+        reply: mpsc::Sender<StepReply>,
+    },
+}
+
+fn pad_to(xs: &[f32], len: usize, fill: f32) -> Vec<f32> {
+    let mut out = vec![fill; len];
+    out[..xs.len()].copy_from_slice(xs);
+    out
+}
+
+fn serve_lif(
+    exe: &Rc<Executable>,
+    scalars: &LifScalars,
+    v: &[f32],
+    refr: &[f32],
+    input: &[f32],
+) -> StepReply {
+    let batch = exe.batch;
+    let n = v.len();
+    let params: Vec<f32> = {
+        let mut p = vec![0.0f32; PARAM_LEN];
+        p[0] = scalars.p22;
+        // p[1] (drive) stays 0: folded into `input` by the caller
+        p[2] = scalars.theta;
+        p[3] = scalars.v_reset;
+        p[4] = scalars.ref_steps;
+        p
+    };
+    let mut v_out = Vec::with_capacity(n);
+    let mut r_out = Vec::with_capacity(n);
+    let mut s_out = Vec::with_capacity(n);
+    let mut off = 0usize;
+    while off < n {
+        let chunk = (n - off).min(batch);
+        // padded lanes: refractory -> never spike
+        let vb = pad_to(&v[off..off + chunk], batch, 0.0);
+        let rb = pad_to(&refr[off..off + chunk], batch, 1.0);
+        let ib = pad_to(&input[off..off + chunk], batch, 0.0);
+        let out = exe.run_f32(&[&params, &vb, &rb, &ib])?;
+        anyhow::ensure!(out.len() == 3, "lif_step must return 3 outputs");
+        v_out.extend_from_slice(&out[0][..chunk]);
+        r_out.extend_from_slice(&out[1][..chunk]);
+        s_out.extend_from_slice(&out[2][..chunk]);
+        off += chunk;
+    }
+    Ok(vec![v_out, r_out, s_out])
+}
+
+fn serve_ianf(
+    exe: &Rc<Executable>,
+    phase: &[f32],
+    interval: &[f32],
+    syn: &[f32],
+) -> StepReply {
+    let batch = exe.batch;
+    let n = phase.len();
+    let mut p_out = Vec::with_capacity(n);
+    let mut s_out = Vec::with_capacity(n);
+    let mut off = 0usize;
+    while off < n {
+        let chunk = (n - off).min(batch);
+        let pb = pad_to(&phase[off..off + chunk], batch, 0.0);
+        // padded lanes never reach their interval
+        let ivb = pad_to(&interval[off..off + chunk], batch, f32::MAX);
+        let sb = pad_to(&syn[off..off + chunk], batch, 0.0);
+        let out = exe.run_f32(&[&pb, &ivb, &sb])?;
+        anyhow::ensure!(out.len() == 2, "ianf_step must return 2 outputs");
+        p_out.extend_from_slice(&out[0][..chunk]);
+        s_out.extend_from_slice(&out[1][..chunk]);
+        off += chunk;
+    }
+    Ok(vec![p_out, s_out])
+}
+
+fn service_main(
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+    needs_lif: bool,
+    needs_ianf: bool,
+) {
+    // compile everything up front so errors surface at updater creation
+    let setup = (|| -> Result<(Option<Rc<Executable>>, Option<Rc<Executable>>)> {
+        let reg = Registry::open_default()?;
+        let lif = if needs_lif {
+            Some(reg.executable(reg.pick("lif_step", 512)?)?)
+        } else {
+            None
+        };
+        let ianf = if needs_ianf {
+            Some(reg.executable(reg.pick("ianf_step", 512)?)?)
+        } else {
+            None
+        };
+        Ok((lif, ianf))
+    })();
+    let (lif, ianf) = match setup {
+        Ok(pair) => {
+            let _ = ready.send(Ok(()));
+            pair
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Lif { scalars, v, refr, input, reply } => {
+                let exe = lif.as_ref().expect("LIF artifact not loaded");
+                let _ = reply.send(serve_lif(exe, &scalars, &v, &refr, &input));
+            }
+            Request::Ianf { phase, interval, syn, reply } => {
+                let exe = ianf.as_ref().expect("ianf artifact not loaded");
+                let _ = reply.send(serve_ianf(exe, &phase, &interval, &syn));
+            }
+        }
+    }
+}
+
+/// Build the XLA [`Updater`] for `spec`: spawns the service thread,
+/// compiles the needed artifacts, and returns a thread-safe step closure.
+pub fn xla_updater(spec: &ModelSpec) -> Result<Updater> {
+    let needs_lif = spec
+        .areas
+        .iter()
+        .any(|a| matches!(a.neuron, NeuronKind::Lif(_)));
+    let needs_ianf = spec
+        .areas
+        .iter()
+        .any(|a| matches!(a.neuron, NeuronKind::IgnoreAndFire { .. }));
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (ready_tx, ready_rx) = mpsc::channel();
+    std::thread::Builder::new()
+        .name("xla-service".into())
+        .spawn(move || service_main(rx, ready_tx, needs_lif, needs_ianf))
+        .context("spawning XLA service thread")?;
+    ready_rx
+        .recv()
+        .context("XLA service thread died during setup")??;
+
+    // mpsc::Sender is Send but not Sync; guard it for the Fn closure
+    let tx = Mutex::new(tx);
+    Ok(Updater::Custom(Box::new(move |block, syn, spikes_out| {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = match block {
+            NeuronBlock::Lif { scalars, drive, v, refr } => {
+                if v.is_empty() {
+                    return;
+                }
+                let input: Vec<f32> = syn
+                    .iter()
+                    .zip(drive.iter())
+                    .map(|(s, d)| s + d)
+                    .collect();
+                Request::Lif {
+                    scalars: *scalars,
+                    v: v.clone(),
+                    refr: refr.clone(),
+                    input,
+                    reply: reply_tx,
+                }
+            }
+            NeuronBlock::IgnoreAndFire { phase, interval } => {
+                if phase.is_empty() {
+                    return;
+                }
+                Request::Ianf {
+                    phase: phase.clone(),
+                    interval: interval.clone(),
+                    syn: syn.to_vec(),
+                    reply: reply_tx,
+                }
+            }
+        };
+        tx.lock().unwrap().send(req).expect("XLA service gone");
+        let out = reply_rx
+            .recv()
+            .expect("XLA service dropped reply")
+            .expect("XLA update step failed");
+        match block {
+            NeuronBlock::Lif { v, refr, .. } => {
+                v.copy_from_slice(&out[0]);
+                refr.copy_from_slice(&out[1]);
+                for (i, &s) in out[2].iter().enumerate() {
+                    if s != 0.0 {
+                        spikes_out.push(i as u32);
+                    }
+                }
+            }
+            NeuronBlock::IgnoreAndFire { phase, .. } => {
+                phase.copy_from_slice(&out[0]);
+                for (i, &s) in out[1].iter().enumerate() {
+                    if s != 0.0 {
+                        spikes_out.push(i as u32);
+                    }
+                }
+            }
+        }
+    })))
+}

@@ -1,0 +1,299 @@
+//! The kernel's fundamental data structures (paper Fig 10), with the
+//! structure-aware duplication into short-/long-range pathways (§4.1.2).
+//!
+//! * [`ConnTable`] — postsynaptic side: per (rank, thread, pathway), the
+//!   thread-local connections in CSR form sorted by source GID (NEST's
+//!   merged connection + source table; the sort enables the binary-search
+//!   lookup a spike performs on arrival).
+//! * [`TargetTable`] — presynaptic side: for every thread-local neuron the
+//!   deduplicated list of ranks hosting at least one of its targets
+//!   (NEST's *spike compression*: one message per target rank, not per
+//!   target thread).
+//! * [`Pathways`] — the pair of short-/long-range copies of a structure;
+//!   the conventional strategy uses only the short slot.
+
+use crate::network::Gid;
+
+/// A connection as stored on the postsynaptic side; the source GID lives
+/// in the CSR index, not here.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LocalConn {
+    /// Thread-local index of the target neuron.
+    pub target_local: u32,
+    pub weight: f32,
+    pub delay_steps: u16,
+}
+
+/// Above this source-GID range the dense index is not built and lookups
+/// fall back to binary search (NEST's memory/speed trade-off: a dense
+/// per-thread index costs 4 bytes x N_total).
+const DENSE_INDEX_LIMIT: usize = 1 << 24;
+
+/// CSR over connections grouped by source GID, sorted ascending.
+#[derive(Clone, Debug, Default)]
+pub struct ConnTable {
+    sources: Vec<Gid>,
+    offsets: Vec<u32>,
+    conns: Vec<LocalConn>,
+    /// Dense `gid -> group index` map (`u32::MAX` = no connections);
+    /// empty when the GID range exceeds [`DENSE_INDEX_LIMIT`].
+    dense: Vec<u32>,
+}
+
+impl ConnTable {
+    /// Build from (source, connection) pairs.  The relative order of
+    /// connections with the same source is preserved (stable sort), which
+    /// makes multapse delivery order deterministic.
+    pub fn build(mut entries: Vec<(Gid, LocalConn)>) -> ConnTable {
+        entries.sort_by_key(|(src, _)| *src);
+        let mut sources = Vec::new();
+        let mut offsets = Vec::new();
+        let mut conns = Vec::with_capacity(entries.len());
+        let mut last: Option<Gid> = None;
+        for (src, conn) in entries {
+            if last != Some(src) {
+                sources.push(src);
+                offsets.push(conns.len() as u32);
+                last = Some(src);
+            }
+            conns.push(conn);
+        }
+        offsets.push(conns.len() as u32);
+        // dense O(1) index over the source-GID range (perf: replaces the
+        // per-spike binary search in the deliver hot path — see
+        // EXPERIMENTS.md §Perf)
+        let max_src = sources.last().map(|&s| s as usize + 1).unwrap_or(0);
+        let dense = if max_src > 0 && max_src <= DENSE_INDEX_LIMIT {
+            let mut d = vec![u32::MAX; max_src];
+            for (i, &s) in sources.iter().enumerate() {
+                d[s as usize] = i as u32;
+            }
+            d
+        } else {
+            Vec::new()
+        };
+        ConnTable { sources, offsets, conns, dense }
+    }
+
+    /// Connections of `source` (empty slice if none) — the per-spike
+    /// lookup of the deliver phase.
+    #[inline]
+    pub fn lookup(&self, source: Gid) -> &[LocalConn] {
+        if !self.dense.is_empty() {
+            let i = match self.dense.get(source as usize) {
+                Some(&i) if i != u32::MAX => i as usize,
+                _ => return &[],
+            };
+            let lo = self.offsets[i] as usize;
+            let hi = self.offsets[i + 1] as usize;
+            return &self.conns[lo..hi];
+        }
+        match self.sources.binary_search(&source) {
+            Ok(i) => {
+                let lo = self.offsets[i] as usize;
+                let hi = self.offsets[i + 1] as usize;
+                &self.conns[lo..hi]
+            }
+            Err(_) => &[],
+        }
+    }
+
+    /// Does `source` have any connection in this table?  (Cheaper than
+    /// `lookup` when only membership matters.)
+    #[inline]
+    pub fn has_source(&self, source: Gid) -> bool {
+        if !self.dense.is_empty() {
+            return matches!(self.dense.get(source as usize),
+                            Some(&i) if i != u32::MAX);
+        }
+        self.sources.binary_search(&source).is_ok()
+    }
+
+    pub fn n_connections(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn n_sources(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Iterate `(source, connections)` groups in ascending source order.
+    pub fn iter_groups(
+        &self,
+    ) -> impl Iterator<Item = (Gid, &[LocalConn])> + '_ {
+        self.sources.iter().enumerate().map(move |(i, &src)| {
+            let lo = self.offsets[i] as usize;
+            let hi = self.offsets[i + 1] as usize;
+            (src, &self.conns[lo..hi])
+        })
+    }
+
+    /// Approximate heap footprint in bytes (for the memory-overhead
+    /// accounting of the dual-table scheme).
+    pub fn heap_bytes(&self) -> usize {
+        self.sources.len() * std::mem::size_of::<Gid>()
+            + self.offsets.len() * 4
+            + self.conns.len() * std::mem::size_of::<LocalConn>()
+            + self.dense.len() * 4
+    }
+}
+
+/// Presynaptic target table with spike compression: per thread-local
+/// neuron, the sorted, deduplicated ranks hosting its targets.
+#[derive(Clone, Debug, Default)]
+pub struct TargetTable {
+    ranks_of: Vec<Vec<u16>>,
+}
+
+impl TargetTable {
+    pub fn new(n_local_neurons: usize) -> TargetTable {
+        TargetTable { ranks_of: vec![Vec::new(); n_local_neurons] }
+    }
+
+    /// Register that local neuron `local_idx` has >= 1 target on `rank`.
+    pub fn add(&mut self, local_idx: usize, rank: u16) {
+        let v = &mut self.ranks_of[local_idx];
+        if let Err(pos) = v.binary_search(&rank) {
+            v.insert(pos, rank);
+        }
+    }
+
+    /// Target ranks of a local neuron.
+    #[inline]
+    pub fn ranks(&self, local_idx: usize) -> &[u16] {
+        &self.ranks_of[local_idx]
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.ranks_of.len()
+    }
+
+    /// Total (neuron, rank) entries — the communication fan-out.
+    pub fn total_entries(&self) -> usize {
+        self.ranks_of.iter().map(|v| v.len()).sum()
+    }
+}
+
+/// The short-/long-range duplication of §4.1.2.  `short` is also the
+/// single table of the conventional scheme.
+#[derive(Clone, Debug, Default)]
+pub struct Pathways<T> {
+    pub short: T,
+    pub long: T,
+}
+
+impl<T> Pathways<T> {
+    pub fn get(&self, long_range: bool) -> &T {
+        if long_range {
+            &self.long
+        } else {
+            &self.short
+        }
+    }
+
+    pub fn get_mut(&mut self, long_range: bool) -> &mut T {
+        if long_range {
+            &mut self.long
+        } else {
+            &mut self.short
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn conn(t: u32, w: f32, d: u16) -> LocalConn {
+        LocalConn { target_local: t, weight: w, delay_steps: d }
+    }
+
+    #[test]
+    fn build_and_lookup() {
+        let table = ConnTable::build(vec![
+            (5, conn(0, 1.0, 1)),
+            (2, conn(1, 2.0, 1)),
+            (5, conn(2, 3.0, 2)),
+            (9, conn(3, 4.0, 3)),
+        ]);
+        assert_eq!(table.n_sources(), 3);
+        assert_eq!(table.n_connections(), 4);
+        assert_eq!(table.lookup(2), &[conn(1, 2.0, 1)]);
+        // multapse order preserved (stable by insertion)
+        assert_eq!(table.lookup(5), &[conn(0, 1.0, 1), conn(2, 3.0, 2)]);
+        assert!(table.lookup(7).is_empty());
+        assert!(table.has_source(9));
+        assert!(!table.has_source(0));
+    }
+
+    #[test]
+    fn empty_table() {
+        let table = ConnTable::build(vec![]);
+        assert_eq!(table.n_connections(), 0);
+        assert!(table.lookup(0).is_empty());
+    }
+
+    #[test]
+    fn groups_cover_all_connections() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let entries: Vec<(Gid, LocalConn)> = (0..1000)
+            .map(|i| (rng.below(100) as Gid, conn(i, 0.5, 1)))
+            .collect();
+        let table = ConnTable::build(entries.clone());
+        let total: usize =
+            table.iter_groups().map(|(_, conns)| conns.len()).sum();
+        assert_eq!(total, 1000);
+        // sources ascend strictly
+        let srcs: Vec<Gid> = table.iter_groups().map(|(s, _)| s).collect();
+        assert!(srcs.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn lookup_matches_linear_scan() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let entries: Vec<(Gid, LocalConn)> = (0..500)
+            .map(|i| (rng.below(60) as Gid, conn(i, 1.0, 1)))
+            .collect();
+        let table = ConnTable::build(entries.clone());
+        for probe in 0..60u32 {
+            let want: Vec<LocalConn> = entries
+                .iter()
+                .filter(|(s, _)| *s == probe)
+                .map(|(_, c)| *c)
+                .collect();
+            assert_eq!(table.lookup(probe), want.as_slice());
+        }
+    }
+
+    #[test]
+    fn target_table_dedups_and_sorts() {
+        let mut t = TargetTable::new(3);
+        t.add(0, 5);
+        t.add(0, 2);
+        t.add(0, 5);
+        t.add(2, 1);
+        assert_eq!(t.ranks(0), &[2, 5]);
+        assert_eq!(t.ranks(1), &[] as &[u16]);
+        assert_eq!(t.ranks(2), &[1]);
+        assert_eq!(t.total_entries(), 3);
+    }
+
+    #[test]
+    fn pathways_access() {
+        let mut p: Pathways<Vec<u32>> = Pathways::default();
+        p.get_mut(false).push(1);
+        p.get_mut(true).push(2);
+        assert_eq!(p.get(false), &vec![1]);
+        assert_eq!(p.get(true), &vec![2]);
+    }
+
+    #[test]
+    fn heap_bytes_scales_with_content() {
+        let small = ConnTable::build(vec![(1, conn(0, 1.0, 1))]);
+        let big = ConnTable::build(
+            (0..1000).map(|i| (i as Gid, conn(i, 1.0, 1))).collect(),
+        );
+        assert!(big.heap_bytes() > small.heap_bytes() * 100);
+    }
+}

@@ -1,0 +1,182 @@
+//! Theoretical model of spike-delivery cache locality (paper §2.3,
+//! eqs 13–17).
+//!
+//! Delivering a spike to its *first* target synapse on a thread is an
+//! irregular (uncached) memory access; subsequent synapses stream.  The
+//! fraction of irregular accesses therefore equals the expected number of
+//! (spike, thread) first-touches divided by the number of synapses a
+//! spike serves.
+
+/// Weak-scaling scenario parameters (defaults = paper Fig 6b).
+#[derive(Clone, Copy, Debug)]
+pub struct DeliveryScenario {
+    /// Neurons per MPI process (`N_M`).
+    pub n_m: f64,
+    /// Incoming synapses per neuron (`K_N`).
+    pub k_n: f64,
+    /// Intra-area synapses per neuron (structure-aware case).
+    pub k_intra: f64,
+    /// Inter-area synapses per neuron.
+    pub k_inter: f64,
+}
+
+impl Default for DeliveryScenario {
+    fn default() -> Self {
+        // Fig 6b: N_M ≈ 130,000, K_N ≈ 6000, K_intra = K_inter ≈ 3000
+        Self { n_m: 130_000.0, k_n: 6_000.0, k_intra: 3_000.0, k_inter: 3_000.0 }
+    }
+}
+
+/// `1 - (1 - 1/n)^k` computed stably for large `n·k`.
+fn p_at_least_one(n: f64, k: f64) -> f64 {
+    if n <= 1.0 {
+        return 1.0;
+    }
+    -(k * (-1.0 / n).ln_1p()).exp_m1()
+}
+
+/// Eq 13: probability that a neuron has ≥ 1 target on a specific thread
+/// under round-robin distribution (`n` total neurons, `n_t` thread-local
+/// neurons, `k_n` synapses per neuron).
+pub fn p_target_round_robin(n: f64, n_t: f64, k_n: f64) -> f64 {
+    p_at_least_one(n, n_t * k_n)
+}
+
+/// Eq 14: fraction of irregular accesses, conventional round-robin
+/// scheme, for `m` processes × `t_m` threads.
+pub fn f_irr_conventional(sc: &DeliveryScenario, m: usize, t_m: usize) -> f64 {
+    let n = sc.n_m * m as f64;
+    let t = (m * t_m) as f64;
+    let n_t = n / t;
+    let p = p_target_round_robin(n, n_t, sc.k_n);
+    (p * t / sc.k_n).min(1.0)
+}
+
+/// Eqs 15–17: fraction of irregular accesses, structure-aware scheme
+/// (equal areas of `n_m` neurons, one area per process).
+pub fn f_irr_structure(sc: &DeliveryScenario, m: usize, t_m: usize) -> f64 {
+    let (fi, fe) = f_irr_structure_parts(sc, m, t_m);
+    ((fi * sc.k_intra + fe * sc.k_inter) / sc.k_n).min(1.0)
+}
+
+/// Per-pathway irregular-access fractions of the structure-aware scheme,
+/// normalized per synapse *of that pathway*:
+/// `(p_intra·T_M / K_intra, p_inter·T_M·(M−1) / K_inter)`.
+pub fn f_irr_structure_parts(
+    sc: &DeliveryScenario,
+    m: usize,
+    t_m: usize,
+) -> (f64, f64) {
+    let n = sc.n_m * m as f64;
+    let t = (m * t_m) as f64;
+    let n_t = n / t;
+    // eq 15: intra-area targets on the area's own process
+    let p_intra = p_at_least_one(sc.n_m, n_t * sc.k_intra);
+    // eq 16: inter-area targets on the other M-1 processes
+    let p_inter = if m > 1 {
+        p_at_least_one(n - sc.n_m, n_t * sc.k_inter)
+    } else {
+        0.0
+    };
+    let fi = (p_intra * t_m as f64 / sc.k_intra).min(1.0);
+    let fe = if sc.k_inter > 0.0 {
+        (p_inter * t_m as f64 * (m as f64 - 1.0) / sc.k_inter).min(1.0)
+    } else {
+        0.0
+    };
+    (fi, fe)
+}
+
+/// Relative reduction in irregular access, structure-aware vs
+/// conventional (positive = structure-aware better).
+pub fn irregular_access_reduction(
+    sc: &DeliveryScenario,
+    m: usize,
+    t_m: usize,
+) -> f64 {
+    let conv = f_irr_conventional(sc, m, t_m);
+    let stru = f_irr_structure(sc, m, t_m);
+    1.0 - stru / conv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p_at_least_one_limits() {
+        assert!((p_at_least_one(1e9, 1.0) - 1e-9).abs() < 1e-12);
+        assert!(p_at_least_one(10.0, 1e6) > 0.999_999);
+        assert_eq!(p_at_least_one(1.0, 5.0), 1.0);
+    }
+
+    #[test]
+    fn single_process_single_thread_equal() {
+        // M=1, T_M=1: every scheme delivers everything on one thread
+        let sc = DeliveryScenario::default();
+        let c = f_irr_conventional(&sc, 1, 1);
+        let s = f_irr_structure(&sc, 1, 1);
+        assert!((c - s).abs() < 1e-6, "c={c} s={s}");
+    }
+
+    #[test]
+    fn paper_fig6b_reductions() {
+        let sc = DeliveryScenario::default();
+        // "at M=16 ... still similar for both strategies"
+        let r16 = irregular_access_reduction(&sc, 16, 48);
+        assert!(r16 < 0.08, "M=16 reduction {r16}");
+        // "at M=32 ... 12% for T_M=48 and 29% for T_M=128"
+        let r32_48 = irregular_access_reduction(&sc, 32, 48);
+        let r32_128 = irregular_access_reduction(&sc, 32, 128);
+        assert!((r32_48 - 0.12).abs() < 0.05, "{r32_48}");
+        assert!((r32_128 - 0.29).abs() < 0.07, "{r32_128}");
+        // "at M=128 ... 37% for T_M=48 and 43% for T_M=128"
+        let r128_48 = irregular_access_reduction(&sc, 128, 48);
+        let r128_128 = irregular_access_reduction(&sc, 128, 128);
+        assert!((r128_48 - 0.37).abs() < 0.06, "{r128_48}");
+        assert!((r128_128 - 0.43).abs() < 0.06, "{r128_128}");
+    }
+
+    #[test]
+    fn reduction_grows_with_m_and_threads() {
+        let sc = DeliveryScenario::default();
+        let ms = [16usize, 32, 64, 128];
+        let r48: Vec<f64> = ms
+            .iter()
+            .map(|&m| irregular_access_reduction(&sc, m, 48))
+            .collect();
+        assert!(r48.windows(2).all(|w| w[0] < w[1]), "{r48:?}");
+        for &m in &ms[1..] {
+            assert!(
+                irregular_access_reduction(&sc, m, 128)
+                    > irregular_access_reduction(&sc, m, 48)
+            );
+        }
+    }
+
+    #[test]
+    fn fractions_bounded() {
+        let sc = DeliveryScenario::default();
+        for &m in &[1usize, 4, 16, 64, 256] {
+            for &t in &[1usize, 8, 48, 128] {
+                for f in [f_irr_conventional(&sc, m, t), f_irr_structure(&sc, m, t)] {
+                    assert!((0.0..=1.0).contains(&f), "f={f} m={m} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_dispersion_limit() {
+        // with enough processes every target lives on its own thread:
+        // conventional fraction approaches 1
+        let sc = DeliveryScenario {
+            n_m: 100.0,
+            k_n: 60.0,
+            k_intra: 30.0,
+            k_inter: 30.0,
+        };
+        let f = f_irr_conventional(&sc, 512, 48);
+        assert!(f > 0.9, "f={f}");
+    }
+}

@@ -1,0 +1,14 @@
+//! The paper's analytical machinery.
+//!
+//! * [`sync`] — order-statistics model of synchronization time
+//!   (§2.2, eqs 2–12): expected per-cycle maxima via Blom's `xi_M`, CLT
+//!   lumping of D cycles, the `1/sqrt(D)` synchronization-time ratio and
+//!   the quantile interval of per-cycle maxima.
+//! * [`delivery`] — cache-locality model of spike delivery (§2.3,
+//!   eqs 13–17): fraction of irregular (first-synapse) memory accesses
+//!   under round-robin vs structure-aware placement.
+//! * [`illustration`] — the synthetic-timing construction of Fig 5.
+
+pub mod sync;
+pub mod delivery;
+pub mod illustration;

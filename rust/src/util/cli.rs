@@ -1,0 +1,226 @@
+//! Minimal command-line argument parser (no `clap` offline).
+//!
+//! Grammar: `nsim <subcommand> [positional ...] [--key value | --key=value
+//! | --flag]`.  Typed accessors with defaults; unknown-option detection is
+//! the caller's responsibility via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for option --{0}")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({why})")]
+    BadValue { key: String, value: String, why: String },
+    #[error("unknown option(s): {0}")]
+    Unknown(String),
+}
+
+impl Args {
+    /// Parse a raw argument list (without the program name).
+    pub fn parse<I, S>(raw: I) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut positional = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut it = raw.into_iter().map(Into::into).peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else {
+                    // flag or space-separated value
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            options.insert(body.to_string(), it.next().unwrap());
+                        }
+                        _ => {
+                            options.insert(body.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Args {
+            positional,
+            options,
+            consumed: Default::default(),
+        })
+    }
+
+    /// From `std::env::args()` (skips argv[0]).
+    pub fn from_env() -> Result<Args, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        let v = self.options.get(key).map(|s| s.as_str());
+        if v.is_some() {
+            self.consumed.borrow_mut().insert(key.to_string());
+        }
+        v
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.raw(key).map(|s| s.to_string())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.raw(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.raw(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: std::num::ParseFloatError| {
+                CliError::BadValue {
+                    key: key.into(),
+                    value: v.into(),
+                    why: e.to_string(),
+                }
+            }),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: std::num::ParseIntError| {
+                CliError::BadValue {
+                    key: key.into(),
+                    value: v.into(),
+                    why: e.to_string(),
+                }
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: std::num::ParseIntError| {
+                CliError::BadValue {
+                    key: key.into(),
+                    value: v.into(),
+                    why: e.to_string(),
+                }
+            }),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--ranks 16,32,64`.
+    pub fn usize_list_or(
+        &self,
+        key: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, CliError> {
+        match self.raw(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|e: std::num::ParseIntError| {
+                        CliError::BadValue {
+                            key: key.into(),
+                            value: v.into(),
+                            why: e.to_string(),
+                        }
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if any provided option was never consumed by an accessor.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<_> = self
+            .options
+            .keys()
+            .filter(|k| !consumed.contains(*k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(raw: &[&str]) -> Args {
+        Args::parse(raw.iter().copied()).unwrap()
+    }
+
+    #[test]
+    fn positional_and_subcommand() {
+        let a = args(&["figure", "fig7a"]);
+        assert_eq!(a.subcommand(), Some("figure"));
+        assert_eq!(a.positional[1], "fig7a");
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = args(&["run", "--ranks", "32", "--seed=654"]);
+        assert_eq!(a.usize_or("ranks", 0).unwrap(), 32);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 654);
+    }
+
+    #[test]
+    fn flags() {
+        let a = args(&["run", "--verbose", "--ranks", "8"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.usize_or("ranks", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&["run"]);
+        assert_eq!(a.f64_or("t-model", 10.0).unwrap(), 10.0);
+        assert_eq!(a.str_or("strategy", "conventional"), "conventional");
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = args(&["run", "--ranks", "many"]);
+        assert!(a.usize_or("ranks", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = args(&["run", "--ms", "16,32, 64"]);
+        assert_eq!(a.usize_list_or("ms", &[]).unwrap(), vec![16, 32, 64]);
+    }
+
+    #[test]
+    fn unknown_options_detected() {
+        let a = args(&["run", "--bogus", "1", "--ranks", "2"]);
+        let _ = a.usize_or("ranks", 0);
+        let err = a.finish().unwrap_err();
+        assert!(err.to_string().contains("bogus"));
+    }
+}

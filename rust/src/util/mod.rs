@@ -1,0 +1,16 @@
+//! Hand-rolled substrate utilities.
+//!
+//! The offline crate registry ships no `rand`, `serde`, `clap` or
+//! `criterion`, so this module provides the minimal, well-tested
+//! equivalents the rest of the crate builds on: a PCG64 RNG with the
+//! distributions the paper needs, descriptive statistics + order
+//! statistics, a small JSON reader/writer, phase timers, an argument
+//! parser and a fixed-width table formatter.
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod timers;
+pub mod cli;
+pub mod tablefmt;
+pub mod prop;

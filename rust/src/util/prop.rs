@@ -1,0 +1,88 @@
+//! Miniature property-testing harness (no `proptest` offline).
+//!
+//! [`check`] runs a property over `n` generated cases, each driven by a
+//! deterministically-derived RNG; on failure it re-reports the failing
+//! case index and seed so the case can be replayed exactly.  Shrinking is
+//! intentionally out of scope — generators here produce small cases to
+//! begin with.
+
+use crate::util::rng::Pcg64;
+
+/// Run `prop` over `n` cases.  `gen` builds a case from the per-case RNG.
+/// The property returns `Err(reason)` to fail.
+///
+/// Panics with the case index, master seed and reason on the first
+/// failure, so `PROP_SEED=<seed> cargo test` style replaying is trivial.
+pub fn check<T, G, P>(name: &str, n: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let master_seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..n {
+        let mut rng = Pcg64::new(master_seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (PROP_SEED={master_seed}): {reason}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "tautology",
+            25,
+            |rng| rng.below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_context() {
+        check(
+            "fails",
+            10,
+            |rng| rng.below(100),
+            |&x| {
+                if x < 1000 {
+                    Err(format!("x={x}"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("collect1", 5, |r| r.next_u64(), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("collect2", 5, |r| r.next_u64(), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,280 @@
+//! PCG64 pseudo-random number generator plus the distributions used by the
+//! network generator and the virtual cluster.
+//!
+//! Implements the PCG XSL-RR 128/64 generator (O'Neill 2014) — the same
+//! family NEST exposes — with deterministic seeding and jump-free
+//! substreams via odd stream increments.  No external crates.
+
+/// PCG XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // odd
+    /// Cached second normal of the last Marsaglia-polar pair (perf: the
+    /// virtual cluster draws several normals per rank-cycle).
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with a 64-bit seed and a stream id (distinct streams are
+    /// statistically independent).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Self { state: 0, inc, spare_normal: None };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng
+    }
+
+    /// Seed with stream 0.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Unbiased uniform integer in `[0, n)` (Lemire rejection).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, n)`.
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Standard normal via Marsaglia polar method with the pair's second
+    /// value cached.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(x) = self.spare_normal.take() {
+            return x;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Normal with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Normal truncated below at `lo` (resampling; `lo` must be within a
+    /// few sigma of the mean to terminate quickly).
+    pub fn normal_truncated_low(&mut self, mean: f64, std: f64, lo: f64) -> f64 {
+        if std <= 0.0 {
+            return mean.max(lo);
+        }
+        for _ in 0..10_000 {
+            let x = self.normal_ms(mean, std);
+            if x >= lo {
+                return x;
+            }
+        }
+        lo // pathological parameterization: clamp
+    }
+
+    /// Poisson-distributed count (Knuth for small lambda, normal
+    /// approximation above 30 — adequate for spike-count modelling).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            let x = self.normal_ms(lambda, lambda.sqrt());
+            return x.max(0.0).round() as u64;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.uniform();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (Floyd's algorithm).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in n - k..n {
+            let t = self.below_usize(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::seed_from_u64(42);
+        let mut b = Pcg64::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg64::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.uniform();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Pcg64::seed_from_u64(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn truncated_normal_respects_floor() {
+        let mut r = Pcg64::seed_from_u64(9);
+        for _ in 0..10_000 {
+            let x = r.normal_truncated_low(1.0, 2.0, 0.5);
+            assert!(x >= 0.5);
+        }
+    }
+
+    #[test]
+    fn poisson_mean_matches_lambda() {
+        let mut r = Pcg64::seed_from_u64(13);
+        for &lam in &[0.5, 3.0, 12.0, 80.0] {
+            let n = 20_000;
+            let mean: f64 =
+                (0..n).map(|_| r.poisson(lam) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lam).abs() < lam.max(1.0) * 0.05,
+                "lambda={lam} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_in_range() {
+        let mut r = Pcg64::seed_from_u64(17);
+        let got = r.sample_distinct(100, 30);
+        let set: std::collections::HashSet<_> = got.iter().collect();
+        assert_eq!(set.len(), 30);
+        assert!(got.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed_from_u64(23);
+        let mut xs: Vec<u32> = (0..1000).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+        assert_ne!(xs, (0..1000).collect::<Vec<_>>());
+    }
+}

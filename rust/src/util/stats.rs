@@ -1,0 +1,356 @@
+//! Descriptive statistics, the Gaussian special functions, order
+//! statistics and time-series helpers used by the theory module and the
+//! virtual cluster.
+//!
+//! Everything here operates on plain `&[f64]`; no external crates.
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0 for fewer than two samples.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Coefficient of variation `sigma / mu` (0 if the mean is 0).
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        std_dev(xs) / m
+    }
+}
+
+/// Linear-interpolated quantile, `q` in `[0, 1]`.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q), "q={q} out of range");
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Maximum (NaN-free input assumed).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Minimum (NaN-free input assumed).
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+/// Error function, Abramowitz & Stegun 7.1.26 (|err| <= 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let y = 1.0
+        - (((((1.061_405_429 * t - 1.453_152_027) * t) + 1.421_413_741) * t
+            - 0.284_496_736)
+            * t
+            + 0.254_829_592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Standard normal PDF.
+pub fn norm_pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Inverse standard normal CDF (Acklam's rational approximation,
+/// |rel err| < 1.15e-9).
+pub fn norm_ppf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "norm_ppf domain: p={p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5])
+            * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r
+                + 1.0)
+    } else {
+        -norm_ppf(1.0 - p)
+    }
+}
+
+/// Blom's approximation of the expected maximum of `n` iid standard
+/// normals, expressed in standard deviations from the mean — the paper's
+/// `xi_M` (eq 8/9).
+pub fn blom_xi(n: usize) -> f64 {
+    assert!(n >= 1);
+    if n == 1 {
+        return 0.0;
+    }
+    const ALPHA: f64 = 0.375;
+    norm_ppf((n as f64 - ALPHA) / (n as f64 - 2.0 * ALPHA + 1.0))
+}
+
+/// Probability that the maximum of `m` iid draws falls in the upper-tail
+/// region that a single draw hits with probability `p_tail` (paper eq 12).
+pub fn p_max_in_tail(p_tail: f64, m: usize) -> f64 {
+    1.0 - (1.0 - p_tail).powi(m as i32)
+}
+
+/// Gaussian kernel density estimate at `grid` points with Silverman's
+/// rule-of-thumb bandwidth.
+pub fn kde(xs: &[f64], grid: &[f64]) -> Vec<f64> {
+    assert!(!xs.is_empty());
+    let n = xs.len() as f64;
+    let sd = std_dev(xs);
+    let iqr = quantile(xs, 0.75) - quantile(xs, 0.25);
+    let spread = if iqr > 0.0 { sd.min(iqr / 1.34) } else { sd };
+    let h = (0.9 * spread * n.powf(-0.2)).max(1e-12);
+    grid.iter()
+        .map(|&g| {
+            xs.iter().map(|&x| norm_pdf((g - x) / h)).sum::<f64>() / (n * h)
+        })
+        .collect()
+}
+
+/// Histogram over `nbins` equal bins spanning `[lo, hi]`; returns
+/// (bin_centers, counts).
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, nbins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(nbins > 0 && hi > lo);
+    let w = (hi - lo) / nbins as f64;
+    let mut counts = vec![0usize; nbins];
+    for &x in xs {
+        if x >= lo && x <= hi {
+            let mut b = ((x - lo) / w) as usize;
+            if b == nbins {
+                b -= 1;
+            }
+            counts[b] += 1;
+        }
+    }
+    let centers = (0..nbins).map(|i| lo + (i as f64 + 0.5) * w).collect();
+    (centers, counts)
+}
+
+/// Lag-k autocorrelation coefficient.
+pub fn autocorr(xs: &[f64], lag: usize) -> f64 {
+    if xs.len() <= lag + 1 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let denom: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    let num: f64 = xs[..xs.len() - lag]
+        .iter()
+        .zip(&xs[lag..])
+        .map(|(a, b)| (a - m) * (b - m))
+        .sum();
+    num / denom
+}
+
+/// Fit an AR(1) process `x_t - mu = phi (x_{t-1} - mu) + eps`; returns
+/// `(mu, phi, sigma_eps)`.
+pub fn fit_ar1(xs: &[f64]) -> (f64, f64, f64) {
+    let mu = mean(xs);
+    let phi = autocorr(xs, 1);
+    let var = variance(xs);
+    let sigma_eps = (var * (1.0 - phi * phi)).max(0.0).sqrt();
+    (mu, phi, sigma_eps)
+}
+
+/// Sum of `chunk`-sized consecutive groups — the paper's "lumped" cycle
+/// times (eq 5).  Trailing partial chunks are dropped.
+pub fn lump_sums(xs: &[f64], chunk: usize) -> Vec<f64> {
+    assert!(chunk > 0);
+    xs.chunks_exact(chunk).map(|c| c.iter().sum()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn mean_var_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert!((cv(&xs) - 1.25f64.sqrt() / 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 3.0);
+        assert!((quantile(&xs, 0.5) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // A&S 7.1.26 has |err| <= 1.5e-7
+        assert!((erf(0.0)).abs() < 1.5e-7);
+        assert!((erf(1.0) - 0.842_700_79).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.842_700_79).abs() < 1e-6);
+        assert!((erf(2.0) - 0.995_322_27).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norm_cdf_ppf_roundtrip() {
+        for &p in &[0.001, 0.01, 0.1, 0.35, 0.5, 0.72, 0.9, 0.99, 0.999] {
+            let x = norm_ppf(p);
+            assert!((norm_cdf(x) - p).abs() < 1e-6, "p={p} x={x}");
+        }
+    }
+
+    #[test]
+    fn blom_xi_monotone_and_reference() {
+        // E[max of 2 std normals] = 1/sqrt(pi) ≈ 0.5642
+        assert!((blom_xi(2) - 0.5642).abs() < 0.03);
+        let xs: Vec<f64> = [2, 4, 16, 64, 128, 1024]
+            .iter()
+            .map(|&n| blom_xi(n))
+            .collect();
+        assert!(xs.windows(2).all(|w| w[0] < w[1]), "{xs:?}");
+        // for n=128 the expected max is around 2.55 sigma
+        assert!((blom_xi(128) - 2.55).abs() < 0.1, "{}", blom_xi(128));
+    }
+
+    #[test]
+    fn blom_matches_monte_carlo() {
+        let mut r = Pcg64::seed_from_u64(1);
+        for &m in &[8usize, 32, 128] {
+            let trials = 4000;
+            let mc: f64 = (0..trials)
+                .map(|_| (0..m).map(|_| r.normal()).fold(f64::MIN, f64::max))
+                .sum::<f64>()
+                / trials as f64;
+            assert!(
+                (mc - blom_xi(m)).abs() < 0.05,
+                "m={m} mc={mc} blom={}",
+                blom_xi(m)
+            );
+        }
+    }
+
+    #[test]
+    fn p_max_tail_example_from_paper() {
+        // paper: M=128, upper 3.5% of cycle times -> ~99% of maxima
+        let p = p_max_in_tail(0.035, 128);
+        assert!(p > 0.98 && p < 0.999, "p={p}");
+    }
+
+    #[test]
+    fn kde_integrates_to_one() {
+        let mut r = Pcg64::seed_from_u64(2);
+        let xs: Vec<f64> = (0..2000).map(|_| r.normal()).collect();
+        let grid: Vec<f64> = (-400..=400).map(|i| i as f64 * 0.01).collect();
+        let dens = kde(&xs, &grid);
+        let integral: f64 = dens.iter().sum::<f64>() * 0.01;
+        assert!((integral - 1.0).abs() < 0.02, "integral={integral}");
+    }
+
+    #[test]
+    fn histogram_counts_all_inside() {
+        let xs = [0.1, 0.2, 0.5, 0.9];
+        let (centers, counts) = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(centers.len(), 2);
+        assert_eq!(counts.iter().sum::<usize>(), 4);
+        // 0.5 falls into the second half-open bin
+        assert_eq!(counts[0], 2);
+        assert_eq!(counts[1], 2);
+    }
+
+    #[test]
+    fn ar1_fit_recovers_phi() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let phi = 0.8;
+        let mut x = 0.0;
+        let xs: Vec<f64> = (0..200_000)
+            .map(|_| {
+                x = phi * x + r.normal();
+                x
+            })
+            .collect();
+        let (mu, phi_hat, sig) = fit_ar1(&xs);
+        assert!(mu.abs() < 0.05, "mu={mu}");
+        assert!((phi_hat - phi).abs() < 0.02, "phi={phi_hat}");
+        assert!((sig - 1.0).abs() < 0.05, "sig={sig}");
+    }
+
+    #[test]
+    fn lump_sums_matches_clt_scaling() {
+        let mut r = Pcg64::seed_from_u64(4);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.normal_ms(10.0, 1.0)).collect();
+        let lumped = lump_sums(&xs, 10);
+        assert!((mean(&lumped) - 100.0).abs() < 0.2);
+        // std should scale by sqrt(10), so CV by 1/sqrt(10)
+        let ratio = cv(&lumped) / cv(&xs);
+        assert!((ratio - 1.0 / 10f64.sqrt()).abs() < 0.02, "ratio={ratio}");
+    }
+
+    #[test]
+    fn lump_sums_drops_partial_chunk() {
+        assert_eq!(lump_sums(&[1.0, 2.0, 3.0, 4.0, 5.0], 2), vec![3.0, 7.0]);
+    }
+}

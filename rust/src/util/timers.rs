@@ -1,0 +1,189 @@
+//! Phase timers mirroring NEST's internal high-resolution timers (§4.1).
+//!
+//! The functional engine measures real wall-clock time per phase; the
+//! virtual cluster accounts simulated time through the same interface so
+//! downstream reporting (real-time factors, phase breakdowns) is shared.
+
+use std::fmt;
+use std::time::Instant;
+
+/// The simulation phases instrumented by the paper (Fig 1/7 legend).
+///
+/// `Communicate` is split as in §4.1: `Synchronize` is the waiting time at
+/// the barrier in front of the collective; `DataExchange` is the
+/// `MPI_Alltoall` itself.  `CollocateLocal`/`DeliverLocal` do not exist in
+/// the paper's accounting and are folded into the main phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Phase {
+    Deliver,
+    Update,
+    Collocate,
+    Synchronize,
+    DataExchange,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 5] = [
+        Phase::Deliver,
+        Phase::Update,
+        Phase::Collocate,
+        Phase::Synchronize,
+        Phase::DataExchange,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Deliver => "deliver",
+            Phase::Update => "update",
+            Phase::Collocate => "collocate",
+            Phase::Synchronize => "synchronize",
+            Phase::DataExchange => "data-exchange",
+        }
+    }
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Accumulated seconds per phase (real or simulated).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    secs: [f64; 5],
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, phase: Phase, secs: f64) {
+        self.secs[phase as usize] += secs;
+    }
+
+    #[inline]
+    pub fn get(&self, phase: Phase) -> f64 {
+        self.secs[phase as usize]
+    }
+
+    /// Total across phases.
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    /// Cycle time in the paper's sense (eq 18): deliver + update +
+    /// collocate, excluding communication.
+    pub fn cycle_time(&self) -> f64 {
+        self.get(Phase::Deliver) + self.get(Phase::Update)
+            + self.get(Phase::Collocate)
+    }
+
+    /// Communication in the paper's sense: synchronize + data exchange.
+    pub fn communicate(&self) -> f64 {
+        self.get(Phase::Synchronize) + self.get(Phase::DataExchange)
+    }
+
+    /// Element-wise sum.
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for i in 0..5 {
+            self.secs[i] += other.secs[i];
+        }
+    }
+
+    /// Element-wise mean over several ranks' accumulators — the paper
+    /// averages cumulative phase durations across MPI processes.
+    pub fn mean_of(others: &[PhaseTimes]) -> PhaseTimes {
+        let mut out = PhaseTimes::new();
+        if others.is_empty() {
+            return out;
+        }
+        for o in others {
+            out.merge(o);
+        }
+        for s in &mut out.secs {
+            *s /= others.len() as f64;
+        }
+        out
+    }
+
+    /// Real-time factor: wall-clock / model time.
+    pub fn rtf(&self, t_model_secs: f64) -> f64 {
+        self.total() / t_model_secs
+    }
+}
+
+/// Wall-clock stopwatch that charges elapsed time to a [`PhaseTimes`].
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start (or last lap) and reset.
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let secs = now.duration_since(self.start).as_secs_f64();
+        self.start = now;
+        secs
+    }
+
+    /// Charge the elapsed lap to `phase`.
+    pub fn charge(&mut self, times: &mut PhaseTimes, phase: Phase) -> f64 {
+        let secs = self.lap();
+        times.add(phase, secs);
+        secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_accounting() {
+        let mut t = PhaseTimes::new();
+        t.add(Phase::Deliver, 1.0);
+        t.add(Phase::Update, 2.0);
+        t.add(Phase::Collocate, 0.5);
+        t.add(Phase::Synchronize, 0.25);
+        t.add(Phase::DataExchange, 0.25);
+        assert_eq!(t.cycle_time(), 3.5);
+        assert_eq!(t.communicate(), 0.5);
+        assert_eq!(t.total(), 4.0);
+        assert_eq!(t.rtf(2.0), 2.0);
+    }
+
+    #[test]
+    fn mean_of_ranks() {
+        let mut a = PhaseTimes::new();
+        a.add(Phase::Update, 2.0);
+        let mut b = PhaseTimes::new();
+        b.add(Phase::Update, 4.0);
+        let m = PhaseTimes::mean_of(&[a, b]);
+        assert_eq!(m.get(Phase::Update), 3.0);
+    }
+
+    #[test]
+    fn stopwatch_measures_positive_time() {
+        let mut sw = Stopwatch::start();
+        let mut t = PhaseTimes::new();
+        std::hint::black_box((0..10_000).sum::<u64>());
+        let secs = sw.charge(&mut t, Phase::Update);
+        assert!(secs >= 0.0);
+        assert_eq!(t.get(Phase::Update), secs);
+    }
+
+    #[test]
+    fn all_phases_enumerated() {
+        assert_eq!(Phase::ALL.len(), 5);
+        let names: std::collections::HashSet<_> =
+            Phase::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(names.len(), 5);
+    }
+}

@@ -1,0 +1,22 @@
+//! Virtual cluster: a discrete-event performance model of `M` ranks ×
+//! `T_M` threads running the simulation cycle under barrier semantics.
+//!
+//! This is the hardware substitution for SuperMUC-NG / JURECA-DC
+//! (DESIGN.md §2): per-rank cycle times are generated from calibrated
+//! per-phase cost models (update, delivery with the §2.3 cache-locality
+//! model, collocation) modulated by a noise process with the empirically
+//! observed structure — bimodal with rare extremes and serially
+//! correlated (paper Fig 7b/12).  Synchronization and wall-clock then
+//! *emerge* from max-over-ranks accounting per communication epoch, and
+//! data-exchange time from an `MPI_Alltoall` cost curve with the Fig 4
+//! shape.  Nothing about the conventional-vs-structure-aware comparison
+//! is hard-coded; the strategies differ only in placement-derived loads,
+//! barrier frequency and message aggregation, as in the paper.
+
+pub mod machine;
+pub mod workload;
+pub mod run;
+
+pub use machine::{AlltoallModel, MachineProfile, NoiseModel};
+pub use run::{run_cluster, VcOptions, VcResult};
+pub use workload::{RankLoad, Workload};

@@ -1,0 +1,462 @@
+//! The virtual-cluster event loop: generate per-rank cycle times from the
+//! calibrated cost + noise models, apply barrier semantics per
+//! communication epoch, and account phase times the way NEST's timers do
+//! (§4.1).
+
+use super::machine::MachineProfile;
+use super::workload::Workload;
+use crate::util::rng::Pcg64;
+use crate::util::timers::{Phase, PhaseTimes};
+use anyhow::Result;
+
+/// Options of one virtual-cluster run.
+#[derive(Clone, Copy, Debug)]
+pub struct VcOptions {
+    /// Biological model time [ms].
+    pub t_model_ms: f64,
+    /// Resolution step [ms] (cycle = d_min = one step in the paper setup).
+    pub h_ms: f64,
+    pub seed: u64,
+    /// Keep the full per-rank cycle-time series (Figs 7b / 12).
+    pub record_cycle_times: bool,
+}
+
+impl Default for VcOptions {
+    fn default() -> Self {
+        Self {
+            t_model_ms: 10_000.0,
+            h_ms: 0.1,
+            seed: 654,
+            record_cycle_times: false,
+        }
+    }
+}
+
+/// Result of a virtual-cluster run.
+pub struct VcResult {
+    /// Mean accumulated phase times across ranks [s].
+    pub mean_times: PhaseTimes,
+    /// Per-rank accumulated phase times.
+    pub rank_times: Vec<PhaseTimes>,
+    /// Per-rank cycle-time series [s] (empty unless recorded).
+    pub cycle_times: Vec<Vec<f64>>,
+    /// Per-epoch maxima of lumped cycle times [s] (always recorded; one
+    /// entry per global exchange).
+    pub epoch_maxima: Vec<f64>,
+    pub s_cycles: u64,
+    pub t_model_ms: f64,
+    /// Average wire bytes per rank pair per global exchange.
+    pub bytes_per_pair: f64,
+}
+
+impl VcResult {
+    pub fn rtf(&self) -> f64 {
+        self.mean_times.rtf(self.t_model_ms / 1000.0)
+    }
+
+    /// Pure data-exchange real-time factor (the dashed line of Fig 1b).
+    pub fn data_rtf(&self) -> f64 {
+        self.mean_times.get(Phase::DataExchange)
+            / (self.t_model_ms / 1000.0)
+    }
+}
+
+/// Per-rank static cost decomposition [s per cycle].
+struct BaseCosts {
+    deliver: f64,
+    update: f64,
+    collocate: f64,
+    total: f64,
+}
+
+fn base_costs(
+    machine: &MachineProfile,
+    w: &Workload,
+    rank: usize,
+) -> BaseCosts {
+    let r = &w.per_rank[rank];
+    let c_up = if r.lif {
+        machine.c_update_lif
+    } else {
+        machine.c_update_ianf
+    };
+    let update = r.n_neurons * c_up + r.spikes_per_step * machine.c_spike_emit;
+    let deliver = r.syn_in_intra_per_step
+        * (machine.c_syn + w.f_irr_intra * machine.c_miss)
+        + r.syn_in_inter_per_step
+            * (machine.c_syn + w.f_irr_inter * machine.c_miss);
+    // collocation: one send-buffer entry per (spike, target rank)
+    let entries_per_spike = if w.strategy.dual_pathways() {
+        w.m as f64 // 1 local + (M-1) global
+    } else {
+        w.m as f64
+    };
+    let collocate =
+        r.spikes_per_step * entries_per_spike * machine.c_collocate;
+    BaseCosts { deliver, update, collocate, total: deliver + update + collocate }
+}
+
+/// Run the model for `opts.t_model_ms` of biological time.
+pub fn run_cluster(
+    machine: &MachineProfile,
+    workload: &Workload,
+    opts: &VcOptions,
+) -> Result<VcResult> {
+    let m = workload.m;
+    let s_cycles = (opts.t_model_ms / opts.h_ms).round().max(1.0) as u64;
+    let d = workload.d.max(1) as u64;
+
+    // Static per-rank costs under the machine's capacity absorption:
+    // only a machine-dependent fraction of a rank's relative load excess
+    // surfaces as cycle-time excess — idle per-node capacity soaks up the
+    // rest (§2.4.3: V2's extra spikes cost +24 % time on SuperMUC-NG but
+    // +7 % on JURECA-DC).  The damping is symmetric around the mean, so
+    // rank-averaged phase times stay comparable across placements and
+    // imbalance surfaces in the synchronization phase, as in the paper.
+    let raw: Vec<BaseCosts> =
+        (0..m).map(|r| base_costs(machine, workload, r)).collect();
+    let mean_total =
+        raw.iter().map(|b| b.total).sum::<f64>() / m as f64;
+    let bases: Vec<BaseCosts> = raw
+        .into_iter()
+        .map(|b| {
+            let raw_rel = b.total / mean_total;
+            let damped_rel =
+                (1.0 + machine.imbalance_gain * (raw_rel - 1.0)).max(0.1);
+            let scale = damped_rel / raw_rel;
+            BaseCosts {
+                deliver: b.deliver * scale,
+                update: b.update * scale,
+                collocate: b.collocate * scale,
+                total: b.total * scale,
+            }
+        })
+        .collect();
+
+    // noise state per rank
+    let noise = &machine.noise;
+    let mut rngs: Vec<Pcg64> =
+        (0..m).map(|r| Pcg64::new(opts.seed, r as u64)).collect();
+    let mut slow: Vec<f64> = rngs
+        .iter_mut()
+        .map(|rng| rng.normal_ms(0.0, noise.sigma_slow))
+        .collect();
+    // stationary AR(1): innovation std = sigma_slow * sqrt(1 - phi^2)
+    let innov = noise.sigma_slow
+        * (1.0 - noise.phi_slow * noise.phi_slow).max(0.0).sqrt();
+
+    let mut rank_times = vec![PhaseTimes::new(); m];
+    let mut cycle_times: Vec<Vec<f64>> = if opts.record_cycle_times {
+        vec![Vec::with_capacity(s_cycles as usize); m]
+    } else {
+        vec![Vec::new(); m]
+    };
+    let mut epoch_maxima = Vec::with_capacity((s_cycles / d) as usize + 1);
+    let mut lumped = vec![0.0f64; m];
+    let mut this_cycle = vec![0.0f64; m];
+    let mut total_bytes_per_pair = 0.0f64;
+    let mut n_exchanges = 0u64;
+
+    // spikes accumulated per rank since the last global exchange
+    let mut acc_spikes = vec![0.0f64; m];
+
+    for s in 0..s_cycles {
+        for r in 0..m {
+            let rng = &mut rngs[r];
+            // slow AR(1) drift
+            slow[r] = noise.phi_slow * slow[r] + rng.normal_ms(0.0, innov);
+            let mut rel = 1.0 + slow[r] + rng.normal_ms(0.0, noise.sigma_fast);
+            if rng.chance(noise.minor_prob) {
+                rel += noise.minor_scale;
+            }
+            if rng.chance(noise.extreme_prob) {
+                rel += rng.uniform_range(2.0, noise.extreme_scale_max);
+            }
+            // absolute OS jitter, folded into the relative factor
+            rel += rng.normal_ms(0.0, noise.sigma_abs_s).abs() / bases[r].total;
+            let rel = rel.max(0.05);
+            let b = &bases[r];
+            let t_cycle = b.total * rel;
+            // charge the phases proportionally to their base shares
+            let pt = &mut rank_times[r];
+            pt.add(Phase::Deliver, b.deliver * rel);
+            pt.add(Phase::Update, b.update * rel);
+            pt.add(Phase::Collocate, b.collocate * rel);
+            if opts.record_cycle_times {
+                cycle_times[r].push(t_cycle);
+            }
+            lumped[r] += t_cycle;
+            this_cycle[r] = t_cycle;
+            acc_spikes[r] += workload.per_rank[r].spikes_per_step;
+            if workload.strategy.dual_pathways() {
+                // local pathway swap every cycle (charged as exchange)
+                rank_times[r].add(Phase::DataExchange, machine.c_local_swap);
+            }
+        }
+
+        // MPI_Group extension: members of a group exchange intra-area
+        // spikes collectively every cycle — a group-local barrier plus a
+        // small-group alltoall (paper §3 future work)
+        if let Some(groups) = &workload.groups {
+            let n_groups = groups.iter().max().map(|&g| g + 1).unwrap_or(0);
+            for gid in 0..n_groups {
+                let members: Vec<usize> = (0..m)
+                    .filter(|&r| groups[r] == gid)
+                    .collect();
+                if members.len() < 2 {
+                    continue;
+                }
+                let gmax = members
+                    .iter()
+                    .map(|&r| this_cycle[r])
+                    .fold(f64::MIN, f64::max);
+                let spikes_pair = members
+                    .iter()
+                    .map(|&r| workload.per_rank[r].spikes_per_step)
+                    .fold(0.0f64, f64::max);
+                let t_data = machine.alltoall.time(
+                    members.len(),
+                    spikes_pair * workload.bytes_per_spike,
+                );
+                for &r in &members {
+                    let wait = gmax - this_cycle[r];
+                    rank_times[r].add(Phase::Synchronize, wait);
+                    rank_times[r].add(Phase::DataExchange, t_data);
+                    // the group advances together: slower members pace
+                    // the lumped time toward the global barrier
+                    lumped[r] += wait + t_data;
+                }
+            }
+        }
+
+        // global exchange every D-th cycle: barrier + alltoall
+        if (s + 1) % d == 0 {
+            let max = lumped.iter().cloned().fold(f64::MIN, f64::max);
+            epoch_maxima.push(max);
+            let max_spikes =
+                acc_spikes.iter().cloned().fold(0.0f64, f64::max);
+            let bytes_per_pair = max_spikes * workload.bytes_per_spike;
+            let t_data = machine.alltoall.time(m, bytes_per_pair);
+            total_bytes_per_pair += bytes_per_pair;
+            n_exchanges += 1;
+            for r in 0..m {
+                rank_times[r].add(Phase::Synchronize, max - lumped[r]);
+                rank_times[r].add(Phase::DataExchange, t_data);
+                lumped[r] = 0.0;
+                acc_spikes[r] = 0.0;
+            }
+        }
+    }
+
+    Ok(VcResult {
+        mean_times: PhaseTimes::mean_of(&rank_times),
+        rank_times,
+        cycle_times,
+        epoch_maxima,
+        s_cycles,
+        t_model_ms: opts.t_model_ms,
+        bytes_per_pair: if n_exchanges > 0 {
+            total_bytes_per_pair / n_exchanges as f64
+        } else {
+            0.0
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Strategy;
+    use crate::models;
+    use crate::util::stats;
+
+    fn opts(t_model_ms: f64) -> VcOptions {
+        VcOptions { t_model_ms, ..Default::default() }
+    }
+
+    fn run(
+        strategy: Strategy,
+        m: usize,
+        t_model_ms: f64,
+    ) -> (Workload, VcResult) {
+        let spec = models::mam_benchmark(m, 1.0, 1.0).unwrap();
+        let machine = MachineProfile::supermuc_ng();
+        let w = Workload::derive(&spec, strategy, m, machine.t_m).unwrap();
+        let res = run_cluster(&machine, &w, &opts(t_model_ms)).unwrap();
+        (w, res)
+    }
+
+    #[test]
+    fn conventional_cycle_time_near_calibration() {
+        let spec = models::mam_benchmark(128, 1.0, 1.0).unwrap();
+        let machine = MachineProfile::supermuc_ng();
+        let w =
+            Workload::derive(&spec, Strategy::Conventional, 128, 48).unwrap();
+        let mut o = opts(200.0);
+        o.record_cycle_times = true;
+        let res = run_cluster(&machine, &w, &o).unwrap();
+        let all: Vec<f64> =
+            res.cycle_times.iter().flatten().cloned().collect();
+        let mean = stats::mean(&all);
+        // paper Fig 7b: mean cycle time ~1.6 ms at M=128
+        assert!(
+            (1.2e-3..2.1e-3).contains(&mean),
+            "mean cycle {mean}"
+        );
+        let cv = stats::cv(&all);
+        assert!((0.03..0.12).contains(&cv), "cv {cv}");
+    }
+
+    #[test]
+    fn structure_aware_beats_conventional_at_scale() {
+        let (_, conv) = run(Strategy::Conventional, 128, 100.0);
+        let (_, stru) = run(Strategy::StructureAware, 128, 100.0);
+        assert!(
+            stru.rtf() < conv.rtf(),
+            "struct {} !< conv {}",
+            stru.rtf(),
+            conv.rtf()
+        );
+        // sync and data exchange both improve
+        use crate::util::timers::Phase;
+        assert!(
+            stru.mean_times.get(Phase::Synchronize)
+                < conv.mean_times.get(Phase::Synchronize)
+        );
+        assert!(
+            stru.mean_times.get(Phase::DataExchange)
+                < conv.mean_times.get(Phase::DataExchange)
+        );
+    }
+
+    #[test]
+    fn weak_scaling_shape_matches_paper() {
+        // RTF grows with M for conventional, slower for structure-aware
+        let rtf = |strategy, m| run(strategy, m, 50.0).1.rtf();
+        let c16 = rtf(Strategy::Conventional, 16);
+        let c128 = rtf(Strategy::Conventional, 128);
+        let s16 = rtf(Strategy::StructureAware, 16);
+        let s128 = rtf(Strategy::StructureAware, 128);
+        assert!(c128 > c16, "conv not growing: {c16} -> {c128}");
+        assert!(s128 > s16 * 0.9);
+        let conv_slope = c128 - c16;
+        let struct_slope = s128 - s16;
+        assert!(
+            struct_slope < conv_slope,
+            "scaling slopes {struct_slope} !< {conv_slope}"
+        );
+        // overall runtime reduction at M=128 in the 15-45% band
+        let red = 1.0 - s128 / c128;
+        assert!((0.10..0.50).contains(&red), "reduction {red}");
+    }
+
+    #[test]
+    fn bytes_per_pair_matches_paper_buffer_sizes() {
+        // paper reports ~317 B/pair at M=128 conventional (10 s run)
+        let (_, conv) = run(Strategy::Conventional, 128, 50.0);
+        assert!(
+            (150.0..500.0).contains(&conv.bytes_per_pair),
+            "bytes {}",
+            conv.bytes_per_pair
+        );
+        let (_, stru) = run(Strategy::StructureAware, 128, 50.0);
+        let ratio = stru.bytes_per_pair / conv.bytes_per_pair;
+        assert!((8.0..12.0).contains(&ratio), "D-fold bytes ratio {ratio}");
+    }
+
+    #[test]
+    fn epoch_count_follows_delay_ratio() {
+        let (_, conv) = run(Strategy::Conventional, 16, 10.0);
+        let (_, stru) = run(Strategy::StructureAware, 16, 10.0);
+        assert_eq!(conv.epoch_maxima.len(), 100);
+        assert_eq!(stru.epoch_maxima.len(), 10);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (_, a) = run(Strategy::Conventional, 16, 10.0);
+        let (_, b) = run(Strategy::Conventional, 16, 10.0);
+        assert_eq!(a.rtf(), b.rtf());
+    }
+
+    #[test]
+    fn serial_correlation_present_in_cycle_times() {
+        let spec = models::mam_benchmark(16, 1.0, 1.0).unwrap();
+        let machine = MachineProfile::supermuc_ng();
+        let w =
+            Workload::derive(&spec, Strategy::Conventional, 16, 48).unwrap();
+        let mut o = opts(1000.0);
+        o.record_cycle_times = true;
+        let res = run_cluster(&machine, &w, &o).unwrap();
+        // pool over ranks: single-series estimates of a near-unit-root
+        // component are noisy
+        let (mut ac1, mut ac500) = (0.0, 0.0);
+        for row in &res.cycle_times {
+            ac1 += stats::autocorr(row, 1);
+            ac500 += stats::autocorr(row, 500);
+        }
+        ac1 /= res.cycle_times.len() as f64;
+        ac500 /= res.cycle_times.len() as f64;
+        assert!(ac1 > 0.1, "lag-1 autocorr {ac1}");
+        // correlation persists over hundreds of cycles (Fig 12)
+        assert!(ac500 > 0.03, "lag-500 autocorr {ac500}");
+    }
+
+    #[test]
+    fn grouped_extension_reduces_sync_for_unbalanced_model() {
+        // MPI_Group future-work scheme (paper §3): splitting large areas
+        // over several ranks regains load balance; global sync drops
+        // versus the one-area-per-rank scheme at comparable resources
+        let spec = models::mam(1.0, 1.0).unwrap();
+        let machine = MachineProfile::supermuc_ng();
+        let o = opts(50.0);
+        let single =
+            Workload::derive(&spec, Strategy::StructureAware, 32, 48)
+                .unwrap();
+        let grouped =
+            Workload::derive_grouped(&spec, 64, 48).unwrap();
+        let rs = run_cluster(&machine, &single, &o).unwrap();
+        let rg = run_cluster(&machine, &grouped, &o).unwrap();
+        use crate::util::timers::Phase;
+        // per-rank compute halves (2x ranks); sync should drop MORE than
+        // proportionally thanks to the regained balance
+        let sync_s = rs.mean_times.get(Phase::Synchronize);
+        let sync_g = rg.mean_times.get(Phase::Synchronize);
+        assert!(
+            sync_g < 0.75 * sync_s,
+            "grouped sync {sync_g} !<< single {sync_s}"
+        );
+        assert!(rg.rtf() < rs.rtf(), "{} !< {}", rg.rtf(), rs.rtf());
+    }
+
+    #[test]
+    fn intermediate_strategy_between_the_two() {
+        let spec = models::mam(1.0, 1.0).unwrap();
+        let machine = MachineProfile::supermuc_ng();
+        let o = opts(50.0);
+        let rtf = |strategy| {
+            let w =
+                Workload::derive(&spec, strategy, 32, machine.t_m).unwrap();
+            run_cluster(&machine, &w, &o).unwrap()
+        };
+        let conv = rtf(Strategy::Conventional);
+        let inter = rtf(Strategy::Intermediate);
+        let stru = rtf(Strategy::StructureAware);
+        use crate::util::timers::Phase;
+        // intermediate: better delivery than conventional...
+        assert!(
+            inter.mean_times.get(Phase::Deliver)
+                < conv.mean_times.get(Phase::Deliver)
+        );
+        // ...but worse synchronization (imbalance, same comm frequency)
+        assert!(
+            inter.mean_times.get(Phase::Synchronize)
+                > conv.mean_times.get(Phase::Synchronize)
+        );
+        // fully structure-aware wins back sync time vs intermediate
+        assert!(
+            stru.mean_times.get(Phase::Synchronize)
+                < inter.mean_times.get(Phase::Synchronize)
+        );
+    }
+}

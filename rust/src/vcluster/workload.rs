@@ -1,0 +1,394 @@
+//! Derive per-rank workload characteristics from a model specification,
+//! a strategy and a machine size — the inputs of the performance model.
+//!
+//! Only *counts and rates* are used (no connectivity instantiation), so
+//! workloads can be derived at full paper scale (130 000 neurons per rank,
+//! M = 128) in microseconds.
+
+use crate::config::Strategy;
+use crate::network::spec::NeuronKind;
+use crate::network::ModelSpec;
+use crate::theory::delivery::{f_irr_conventional, DeliveryScenario};
+use anyhow::{bail, Result};
+
+/// Static per-rank load characteristics.
+#[derive(Clone, Debug)]
+pub struct RankLoad {
+    /// Real neurons hosted (ghosts excluded from update).
+    pub n_neurons: f64,
+    /// Is the model LIF (rate-sensitive update) or ignore-and-fire?
+    pub lif: bool,
+    /// Spikes emitted by this rank per resolution step.
+    pub spikes_per_step: f64,
+    /// Synapses delivered *to* this rank per step (intra, inter).
+    pub syn_in_intra_per_step: f64,
+    pub syn_in_inter_per_step: f64,
+    /// Spikes arriving at this rank per step (for irregular-access
+    /// accounting), split by pathway.
+    pub spikes_in_intra_per_step: f64,
+    pub spikes_in_inter_per_step: f64,
+}
+
+/// Whole-cluster workload.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub m: usize,
+    pub strategy: Strategy,
+    /// Delay ratio D (communication epoch of the structure-aware scheme).
+    pub d: u32,
+    /// MPI_Group extension (paper §3 future work): group id per rank when
+    /// an area spans several ranks; members exchange intra-area spikes in
+    /// a group-local collective every cycle.  `None` = one rank per area.
+    pub groups: Option<Vec<usize>>,
+    pub per_rank: Vec<RankLoad>,
+    /// Fraction of irregular accesses per delivered synapse, by pathway
+    /// (depends on placement scheme and T_M).
+    pub f_irr_intra: f64,
+    pub f_irr_inter: f64,
+    /// Wire bytes per emitted spike.
+    pub bytes_per_spike: f64,
+}
+
+impl Workload {
+    /// Build from a model spec.  `t_m` is the machine's threads/rank.
+    pub fn derive(
+        spec: &ModelSpec,
+        strategy: Strategy,
+        m: usize,
+        t_m: usize,
+    ) -> Result<Workload> {
+        if m == 0 {
+            bail!("m must be >= 1");
+        }
+        let n_areas = spec.n_areas();
+        if strategy.structure_aware_placement() && n_areas < m {
+            bail!("structure-aware placement needs >= {m} areas");
+        }
+        let d = spec.delay_ratio().max(1);
+
+        // per-area neurons, rates, kind
+        let area_n: Vec<f64> =
+            spec.areas.iter().map(|a| a.n as f64).collect();
+        let area_rate: Vec<f64> = spec
+            .areas
+            .iter()
+            .map(|a| match a.neuron {
+                NeuronKind::Lif(p) => p.tonic_rate_hz(),
+                NeuronKind::IgnoreAndFire { interval_steps } => {
+                    1000.0 / (interval_steps as f64 * spec.h_ms)
+                }
+            })
+            .collect();
+        let lif = matches!(spec.areas[0].neuron, NeuronKind::Lif(_));
+        let n_total: f64 = area_n.iter().sum();
+        let h_s = spec.h_ms * 1e-3;
+        let total_spikes_per_step: f64 = area_n
+            .iter()
+            .zip(&area_rate)
+            .map(|(n, r)| n * r * h_s)
+            .sum();
+        let k_intra = spec.k_intra as f64;
+        let k_inter = spec.k_inter as f64;
+        let k_n = k_intra + k_inter;
+
+        // rank -> hosted area indices (or even split for round robin)
+        let mut per_rank = Vec::with_capacity(m);
+        if strategy.structure_aware_placement() {
+            for rank in 0..m {
+                let areas: Vec<usize> =
+                    (0..n_areas).filter(|a| a % m == rank).collect();
+                let n_r: f64 = areas.iter().map(|&a| area_n[a]).sum();
+                let spikes_r: f64 = areas
+                    .iter()
+                    .map(|&a| area_n[a] * area_rate[a] * h_s)
+                    .sum();
+                // intra synapses of hosted areas arrive here; inter
+                // synapses: each neuron here has k_inter incoming from
+                // elsewhere, weighted by source activity ~ network mean
+                let syn_intra = spikes_r * k_intra;
+                let mean_rate_weighted = total_spikes_per_step / n_total;
+                let syn_inter = n_r * k_inter * mean_rate_weighted;
+                // arriving distinct spikes: intra = own spikes; inter =
+                // (almost) every spike of other ranks reaches every rank
+                // at K_inter=3000 over M-1 ranks
+                let spikes_other = total_spikes_per_step - spikes_r;
+                per_rank.push(RankLoad {
+                    n_neurons: n_r,
+                    lif,
+                    spikes_per_step: spikes_r,
+                    syn_in_intra_per_step: syn_intra,
+                    syn_in_inter_per_step: syn_inter,
+                    spikes_in_intra_per_step: spikes_r,
+                    spikes_in_inter_per_step: spikes_other,
+                });
+            }
+        } else {
+            // round robin: everything balanced
+            let n_r = n_total / m as f64;
+            let spikes_r = total_spikes_per_step / m as f64;
+            let syn_r = total_spikes_per_step * k_n / m as f64;
+            for _ in 0..m {
+                per_rank.push(RankLoad {
+                    n_neurons: n_r,
+                    lif,
+                    spikes_per_step: spikes_r,
+                    syn_in_intra_per_step: syn_r,
+                    syn_in_inter_per_step: 0.0,
+                    spikes_in_intra_per_step: total_spikes_per_step,
+                    spikes_in_inter_per_step: 0.0,
+                });
+            }
+        }
+
+        // irregular-access fractions from the §2.3 theory
+        let mean_n_m = n_total / m as f64;
+        let scenario = DeliveryScenario {
+            n_m: mean_n_m,
+            k_n,
+            k_intra,
+            k_inter,
+        };
+        let (f_intra, f_inter) = if strategy.structure_aware_placement() {
+            crate::theory::delivery::f_irr_structure_parts(&scenario, m, t_m)
+        } else {
+            let f = f_irr_conventional(&scenario, m, t_m);
+            (f, f)
+        };
+
+        Ok(Workload {
+            m,
+            strategy,
+            d: if strategy.dual_pathways() { d } else { 1 },
+            groups: None,
+            per_rank,
+            f_irr_intra: f_intra,
+            f_irr_inter: f_inter,
+            bytes_per_spike: crate::comm::SPIKE_WIRE_BYTES as f64,
+        })
+    }
+
+    /// MPI_Group extension (paper §3): distribute `m >= n_areas` ranks
+    /// over the areas proportionally to area size (largest-remainder), so
+    /// neurons per rank stay approximately constant.  Intra-area spikes
+    /// are exchanged group-locally every cycle; global communication
+    /// stays at every D-th cycle.  Regains load balance with respect to
+    /// network structure.
+    pub fn derive_grouped(
+        spec: &ModelSpec,
+        m: usize,
+        t_m: usize,
+    ) -> Result<Workload> {
+        let n_areas = spec.n_areas();
+        if m < n_areas {
+            bail!("grouped placement needs >= {n_areas} ranks");
+        }
+        let base = Workload::derive(spec, Strategy::StructureAware,
+                                    n_areas, t_m)?;
+        // ranks per area: one each, remainder by largest area size
+        let n_total: f64 =
+            spec.areas.iter().map(|a| a.n as f64).sum();
+        let mut g: Vec<usize> = vec![1; n_areas];
+        let mut frac: Vec<(usize, f64)> = spec
+            .areas
+            .iter()
+            .enumerate()
+            .map(|(a, ar)| (a, ar.n as f64 / n_total * m as f64))
+            .collect();
+        let mut assigned = n_areas;
+        frac.sort_by(|x, y| y.1.partial_cmp(&x.1).unwrap());
+        let mut i = 0;
+        while assigned < m {
+            let (a, _) = frac[i % frac.len()];
+            // greedily give extra ranks to the areas with the highest
+            // remaining per-rank load
+            let (best, _) = (0..n_areas)
+                .map(|a2| (a2, spec.areas[a2].n as f64 / g[a2] as f64))
+                .fold((a, 0.0), |acc, (a2, load)| {
+                    if load > acc.1 {
+                        (a2, load)
+                    } else {
+                        acc
+                    }
+                });
+            g[best] += 1;
+            assigned += 1;
+            i += 1;
+        }
+        // expand per-area loads into per-rank shares
+        let mut per_rank = Vec::with_capacity(m);
+        let mut groups = Vec::with_capacity(m);
+        for (a, load) in base.per_rank.iter().enumerate() {
+            let k = g[a] as f64;
+            for _ in 0..g[a] {
+                groups.push(a);
+                per_rank.push(RankLoad {
+                    n_neurons: load.n_neurons / k,
+                    lif: load.lif,
+                    spikes_per_step: load.spikes_per_step / k,
+                    syn_in_intra_per_step: load.syn_in_intra_per_step / k,
+                    syn_in_inter_per_step: load.syn_in_inter_per_step / k,
+                    spikes_in_intra_per_step: load.spikes_in_intra_per_step,
+                    spikes_in_inter_per_step: load.spikes_in_inter_per_step,
+                });
+            }
+        }
+        Ok(Workload {
+            m,
+            strategy: Strategy::StructureAware,
+            d: base.d,
+            groups: Some(groups),
+            per_rank,
+            f_irr_intra: base.f_irr_intra,
+            f_irr_inter: base.f_irr_inter,
+            bytes_per_spike: base.bytes_per_spike,
+        })
+    }
+
+    /// Mean neurons per rank.
+    pub fn mean_n_per_rank(&self) -> f64 {
+        self.per_rank.iter().map(|r| r.n_neurons).sum::<f64>()
+            / self.m as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn round_robin_is_balanced() {
+        let spec = models::mam_benchmark(8, 1.0, 1.0).unwrap();
+        let w =
+            Workload::derive(&spec, Strategy::Conventional, 8, 48).unwrap();
+        assert_eq!(w.d, 1);
+        let n0 = w.per_rank[0].n_neurons;
+        assert!(w
+            .per_rank
+            .iter()
+            .all(|r| (r.n_neurons - n0).abs() < 1e-9));
+        assert!((n0 - 130_000.0).abs() < 1.0);
+        // 2.5 Hz * 130k * 0.1ms = 32.5 spikes per step per rank
+        assert!((w.per_rank[0].spikes_per_step - 32.5).abs() < 0.2);
+    }
+
+    #[test]
+    fn structure_aware_uses_delay_ratio() {
+        let spec = models::mam_benchmark(8, 1.0, 1.0).unwrap();
+        let w =
+            Workload::derive(&spec, Strategy::StructureAware, 8, 48).unwrap();
+        assert_eq!(w.d, 10);
+        // intermediate keeps D=1 despite area placement
+        let wi =
+            Workload::derive(&spec, Strategy::Intermediate, 8, 48).unwrap();
+        assert_eq!(wi.d, 1);
+    }
+
+    #[test]
+    fn heterogeneous_areas_imbalance_structure_aware_only() {
+        let spec =
+            models::mam_benchmark_heterogeneous(8, 1.0, 1.0, 0.2, 0.0, 3)
+                .unwrap();
+        let wc =
+            Workload::derive(&spec, Strategy::Conventional, 8, 48).unwrap();
+        let ws =
+            Workload::derive(&spec, Strategy::StructureAware, 8, 48).unwrap();
+        let cv = |w: &Workload| {
+            let ns: Vec<f64> =
+                w.per_rank.iter().map(|r| r.n_neurons).collect();
+            crate::util::stats::cv(&ns)
+        };
+        assert!(cv(&wc) < 1e-9);
+        assert!(cv(&ws) > 0.1);
+    }
+
+    #[test]
+    fn irregular_fraction_lower_for_structure_aware_intra() {
+        let spec = models::mam_benchmark(128, 1.0, 1.0).unwrap();
+        let wc =
+            Workload::derive(&spec, Strategy::Conventional, 128, 48).unwrap();
+        let ws =
+            Workload::derive(&spec, Strategy::StructureAware, 128, 48)
+                .unwrap();
+        assert!(
+            ws.f_irr_intra < wc.f_irr_intra,
+            "intra {} !< conv {}",
+            ws.f_irr_intra,
+            wc.f_irr_intra
+        );
+    }
+
+    #[test]
+    fn mam_v2_rank_has_highest_spike_load() {
+        let spec = models::mam(1.0, 1.0).unwrap();
+        let w = Workload::derive(&spec, Strategy::StructureAware, 32, 48)
+            .unwrap();
+        // V2 is area index 1 -> rank 1
+        let v2 = &w.per_rank[1];
+        assert!(w
+            .per_rank
+            .iter()
+            .all(|r| r.spikes_per_step <= v2.spikes_per_step + 1e-9));
+    }
+
+    #[test]
+    fn grouped_placement_balances_heterogeneous_areas() {
+        let spec = models::mam(1.0, 1.0).unwrap();
+        let w = Workload::derive_grouped(&spec, 64, 48).unwrap();
+        assert_eq!(w.per_rank.len(), 64);
+        let groups = w.groups.as_ref().unwrap();
+        assert_eq!(groups.len(), 64);
+        // every area has at least one rank; larger areas get more
+        let mut per_area = vec![0usize; spec.n_areas()];
+        for &g in groups {
+            per_area[g] += 1;
+        }
+        assert!(per_area.iter().all(|&k| k >= 1));
+        assert_eq!(per_area.iter().sum::<usize>(), 64);
+        // neurons per rank far better balanced than 1-area-per-rank
+        let grouped_ns: Vec<f64> =
+            w.per_rank.iter().map(|r| r.n_neurons).collect();
+        let single = Workload::derive(
+            &spec,
+            Strategy::StructureAware,
+            32,
+            48,
+        )
+        .unwrap();
+        let single_ns: Vec<f64> =
+            single.per_rank.iter().map(|r| r.n_neurons).collect();
+        assert!(
+            crate::util::stats::cv(&grouped_ns)
+                < crate::util::stats::cv(&single_ns),
+            "grouping did not improve balance"
+        );
+    }
+
+    #[test]
+    fn grouped_preserves_total_load() {
+        let spec = models::mam(1.0, 1.0).unwrap();
+        let w = Workload::derive_grouped(&spec, 48, 48).unwrap();
+        let single =
+            Workload::derive(&spec, Strategy::StructureAware, 32, 48)
+                .unwrap();
+        let tot = |w: &Workload| -> f64 {
+            w.per_rank.iter().map(|r| r.n_neurons).sum()
+        };
+        assert!((tot(&w) - tot(&single)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grouped_rejects_fewer_ranks_than_areas() {
+        let spec = models::mam(1.0, 1.0).unwrap();
+        assert!(Workload::derive_grouped(&spec, 16, 48).is_err());
+    }
+
+    #[test]
+    fn rejects_too_few_areas() {
+        let spec = models::mam_benchmark(4, 1.0, 1.0).unwrap();
+        assert!(
+            Workload::derive(&spec, Strategy::StructureAware, 8, 48)
+                .is_err()
+        );
+    }
+}

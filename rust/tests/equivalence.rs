@@ -1,0 +1,174 @@
+//! The central correctness invariant of the reproduction: the
+//! conventional, intermediate and structure-aware strategies are
+//! *observationally equivalent* — same model, same seed, identical spike
+//! trains — and results are independent of the number of ranks/threads.
+//!
+//! This is what licenses the paper's performance comparison: the
+//! communication restructuring must not change the dynamics.
+
+use nsim::config::{RunConfig, Strategy, UpdatePath};
+use nsim::engine::simulate;
+use nsim::models;
+use nsim::network::ModelSpec;
+
+fn run(
+    spec: &ModelSpec,
+    strategy: Strategy,
+    m: usize,
+    t: usize,
+    t_model_ms: f64,
+) -> Vec<(u64, u32)> {
+    let cfg = RunConfig {
+        strategy,
+        m_ranks: m,
+        threads_per_rank: t,
+        t_model_ms,
+        seed: 12,
+        update_path: UpdatePath::Native,
+        record_spikes: true,
+        record_cycle_times: false,
+    };
+    simulate(spec, &cfg).expect("simulation failed").spikes
+}
+
+#[test]
+fn ianf_model_identical_across_strategies() {
+    let spec = models::mam_benchmark(4, 0.004, 1.0).unwrap(); // 4x520
+    let conv = run(&spec, Strategy::Conventional, 4, 2, 50.0);
+    let inter = run(&spec, Strategy::Intermediate, 4, 2, 50.0);
+    let stru = run(&spec, Strategy::StructureAware, 4, 2, 50.0);
+    assert!(!conv.is_empty(), "no spikes emitted");
+    assert_eq!(conv, inter, "conventional != intermediate");
+    assert_eq!(conv, stru, "conventional != structure-aware");
+}
+
+#[test]
+fn lif_model_identical_across_strategies() {
+    // sanity net has exact binary-fraction weights -> f64 ring-buffer
+    // sums are order-independent and spike trains must match exactly
+    let spec = models::sanity_net(300, 4).unwrap();
+    let conv = run(&spec, Strategy::Conventional, 4, 2, 200.0);
+    let inter = run(&spec, Strategy::Intermediate, 4, 2, 200.0);
+    let stru = run(&spec, Strategy::StructureAware, 4, 2, 200.0);
+    assert!(
+        conv.len() > 100,
+        "network too quiet for a meaningful test: {} spikes",
+        conv.len()
+    );
+    assert_eq!(conv, inter, "conventional != intermediate");
+    assert_eq!(conv, stru, "conventional != structure-aware");
+}
+
+#[test]
+fn lif_recurrent_dynamics_depend_on_connectivity() {
+    // sanity check that the test above isn't vacuous (pure tonic firing):
+    // a different connectivity seed must change the spike train
+    let spec = models::sanity_net(300, 4).unwrap();
+    let a = run(&spec, Strategy::Conventional, 2, 2, 200.0);
+    let cfg_b = RunConfig {
+        strategy: Strategy::Conventional,
+        m_ranks: 2,
+        threads_per_rank: 2,
+        t_model_ms: 200.0,
+        seed: 91856,
+        update_path: UpdatePath::Native,
+        record_spikes: true,
+        record_cycle_times: false,
+    };
+    let b = simulate(&spec, &cfg_b).unwrap().spikes;
+    assert_ne!(a, b, "recurrent input has no effect — test is vacuous");
+}
+
+#[test]
+fn spike_trains_independent_of_rank_count() {
+    let spec = models::sanity_net(240, 8).unwrap();
+    let base = run(&spec, Strategy::Conventional, 1, 2, 100.0);
+    for m in [2usize, 4, 8] {
+        let got = run(&spec, Strategy::Conventional, m, 2, 100.0);
+        assert_eq!(base, got, "spike trains differ for M={m}");
+    }
+    // structure-aware across different rank counts (areas % m == 0)
+    let s2 = run(&spec, Strategy::StructureAware, 2, 2, 100.0);
+    let s4 = run(&spec, Strategy::StructureAware, 4, 2, 100.0);
+    let s8 = run(&spec, Strategy::StructureAware, 8, 2, 100.0);
+    assert_eq!(base, s2);
+    assert_eq!(base, s4);
+    assert_eq!(base, s8);
+}
+
+#[test]
+fn spike_trains_independent_of_thread_count() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    let base = run(&spec, Strategy::StructureAware, 4, 1, 100.0);
+    for t in [2usize, 3, 8] {
+        let got = run(&spec, Strategy::StructureAware, 4, t, 100.0);
+        assert_eq!(base, got, "spike trains differ for T={t}");
+    }
+}
+
+#[test]
+fn delay_ratio_sweep_preserves_dynamics() {
+    // increasing the inter-area cutoff changes delays (hence dynamics),
+    // but for a fixed cutoff the strategies must agree for every D
+    for d_min_inter in [0.5, 1.0, 2.0] {
+        let spec = models::mam_benchmark(4, 0.002, d_min_inter).unwrap();
+        let conv = run(&spec, Strategy::Conventional, 4, 2, 30.0);
+        let stru = run(&spec, Strategy::StructureAware, 4, 2, 30.0);
+        assert_eq!(conv, stru, "mismatch at d_min_inter={d_min_inter}");
+    }
+}
+
+#[test]
+fn more_areas_than_ranks_supported() {
+    // 8 areas on 4 ranks: two areas per rank; intra-area spikes of both
+    // areas stay rank-local
+    let spec = models::mam_benchmark(8, 0.002, 1.0).unwrap();
+    let conv = run(&spec, Strategy::Conventional, 4, 2, 30.0);
+    let stru = run(&spec, Strategy::StructureAware, 4, 2, 30.0);
+    assert_eq!(conv, stru);
+}
+
+#[test]
+fn single_rank_structure_aware_works() {
+    let spec = models::mam_benchmark(2, 0.002, 1.0).unwrap();
+    let conv = run(&spec, Strategy::Conventional, 1, 2, 30.0);
+    let stru = run(&spec, Strategy::StructureAware, 1, 2, 30.0);
+    assert_eq!(conv, stru);
+}
+
+#[test]
+fn randomized_configurations_property() {
+    // random (areas, size, ranks, threads, D) configurations: strategies
+    // must agree pairwise on every draw
+    use nsim::util::rng::Pcg64;
+    let mut rng = Pcg64::seed_from_u64(0xE0);
+    for case in 0..5 {
+        let n_areas = 2 + rng.below(4) as usize; // 2..5
+        let m = 1 + rng.below(n_areas as u64) as usize;
+        let t = 1 + rng.below(3) as usize;
+        let n = 120 + rng.below(200) as u32;
+        let d_min_inter = [0.5, 1.0, 2.0][rng.below(3) as usize];
+        let spec =
+            models::mam_benchmark(n_areas, n as f64 / 130_000.0, d_min_inter)
+                .unwrap();
+        let conv = run(&spec, Strategy::Conventional, m, t, 20.0);
+        let stru = run(&spec, Strategy::StructureAware, m, t, 20.0);
+        assert_eq!(
+            conv, stru,
+            "case {case}: areas={n_areas} m={m} t={t} n={n} \
+             d_inter={d_min_inter}"
+        );
+    }
+}
+
+#[test]
+fn ianf_rate_matches_target() {
+    let spec = models::mam_benchmark(2, 0.01, 1.0).unwrap();
+    let spikes = run(&spec, Strategy::Conventional, 2, 2, 1000.0);
+    let n = spec.total_neurons() as f64;
+    let rate = spikes.len() as f64 / n; // 1 s of model time
+    assert!(
+        (rate - 2.5).abs() < 0.1,
+        "ignore-and-fire rate {rate} != 2.5 Hz"
+    );
+}

@@ -1,0 +1,112 @@
+//! Three-layer composition proof: the AOT-compiled XLA artifacts (L1
+//! Pallas kernel inside the L2 jax step function, loaded via PJRT) must
+//! reproduce the native Rust update exactly — and a whole simulation run
+//! through the XLA path must emit the same spikes as the native path.
+//!
+//! Requires `make artifacts` (skipped gracefully if absent).
+
+use nsim::config::{RunConfig, Strategy, UpdatePath};
+use nsim::engine::neuron::NeuronBlock;
+use nsim::engine::simulate;
+use nsim::models;
+use nsim::network::spec::{LifParams, NeuronKind};
+use nsim::runtime::updater::xla_updater;
+use nsim::util::rng::Pcg64;
+
+fn artifacts_available() -> bool {
+    let dir = nsim::runtime::registry::default_dir();
+    std::path::Path::new(&format!("{dir}/manifest.json")).exists()
+}
+
+#[test]
+fn xla_lif_step_matches_native_bitwise() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let spec = models::sanity_net(100, 2).unwrap();
+    let updater = xla_updater(&spec).expect("xla updater");
+
+    let gids: Vec<u32> = (0..700).collect(); // not a multiple of 512
+    let params = LifParams {
+        i_e_pa: LifParams::default().i_e_for_rate(12.0),
+        ..Default::default()
+    };
+    let mut native =
+        NeuronBlock::build(&gids, 0.1, |_| NeuronKind::Lif(params));
+    let mut xla = native.clone();
+    let mut rng = Pcg64::seed_from_u64(5);
+
+    for step in 0..50 {
+        let syn: Vec<f32> = (0..gids.len())
+            .map(|_| rng.normal_ms(0.1, 0.5) as f32)
+            .collect();
+        let mut native_spikes = Vec::new();
+        let mut xla_spikes = Vec::new();
+        native.step_native(&syn, &mut native_spikes);
+        updater.step(&mut xla, &syn, &mut xla_spikes);
+        assert_eq!(
+            native_spikes, xla_spikes,
+            "spike mismatch at step {step}"
+        );
+        match (&native, &xla) {
+            (
+                NeuronBlock::Lif { v: v_n, refr: r_n, .. },
+                NeuronBlock::Lif { v: v_x, refr: r_x, .. },
+            ) => {
+                assert_eq!(v_n, v_x, "membrane mismatch at step {step}");
+                assert_eq!(r_n, r_x, "refractory mismatch at step {step}");
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[test]
+fn xla_ianf_step_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let spec = models::mam_benchmark(2, 0.001, 1.0).unwrap();
+    let updater = xla_updater(&spec).expect("xla updater");
+    let gids: Vec<u32> = (0..300).collect();
+    let mut native = NeuronBlock::build(&gids, 0.1, |_| {
+        NeuronKind::IgnoreAndFire { interval_steps: 37 }
+    });
+    let mut xla = native.clone();
+    let syn = vec![0.0f32; 300];
+    for step in 0..80 {
+        let mut sn = Vec::new();
+        let mut sx = Vec::new();
+        native.step_native(&syn, &mut sn);
+        updater.step(&mut xla, &syn, &mut sx);
+        assert_eq!(sn, sx, "ianf spike mismatch at step {step}");
+    }
+}
+
+#[test]
+fn full_simulation_identical_through_xla_path() {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let spec = models::sanity_net(150, 2).unwrap();
+    let run = |update_path| {
+        let cfg = RunConfig {
+            strategy: Strategy::StructureAware,
+            m_ranks: 2,
+            threads_per_rank: 2,
+            t_model_ms: 50.0,
+            seed: 12,
+            update_path,
+            record_spikes: true,
+            record_cycle_times: false,
+        };
+        simulate(&spec, &cfg).unwrap().spikes
+    };
+    let native = run(UpdatePath::Native);
+    let xla = run(UpdatePath::Xla);
+    assert!(!native.is_empty());
+    assert_eq!(native, xla, "XLA path diverged from native path");
+}
