@@ -6,13 +6,14 @@
 //!
 //!     cargo bench --bench hotpath
 
-use nsim::config::{RunConfig, Strategy};
+use nsim::comm::{SpikeMsg, Transport, World};
+use nsim::config::{ExecMode, RunConfig, Strategy};
 use nsim::engine::neuron::NeuronBlock;
 use nsim::engine::ringbuffer::RingBuffer;
 use nsim::engine::simulate;
 use nsim::models;
 use nsim::network::spec::{LifParams, NeuronKind};
-use nsim::tables::{ConnTable, LocalConn};
+use nsim::tables::{ConnTable, LocalConn, TargetTable};
 use nsim::util::rng::Pcg64;
 use nsim::vcluster::{run_cluster, MachineProfile, VcOptions, Workload};
 use std::hint::black_box;
@@ -101,6 +102,88 @@ fn main() {
         }
     });
 
+    // --- delivery: full batch path (canonical sort + route) -----------
+    let batch: Vec<SpikeMsg> = (0..1024)
+        .map(|i| SpikeMsg {
+            source: rng.below(n_sources as u64) as u32,
+            cycle: (i % 10) as u32,
+        })
+        .collect();
+    let mut scratch = batch.clone();
+    bench("deliver: batch sort + route", batch.len() as u64, || {
+        scratch.clear();
+        scratch.extend_from_slice(&batch);
+        scratch.sort_unstable_by_key(|m| (m.source, m.cycle));
+        for msg in &scratch {
+            for c in table.lookup(msg.source) {
+                ring.add(
+                    msg.cycle as u64 + c.delay_steps as u64,
+                    c.target_local,
+                    c.weight,
+                );
+            }
+        }
+    });
+
+    // --- collocate: registers -> per-rank send buffers ----------------
+    let m_dest = 8usize;
+    let mut targets = TargetTable::new(4096);
+    let mut rng = Pcg64::seed_from_u64(4);
+    for i in 0..4096 {
+        for _ in 0..3 {
+            targets.add(i, rng.below(m_dest as u64) as u16);
+        }
+    }
+    let register: Vec<(u32, u64)> =
+        (0..1024u64).map(|i| (((i * 4) % 4096) as u32, i)).collect();
+    let gids: Vec<u32> = (0..4096).collect();
+    let mut send_bufs: Vec<Vec<SpikeMsg>> =
+        (0..m_dest).map(|_| Vec::new()).collect();
+    bench(
+        "collocate: register -> send buffers",
+        register.len() as u64,
+        || {
+            for &(idx, step) in &register {
+                let gid = gids[idx as usize];
+                for &r in targets.ranks(idx as usize) {
+                    send_bufs[r as usize].push(SpikeMsg {
+                        source: gid,
+                        cycle: step as u32,
+                    });
+                }
+            }
+            for b in &mut send_bufs {
+                b.clear();
+            }
+        },
+    );
+
+    // --- exchange: recycled vs allocating transport -------------------
+    let world = World::new(1, 1024);
+    let comm = world.communicator(0);
+    let payload: Vec<SpikeMsg> = (0..512)
+        .map(|i| SpikeMsg { source: i, cycle: 0 })
+        .collect();
+    let mut a2a_send = vec![Vec::with_capacity(512)];
+    let mut a2a_recv: Vec<Vec<SpikeMsg>> = Vec::new();
+    bench("exchange: alltoall_into (recycled)", 512, || {
+        a2a_send[0].extend_from_slice(&payload);
+        comm.alltoall_into(&mut a2a_send, &mut a2a_recv);
+        black_box(a2a_recv[0].len());
+    });
+    bench("exchange: alltoall (fresh alloc)", 512, || {
+        a2a_send[0].extend_from_slice(&payload);
+        let (recv, _) = comm.alltoall(&mut a2a_send);
+        black_box(recv[0].len());
+    });
+    let mut swap_send = Vec::with_capacity(512);
+    let mut swap_recv = Vec::new();
+    bench("exchange: local_swap_into", 512, || {
+        swap_send.extend_from_slice(&payload);
+        comm.local_swap_into(&mut swap_send, &mut swap_recv);
+        black_box(swap_recv.len());
+    });
+
     // --- neuron update ------------------------------------------------
     let gids: Vec<u32> = (0..8192).collect();
     let params = LifParams {
@@ -146,29 +229,38 @@ fn main() {
         rank_cycles / secs / 1e6
     );
 
-    // --- functional engine end-to-end ---------------------------------
+    // --- functional engine end-to-end: sequential vs pooled -----------
     let spec = models::mam_benchmark(4, 0.01, 1.0).unwrap();
     for strategy in [Strategy::Conventional, Strategy::StructureAware] {
-        let cfg = RunConfig {
-            strategy,
-            m_ranks: 4,
-            threads_per_rank: 2,
-            t_model_ms: 100.0,
-            seed: 654,
-            ..RunConfig::default()
-        };
-        let t0 = Instant::now();
-        let res = simulate(&spec, &cfg).unwrap();
-        let secs = t0.elapsed().as_secs_f64();
-        let neuron_steps =
-            spec.total_neurons() as f64 * res.s_cycles as f64;
-        println!(
-            "engine: {} {} neurons x {} cycles in {secs:.3} s = \
-             {:.2} M neuron-cycles/s",
-            strategy.name(),
-            spec.total_neurons(),
-            res.s_cycles,
-            neuron_steps / secs / 1e6
-        );
+        for (exec, threads) in [
+            (ExecMode::Sequential, 1),
+            (ExecMode::Pooled, 1), // must match sequential: no pool at T=1
+            (ExecMode::Sequential, 4),
+            (ExecMode::Pooled, 4),
+        ] {
+            let cfg = RunConfig {
+                strategy,
+                m_ranks: 4,
+                threads_per_rank: threads,
+                t_model_ms: 100.0,
+                seed: 654,
+                exec,
+                ..RunConfig::default()
+            };
+            let t0 = Instant::now();
+            let res = simulate(&spec, &cfg).unwrap();
+            let secs = t0.elapsed().as_secs_f64();
+            let neuron_steps =
+                spec.total_neurons() as f64 * res.s_cycles as f64;
+            println!(
+                "engine: {:<16} {:<10} T={threads} {} neurons x {} cycles \
+                 in {secs:.3} s = {:.2} M neuron-cycles/s",
+                strategy.name(),
+                exec.name(),
+                spec.total_neurons(),
+                res.s_cycles,
+                neuron_steps / secs / 1e6
+            );
+        }
     }
 }

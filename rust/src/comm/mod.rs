@@ -3,15 +3,43 @@
 //!
 //! Semantics follow the paper's communication scheme (§4.1):
 //!
-//! * [`Communicator::alltoall`] — the global exchange.  An explicit
+//! * [`Transport::alltoall_into`] — the global exchange.  An explicit
 //!   barrier in front of the collective separates *synchronization*
 //!   (waiting for the slowest rank) from the *data exchange* proper,
 //!   exactly like the instrumentation NEST uses (§4.1).  Spike buffers
 //!   grow via the two-round resize protocol: if any rank exceeds the
 //!   current quota, all ranks double their buffers and a secondary
 //!   exchange round follows.
-//! * [`Communicator::local_swap`] — the structure-aware local pathway: a
-//!   rank-local swap of send and receive buffers, no synchronization.
+//! * [`Transport::local_swap_into`] — the structure-aware local pathway:
+//!   a rank-local swap of send and receive buffers, no synchronization.
+//!
+//! # The [`Transport`] abstraction
+//!
+//! The engine talks to the communication layer exclusively through the
+//! [`Transport`] trait, so the shared-memory [`World`] of this module is
+//! one implementation among possible others (a real MPI binding, an
+//! RDMA fabric, a loopback test double).  [`Communicator`] — the
+//! per-rank handle into a [`World`] — is the first implementor.
+//!
+//! # Buffer-recycling contract
+//!
+//! The hot-path entry points take *caller-owned* buffers and never
+//! allocate in steady state:
+//!
+//! * [`Transport::alltoall_into`] drains every `send[d]` into the wire
+//!   (leaving it empty but with its capacity intact for refilling) and
+//!   overwrites `recv[s]` with the spikes received from source rank `s`.
+//!   Internally the shared-memory world *swaps* vectors through the
+//!   per-pair mailbox on both the write and the read side, so buffer
+//!   capacity circulates sender → mailbox → receiver → sender and after
+//!   a warm-up round no exchange allocates.
+//! * [`Transport::local_swap_into`] swaps `send` and `recv` (clearing
+//!   `recv` first): the received spikes land in `recv`, and `send` comes
+//!   back empty with the capacity of the previous receive buffer.
+//!
+//! Callers must not assume a buffer keeps its identity across calls —
+//! only that contents are delivered exactly once and capacity is
+//! conserved by the layer as a whole.
 //!
 //! The transport is shared-memory mailboxes; the *timing* of a real
 //! interconnect is modelled separately by `vcluster::interconnect` (the
@@ -117,6 +145,61 @@ pub struct Communicator {
     rank: usize,
 }
 
+/// Per-rank view of a communication fabric: the collective global
+/// exchange and the rank-local pathway, with recycled buffers (see the
+/// module docs for the buffer-recycling contract).
+pub trait Transport {
+    /// This rank's id within the world.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the world.
+    fn m_ranks(&self) -> usize;
+
+    /// Collective all-to-all spike exchange.  `send[d]` is the buffer
+    /// destined for rank `d` (must have length M) and is drained by the
+    /// call; `recv` is resized to M slots and `recv[s]` is overwritten
+    /// with the spikes from source rank `s` (per-source order
+    /// preserved).  Returns the timing split into synchronization and
+    /// data-exchange parts.
+    ///
+    /// All ranks must call this the same number of times (collective
+    /// semantics); mismatch deadlocks, as real MPI would.
+    fn alltoall_into(
+        &self,
+        send: &mut [Vec<SpikeMsg>],
+        recv: &mut Vec<Vec<SpikeMsg>>,
+    ) -> ExchangeTiming;
+
+    /// Rank-local exchange of the structure-aware short-range pathway:
+    /// `recv` is cleared and swapped with `send`, so the sent spikes
+    /// come back in `recv` and `send` is left empty (capacity
+    /// recycled).  No synchronization with other ranks.
+    fn local_swap_into(
+        &self,
+        send: &mut Vec<SpikeMsg>,
+        recv: &mut Vec<SpikeMsg>,
+    );
+
+    /// Allocating convenience wrapper around [`Transport::alltoall_into`]
+    /// for cold paths (setup exchanges, tests).
+    fn alltoall(
+        &self,
+        send: &mut [Vec<SpikeMsg>],
+    ) -> (Vec<Vec<SpikeMsg>>, ExchangeTiming) {
+        let mut recv = Vec::new();
+        let timing = self.alltoall_into(send, &mut recv);
+        (recv, timing)
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`Transport::local_swap_into`].
+    fn local_swap(&self, send: &mut Vec<SpikeMsg>) -> Vec<SpikeMsg> {
+        let mut recv = Vec::new();
+        self.local_swap_into(send, &mut recv);
+        recv
+    }
+}
+
 /// Timing of one collective call, in seconds of real wall clock.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ExchangeTiming {
@@ -126,26 +209,20 @@ pub struct ExchangeTiming {
     pub data_secs: f64,
 }
 
-impl Communicator {
-    pub fn rank(&self) -> usize {
+impl Transport for Communicator {
+    fn rank(&self) -> usize {
         self.rank
     }
 
-    pub fn m_ranks(&self) -> usize {
+    fn m_ranks(&self) -> usize {
         self.world.m
     }
 
-    /// Collective all-to-all spike exchange.  `send[d]` is the buffer for
-    /// destination rank `d` (must have length M); returns the received
-    /// buffers indexed by source rank (per-source order preserved) — and
-    /// the timing split into sync and data-exchange parts.
-    ///
-    /// All ranks must call this the same number of times (collective
-    /// semantics); mismatch deadlocks, as real MPI would.
-    pub fn alltoall(
+    fn alltoall_into(
         &self,
         send: &mut [Vec<SpikeMsg>],
-    ) -> (Vec<Vec<SpikeMsg>>, ExchangeTiming) {
+        recv: &mut Vec<Vec<SpikeMsg>>,
+    ) -> ExchangeTiming {
         assert_eq!(send.len(), self.world.m, "send buffer per rank required");
         let w = &*self.world;
 
@@ -186,7 +263,10 @@ impl Communicator {
             w.barrier.wait();
         }
 
-        // --- data exchange: write own column, then read own row
+        // --- data exchange: write own column, then read own row.  Both
+        // sides *swap* with the mailbox slot, so the sender's drained
+        // buffer and the receiver's previous buffer circulate instead of
+        // being dropped and reallocated (see module docs).
         let mut bytes = 0usize;
         for (dest, buf) in send.iter_mut().enumerate() {
             bytes += buf.len() * SPIKE_WIRE_BYTES;
@@ -198,23 +278,27 @@ impl Communicator {
             .bytes_sent
             .fetch_add(bytes as u64, Ordering::Relaxed);
         w.barrier.wait();
-        let mut recv = Vec::with_capacity(w.m);
-        for src in 0..w.m {
+        recv.resize_with(w.m, Vec::new);
+        for (src, out) in recv.iter_mut().enumerate() {
+            out.clear();
             let mut slot = w.mailboxes[self.rank][src].lock().unwrap();
-            recv.push(std::mem::take(&mut *slot));
+            std::mem::swap(&mut *slot, out);
         }
         w.stats.alltoall_calls.fetch_add(1, Ordering::Relaxed);
         // final barrier so nobody races ahead into the next call's writes
         w.barrier.wait();
         let data_secs = t1.elapsed().as_secs_f64();
-        (recv, ExchangeTiming { sync_secs, data_secs })
+        ExchangeTiming { sync_secs, data_secs }
     }
 
-    /// Rank-local exchange of the structure-aware short-range pathway:
-    /// swap send and receive buffer, no synchronization with other ranks.
-    pub fn local_swap(&self, send: &mut Vec<SpikeMsg>) -> Vec<SpikeMsg> {
+    fn local_swap_into(
+        &self,
+        send: &mut Vec<SpikeMsg>,
+        recv: &mut Vec<SpikeMsg>,
+    ) {
         self.world.stats.local_swaps.fetch_add(1, Ordering::Relaxed);
-        std::mem::take(send)
+        recv.clear();
+        std::mem::swap(send, recv);
     }
 }
 
@@ -360,6 +444,135 @@ mod tests {
         assert_eq!(calls, 2);
         // 2 ranks x 2 dests x 3 spikes x 8 bytes
         assert_eq!(bytes, 96);
+    }
+
+    #[test]
+    fn recycled_buffers_many_rounds_stress() {
+        // One pair of send/recv buffer sets per rank, recycled over 50
+        // rounds of varying fan-out, with one round (20) deliberately
+        // overflowing the quota of 4 to trigger the two-round resize
+        // protocol mid-stream.  No spike may leak across rounds.
+        const M: usize = 3;
+        let per_round = |round: u32| -> usize {
+            if round == 20 {
+                9
+            } else {
+                1 + (round as usize % 3)
+            }
+        };
+        let world = World::new(M, 4);
+        let w2 = world.clone();
+        let results = thread::scope(|s| {
+            let handles: Vec<_> = (0..M)
+                .map(|rank| {
+                    let comm = world.communicator(rank);
+                    s.spawn(move || {
+                        let mut send: Vec<Vec<SpikeMsg>> =
+                            (0..M).map(|_| Vec::new()).collect();
+                        let mut recv: Vec<Vec<SpikeMsg>> = Vec::new();
+                        let mut total = 0usize;
+                        for round in 0..50u32 {
+                            let n = per_round(round);
+                            for buf in &mut send {
+                                for i in 0..n {
+                                    buf.push(msg(
+                                        (1000 * rank + i) as Gid,
+                                        round,
+                                    ));
+                                }
+                            }
+                            comm.alltoall_into(&mut send, &mut recv);
+                            assert!(
+                                send.iter().all(|b| b.is_empty()),
+                                "send not drained in round {round}"
+                            );
+                            for (src, buf) in recv.iter().enumerate() {
+                                assert_eq!(
+                                    buf.len(),
+                                    n,
+                                    "round {round} from rank {src}"
+                                );
+                                assert!(
+                                    buf.iter().all(|m| m.cycle == round),
+                                    "stale spikes leaked into round {round}"
+                                );
+                                assert!(buf
+                                    .iter()
+                                    .all(|m| m.source / 1000
+                                        == src as Gid));
+                            }
+                            total +=
+                                recv.iter().map(|b| b.len()).sum::<usize>();
+                        }
+                        total
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect::<Vec<_>>()
+        });
+        let expect: usize =
+            (0..50u32).map(|r| per_round(r) * M).sum();
+        assert!(results.iter().all(|&t| t == expect), "{results:?}");
+        let (calls, _, _, resizes) = w2.stats().snapshot();
+        assert_eq!(calls, 50 * M as u64);
+        assert_eq!(resizes, 1, "overflow round must resize exactly once");
+        assert!(w2.current_quota() >= 9);
+    }
+
+    #[test]
+    fn alltoall_into_reuses_buffer_capacity() {
+        // With swap-based recycling, buffer capacity circulates between
+        // the send buffer, the mailbox slot and the receive buffer; once
+        // all three are warm no round allocates, so capacities stay put.
+        let world = World::new(1, 64);
+        let comm = world.communicator(0);
+        let mut send = vec![Vec::new()];
+        let mut recv: Vec<Vec<SpikeMsg>> = Vec::new();
+        let mut fill_and_exchange = |send: &mut Vec<Vec<SpikeMsg>>,
+                                     recv: &mut Vec<Vec<SpikeMsg>>,
+                                     round: u32| {
+            for i in 0..32 {
+                send[0].push(msg(i, round));
+            }
+            comm.alltoall_into(send, recv);
+            assert_eq!(recv[0].len(), 32);
+            assert!(recv[0].iter().all(|m| m.cycle == round));
+        };
+        for round in 0..10 {
+            fill_and_exchange(&mut send, &mut recv, round);
+        }
+        let warm = (send[0].capacity(), recv[0].capacity());
+        assert!(warm.0 >= 32 && warm.1 >= 32, "{warm:?}");
+        for round in 10..40 {
+            fill_and_exchange(&mut send, &mut recv, round);
+        }
+        assert_eq!(
+            (send[0].capacity(), recv[0].capacity()),
+            warm,
+            "buffer recycling regressed to per-round allocation"
+        );
+    }
+
+    #[test]
+    fn local_swap_into_recycles_capacity() {
+        let world = World::new(1, 4);
+        let comm = world.communicator(0);
+        let mut send = Vec::new();
+        let mut recv = Vec::new();
+        for round in 0..20u32 {
+            for i in 0..16 {
+                send.push(msg(i, round));
+            }
+            comm.local_swap_into(&mut send, &mut recv);
+            assert_eq!(recv.len(), 16);
+            assert!(recv.iter().all(|m| m.cycle == round));
+            assert!(send.is_empty());
+        }
+        // the two buffers ping-pong; both hold capacity after warm-up
+        assert!(send.capacity() >= 16 && recv.capacity() >= 16);
     }
 
     #[test]

@@ -53,6 +53,35 @@ impl Strategy {
     }
 }
 
+/// How a rank executes its virtual threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Iterate virtual threads in place on the rank's OS thread — the
+    /// reference schedule (and the only sensible one for T = 1).
+    Sequential,
+    /// One worker OS thread per virtual thread (a per-rank pool sized by
+    /// `threads_per_rank`); bit-identical to `Sequential` by
+    /// construction, see `engine::rank`.
+    Pooled,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<ExecMode> {
+        Ok(match s {
+            "sequential" | "seq" => ExecMode::Sequential,
+            "pooled" | "pool" | "parallel" => ExecMode::Pooled,
+            other => bail!("unknown exec mode {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Sequential => "sequential",
+            ExecMode::Pooled => "pooled",
+        }
+    }
+}
+
 /// How the update phase executes the neuron model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum UpdatePath {
@@ -87,6 +116,11 @@ pub struct RunConfig {
     /// Master seed for connectivity and model construction.
     pub seed: u64,
     pub update_path: UpdatePath,
+    /// How each rank executes its virtual threads.
+    pub exec: ExecMode,
+    /// Initial spike quota per rank pair of the communication buffers
+    /// (NEST starts small and grows via the two-round resize protocol).
+    pub comm_quota: usize,
     /// Record (cycle, gid) spike events for verification.
     pub record_spikes: bool,
     /// Record per-rank per-cycle times for the distribution figures.
@@ -102,6 +136,8 @@ impl Default for RunConfig {
             t_model_ms: 100.0,
             seed: 12,
             update_path: UpdatePath::Native,
+            exec: ExecMode::Pooled,
+            comm_quota: 1024,
             record_spikes: false,
             record_cycle_times: false,
         }
@@ -110,7 +146,7 @@ impl Default for RunConfig {
 
 impl RunConfig {
     /// Apply `--strategy --ranks --threads --t-model --seed --update-path
-    /// --record-spikes --record-cycle-times` CLI overrides.
+    /// --exec --quota --record-spikes --record-cycle-times` CLI overrides.
     pub fn override_from_args(mut self, args: &Args) -> Result<RunConfig> {
         if let Some(s) = args.str_opt("strategy") {
             self.strategy = Strategy::parse(&s)?;
@@ -123,6 +159,10 @@ impl RunConfig {
         if let Some(s) = args.str_opt("update-path") {
             self.update_path = UpdatePath::parse(&s)?;
         }
+        if let Some(s) = args.str_opt("exec") {
+            self.exec = ExecMode::parse(&s)?;
+        }
+        self.comm_quota = args.usize_or("quota", self.comm_quota)?;
         if args.flag("record-spikes") {
             self.record_spikes = true;
         }
@@ -154,6 +194,12 @@ impl RunConfig {
         if let Some(s) = v.get("update_path").and_then(Json::as_str) {
             cfg.update_path = UpdatePath::parse(s)?;
         }
+        if let Some(s) = v.get("exec").and_then(Json::as_str) {
+            cfg.exec = ExecMode::parse(s)?;
+        }
+        if let Some(x) = v.get("comm_quota").and_then(Json::as_usize) {
+            cfg.comm_quota = x;
+        }
         if let Some(b) = v.get("record_spikes").and_then(Json::as_bool) {
             cfg.record_spikes = b;
         }
@@ -178,6 +224,9 @@ impl RunConfig {
         }
         if self.t_model_ms <= 0.0 {
             bail!("t_model_ms must be positive");
+        }
+        if self.comm_quota == 0 {
+            bail!("comm_quota must be >= 1");
         }
         Ok(())
     }
@@ -246,5 +295,45 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.t_model_ms = -1.0;
         assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.comm_quota = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn exec_mode_parse_roundtrip() {
+        for e in [ExecMode::Sequential, ExecMode::Pooled] {
+            assert_eq!(ExecMode::parse(e.name()).unwrap(), e);
+        }
+        assert_eq!(ExecMode::parse("seq").unwrap(), ExecMode::Sequential);
+        assert_eq!(ExecMode::parse("parallel").unwrap(), ExecMode::Pooled);
+        assert!(ExecMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn exec_and_quota_overrides() {
+        let args = Args::parse([
+            "run",
+            "--exec",
+            "sequential",
+            "--quota",
+            "64",
+        ])
+        .unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert_eq!(cfg.exec, ExecMode::Sequential);
+        assert_eq!(cfg.comm_quota, 64);
+        // defaults: pooled execution, NEST-like starting quota
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.exec, ExecMode::Pooled);
+        assert_eq!(cfg.comm_quota, 1024);
+
+        let v = json::parse(
+            r#"{"exec": "pooled", "comm_quota": 16}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.exec, ExecMode::Pooled);
+        assert_eq!(cfg.comm_quota, 16);
     }
 }

@@ -28,6 +28,9 @@ pub struct SimResult {
     pub rank_times: Vec<PhaseTimes>,
     /// Mean phase times across ranks (the paper's reporting convention).
     pub mean_times: PhaseTimes,
+    /// Element-wise slowest-rank phase times — the wait-for-the-slowest
+    /// profile the communication restructuring attacks.
+    pub max_times: PhaseTimes,
     /// All recorded spikes sorted by (step, gid) — empty unless
     /// `record_spikes`.
     pub spikes: Vec<(u64, Gid)>,
@@ -109,7 +112,7 @@ pub fn simulate_with(
         "t_model shorter than one simulation cycle"
     );
 
-    let world = World::new(cfg.m_ranks, 1024);
+    let world = World::new(cfg.m_ranks, cfg.comm_quota);
     let results: Vec<RankResult> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.m_ranks)
             .map(|r| {
@@ -130,6 +133,7 @@ pub fn simulate_with(
                         s_cycles,
                         updater,
                         cfg.record_cycle_times,
+                        cfg.exec,
                     )
                 })
             })
@@ -154,12 +158,14 @@ pub fn simulate_with(
     }
     spikes.sort_unstable();
     let mean_times = PhaseTimes::mean_of(&rank_times);
+    let max_times = PhaseTimes::max_of(&rank_times);
 
     Ok(SimResult {
         strategy: cfg.strategy,
         m_ranks: cfg.m_ranks,
         rank_times,
         mean_times,
+        max_times,
         spikes,
         cycle_times,
         s_cycles,

@@ -1,15 +1,26 @@
 //! Per-rank simulation state and the cycle loop (paper Fig 3).
 //!
-//! Each rank owns its thread partitions (virtual threads — executed
-//! sequentially inside the rank's OS thread for determinism on any host),
-//! the dual connection/source/target tables, spike registers, MPI buffers
-//! and ring buffers.  `run()` iterates deliver → update → collocate →
+//! Each rank owns its thread partitions (NEST's virtual threads), the
+//! dual connection/source/target tables, spike registers, MPI buffers and
+//! ring buffers.  `run()` iterates deliver → update → collocate →
 //! communicate for `S` cycles, with the communicate step depending on the
 //! strategy: global exchange every cycle (conventional/intermediate) or
 //! local swap + global exchange every D-th cycle (structure-aware).
+//!
+//! Virtual threads execute either *sequentially* on the rank's OS thread
+//! ([`crate::config::ExecMode::Sequential`]) or on a per-rank pool of
+//! worker OS threads sized by `threads_per_rank`
+//! ([`crate::config::ExecMode::Pooled`]).  Both paths produce
+//! bit-identical spike trains: every virtual thread owns its ring buffer
+//! and neuron block exclusively, delivery consumes the same canonically
+//! `(source, step)`-sorted batch on every thread, and collocation output
+//! is concatenated in virtual-thread order — so the pooled schedule
+//! cannot reorder anything observable.  Send/receive buffers are
+//! recycled through the [`Transport`] layer across the whole run (no
+//! per-cycle allocation on the hot path).
 
-use crate::comm::{Communicator, SpikeMsg};
-use crate::config::Strategy;
+use crate::comm::{SpikeMsg, Transport};
+use crate::config::{ExecMode, Strategy};
 use crate::engine::neuron::NeuronBlock;
 use crate::engine::ringbuffer::RingBuffer;
 use crate::engine::update::Updater;
@@ -18,6 +29,8 @@ use crate::placement::Placement;
 use crate::tables::{ConnTable, LocalConn, Pathways, TargetTable};
 use crate::util::timers::{Phase, PhaseTimes, Stopwatch};
 use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
 
 /// One virtual thread's worth of state.
 pub struct ThreadState {
@@ -35,19 +48,269 @@ pub struct ThreadState {
     register: Pathways<Vec<(u32, u64)>>,
 }
 
+impl ThreadState {
+    /// Deliver a `(source, step)`-sorted spike batch through this
+    /// thread's tables of the given pathway into its ring buffer.
+    fn deliver_sorted(
+        &mut self,
+        long_range: bool,
+        batch: &[SpikeMsg],
+        first_step: u64,
+    ) {
+        let table = self.conn.get(long_range);
+        for msg in batch {
+            for c in table.lookup(msg.source) {
+                let arrive = msg.cycle as u64 + c.delay_steps as u64;
+                debug_assert!(
+                    arrive >= first_step,
+                    "causality violation: spike from {} arrives at \
+                     step {arrive} < current step {first_step}",
+                    msg.source
+                );
+                self.ring.add(arrive, c.target_local, c.weight);
+            }
+        }
+    }
+
+    /// Advance this thread's neurons through one cycle of `steps`
+    /// resolution steps, recording emitted spikes into `spikes_out` and
+    /// filling the pathway registers for the collocate phase.
+    fn update_cycle(
+        &mut self,
+        updater: &Updater,
+        first_step: u64,
+        steps: u64,
+        dual: bool,
+        record_spikes: bool,
+        spikes_out: &mut Vec<(u64, Gid)>,
+    ) {
+        for step in first_step..first_step + steps {
+            self.ring.take_row(step, &mut self.syn_buf);
+            self.spike_idx.clear();
+            updater.step(&mut self.block, &self.syn_buf, &mut self.spike_idx);
+            for &idx in &self.spike_idx {
+                if record_spikes {
+                    spikes_out.push((step, self.gids[idx as usize]));
+                }
+                if dual {
+                    if !self.targets.short.ranks(idx as usize).is_empty() {
+                        self.register.short.push((idx, step));
+                    }
+                    if !self.targets.long.ranks(idx as usize).is_empty() {
+                        self.register.long.push((idx, step));
+                    }
+                } else if !self
+                    .targets
+                    .short
+                    .ranks(idx as usize)
+                    .is_empty()
+                {
+                    self.register.short.push((idx, step));
+                }
+            }
+        }
+    }
+
+    /// Drain this thread's spike registers into send buffers: the local
+    /// pathway into `local_out`, the global pathway into `global_out[d]`
+    /// per destination rank (spike compression: one entry per target
+    /// rank).  Register order — (step, local index) within the cycle —
+    /// is preserved, so concatenating per-thread output in thread order
+    /// reproduces the sequential collocation exactly.
+    fn collocate_into(
+        &mut self,
+        dual: bool,
+        local_out: &mut Vec<SpikeMsg>,
+        global_out: &mut [Vec<SpikeMsg>],
+    ) {
+        if dual {
+            // short-range spikes into the local exchange buffer
+            for &(idx, step) in &self.register.short {
+                local_out.push(SpikeMsg {
+                    source: self.gids[idx as usize],
+                    cycle: step as u32,
+                });
+            }
+            self.register.short.clear();
+            // long-range spikes accumulate in the global MPI buffers
+            // across the epoch
+            for &(idx, step) in &self.register.long {
+                let gid = self.gids[idx as usize];
+                for &r in self.targets.long.ranks(idx as usize) {
+                    global_out[r as usize].push(SpikeMsg {
+                        source: gid,
+                        cycle: step as u32,
+                    });
+                }
+            }
+            self.register.long.clear();
+        } else {
+            for &(idx, step) in &self.register.short {
+                let gid = self.gids[idx as usize];
+                for &r in self.targets.short.ranks(idx as usize) {
+                    global_out[r as usize].push(SpikeMsg {
+                        source: gid,
+                        cycle: step as u32,
+                    });
+                }
+            }
+            self.register.short.clear();
+        }
+    }
+}
+
 /// Measurements returned by a rank after the run.
 pub struct RankResult {
     pub rank: usize,
     pub phase_times: PhaseTimes,
     /// (deliver+update+collocate) wall seconds per cycle (paper eq 18).
     pub cycle_times: Vec<f64>,
-    /// Recorded spikes (emission step, gid), in emission order.
+    /// Recorded spikes (emission step, gid).  Within a rank the order is
+    /// execution-dependent (per virtual thread in pooled mode); callers
+    /// sort globally by (step, gid) as `engine::simulate` does.
     pub spikes: Vec<(u64, Gid)>,
     /// Synapses hosted by this rank, by pathway.
     pub n_conns_short: usize,
     pub n_conns_long: usize,
     /// Local neurons (real, not ghosts).
     pub n_neurons: usize,
+}
+
+/// Commands from the rank's coordinator to one pool worker.  Buffers
+/// travel with the command and come back with the reply, so the pool is
+/// allocation-free in steady state.
+enum Cmd {
+    Deliver {
+        long_range: bool,
+        batch: Arc<Vec<SpikeMsg>>,
+        first_step: u64,
+    },
+    Update {
+        first_step: u64,
+        steps: u64,
+        dual: bool,
+        record_spikes: bool,
+    },
+    Collocate {
+        dual: bool,
+        local: Vec<SpikeMsg>,
+        global: Vec<Vec<SpikeMsg>>,
+    },
+    Finish,
+}
+
+enum Reply {
+    Done,
+    Collocated {
+        local: Vec<SpikeMsg>,
+        global: Vec<Vec<SpikeMsg>>,
+    },
+    Finished {
+        spikes: Vec<(u64, Gid)>,
+        n_conns_short: usize,
+        n_conns_long: usize,
+        n_neurons: usize,
+    },
+}
+
+/// Body of one pool worker: owns its [`ThreadState`] exclusively and
+/// serves phase commands until `Finish`.
+fn worker_loop(
+    mut th: ThreadState,
+    updater: &Updater,
+    rx: Receiver<Cmd>,
+    tx: Sender<Reply>,
+) {
+    let mut spikes: Vec<(u64, Gid)> = Vec::new();
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Deliver { long_range, batch, first_step } => {
+                th.deliver_sorted(long_range, &batch, first_step);
+                // release the shared batch before signalling so the
+                // coordinator can reclaim the buffer via Arc::try_unwrap
+                drop(batch);
+                if tx.send(Reply::Done).is_err() {
+                    return;
+                }
+            }
+            Cmd::Update { first_step, steps, dual, record_spikes } => {
+                th.update_cycle(
+                    updater,
+                    first_step,
+                    steps,
+                    dual,
+                    record_spikes,
+                    &mut spikes,
+                );
+                if tx.send(Reply::Done).is_err() {
+                    return;
+                }
+            }
+            Cmd::Collocate { dual, mut local, mut global } => {
+                th.collocate_into(dual, &mut local, &mut global);
+                if tx.send(Reply::Collocated { local, global }).is_err() {
+                    return;
+                }
+            }
+            Cmd::Finish => {
+                let _ = tx.send(Reply::Finished {
+                    spikes,
+                    n_conns_short: th.conn.short.n_connections(),
+                    n_conns_long: th.conn.long.n_connections(),
+                    n_neurons: th.gids.len(),
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// The canonical delivery order — (source, emission step).  Sequential
+/// and pooled execution both sort incoming batches with this exact key;
+/// sharing the helper is what keeps the two paths bit-identical.
+fn sort_canonical(batch: &mut [SpikeMsg]) {
+    batch.sort_unstable_by_key(|msg| (msg.source, msg.cycle));
+}
+
+fn expect_done(rx: &Receiver<Reply>) {
+    match rx.recv().expect("pool worker died") {
+        Reply::Done => {}
+        _ => unreachable!("unexpected pool worker reply"),
+    }
+}
+
+/// Sort `buf` canonically, broadcast it to all workers for delivery, and
+/// reclaim the buffer for the next round once every worker is done.
+fn pooled_deliver(
+    buf: &mut Vec<SpikeMsg>,
+    long_range: bool,
+    first_step: u64,
+    cmd_txs: &[Sender<Cmd>],
+    reply_rxs: &[Receiver<Reply>],
+) {
+    if buf.is_empty() {
+        return;
+    }
+    let mut batch = std::mem::take(buf);
+    sort_canonical(&mut batch);
+    let shared = Arc::new(batch);
+    for tx in cmd_txs {
+        tx.send(Cmd::Deliver {
+            long_range,
+            batch: shared.clone(),
+            first_step,
+        })
+        .expect("pool worker died");
+    }
+    for rx in reply_rxs {
+        expect_done(rx);
+    }
+    // all workers dropped their clones after replying; recycle the
+    // allocation (fall back to a fresh buffer if anything still holds on)
+    if let Ok(mut v) = Arc::try_unwrap(shared) {
+        v.clear();
+        *buf = v;
+    }
 }
 
 /// Full per-rank state.
@@ -64,6 +327,8 @@ pub struct RankState {
     local_send: Vec<SpikeMsg>,
     recv_short: Vec<SpikeMsg>,
     recv_long: Vec<SpikeMsg>,
+    /// Recycled per-source transport buffers of the global exchange.
+    recv_global: Vec<Vec<SpikeMsg>>,
     record_spikes: bool,
     spikes: Vec<(u64, Gid)>,
 }
@@ -72,12 +337,12 @@ impl RankState {
     /// Build tables and state for `rank`.  Collective: performs the
     /// target-table construction exchange, so *all* ranks must call this
     /// concurrently (as NEST's preparation phase does, §4.1.2).
-    pub fn build(
+    pub fn build<T: Transport>(
         spec: &ModelSpec,
         placement: &Placement,
         strategy: Strategy,
         seed: u64,
-        comm: &Communicator,
+        comm: &T,
         record_spikes: bool,
     ) -> RankState {
         let rank = comm.rank();
@@ -195,6 +460,7 @@ impl RankState {
             local_send: Vec::new(),
             recv_short: Vec::new(),
             recv_long: Vec::new(),
+            recv_global: Vec::new(),
             record_spikes,
             spikes: Vec::new(),
         }
@@ -204,39 +470,88 @@ impl RankState {
         self.local_index.len()
     }
 
-    /// Deliver a batch of spikes through the given pathway's tables.
-    /// Spikes are sorted by (source, step) first so ring-buffer
-    /// accumulation order is canonical (DESIGN.md §6).
-    fn deliver(&mut self, long_range: bool, mut batch: Vec<SpikeMsg>, first_step: u64) {
-        batch.sort_unstable_by_key(|msg| (msg.source, msg.cycle));
-        for th in &mut self.threads {
-            let table = th.conn.get(long_range);
-            for msg in &batch {
-                for c in table.lookup(msg.source) {
-                    let arrive = msg.cycle as u64 + c.delay_steps as u64;
-                    debug_assert!(
-                        arrive >= first_step,
-                        "causality violation: spike from {} arrives at \
-                         step {arrive} < current step {first_step}",
-                        msg.source
-                    );
-                    th.ring.add(arrive, c.target_local, c.weight);
-                }
+    /// Sort `buf` canonically and deliver it on every virtual thread in
+    /// place, then clear it (keeping capacity for the next round).
+    fn deliver_all(
+        threads: &mut [ThreadState],
+        buf: &mut Vec<SpikeMsg>,
+        long_range: bool,
+        first_step: u64,
+    ) {
+        if buf.is_empty() {
+            return;
+        }
+        sort_canonical(buf);
+        for th in threads.iter_mut() {
+            th.deliver_sorted(long_range, buf, first_step);
+        }
+        buf.clear();
+    }
+
+    /// The communicate step of one cycle: local pathway swap (dual
+    /// strategies) every cycle, global exchange every `epoch_cycles`-th
+    /// cycle — with all buffers recycled through the transport.
+    fn communicate<T: Transport>(
+        &mut self,
+        comm: &T,
+        s: u64,
+        dual: bool,
+        phase_times: &mut PhaseTimes,
+    ) {
+        if dual {
+            comm.local_swap_into(&mut self.local_send, &mut self.recv_short);
+        }
+        if (s + 1) % self.epoch_cycles == 0 {
+            let timing =
+                comm.alltoall_into(&mut self.global_send, &mut self.recv_global);
+            phase_times.add(Phase::Synchronize, timing.sync_secs);
+            phase_times.add(Phase::DataExchange, timing.data_secs);
+            self.recv_long.clear();
+            for buf in &self.recv_global {
+                self.recv_long.extend_from_slice(buf);
             }
         }
     }
 
     /// Run the state-propagation loop for `s_cycles` cycles.
-    pub fn run(
+    pub fn run<T: Transport>(
+        self,
+        comm: &T,
+        s_cycles: u64,
+        updater: &Updater,
+        record_cycle_times: bool,
+        exec: ExecMode,
+    ) -> RankResult {
+        match exec {
+            // a single virtual thread gains nothing from a pool; run it
+            // in place so `threads_per_rank = 1` has zero overhead
+            ExecMode::Pooled if self.threads.len() > 1 => {
+                self.run_pooled(comm, s_cycles, updater, record_cycle_times)
+            }
+            _ => self.run_sequential(
+                comm,
+                s_cycles,
+                updater,
+                record_cycle_times,
+            ),
+        }
+    }
+
+    /// Virtual threads iterated in place on the rank's OS thread — the
+    /// reference schedule the pooled path must reproduce bit-exactly.
+    fn run_sequential<T: Transport>(
         mut self,
-        comm: &Communicator,
+        comm: &T,
         s_cycles: u64,
         updater: &Updater,
         record_cycle_times: bool,
     ) -> RankResult {
         let mut phase_times = PhaseTimes::new();
-        let mut cycle_times =
-            Vec::with_capacity(if record_cycle_times { s_cycles as usize } else { 0 });
+        let mut cycle_times = Vec::with_capacity(if record_cycle_times {
+            s_cycles as usize
+        } else {
+            0
+        });
         let dual = self.strategy.dual_pathways();
 
         for s in 0..s_cycles {
@@ -245,85 +560,40 @@ impl RankState {
             let mut cycle_secs = 0.0;
 
             // ---- deliver -------------------------------------------------
-            let short_batch = std::mem::take(&mut self.recv_short);
-            if !short_batch.is_empty() {
-                self.deliver(false, short_batch, first_step);
-            }
-            let long_batch = std::mem::take(&mut self.recv_long);
-            if !long_batch.is_empty() {
-                self.deliver(dual, long_batch, first_step);
-            }
+            Self::deliver_all(
+                &mut self.threads,
+                &mut self.recv_short,
+                false,
+                first_step,
+            );
+            Self::deliver_all(
+                &mut self.threads,
+                &mut self.recv_long,
+                dual,
+                first_step,
+            );
             cycle_secs += sw.charge(&mut phase_times, Phase::Deliver);
 
             // ---- update --------------------------------------------------
             for th in &mut self.threads {
-                for step in first_step..first_step + self.steps_per_cycle {
-                    th.ring.take_row(step, &mut th.syn_buf);
-                    th.spike_idx.clear();
-                    updater.step(&mut th.block, &th.syn_buf, &mut th.spike_idx);
-                    for &idx in &th.spike_idx {
-                        if self.record_spikes {
-                            self.spikes.push((step, th.gids[idx as usize]));
-                        }
-                        if dual {
-                            if !th.targets.short.ranks(idx as usize).is_empty()
-                            {
-                                th.register.short.push((idx, step));
-                            }
-                            if !th.targets.long.ranks(idx as usize).is_empty()
-                            {
-                                th.register.long.push((idx, step));
-                            }
-                        } else if !th
-                            .targets
-                            .short
-                            .ranks(idx as usize)
-                            .is_empty()
-                        {
-                            th.register.short.push((idx, step));
-                        }
-                    }
-                }
+                th.update_cycle(
+                    updater,
+                    first_step,
+                    self.steps_per_cycle,
+                    dual,
+                    self.record_spikes,
+                    &mut self.spikes,
+                );
             }
             cycle_secs += sw.charge(&mut phase_times, Phase::Update);
 
             // ---- collocate -----------------------------------------------
-            if dual {
-                // short-range spikes into the local exchange buffer
-                for th in &mut self.threads {
-                    for &(idx, step) in &th.register.short {
-                        self.local_send.push(SpikeMsg {
-                            source: th.gids[idx as usize],
-                            cycle: step as u32,
-                        });
-                    }
-                    th.register.short.clear();
-                    // long-range spikes accumulate in the global MPI
-                    // buffers across the epoch
-                    for &(idx, step) in &th.register.long {
-                        let gid = th.gids[idx as usize];
-                        for &r in th.targets.long.ranks(idx as usize) {
-                            self.global_send[r as usize].push(SpikeMsg {
-                                source: gid,
-                                cycle: step as u32,
-                            });
-                        }
-                    }
-                    th.register.long.clear();
-                }
-            } else {
-                for th in &mut self.threads {
-                    for &(idx, step) in &th.register.short {
-                        let gid = th.gids[idx as usize];
-                        for &r in th.targets.short.ranks(idx as usize) {
-                            self.global_send[r as usize].push(SpikeMsg {
-                                source: gid,
-                                cycle: step as u32,
-                            });
-                        }
-                    }
-                    th.register.short.clear();
-                }
+            for th in &mut self.threads {
+                th.collocate_into(
+                    dual,
+                    &mut self.local_send,
+                    &mut self.global_send,
+                );
             }
             cycle_secs += sw.charge(&mut phase_times, Phase::Collocate);
             if record_cycle_times {
@@ -331,18 +601,7 @@ impl RankState {
             }
 
             // ---- communicate ---------------------------------------------
-            if dual {
-                self.recv_short = comm.local_swap(&mut self.local_send);
-            }
-            if (s + 1) % self.epoch_cycles == 0 {
-                let (recv, timing) = comm.alltoall(&mut self.global_send);
-                self.recv_long = recv.into_iter().flatten().collect();
-                phase_times.add(Phase::Synchronize, timing.sync_secs);
-                phase_times.add(Phase::DataExchange, timing.data_secs);
-                for buf in &mut self.global_send {
-                    buf.clear();
-                }
-            }
+            self.communicate(comm, s, dual, &mut phase_times);
         }
 
         let (mut n_short, mut n_long, mut n_neurons) = (0usize, 0usize, 0usize);
@@ -356,6 +615,161 @@ impl RankState {
             phase_times,
             cycle_times,
             spikes: self.spikes,
+            n_conns_short: n_short,
+            n_conns_long: n_long,
+            n_neurons,
+        }
+    }
+
+    /// Virtual threads on dedicated worker OS threads: one scoped worker
+    /// per [`ThreadState`], phase-stepped by command/reply channels.  The
+    /// coordinator (this rank's OS thread) keeps the communicate step and
+    /// all ordering decisions, so results match the sequential schedule.
+    fn run_pooled<T: Transport>(
+        mut self,
+        comm: &T,
+        s_cycles: u64,
+        updater: &Updater,
+        record_cycle_times: bool,
+    ) -> RankResult {
+        let dual = self.strategy.dual_pathways();
+        let m = comm.m_ranks();
+        let worker_states = std::mem::take(&mut self.threads);
+        let n_workers = worker_states.len();
+        let steps = self.steps_per_cycle;
+        let record_spikes = self.record_spikes;
+        let mut phase_times = PhaseTimes::new();
+        let mut cycle_times = Vec::with_capacity(if record_cycle_times {
+            s_cycles as usize
+        } else {
+            0
+        });
+
+        let (spikes, n_short, n_long, n_neurons) = std::thread::scope(
+            |scope| {
+                let mut cmd_txs = Vec::with_capacity(n_workers);
+                let mut reply_rxs = Vec::with_capacity(n_workers);
+                for th in worker_states {
+                    let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+                    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+                    scope.spawn(move || {
+                        worker_loop(th, updater, cmd_rx, reply_tx)
+                    });
+                    cmd_txs.push(cmd_tx);
+                    reply_rxs.push(reply_rx);
+                }
+                // per-worker collocation buffers, recycled every cycle
+                let mut coll_bufs: Vec<(Vec<SpikeMsg>, Vec<Vec<SpikeMsg>>)> =
+                    (0..n_workers)
+                        .map(|_| {
+                            (Vec::new(), (0..m).map(|_| Vec::new()).collect())
+                        })
+                        .collect();
+
+                for s in 0..s_cycles {
+                    let first_step = s * steps;
+                    let mut sw = Stopwatch::start();
+                    let mut cycle_secs = 0.0;
+
+                    // ---- deliver -----------------------------------------
+                    pooled_deliver(
+                        &mut self.recv_short,
+                        false,
+                        first_step,
+                        &cmd_txs,
+                        &reply_rxs,
+                    );
+                    pooled_deliver(
+                        &mut self.recv_long,
+                        dual,
+                        first_step,
+                        &cmd_txs,
+                        &reply_rxs,
+                    );
+                    cycle_secs += sw.charge(&mut phase_times, Phase::Deliver);
+
+                    // ---- update ------------------------------------------
+                    for tx in &cmd_txs {
+                        tx.send(Cmd::Update {
+                            first_step,
+                            steps,
+                            dual,
+                            record_spikes,
+                        })
+                        .expect("pool worker died");
+                    }
+                    for rx in &reply_rxs {
+                        expect_done(rx);
+                    }
+                    cycle_secs += sw.charge(&mut phase_times, Phase::Update);
+
+                    // ---- collocate ---------------------------------------
+                    for (tx, bufs) in cmd_txs.iter().zip(coll_bufs.iter_mut())
+                    {
+                        let (local, global) = std::mem::take(bufs);
+                        tx.send(Cmd::Collocate { dual, local, global })
+                            .expect("pool worker died");
+                    }
+                    // receive in virtual-thread order: the blocking recv
+                    // per worker is the ordering barrier that makes the
+                    // concatenation deterministic
+                    for (rx, bufs) in
+                        reply_rxs.iter().zip(coll_bufs.iter_mut())
+                    {
+                        match rx.recv().expect("pool worker died") {
+                            Reply::Collocated { mut local, mut global } => {
+                                self.local_send.append(&mut local);
+                                for (dest, part) in
+                                    global.iter_mut().enumerate()
+                                {
+                                    self.global_send[dest].append(part);
+                                }
+                                *bufs = (local, global);
+                            }
+                            _ => unreachable!("unexpected collocate reply"),
+                        }
+                    }
+                    cycle_secs +=
+                        sw.charge(&mut phase_times, Phase::Collocate);
+                    if record_cycle_times {
+                        cycle_times.push(cycle_secs);
+                    }
+
+                    // ---- communicate -------------------------------------
+                    self.communicate(comm, s, dual, &mut phase_times);
+                }
+
+                for tx in &cmd_txs {
+                    tx.send(Cmd::Finish).expect("pool worker died");
+                }
+                let mut spikes = std::mem::take(&mut self.spikes);
+                let (mut n_short, mut n_long, mut n_neurons) =
+                    (0usize, 0usize, 0usize);
+                for rx in &reply_rxs {
+                    match rx.recv().expect("pool worker died") {
+                        Reply::Finished {
+                            spikes: worker_spikes,
+                            n_conns_short,
+                            n_conns_long,
+                            n_neurons: n,
+                        } => {
+                            spikes.extend(worker_spikes);
+                            n_short += n_conns_short;
+                            n_long += n_conns_long;
+                            n_neurons += n;
+                        }
+                        _ => unreachable!("unexpected finish reply"),
+                    }
+                }
+                (spikes, n_short, n_long, n_neurons)
+            },
+        );
+
+        RankResult {
+            rank: self.rank,
+            phase_times,
+            cycle_times,
+            spikes,
             n_conns_short: n_short,
             n_conns_long: n_long,
             n_neurons,

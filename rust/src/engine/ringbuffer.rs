@@ -38,7 +38,10 @@ impl RingBuffer {
     }
 
     /// Read out the input row for `step` into `out` (as f32, matching the
-    /// kernel's input dtype) and clear it for reuse.
+    /// kernel's input dtype) and clear it for reuse.  Called once per
+    /// (thread, step) on the update hot path — worth inlining into the
+    /// per-worker cycle loop.
+    #[inline]
     pub fn take_row(&mut self, step: u64, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.n_neurons);
         let slot = (step % self.n_slots as u64) as usize;

@@ -8,13 +8,22 @@ use crate::engine::neuron::NeuronBlock;
 pub type StepFn =
     Box<dyn Fn(&mut NeuronBlock, &[f32], &mut Vec<u32>) + Send + Sync>;
 
-/// Update-phase executor shared by all rank threads.
+/// Update-phase executor shared by all rank threads *and* every worker
+/// of the intra-rank pool — it must stay `Send + Sync` (enforced below),
+/// which is why [`StepFn`] carries those bounds.
 pub enum Updater {
     /// In-process f32 arithmetic (mirrors the L1 kernel op order).
     Native,
     /// External executor, e.g. the AOT-compiled XLA artifact via PJRT.
     Custom(StepFn),
 }
+
+// The engine shares one `&Updater` across all rank threads and pool
+// workers; fail at compile time if a refactor ever loses the bounds.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Updater>();
+};
 
 impl Updater {
     #[inline]

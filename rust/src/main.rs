@@ -48,6 +48,7 @@ fn print_usage() {
            simulate --model <sanity|mam-benchmark|mam> [--strategy s]\n\
                     [--ranks M] [--threads T] [--t-model ms] [--seed n]\n\
                     [--scale f] [--areas n] [--update-path native|xla]\n\
+                    [--exec sequential|pooled] [--quota spikes]\n\
                     [--record-spikes]\n\
            figure <name> [--t-model ms] [--seed n] [--out dir]\n\
            figures [--t-model ms] [--out dir]\n\
@@ -93,13 +94,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     println!(
         "model {} | {} areas | {} neurons | strategy {} | M={} T={} | \
-         T_model {} ms | D={}",
+         exec {} | T_model {} ms | D={}",
         spec.name,
         spec.n_areas(),
         spec.total_neurons(),
         cfg.strategy.name(),
         cfg.m_ranks,
         cfg.threads_per_rank,
+        cfg.exec.name(),
         cfg.t_model_ms,
         spec.delay_ratio(),
     );
@@ -107,7 +109,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let res = nsim::engine::simulate(&spec, &cfg)?;
     let wall = t0.elapsed().as_secs_f64();
 
-    let mut table = Table::new(&["phase", "seconds", "share"]);
+    let mut table = Table::new(&["phase", "mean s", "share", "slowest s"]);
     let total = res.mean_times.total();
     for p in Phase::ALL {
         let secs = res.mean_times.get(p);
@@ -115,6 +117,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             p.name().into(),
             fnum(secs),
             format!("{:.1}%", 100.0 * secs / total.max(1e-12)),
+            fnum(res.max_times.get(p)),
         ]);
     }
     println!("{}", table.render());

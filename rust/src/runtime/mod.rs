@@ -15,16 +15,21 @@
 pub mod registry;
 pub mod updater;
 
+#[cfg(feature = "xla")]
 use anyhow::{Context, Result};
 
 /// A compiled artifact plus its manifest metadata.  Not `Send`: lives on
-/// the thread that created its client.
+/// the thread that created its client.  Only available with the `xla`
+/// feature (see `Cargo.toml`); without it the registry still parses
+/// manifests but cannot compile.
+#[cfg(feature = "xla")]
 pub struct Executable {
     pub name: String,
     pub batch: usize,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "xla")]
 impl Executable {
     /// Load `<dir>/<file>` (HLO text) and compile it on `client`.
     pub fn load(

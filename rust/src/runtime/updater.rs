@@ -12,6 +12,25 @@
 //! are parked refractory (cannot spike), padded ignore-and-fire lanes get
 //! an unreachable interval.  Oversized blocks are chunked.
 
+#[cfg(feature = "xla")]
+pub use pjrt::xla_updater;
+
+/// Built without the `xla` feature: the three-layer composition path is
+/// unavailable, surface a descriptive error instead of failing to link.
+#[cfg(not(feature = "xla"))]
+pub fn xla_updater(
+    _spec: &crate::network::ModelSpec,
+) -> anyhow::Result<crate::engine::update::Updater> {
+    anyhow::bail!(
+        "the XLA update path requires building with `--features xla` \
+         (and the image-baked xla_extension crate); use \
+         `--update-path native` instead"
+    )
+}
+
+#[cfg(feature = "xla")]
+mod pjrt {
+
 use crate::engine::neuron::{LifScalars, NeuronBlock};
 use crate::engine::update::Updater;
 use crate::network::spec::NeuronKind;
@@ -241,3 +260,5 @@ pub fn xla_updater(spec: &ModelSpec) -> Result<Updater> {
         }
     })))
 }
+
+} // mod pjrt

@@ -27,8 +27,11 @@ impl Default for DeliveryScenario {
     }
 }
 
-/// `1 - (1 - 1/n)^k` computed stably for large `n·k`.
-fn p_at_least_one(n: f64, k: f64) -> f64 {
+/// `1 - (1 - 1/n)^k`, computed stably for large `n·k`: the probability
+/// that at least one of `k` uniform draws over `n` bins hits a specific
+/// bin.  Shared with the workload model (expected distinct target ranks
+/// of a spike's inter-area synapses).
+pub fn p_at_least_one(n: f64, k: f64) -> f64 {
     if n <= 1.0 {
         return 1.0;
     }

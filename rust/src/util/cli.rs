@@ -13,15 +13,28 @@ pub struct Args {
     consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing value for option --{0}")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value:?} ({why})")]
     BadValue { key: String, value: String, why: String },
-    #[error("unknown option(s): {0}")]
     Unknown(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(key) => {
+                write!(f, "missing value for option --{key}")
+            }
+            CliError::BadValue { key, value, why } => {
+                write!(f, "invalid value for --{key}: {value:?} ({why})")
+            }
+            CliError::Unknown(opts) => write!(f, "unknown option(s): {opts}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse a raw argument list (without the program name).

@@ -109,6 +109,19 @@ impl PhaseTimes {
         out
     }
 
+    /// Element-wise max over several ranks' accumulators — the
+    /// slowest-rank profile that the barrier in front of the collective
+    /// makes everyone wait for (the paper's central bottleneck).
+    pub fn max_of(others: &[PhaseTimes]) -> PhaseTimes {
+        let mut out = PhaseTimes::new();
+        for o in others {
+            for i in 0..5 {
+                out.secs[i] = out.secs[i].max(o.secs[i]);
+            }
+        }
+        out
+    }
+
     /// Real-time factor: wall-clock / model time.
     pub fn rtf(&self, t_model_secs: f64) -> f64 {
         self.total() / t_model_secs
@@ -167,6 +180,20 @@ mod tests {
         b.add(Phase::Update, 4.0);
         let m = PhaseTimes::mean_of(&[a, b]);
         assert_eq!(m.get(Phase::Update), 3.0);
+    }
+
+    #[test]
+    fn max_of_ranks_is_elementwise() {
+        let mut a = PhaseTimes::new();
+        a.add(Phase::Update, 2.0);
+        a.add(Phase::Deliver, 5.0);
+        let mut b = PhaseTimes::new();
+        b.add(Phase::Update, 4.0);
+        b.add(Phase::Deliver, 1.0);
+        let m = PhaseTimes::max_of(&[a, b]);
+        assert_eq!(m.get(Phase::Update), 4.0);
+        assert_eq!(m.get(Phase::Deliver), 5.0);
+        assert_eq!(PhaseTimes::max_of(&[]).total(), 0.0);
     }
 
     #[test]

@@ -85,14 +85,12 @@ fn base_costs(
         * (machine.c_syn + w.f_irr_intra * machine.c_miss)
         + r.syn_in_inter_per_step
             * (machine.c_syn + w.f_irr_inter * machine.c_miss);
-    // collocation: one send-buffer entry per (spike, target rank)
-    let entries_per_spike = if w.strategy.dual_pathways() {
-        w.m as f64 // 1 local + (M-1) global
-    } else {
-        w.m as f64
-    };
+    // collocation: one send-buffer entry per (spike, target rank); the
+    // dual-pathway entry count (1 local + per-remote-rank global) comes
+    // from the workload so sparse inter-area connectivity is cheaper
+    // than the conventional all-M fan-out
     let collocate =
-        r.spikes_per_step * entries_per_spike * machine.c_collocate;
+        r.spikes_per_step * w.entries_per_spike * machine.c_collocate;
     BaseCosts { deliver, update, collocate, total: deliver + update + collocate }
 }
 

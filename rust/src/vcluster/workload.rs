@@ -8,8 +8,23 @@
 use crate::config::Strategy;
 use crate::network::spec::NeuronKind;
 use crate::network::ModelSpec;
-use crate::theory::delivery::{f_irr_conventional, DeliveryScenario};
+use crate::theory::delivery::{
+    f_irr_conventional, p_at_least_one, DeliveryScenario,
+};
 use anyhow::{bail, Result};
+
+/// Expected number of distinct *remote* ranks receiving at least one of
+/// a spike's `k_inter` inter-area synapses, targets uniform over the
+/// `m - 1` other ranks.  Saturates at `m - 1` for paper-scale indegrees
+/// (K_inter = 3000 reaches every rank up to M ≈ 1000) and drops below it
+/// for sparse inter-area connectivity.
+fn expected_target_ranks(m: usize, k_inter: f64) -> f64 {
+    if m <= 1 || k_inter <= 0.0 {
+        return 0.0;
+    }
+    let others = m as f64 - 1.0;
+    others * p_at_least_one(others, k_inter)
+}
 
 /// Static per-rank load characteristics.
 #[derive(Clone, Debug)]
@@ -47,6 +62,13 @@ pub struct Workload {
     pub f_irr_inter: f64,
     /// Wire bytes per emitted spike.
     pub bytes_per_spike: f64,
+    /// Expected send-buffer entries written per emitted spike in the
+    /// collocate phase.  Conventional: one entry per rank (round-robin
+    /// spreads every neuron's targets over all M ranks at paper-scale
+    /// indegrees).  Dual pathways: 1 local-pathway entry plus one global
+    /// entry per distinct remote target rank (spike compression) — equal
+    /// to M only when K_inter saturates the other M−1 ranks.
+    pub entries_per_spike: f64,
 }
 
 impl Workload {
@@ -155,6 +177,12 @@ impl Workload {
             (f, f)
         };
 
+        let entries_per_spike = if strategy.dual_pathways() {
+            1.0 + expected_target_ranks(m, k_inter)
+        } else {
+            m as f64
+        };
+
         Ok(Workload {
             m,
             strategy,
@@ -164,6 +192,7 @@ impl Workload {
             f_irr_intra: f_intra,
             f_irr_inter: f_inter,
             bytes_per_spike: crate::comm::SPIKE_WIRE_BYTES as f64,
+            entries_per_spike,
         })
     }
 
@@ -241,6 +270,10 @@ impl Workload {
             f_irr_intra: base.f_irr_intra,
             f_irr_inter: base.f_irr_inter,
             bytes_per_spike: base.bytes_per_spike,
+            // 1 group-local entry + per-remote-rank global entries,
+            // evaluated at this workload's rank count
+            entries_per_spike: 1.0
+                + expected_target_ranks(m, spec.k_inter as f64),
         })
     }
 
@@ -316,6 +349,49 @@ mod tests {
             ws.f_irr_intra,
             wc.f_irr_intra
         );
+    }
+
+    #[test]
+    fn collocation_entries_reflect_distinct_target_ranks() {
+        // paper-scale K_inter = 3000 saturates the other M-1 ranks, so
+        // the dual-pathway entry count coincides with the conventional
+        // all-M fan-out ...
+        let spec = models::mam_benchmark(8, 1.0, 1.0).unwrap();
+        let wc =
+            Workload::derive(&spec, Strategy::Conventional, 8, 48).unwrap();
+        assert_eq!(wc.entries_per_spike, 8.0);
+        let ws =
+            Workload::derive(&spec, Strategy::StructureAware, 8, 48).unwrap();
+        assert!(
+            (ws.entries_per_spike - 8.0).abs() < 0.05,
+            "{}",
+            ws.entries_per_spike
+        );
+        // ... but sparse inter-area connectivity (K_inter = 3 here)
+        // reaches far fewer than M-1 remote ranks: 1 + 7·(1-(6/7)^3)
+        let sparse = models::mam_benchmark(8, 0.001, 1.0).unwrap();
+        assert_eq!(sparse.k_inter, 3);
+        let w = Workload::derive(&sparse, Strategy::StructureAware, 8, 48)
+            .unwrap();
+        assert!(
+            w.entries_per_spike > 1.0 && w.entries_per_spike < 5.0,
+            "{}",
+            w.entries_per_spike
+        );
+        // intermediate placement keeps the conventional communication
+        // scheme, hence the conventional entry count
+        let wi = Workload::derive(&sparse, Strategy::Intermediate, 8, 48)
+            .unwrap();
+        assert_eq!(wi.entries_per_spike, 8.0);
+        // single rank: the dual scheme degenerates to the local pathway
+        let solo = Workload::derive(
+            &models::mam_benchmark(2, 0.001, 1.0).unwrap(),
+            Strategy::StructureAware,
+            1,
+            48,
+        )
+        .unwrap();
+        assert_eq!(solo.entries_per_spike, 1.0);
     }
 
     #[test]

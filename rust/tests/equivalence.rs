@@ -6,11 +6,12 @@
 //! This is what licenses the paper's performance comparison: the
 //! communication restructuring must not change the dynamics.
 
-use nsim::config::{RunConfig, Strategy, UpdatePath};
+use nsim::config::{ExecMode, RunConfig, Strategy, UpdatePath};
 use nsim::engine::simulate;
 use nsim::models;
 use nsim::network::ModelSpec;
 
+/// Default-config run (pooled execution): the hot path under test.
 fn run(
     spec: &ModelSpec,
     strategy: Strategy,
@@ -26,7 +27,28 @@ fn run(
         seed: 12,
         update_path: UpdatePath::Native,
         record_spikes: true,
-        record_cycle_times: false,
+        ..RunConfig::default()
+    };
+    simulate(spec, &cfg).expect("simulation failed").spikes
+}
+
+fn run_exec(
+    spec: &ModelSpec,
+    strategy: Strategy,
+    m: usize,
+    t: usize,
+    t_model_ms: f64,
+    exec: ExecMode,
+) -> Vec<(u64, u32)> {
+    let cfg = RunConfig {
+        strategy,
+        m_ranks: m,
+        threads_per_rank: t,
+        t_model_ms,
+        seed: 12,
+        exec,
+        record_spikes: true,
+        ..RunConfig::default()
     };
     simulate(spec, &cfg).expect("simulation failed").spikes
 }
@@ -73,7 +95,7 @@ fn lif_recurrent_dynamics_depend_on_connectivity() {
         seed: 91856,
         update_path: UpdatePath::Native,
         record_spikes: true,
-        record_cycle_times: false,
+        ..RunConfig::default()
     };
     let b = simulate(&spec, &cfg_b).unwrap().spikes;
     assert_ne!(a, b, "recurrent input has no effect — test is vacuous");
@@ -104,6 +126,86 @@ fn spike_trains_independent_of_thread_count() {
         let got = run(&spec, Strategy::StructureAware, 4, t, 100.0);
         assert_eq!(base, got, "spike trains differ for T={t}");
     }
+}
+
+#[test]
+fn spike_trains_identical_across_exec_modes() {
+    // the tentpole invariant of the pooled execution path: same seed =>
+    // identical (step, gid) spike trains across thread counts and across
+    // sequential-vs-pooled execution, for both strategies
+    let spec = models::sanity_net(240, 4).unwrap();
+    for strategy in [Strategy::Conventional, Strategy::StructureAware] {
+        let base =
+            run_exec(&spec, strategy, 4, 1, 100.0, ExecMode::Sequential);
+        assert!(
+            base.len() > 100,
+            "{}: too quiet for a meaningful test ({} spikes)",
+            strategy.name(),
+            base.len()
+        );
+        for t in [1usize, 2, 4] {
+            for exec in [ExecMode::Sequential, ExecMode::Pooled] {
+                let got = run_exec(&spec, strategy, 4, t, 100.0, exec);
+                assert_eq!(
+                    base,
+                    got,
+                    "{} diverged at T={t} exec={}",
+                    strategy.name(),
+                    exec.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ianf_model_identical_across_exec_modes() {
+    // same invariant on the ignore-and-fire benchmark model
+    let spec = models::mam_benchmark(4, 0.004, 1.0).unwrap();
+    let base = run_exec(
+        &spec,
+        Strategy::StructureAware,
+        4,
+        1,
+        50.0,
+        ExecMode::Sequential,
+    );
+    assert!(!base.is_empty());
+    for t in [2usize, 4] {
+        let got = run_exec(
+            &spec,
+            Strategy::StructureAware,
+            4,
+            t,
+            50.0,
+            ExecMode::Pooled,
+        );
+        assert_eq!(base, got, "pooled ianf diverged at T={t}");
+    }
+}
+
+#[test]
+fn tiny_comm_quota_equivalent_to_default() {
+    // a starting quota of 1 forces the two-round resize protocol to fire
+    // under real engine traffic; dynamics must not change
+    let spec = models::sanity_net(200, 2).unwrap();
+    let run_quota = |quota: usize| {
+        let cfg = RunConfig {
+            strategy: Strategy::Conventional,
+            m_ranks: 2,
+            threads_per_rank: 2,
+            t_model_ms: 100.0,
+            seed: 12,
+            comm_quota: quota,
+            record_spikes: true,
+            ..RunConfig::default()
+        };
+        simulate(&spec, &cfg).expect("simulation failed").spikes
+    };
+    let tiny = run_quota(1);
+    let default = run_quota(4096);
+    assert!(!tiny.is_empty());
+    assert_eq!(tiny, default, "quota resize protocol changed dynamics");
 }
 
 #[test]

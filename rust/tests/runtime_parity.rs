@@ -3,7 +3,11 @@
 //! reproduce the native Rust update exactly — and a whole simulation run
 //! through the XLA path must emit the same spikes as the native path.
 //!
-//! Requires `make artifacts` (skipped gracefully if absent).
+//! Requires `make artifacts` (skipped gracefully if absent) and a build
+//! with the `xla` feature (the whole suite is compiled out without it —
+//! see `Cargo.toml`).
+
+#![cfg(feature = "xla")]
 
 use nsim::config::{RunConfig, Strategy, UpdatePath};
 use nsim::engine::neuron::NeuronBlock;
@@ -101,7 +105,7 @@ fn full_simulation_identical_through_xla_path() {
             seed: 12,
             update_path,
             record_spikes: true,
-            record_cycle_times: false,
+            ..RunConfig::default()
         };
         simulate(&spec, &cfg).unwrap().spikes
     };
