@@ -1,10 +1,16 @@
 //! Micro-benchmarks of the L3 hot paths (EXPERIMENTS.md §Perf).
 //!
 //! No criterion in the offline registry, so this uses a small in-tree
-//! harness: warmup, then timed batches until ≥ 0.25 s elapsed, reporting
-//! ns/op and throughput.
+//! harness: warmup, then timed batches until the window elapses,
+//! reporting ns/op and throughput.
 //!
 //!     cargo bench --bench hotpath
+//!     cargo bench --bench hotpath -- --smoke --bench-json BENCH_hotpath.json
+//!
+//! `--bench-json <path>` writes every measurement — micro ns/op plus the
+//! engine end-to-end comparisons with per-phase timings and RTF — as a
+//! JSON document so the perf trajectory is tracked across PRs;
+//! `--smoke` shrinks windows and model times for CI.
 
 use nsim::comm::{SpikeMsg, Transport, World};
 use nsim::config::{ExecMode, RunConfig, Strategy};
@@ -13,44 +19,139 @@ use nsim::engine::ringbuffer::RingBuffer;
 use nsim::engine::simulate;
 use nsim::models;
 use nsim::network::spec::{LifParams, NeuronKind};
+use nsim::network::ModelSpec;
 use nsim::tables::{ConnTable, LocalConn, TargetTable};
+use nsim::util::json::Json;
 use nsim::util::rng::Pcg64;
+use nsim::util::timers::Phase;
 use nsim::vcluster::{run_cluster, MachineProfile, VcOptions, Workload};
 use std::hint::black_box;
 use std::time::Instant;
 
-/// Time `f` (which performs `ops_per_call` operations) and report.
-fn bench(name: &str, ops_per_call: u64, mut f: impl FnMut()) {
-    // warmup
-    for _ in 0..3 {
-        f();
+struct Harness {
+    /// Timed-batch window per micro bench, seconds.
+    window: f64,
+    /// (name, ns/op, Mops/s) of every micro bench run.
+    micro: Vec<(String, f64, f64)>,
+    /// One JSON object per engine end-to-end run.
+    engine: Vec<Json>,
+}
+
+impl Harness {
+    /// Time `f` (which performs `ops_per_call` operations) and report.
+    fn bench(&mut self, name: &str, ops_per_call: u64, mut f: impl FnMut()) {
+        // warmup
+        for _ in 0..3 {
+            f();
+        }
+        let mut calls = 0u64;
+        let t0 = Instant::now();
+        while t0.elapsed().as_secs_f64() < self.window {
+            f();
+            calls += 1;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let ops = calls * ops_per_call;
+        let ns_per_op = secs * 1e9 / ops as f64;
+        let mops = ops as f64 / secs / 1e6;
+        println!("{name:<42} {ns_per_op:>9.2} ns/op  {mops:>10.2} Mops/s");
+        self.micro.push((name.to_string(), ns_per_op, mops));
     }
-    let mut calls = 0u64;
-    let t0 = Instant::now();
-    while t0.elapsed().as_secs_f64() < 0.25 {
-        f();
-        calls += 1;
+
+    /// Run the functional engine once and record wall time, throughput,
+    /// per-phase means and RTF.
+    #[allow(clippy::too_many_arguments)]
+    fn engine_run(
+        &mut self,
+        model: &str,
+        spec: &ModelSpec,
+        strategy: Strategy,
+        exec: ExecMode,
+        m: usize,
+        threads: usize,
+        t_model_ms: f64,
+    ) {
+        let cfg = RunConfig {
+            strategy,
+            m_ranks: m,
+            threads_per_rank: threads,
+            t_model_ms,
+            seed: 654,
+            exec,
+            ..RunConfig::default()
+        };
+        let t0 = Instant::now();
+        let res = simulate(spec, &cfg).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let neuron_steps = spec.total_neurons() as f64 * res.s_cycles as f64;
+        let mcps = neuron_steps / secs / 1e6;
+        println!(
+            "engine: {model:<14} {:<16} {:<16} T={threads} {} neurons x \
+             {} cycles in {secs:.3} s = {mcps:.2} M neuron-cycles/s",
+            strategy.name(),
+            exec.name(),
+            spec.total_neurons(),
+            res.s_cycles,
+        );
+        self.engine.push(Json::obj(vec![
+            ("model", model.into()),
+            ("strategy", strategy.name().into()),
+            ("exec", exec.name().into()),
+            ("ranks", m.into()),
+            ("threads", threads.into()),
+            ("t_model_ms", t_model_ms.into()),
+            ("wall_s", secs.into()),
+            ("neuron_cycles_per_s", (neuron_steps / secs).into()),
+            ("rtf", res.rtf().into()),
+            ("deliver_s", res.mean_times.get(Phase::Deliver).into()),
+            ("update_s", res.mean_times.get(Phase::Update).into()),
+            ("collocate_s", res.mean_times.get(Phase::Collocate).into()),
+            (
+                "synchronize_s",
+                res.mean_times.get(Phase::Synchronize).into(),
+            ),
+            (
+                "exchange_s",
+                res.mean_times.get(Phase::DataExchange).into(),
+            ),
+        ]));
     }
-    let secs = t0.elapsed().as_secs_f64();
-    let ops = calls * ops_per_call;
-    let ns_per_op = secs * 1e9 / ops as f64;
-    println!(
-        "{name:<42} {ns_per_op:>9.2} ns/op  {:>10.2} Mops/s",
-        ops as f64 / secs / 1e6
-    );
 }
 
 fn main() {
+    let mut smoke = false;
+    let mut json_path: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => smoke = true,
+            "--bench-json" => {
+                json_path = Some(
+                    args.next().expect("--bench-json needs a path argument"),
+                );
+            }
+            // cargo bench passes --bench through to the binary
+            "--bench" => {}
+            other => eprintln!("ignoring unknown bench option {other:?}"),
+        }
+    }
+    let mut h = Harness {
+        window: if smoke { 0.05 } else { 0.25 },
+        micro: Vec::new(),
+        engine: Vec::new(),
+    };
+
     println!("== L3 hot-path micro-benchmarks ==\n");
 
     // --- RNG ---------------------------------------------------------
     let mut rng = Pcg64::seed_from_u64(1);
-    bench("rng: next_u64", 1024, || {
+    h.bench("rng: next_u64", 1024, || {
         for _ in 0..1024 {
             black_box(rng.next_u64());
         }
     });
-    bench("rng: normal", 1024, || {
+    let mut rng = Pcg64::seed_from_u64(1);
+    h.bench("rng: normal", 1024, || {
         for _ in 0..1024 {
             black_box(rng.normal());
         }
@@ -74,7 +175,7 @@ fn main() {
     let table = ConnTable::build(entries);
     let probes: Vec<u32> =
         (0..1024).map(|_| rng.below(n_sources as u64) as u32).collect();
-    bench("tables: ConnTable::lookup", probes.len() as u64, || {
+    h.bench("tables: ConnTable::lookup", probes.len() as u64, || {
         for &p in &probes {
             black_box(table.lookup(p));
         }
@@ -82,19 +183,19 @@ fn main() {
 
     // --- ring buffer -------------------------------------------------
     let mut ring = RingBuffer::new(4096, 64);
-    bench("ring: add", 4096, || {
+    h.bench("ring: add", 4096, || {
         for i in 0..4096u32 {
             ring.add((i % 60) as u64, i % 4096, 0.125);
         }
     });
     let mut row = vec![0.0f32; 4096];
-    bench("ring: take_row (4096 lanes)", 4096, || {
+    h.bench("ring: take_row (4096 lanes)", 4096, || {
         ring.take_row(black_box(7), &mut row);
         black_box(&row);
     });
 
     // --- delivery: lookup + ring add combined ------------------------
-    bench("deliver: spike -> conns -> ring", probes.len() as u64, || {
+    h.bench("deliver: spike -> conns -> ring", probes.len() as u64, || {
         for &p in &probes {
             for c in table.lookup(p) {
                 ring.add(10 + c.delay_steps as u64, c.target_local, c.weight);
@@ -110,7 +211,7 @@ fn main() {
         })
         .collect();
     let mut scratch = batch.clone();
-    bench("deliver: batch sort + route", batch.len() as u64, || {
+    h.bench("deliver: batch sort + route", batch.len() as u64, || {
         scratch.clear();
         scratch.extend_from_slice(&batch);
         scratch.sort_unstable_by_key(|m| (m.source, m.cycle));
@@ -139,7 +240,7 @@ fn main() {
     let gids: Vec<u32> = (0..4096).collect();
     let mut send_bufs: Vec<Vec<SpikeMsg>> =
         (0..m_dest).map(|_| Vec::new()).collect();
-    bench(
+    h.bench(
         "collocate: register -> send buffers",
         register.len() as u64,
         || {
@@ -166,19 +267,19 @@ fn main() {
         .collect();
     let mut a2a_send = vec![Vec::with_capacity(512)];
     let mut a2a_recv: Vec<Vec<SpikeMsg>> = Vec::new();
-    bench("exchange: alltoall_into (recycled)", 512, || {
+    h.bench("exchange: alltoall_into (recycled)", 512, || {
         a2a_send[0].extend_from_slice(&payload);
         comm.alltoall_into(&mut a2a_send, &mut a2a_recv);
         black_box(a2a_recv[0].len());
     });
-    bench("exchange: alltoall (fresh alloc)", 512, || {
+    h.bench("exchange: alltoall (fresh alloc)", 512, || {
         a2a_send[0].extend_from_slice(&payload);
         let (recv, _) = comm.alltoall(&mut a2a_send);
         black_box(recv[0].len());
     });
     let mut swap_send = Vec::with_capacity(512);
     let mut swap_recv = Vec::new();
-    bench("exchange: local_swap_into", 512, || {
+    h.bench("exchange: local_swap_into", 512, || {
         swap_send.extend_from_slice(&payload);
         comm.local_swap_into(&mut swap_send, &mut swap_recv);
         black_box(swap_recv.len());
@@ -194,7 +295,7 @@ fn main() {
         NeuronBlock::build(&gids, 0.1, |_| NeuronKind::Lif(params));
     let syn = vec![0.01f32; 8192];
     let mut spikes = Vec::new();
-    bench("update: LIF step (8192 lanes)", 8192, || {
+    h.bench("update: LIF step (8192 lanes)", 8192, || {
         spikes.clear();
         block.step_native(&syn, &mut spikes);
         black_box(&spikes);
@@ -202,7 +303,7 @@ fn main() {
     let mut ianf = NeuronBlock::build(&gids, 0.1, |_| {
         NeuronKind::IgnoreAndFire { interval_steps: 4000 }
     });
-    bench("update: ignore-and-fire step (8192)", 8192, || {
+    h.bench("update: ignore-and-fire step (8192)", 8192, || {
         spikes.clear();
         ianf.step_native(&syn, &mut spikes);
         black_box(&spikes);
@@ -210,26 +311,38 @@ fn main() {
 
     // --- virtual cluster throughput -----------------------------------
     println!("\n== macro benchmarks ==\n");
+    let vc_ranks = if smoke { 16 } else { 128 };
+    let vc_t_model = if smoke { 100.0 } else { 1_000.0 };
     let machine = MachineProfile::supermuc_ng();
-    let spec = models::mam_benchmark(128, 1.0, 1.0).unwrap();
-    let w = Workload::derive(&spec, Strategy::Conventional, 128, 48).unwrap();
+    let spec = models::mam_benchmark(vc_ranks, 1.0, 1.0).unwrap();
+    let w =
+        Workload::derive(&spec, Strategy::Conventional, vc_ranks, 48).unwrap();
     let t0 = Instant::now();
     let opts = VcOptions {
-        t_model_ms: 1_000.0,
+        t_model_ms: vc_t_model,
         h_ms: 0.1,
         seed: 654,
         record_cycle_times: false,
     };
     let res = run_cluster(&machine, &w, &opts).unwrap();
-    let secs = t0.elapsed().as_secs_f64();
-    let rank_cycles = 128.0 * res.s_cycles as f64;
+    let vc_secs = t0.elapsed().as_secs_f64();
+    let rank_cycles = vc_ranks as f64 * res.s_cycles as f64;
     println!(
-        "vcluster: M=128 x {} cycles in {secs:.3} s = {:.2} M rank-cycles/s",
+        "vcluster: M={vc_ranks} x {} cycles in {vc_secs:.3} s = \
+         {:.2} M rank-cycles/s",
         res.s_cycles,
-        rank_cycles / secs / 1e6
+        rank_cycles / vc_secs / 1e6
     );
+    let vcluster_json = Json::obj(vec![
+        ("ranks", vc_ranks.into()),
+        ("cycles", (res.s_cycles as f64).into()),
+        ("wall_s", vc_secs.into()),
+        ("rank_cycles_per_s", (rank_cycles / vc_secs).into()),
+    ]);
 
     // --- functional engine end-to-end: sequential vs pooled -----------
+    println!();
+    let t_model = if smoke { 20.0 } else { 100.0 };
     let spec = models::mam_benchmark(4, 0.01, 1.0).unwrap();
     for strategy in [Strategy::Conventional, Strategy::StructureAware] {
         for (exec, threads) in [
@@ -237,30 +350,66 @@ fn main() {
             (ExecMode::Pooled, 1), // must match sequential: no pool at T=1
             (ExecMode::Sequential, 4),
             (ExecMode::Pooled, 4),
+            (ExecMode::PooledChannels, 4),
         ] {
-            let cfg = RunConfig {
+            h.engine_run(
+                "mamb-4",
+                &spec,
                 strategy,
-                m_ranks: 4,
-                threads_per_rank: threads,
-                t_model_ms: 100.0,
-                seed: 654,
                 exec,
-                ..RunConfig::default()
-            };
-            let t0 = Instant::now();
-            let res = simulate(&spec, &cfg).unwrap();
-            let secs = t0.elapsed().as_secs_f64();
-            let neuron_steps =
-                spec.total_neurons() as f64 * res.s_cycles as f64;
-            println!(
-                "engine: {:<16} {:<10} T={threads} {} neurons x {} cycles \
-                 in {secs:.3} s = {:.2} M neuron-cycles/s",
-                strategy.name(),
-                exec.name(),
-                spec.total_neurons(),
-                res.s_cycles,
-                neuron_steps / secs / 1e6
+                4,
+                threads,
+                t_model,
             );
         }
+    }
+
+    // --- deliver-heavy A/B: barrier runtime vs legacy channel pool ----
+    // dense LIF net (~300 connections/neuron, every neuron near 30 Hz):
+    // the deliver phase dominates, which is where thread-sharded routing
+    // and the barrier protocol pay off
+    println!();
+    let heavy_n = if smoke { 500 } else { 2000 };
+    let heavy_t_model = if smoke { 20.0 } else { 100.0 };
+    let heavy = models::sanity_net(heavy_n, 4).unwrap();
+    for (exec, threads) in [
+        (ExecMode::Sequential, 4),
+        (ExecMode::PooledChannels, 4),
+        (ExecMode::Pooled, 4),
+    ] {
+        h.engine_run(
+            "deliver-heavy",
+            &heavy,
+            Strategy::Conventional,
+            exec,
+            2,
+            threads,
+            heavy_t_model,
+        );
+    }
+
+    if let Some(path) = json_path {
+        let micro = Json::Arr(
+            h.micro
+                .iter()
+                .map(|(name, ns, mops)| {
+                    Json::obj(vec![
+                        ("name", name.as_str().into()),
+                        ("ns_per_op", (*ns).into()),
+                        ("mops_per_s", (*mops).into()),
+                    ])
+                })
+                .collect(),
+        );
+        let doc = Json::obj(vec![
+            ("bench", "hotpath".into()),
+            ("smoke", smoke.into()),
+            ("micro", micro),
+            ("vcluster", vcluster_json),
+            ("engine", Json::Arr(h.engine.clone())),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("\nwrote {path}");
     }
 }

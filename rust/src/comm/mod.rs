@@ -73,12 +73,15 @@ pub struct CommStats {
 }
 
 impl CommStats {
-    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+    /// (alltoall calls, local swaps, bytes sent, resize rounds, largest
+    /// single send buffer observed per rank pair).
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
         (
             self.alltoall_calls.load(Ordering::Relaxed),
             self.local_swaps.load(Ordering::Relaxed),
             self.bytes_sent.load(Ordering::Relaxed),
             self.resize_rounds.load(Ordering::Relaxed),
+            self.max_send_per_pair.load(Ordering::Relaxed) as u64,
         )
     }
 }
@@ -408,8 +411,9 @@ mod tests {
                 });
             }
         });
-        let (_, _, _, resizes) = w2.stats().snapshot();
+        let (_, _, _, resizes, max_pair) = w2.stats().snapshot();
         assert_eq!(resizes, 1);
+        assert_eq!(max_pair, 10, "largest per-pair send not tracked");
         assert!(w2.current_quota() >= 10);
     }
 
@@ -421,9 +425,11 @@ mod tests {
         let recv = comm.local_swap(&mut send);
         assert_eq!(recv, vec![msg(1, 2), msg(3, 4)]);
         assert!(send.is_empty());
-        let (a2a, swaps, _, _) = world.stats().snapshot();
+        let (a2a, swaps, _, _, max_pair) = world.stats().snapshot();
         assert_eq!(a2a, 0);
         assert_eq!(swaps, 1);
+        // local swaps bypass the global exchange: no per-pair maximum
+        assert_eq!(max_pair, 0);
     }
 
     #[test]
@@ -440,10 +446,11 @@ mod tests {
                 });
             }
         });
-        let (calls, _, bytes, _) = world.stats().snapshot();
+        let (calls, _, bytes, _, max_pair) = world.stats().snapshot();
         assert_eq!(calls, 2);
         // 2 ranks x 2 dests x 3 spikes x 8 bytes
         assert_eq!(bytes, 96);
+        assert_eq!(max_pair, 3);
     }
 
     #[test]
@@ -516,9 +523,10 @@ mod tests {
         let expect: usize =
             (0..50u32).map(|r| per_round(r) * M).sum();
         assert!(results.iter().all(|&t| t == expect), "{results:?}");
-        let (calls, _, _, resizes) = w2.stats().snapshot();
+        let (calls, _, _, resizes, max_pair) = w2.stats().snapshot();
         assert_eq!(calls, 50 * M as u64);
         assert_eq!(resizes, 1, "overflow round must resize exactly once");
+        assert_eq!(max_pair, 9, "per-pair maximum is the overflow round");
         assert!(w2.current_quota() >= 9);
     }
 

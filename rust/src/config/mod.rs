@@ -59,17 +59,25 @@ pub enum ExecMode {
     /// Iterate virtual threads in place on the rank's OS thread — the
     /// reference schedule (and the only sensible one for T = 1).
     Sequential,
-    /// One worker OS thread per virtual thread (a per-rank pool sized by
-    /// `threads_per_rank`); bit-identical to `Sequential` by
+    /// Persistent barrier-synced worker runtime with thread-sharded
+    /// spike delivery: one worker OS thread per virtual thread, spawned
+    /// once per run and phase-stepped by barriers (no channel traffic,
+    /// no steady-state allocation); bit-identical to `Sequential` by
     /// construction, see `engine::rank`.
     Pooled,
+    /// The legacy per-phase command/reply channel pool (PR 1), kept
+    /// selectable for A/B comparison against the barrier runtime.
+    PooledChannels,
 }
 
 impl ExecMode {
     pub fn parse(s: &str) -> Result<ExecMode> {
         Ok(match s {
             "sequential" | "seq" => ExecMode::Sequential,
-            "pooled" | "pool" | "parallel" => ExecMode::Pooled,
+            "pooled" | "pool" | "parallel" | "barrier" => ExecMode::Pooled,
+            "pooled-channels" | "channels" | "channel-pool" => {
+                ExecMode::PooledChannels
+            }
             other => bail!("unknown exec mode {other:?}"),
         })
     }
@@ -78,6 +86,7 @@ impl ExecMode {
         match self {
             ExecMode::Sequential => "sequential",
             ExecMode::Pooled => "pooled",
+            ExecMode::PooledChannels => "pooled-channels",
         }
     }
 }
@@ -302,11 +311,20 @@ mod tests {
 
     #[test]
     fn exec_mode_parse_roundtrip() {
-        for e in [ExecMode::Sequential, ExecMode::Pooled] {
+        for e in [
+            ExecMode::Sequential,
+            ExecMode::Pooled,
+            ExecMode::PooledChannels,
+        ] {
             assert_eq!(ExecMode::parse(e.name()).unwrap(), e);
         }
         assert_eq!(ExecMode::parse("seq").unwrap(), ExecMode::Sequential);
         assert_eq!(ExecMode::parse("parallel").unwrap(), ExecMode::Pooled);
+        assert_eq!(ExecMode::parse("barrier").unwrap(), ExecMode::Pooled);
+        assert_eq!(
+            ExecMode::parse("channels").unwrap(),
+            ExecMode::PooledChannels
+        );
         assert!(ExecMode::parse("bogus").is_err());
     }
 

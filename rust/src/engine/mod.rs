@@ -5,6 +5,16 @@
 //! exchange of the preparation phase) and iterates the cycle loop of
 //! paper Fig 3.  Results are merged into a [`SimResult`] containing phase
 //! breakdowns, recorded spikes and per-cycle times.
+//!
+//! Within a rank, virtual threads run on the persistent phase-barrier
+//! worker runtime by default ([`crate::config::ExecMode::Pooled`]):
+//! workers are spawned once per run and advance through deliver →
+//! update → collocate in lock-step over a reusable barrier, with
+//! received spike batches routed once into per-thread delivery queues
+//! (thread-sharded delivery).  See `engine::rank` for the full protocol
+//! and the bit-identity argument; `ExecMode::Sequential` is the
+//! reference schedule and `ExecMode::PooledChannels` the legacy PR 1
+//! channel pool kept for A/B comparison.
 
 pub mod neuron;
 pub mod rank;
@@ -45,8 +55,9 @@ pub struct SimResult {
     pub rank_neurons: Vec<usize>,
     /// Per-rank synapse counts (short, long pathway).
     pub rank_conns: Vec<(usize, usize)>,
-    /// (alltoall calls, local swaps, bytes sent, resize rounds).
-    pub comm_stats: (u64, u64, u64, u64),
+    /// (alltoall calls, local swaps, bytes sent, resize rounds, largest
+    /// single send buffer per rank pair).
+    pub comm_stats: (u64, u64, u64, u64, u64),
 }
 
 impl SimResult {

@@ -8,16 +8,46 @@
 //! local swap + global exchange every D-th cycle (structure-aware).
 //!
 //! Virtual threads execute either *sequentially* on the rank's OS thread
-//! ([`crate::config::ExecMode::Sequential`]) or on a per-rank pool of
-//! worker OS threads sized by `threads_per_rank`
-//! ([`crate::config::ExecMode::Pooled`]).  Both paths produce
-//! bit-identical spike trains: every virtual thread owns its ring buffer
-//! and neuron block exclusively, delivery consumes the same canonically
-//! `(source, step)`-sorted batch on every thread, and collocation output
-//! is concatenated in virtual-thread order — so the pooled schedule
-//! cannot reorder anything observable.  Send/receive buffers are
-//! recycled through the [`Transport`] layer across the whole run (no
-//! per-cycle allocation on the hot path).
+//! ([`crate::config::ExecMode::Sequential`]), on the persistent
+//! barrier-synced worker runtime ([`crate::config::ExecMode::Pooled`],
+//! the default), or on the legacy per-phase channel pool kept for A/B
+//! comparison ([`crate::config::ExecMode::PooledChannels`]).  All paths
+//! produce bit-identical spike trains: every virtual thread owns its
+//! ring buffer and neuron block exclusively, delivery consumes spikes in
+//! the same canonical `(source, step)` order on every thread, and
+//! collocation output is concatenated in virtual-thread order — so no
+//! parallel schedule can reorder anything observable.  Send/receive
+//! buffers are recycled through the [`Transport`] layer across the whole
+//! run (no per-cycle allocation on the hot path).
+//!
+//! # The phase-barrier worker protocol
+//!
+//! The barrier runtime spawns one worker OS thread per virtual thread
+//! *once per run*; workers then advance through the cycle phases in
+//! lock-step with the coordinator (the rank's OS thread) over a single
+//! reusable [`std::sync::Barrier`] of size `T + 1`, with **zero channel
+//! traffic and zero steady-state allocation**.  Each worker owns its
+//! [`ThreadState`] outright and shares one [`Mutex`]-guarded slot with
+//! the coordinator; the barriers partition time so the mutex is never
+//! contended — it only makes the hand-off points safe.  Per cycle:
+//!
+//! 1. coordinator: route the received spike batches into the per-thread
+//!    delivery queues (thread-sharded via [`SourceShards`] — each spike
+//!    goes only to threads owning connections from its source), then
+//!    `wait()` (**queues ready**);
+//! 2. workers: drain own delivery queues into the ring buffer, `wait()`
+//!    (**deliver done** — coordinator charges the deliver phase);
+//! 3. workers: advance neurons one cycle, `wait()` (**update done** —
+//!    coordinator charges the update phase);
+//! 4. workers: collocate spike registers into the slot's output buffers,
+//!    `wait()` (**collocate done**); coordinator drains the slots in
+//!    virtual-thread order (the determinism barrier), charges collocate
+//!    and runs the communicate step while workers park at the next
+//!    cycle's *queues ready* barrier.
+//!
+//! Workers know the cycle count up front, so termination needs no
+//! signalling: after the last cycle they return their recorded spikes
+//! and table statistics through the scoped-thread join handles.
 
 use crate::comm::{SpikeMsg, Transport};
 use crate::config::{ExecMode, Strategy};
@@ -26,11 +56,13 @@ use crate::engine::ringbuffer::RingBuffer;
 use crate::engine::update::Updater;
 use crate::network::{incoming_connections, Gid, ModelSpec};
 use crate::placement::Placement;
-use crate::tables::{ConnTable, LocalConn, Pathways, TargetTable};
+use crate::tables::{
+    mask_test, ConnTable, LocalConn, Pathways, SourceShards, TargetTable,
+};
 use crate::util::timers::{Phase, PhaseTimes, Stopwatch};
 use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Barrier, Mutex, MutexGuard};
 
 /// One virtual thread's worth of state.
 pub struct ThreadState {
@@ -40,6 +72,11 @@ pub struct ThreadState {
     pub ring: RingBuffer,
     pub conn: Pathways<ConnTable>,
     pub targets: Pathways<TargetTable>,
+    /// Per-neuron has-targets bitmasks (one bit per local neuron, built
+    /// once from `targets` after the target-table exchange), so the
+    /// update hot loop tests membership without touching the per-neuron
+    /// rank vectors.
+    has_targets: Pathways<Vec<u64>>,
     /// Scratch: per-step synaptic input row.
     syn_buf: Vec<f32>,
     /// Scratch: spiking local indices of the current step.
@@ -93,18 +130,13 @@ impl ThreadState {
                     spikes_out.push((step, self.gids[idx as usize]));
                 }
                 if dual {
-                    if !self.targets.short.ranks(idx as usize).is_empty() {
+                    if mask_test(&self.has_targets.short, idx as usize) {
                         self.register.short.push((idx, step));
                     }
-                    if !self.targets.long.ranks(idx as usize).is_empty() {
+                    if mask_test(&self.has_targets.long, idx as usize) {
                         self.register.long.push((idx, step));
                     }
-                } else if !self
-                    .targets
-                    .short
-                    .ranks(idx as usize)
-                    .is_empty()
-                {
+                } else if mask_test(&self.has_targets.short, idx as usize) {
                     self.register.short.push((idx, step));
                 }
             }
@@ -313,6 +345,124 @@ fn pooled_deliver(
     }
 }
 
+/// Coordinator↔worker hand-off slot of the barrier runtime.  The mutex
+/// is never contended: the barriers partition time so the coordinator
+/// touches it only between *collocate done* and the next *queues ready*,
+/// and the owning worker only in between.
+struct WorkerSlot {
+    data: Mutex<SlotData>,
+}
+
+/// The buffers exchanged through one [`WorkerSlot`], all recycled across
+/// cycles (cleared, never dropped).
+#[derive(Default)]
+struct SlotData {
+    /// Coordinator → worker: this thread's share of the received
+    /// short-pathway batch, in canonical `(source, cycle)` order.
+    deliver_short: Vec<SpikeMsg>,
+    /// Coordinator → worker: share of the long-pathway batch.
+    deliver_long: Vec<SpikeMsg>,
+    /// Worker → coordinator: local-pathway collocation output.
+    local_out: Vec<SpikeMsg>,
+    /// Worker → coordinator: per-destination-rank collocation output.
+    global_out: Vec<Vec<SpikeMsg>>,
+}
+
+/// Sort `buf` canonically and fan it out into the per-thread delivery
+/// queues of exactly the threads owning connections from each spike's
+/// source (`shards`).  Because routing preserves the canonical order,
+/// each thread sees the same subsequence it would extract from a full
+/// batch scan — which keeps the runtime bit-identical to the sequential
+/// schedule.  `buf` is cleared with its capacity kept.
+fn route_sharded(
+    shards: &SourceShards,
+    buf: &mut Vec<SpikeMsg>,
+    queues: &mut [MutexGuard<'_, SlotData>],
+    long_slot: bool,
+) {
+    if buf.is_empty() {
+        return;
+    }
+    sort_canonical(buf);
+    for msg in buf.iter() {
+        for &t in shards.lookup(msg.source) {
+            let d = &mut *queues[t as usize];
+            if long_slot {
+                d.deliver_long.push(*msg);
+            } else {
+                d.deliver_short.push(*msg);
+            }
+        }
+    }
+    buf.clear();
+}
+
+/// Aborts the process if dropped while panicking.  [`Barrier`] has no
+/// poisoning: a worker that panicked between waits would leave the
+/// coordinator (and every sibling) blocked forever, turning a bug into
+/// a silent hang.  Aborting instead keeps failures loud, matching the
+/// "pool worker died" behaviour of the channel runtime.
+struct AbortOnPanic;
+
+impl Drop for AbortOnPanic {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!(
+                "barrier worker panicked; aborting to avoid deadlocking \
+                 the phase barrier"
+            );
+            std::process::abort();
+        }
+    }
+}
+
+/// Body of one persistent barrier-runtime worker (see the module docs
+/// for the phase protocol).  Owns its [`ThreadState`] for the whole run
+/// and returns its recorded spikes and table statistics on join.
+#[allow(clippy::too_many_arguments)]
+fn barrier_worker(
+    mut th: ThreadState,
+    updater: &Updater,
+    slot: &WorkerSlot,
+    barrier: &Barrier,
+    s_cycles: u64,
+    steps: u64,
+    dual: bool,
+    record_spikes: bool,
+) -> (Vec<(u64, Gid)>, usize, usize, usize) {
+    let _abort_guard = AbortOnPanic;
+    let mut spikes: Vec<(u64, Gid)> = Vec::new();
+    for s in 0..s_cycles {
+        let first_step = s * steps;
+        barrier.wait(); // queues ready
+        let mut guard = slot.data.lock().unwrap();
+        let d = &mut *guard;
+        th.deliver_sorted(false, &d.deliver_short, first_step);
+        d.deliver_short.clear();
+        th.deliver_sorted(dual, &d.deliver_long, first_step);
+        d.deliver_long.clear();
+        barrier.wait(); // deliver done
+        th.update_cycle(
+            updater,
+            first_step,
+            steps,
+            dual,
+            record_spikes,
+            &mut spikes,
+        );
+        barrier.wait(); // update done
+        th.collocate_into(dual, &mut d.local_out, &mut d.global_out);
+        drop(guard);
+        barrier.wait(); // collocate done
+    }
+    (
+        spikes,
+        th.conn.short.n_connections(),
+        th.conn.long.n_connections(),
+        th.gids.len(),
+    )
+}
+
 /// Full per-rank state.
 pub struct RankState {
     rank: usize,
@@ -321,6 +471,9 @@ pub struct RankState {
     epoch_cycles: u64,
     steps_per_cycle: u64,
     threads: Vec<ThreadState>,
+    /// Source → owning-threads routing index per pathway (thread-sharded
+    /// delivery of the barrier runtime).
+    shards: Pathways<SourceShards>,
     /// gid -> (thread, local index) for neurons hosted here.
     local_index: HashMap<Gid, (u16, u32)>,
     global_send: Vec<Vec<SpikeMsg>>,
@@ -415,6 +568,7 @@ impl RankState {
                     short: TargetTable::new(syn_len),
                     long: TargetTable::new(syn_len),
                 },
+                has_targets: Pathways::default(),
                 syn_buf: vec![0.0; syn_len],
                 spike_idx: Vec::new(),
                 register: Pathways::default(),
@@ -449,12 +603,29 @@ impl RankState {
             }
         }
 
+        // target tables are final: freeze the per-neuron has-targets
+        // bitmasks the update hot loop consults
+        for th in threads.iter_mut() {
+            th.has_targets = Pathways {
+                short: th.targets.short.has_targets_mask(),
+                long: th.targets.long.has_targets_mask(),
+            };
+        }
+
+        // rank-level source → threads routing index for thread-sharded
+        // delivery (one per pathway, merged from the per-thread CSRs)
+        let shards = Pathways {
+            short: SourceShards::build(threads.iter().map(|t| &t.conn.short)),
+            long: SourceShards::build(threads.iter().map(|t| &t.conn.long)),
+        };
+
         RankState {
             rank,
             strategy,
             epoch_cycles,
             steps_per_cycle,
             threads,
+            shards,
             local_index,
             global_send: (0..m).map(|_| Vec::new()).collect(),
             local_send: Vec::new(),
@@ -523,11 +694,18 @@ impl RankState {
         exec: ExecMode,
     ) -> RankResult {
         match exec {
-            // a single virtual thread gains nothing from a pool; run it
+            // a single virtual thread gains nothing from workers; run it
             // in place so `threads_per_rank = 1` has zero overhead
             ExecMode::Pooled if self.threads.len() > 1 => {
-                self.run_pooled(comm, s_cycles, updater, record_cycle_times)
+                self.run_barrier(comm, s_cycles, updater, record_cycle_times)
             }
+            ExecMode::PooledChannels if self.threads.len() > 1 => self
+                .run_pooled_channels(
+                    comm,
+                    s_cycles,
+                    updater,
+                    record_cycle_times,
+                ),
             _ => self.run_sequential(
                 comm,
                 s_cycles,
@@ -621,11 +799,156 @@ impl RankState {
         }
     }
 
+    /// The persistent barrier-synced worker runtime (the default pooled
+    /// path; protocol in the module docs): workers spawned once, phases
+    /// separated by a reusable [`Barrier`], received batches routed into
+    /// per-thread queues by [`route_sharded`] so each worker only walks
+    /// spikes its connection tables can consume.  The coordinator keeps
+    /// the communicate step and all ordering decisions, so results match
+    /// the sequential schedule bit-exactly.
+    fn run_barrier<T: Transport>(
+        mut self,
+        comm: &T,
+        s_cycles: u64,
+        updater: &Updater,
+        record_cycle_times: bool,
+    ) -> RankResult {
+        let dual = self.strategy.dual_pathways();
+        let m = comm.m_ranks();
+        let worker_states = std::mem::take(&mut self.threads);
+        let n_workers = worker_states.len();
+        let steps = self.steps_per_cycle;
+        let record_spikes = self.record_spikes;
+        let mut phase_times = PhaseTimes::new();
+        let mut cycle_times = Vec::with_capacity(if record_cycle_times {
+            s_cycles as usize
+        } else {
+            0
+        });
+
+        let slots: Vec<WorkerSlot> = (0..n_workers)
+            .map(|_| WorkerSlot {
+                data: Mutex::new(SlotData {
+                    global_out: (0..m).map(|_| Vec::new()).collect(),
+                    ..SlotData::default()
+                }),
+            })
+            .collect();
+        let barrier = Barrier::new(n_workers + 1);
+
+        let (spikes, n_short, n_long, n_neurons) = std::thread::scope(
+            |scope| {
+                let handles: Vec<_> = worker_states
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, th)| {
+                        let slot = &slots[i];
+                        let barrier = &barrier;
+                        scope.spawn(move || {
+                            barrier_worker(
+                                th,
+                                updater,
+                                slot,
+                                barrier,
+                                s_cycles,
+                                steps,
+                                dual,
+                                record_spikes,
+                            )
+                        })
+                    })
+                    .collect();
+
+                for s in 0..s_cycles {
+                    let mut sw = Stopwatch::start();
+                    let mut cycle_secs = 0.0;
+
+                    // ---- deliver: route once, then workers drain ---------
+                    {
+                        let mut queues: Vec<MutexGuard<'_, SlotData>> =
+                            slots
+                                .iter()
+                                .map(|sl| sl.data.lock().unwrap())
+                                .collect();
+                        route_sharded(
+                            &self.shards.short,
+                            &mut self.recv_short,
+                            &mut queues,
+                            false,
+                        );
+                        route_sharded(
+                            self.shards.get(dual),
+                            &mut self.recv_long,
+                            &mut queues,
+                            true,
+                        );
+                    }
+                    barrier.wait(); // queues ready
+                    barrier.wait(); // deliver done
+                    cycle_secs += sw.charge(&mut phase_times, Phase::Deliver);
+
+                    // ---- update ------------------------------------------
+                    barrier.wait(); // update done
+                    cycle_secs += sw.charge(&mut phase_times, Phase::Update);
+
+                    // ---- collocate ---------------------------------------
+                    barrier.wait(); // collocate done
+                    // drain in virtual-thread order: this concatenation is
+                    // the ordering decision that matches the sequential
+                    // schedule
+                    for sl in &slots {
+                        let mut guard = sl.data.lock().unwrap();
+                        let d = &mut *guard;
+                        self.local_send.append(&mut d.local_out);
+                        for (dest, part) in
+                            d.global_out.iter_mut().enumerate()
+                        {
+                            self.global_send[dest].append(part);
+                        }
+                    }
+                    cycle_secs +=
+                        sw.charge(&mut phase_times, Phase::Collocate);
+                    if record_cycle_times {
+                        cycle_times.push(cycle_secs);
+                    }
+
+                    // ---- communicate -------------------------------------
+                    self.communicate(comm, s, dual, &mut phase_times);
+                }
+
+                let mut spikes = std::mem::take(&mut self.spikes);
+                let (mut n_short, mut n_long, mut n_neurons) =
+                    (0usize, 0usize, 0usize);
+                for h in handles {
+                    let (worker_spikes, s_, l_, n_) =
+                        h.join().expect("barrier worker panicked");
+                    spikes.extend(worker_spikes);
+                    n_short += s_;
+                    n_long += l_;
+                    n_neurons += n_;
+                }
+                (spikes, n_short, n_long, n_neurons)
+            },
+        );
+
+        RankResult {
+            rank: self.rank,
+            phase_times,
+            cycle_times,
+            spikes,
+            n_conns_short: n_short,
+            n_conns_long: n_long,
+            n_neurons,
+        }
+    }
+
     /// Virtual threads on dedicated worker OS threads: one scoped worker
-    /// per [`ThreadState`], phase-stepped by command/reply channels.  The
-    /// coordinator (this rank's OS thread) keeps the communicate step and
-    /// all ordering decisions, so results match the sequential schedule.
-    fn run_pooled<T: Transport>(
+    /// per [`ThreadState`], phase-stepped by command/reply channels — the
+    /// PR 1 runtime, kept selectable for A/B comparison against the
+    /// barrier runtime.  The coordinator (this rank's OS thread) keeps
+    /// the communicate step and all ordering decisions, so results match
+    /// the sequential schedule.
+    fn run_pooled_channels<T: Transport>(
         mut self,
         comm: &T,
         s_cycles: u64,

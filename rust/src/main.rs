@@ -48,7 +48,8 @@ fn print_usage() {
            simulate --model <sanity|mam-benchmark|mam> [--strategy s]\n\
                     [--ranks M] [--threads T] [--t-model ms] [--seed n]\n\
                     [--scale f] [--areas n] [--update-path native|xla]\n\
-                    [--exec sequential|pooled] [--quota spikes]\n\
+                    [--exec sequential|pooled|pooled-channels]\n\
+                    [--quota spikes]\n\
                     [--record-spikes]\n\
            figure <name> [--t-model ms] [--seed n] [--out dir]\n\
            figures [--t-model ms] [--out dir]\n\
@@ -123,7 +124,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("{}", table.render());
     println!(
         "cycles {} | spikes {} | mean rate {:.2} /s | RTF {:.1} | \
-         wall {:.2}s | comm (a2a, swaps, bytes, resizes) {:?}",
+         wall {:.2}s | comm (a2a, swaps, bytes, resizes, max/pair) {:?}",
         res.s_cycles,
         res.n_spikes(),
         res.mean_rate_hz(spec.total_neurons() as usize),

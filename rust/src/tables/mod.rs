@@ -9,6 +9,13 @@
 //!   deduplicated list of ranks hosting at least one of its targets
 //!   (NEST's *spike compression*: one message per target rank, not per
 //!   target thread).
+//! * [`SourceShards`] — rank-level source → owning-threads index built
+//!   from the per-thread [`ConnTable`]s: for every source GID with at
+//!   least one connection on this rank, the sorted list of virtual
+//!   threads hosting connections from it.  The deliver phase uses it to
+//!   route each received spike into exactly the per-thread queues that
+//!   will consume it (`O(batch + hits)` instead of every thread scanning
+//!   the full batch, `O(T·batch)`).
 //! * [`Pathways`] — the pair of short-/long-range copies of a structure;
 //!   the conventional strategy uses only the short slot.
 
@@ -138,6 +145,111 @@ impl ConnTable {
     }
 }
 
+/// Rank-level source-membership index for thread-sharded spike delivery:
+/// CSR from source GID to the virtual threads of this rank hosting at
+/// least one connection from that source.  Built once per pathway at
+/// rank-construction time by merging the per-thread connection tables;
+/// shares the dense-index trade-off of [`ConnTable`].
+#[derive(Clone, Debug, Default)]
+pub struct SourceShards {
+    sources: Vec<Gid>,
+    offsets: Vec<u32>,
+    threads: Vec<u16>,
+    /// Dense `gid -> group index` map (`u32::MAX` = no connections);
+    /// empty when the GID range exceeds [`DENSE_INDEX_LIMIT`].
+    dense: Vec<u32>,
+}
+
+impl SourceShards {
+    /// Merge the per-thread connection tables (iterated in virtual-thread
+    /// order) into the rank-level source → threads index.
+    pub fn build<'a, I>(tables: I) -> SourceShards
+    where
+        I: IntoIterator<Item = &'a ConnTable>,
+    {
+        let mut pairs: Vec<(Gid, u16)> = Vec::new();
+        for (t, table) in tables.into_iter().enumerate() {
+            // iter_groups yields each source once per table, ascending
+            for (src, _) in table.iter_groups() {
+                pairs.push((src, t as u16));
+            }
+        }
+        pairs.sort_unstable();
+        let mut sources = Vec::new();
+        let mut offsets = Vec::new();
+        let mut threads = Vec::with_capacity(pairs.len());
+        let mut last: Option<Gid> = None;
+        for (src, t) in pairs {
+            if last != Some(src) {
+                sources.push(src);
+                offsets.push(threads.len() as u32);
+                last = Some(src);
+            }
+            threads.push(t);
+        }
+        offsets.push(threads.len() as u32);
+        let max_src = sources.last().map(|&s| s as usize + 1).unwrap_or(0);
+        let dense = if max_src > 0 && max_src <= DENSE_INDEX_LIMIT {
+            let mut d = vec![u32::MAX; max_src];
+            for (i, &s) in sources.iter().enumerate() {
+                d[s as usize] = i as u32;
+            }
+            d
+        } else {
+            Vec::new()
+        };
+        SourceShards { sources, offsets, threads, dense }
+    }
+
+    /// Virtual threads hosting connections from `source`, ascending
+    /// (empty slice if none) — the per-spike routing lookup.
+    #[inline]
+    pub fn lookup(&self, source: Gid) -> &[u16] {
+        if !self.dense.is_empty() {
+            let i = match self.dense.get(source as usize) {
+                Some(&i) if i != u32::MAX => i as usize,
+                _ => return &[],
+            };
+            let lo = self.offsets[i] as usize;
+            let hi = self.offsets[i + 1] as usize;
+            return &self.threads[lo..hi];
+        }
+        match self.sources.binary_search(&source) {
+            Ok(i) => {
+                let lo = self.offsets[i] as usize;
+                let hi = self.offsets[i + 1] as usize;
+                &self.threads[lo..hi]
+            }
+            Err(_) => &[],
+        }
+    }
+
+    /// Distinct sources with at least one connection on this rank.
+    pub fn n_sources(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Total (source, thread) routing entries.
+    pub fn total_entries(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn heap_bytes(&self) -> usize {
+        self.sources.len() * std::mem::size_of::<Gid>()
+            + self.offsets.len() * 4
+            + self.threads.len() * 2
+            + self.dense.len() * 4
+    }
+}
+
+/// Test bit `idx` of a has-targets bitmask built by
+/// [`TargetTable::has_targets_mask`].
+#[inline]
+pub fn mask_test(mask: &[u64], idx: usize) -> bool {
+    mask[idx / 64] & (1u64 << (idx % 64)) != 0
+}
+
 /// Presynaptic target table with spike compression: per thread-local
 /// neuron, the sorted, deduplicated ranks hosting its targets.
 #[derive(Clone, Debug, Default)]
@@ -171,6 +283,21 @@ impl TargetTable {
     /// Total (neuron, rank) entries — the communication fan-out.
     pub fn total_entries(&self) -> usize {
         self.ranks_of.iter().map(|v| v.len()).sum()
+    }
+
+    /// Per-neuron has-targets bitmask (64 neurons per word): bit `i` is
+    /// set iff local neuron `i` has at least one target rank.  Built
+    /// once after target-table construction so the update phase tests
+    /// membership with [`mask_test`] instead of chasing the per-neuron
+    /// rank vectors on every spike.
+    pub fn has_targets_mask(&self) -> Vec<u64> {
+        let mut mask = vec![0u64; self.ranks_of.len().div_ceil(64)];
+        for (i, v) in self.ranks_of.iter().enumerate() {
+            if !v.is_empty() {
+                mask[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        mask
     }
 }
 
@@ -286,6 +413,78 @@ mod tests {
         p.get_mut(true).push(2);
         assert_eq!(p.get(false), &vec![1]);
         assert_eq!(p.get(true), &vec![2]);
+    }
+
+    #[test]
+    fn source_shards_route_to_owning_threads() {
+        // thread 0 owns sources {2, 5}, thread 1 owns {5, 9}, thread 2
+        // owns nothing
+        let t0 = ConnTable::build(vec![
+            (5, conn(0, 1.0, 1)),
+            (2, conn(1, 2.0, 1)),
+        ]);
+        let t1 = ConnTable::build(vec![
+            (9, conn(0, 1.0, 1)),
+            (5, conn(1, 1.0, 1)),
+            (5, conn(2, 1.0, 2)),
+        ]);
+        let t2 = ConnTable::build(vec![]);
+        let shards = SourceShards::build([&t0, &t1, &t2]);
+        assert_eq!(shards.lookup(2), &[0]);
+        assert_eq!(shards.lookup(5), &[0, 1]); // ascending thread order
+        assert_eq!(shards.lookup(9), &[1]);
+        assert_eq!(shards.lookup(7), &[] as &[u16]);
+        assert_eq!(shards.n_sources(), 3);
+        assert_eq!(shards.total_entries(), 4);
+    }
+
+    #[test]
+    fn source_shards_empty() {
+        let shards = SourceShards::build(std::iter::empty::<&ConnTable>());
+        assert_eq!(shards.n_sources(), 0);
+        assert_eq!(shards.lookup(0), &[] as &[u16]);
+    }
+
+    #[test]
+    fn source_shards_match_per_table_membership() {
+        // property: shards.lookup(s) contains t iff tables[t].has_source(s)
+        let mut rng = Pcg64::seed_from_u64(11);
+        let tables: Vec<ConnTable> = (0..4)
+            .map(|_| {
+                let entries: Vec<(Gid, LocalConn)> = (0..200)
+                    .map(|i| (rng.below(80) as Gid, conn(i, 1.0, 1)))
+                    .collect();
+                ConnTable::build(entries)
+            })
+            .collect();
+        let shards = SourceShards::build(tables.iter());
+        for src in 0..80u32 {
+            let want: Vec<u16> = tables
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.has_source(src))
+                .map(|(i, _)| i as u16)
+                .collect();
+            assert_eq!(shards.lookup(src), want.as_slice(), "source {src}");
+        }
+    }
+
+    #[test]
+    fn has_targets_mask_matches_ranks() {
+        let mut t = TargetTable::new(130); // spans three 64-bit words
+        t.add(0, 1);
+        t.add(63, 2);
+        t.add(64, 3);
+        t.add(129, 4);
+        let mask = t.has_targets_mask();
+        assert_eq!(mask.len(), 3);
+        for i in 0..130 {
+            assert_eq!(
+                mask_test(&mask, i),
+                !t.ranks(i).is_empty(),
+                "neuron {i}"
+            );
+        }
     }
 
     #[test]

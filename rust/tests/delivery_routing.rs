@@ -1,0 +1,158 @@
+//! Edge cases of the thread-sharded spike delivery and determinism of
+//! the persistent barrier worker runtime (`engine::rank`).
+//!
+//! The routing layer fans each received spike batch into per-thread
+//! queues once, so correctness hinges on: empty batches being no-ops,
+//! spikes from sources without local connections being dropped cleanly,
+//! threads that own few (or zero) neurons staying in lock-step at the
+//! phase barriers, and repeated runs of the same configuration being
+//! bit-deterministic.
+
+use nsim::config::{ExecMode, RunConfig, Strategy};
+use nsim::engine::simulate;
+use nsim::models;
+use nsim::network::ModelSpec;
+
+fn run_exec(
+    spec: &ModelSpec,
+    strategy: Strategy,
+    m: usize,
+    t: usize,
+    t_model_ms: f64,
+    exec: ExecMode,
+) -> Vec<(u64, u32)> {
+    let cfg = RunConfig {
+        strategy,
+        m_ranks: m,
+        threads_per_rank: t,
+        t_model_ms,
+        seed: 12,
+        exec,
+        record_spikes: true,
+        ..RunConfig::default()
+    };
+    simulate(spec, &cfg).expect("simulation failed").spikes
+}
+
+#[test]
+fn empty_batches_are_noops() {
+    // ignore-and-fire at 2.5 Hz leaves most cycles without any spikes:
+    // the deliver phase must route empty batches through the barrier
+    // protocol without stalling or corrupting state
+    let spec = models::mam_benchmark(4, 0.004, 1.0).unwrap();
+    for strategy in [Strategy::Conventional, Strategy::StructureAware] {
+        let seq = run_exec(&spec, strategy, 4, 3, 20.0, ExecMode::Sequential);
+        let bar = run_exec(&spec, strategy, 4, 3, 20.0, ExecMode::Pooled);
+        assert_eq!(seq, bar, "{}: empty-batch cycles diverged", strategy.name());
+    }
+}
+
+#[test]
+fn first_cycle_with_no_received_spikes() {
+    // the very first deliver of every run sees empty receive buffers; a
+    // single-cycle run exercises exactly that path
+    let spec = models::sanity_net(120, 2).unwrap();
+    let one_cycle_ms = 2.0; // a handful of cycles at most
+    let seq = run_exec(
+        &spec,
+        Strategy::Conventional,
+        2,
+        4,
+        one_cycle_ms,
+        ExecMode::Sequential,
+    );
+    let bar = run_exec(
+        &spec,
+        Strategy::Conventional,
+        2,
+        4,
+        one_cycle_ms,
+        ExecMode::Pooled,
+    );
+    assert_eq!(seq, bar);
+}
+
+#[test]
+fn sources_without_local_targets_are_dropped_cleanly() {
+    // round-robin placement scatters connectivity so each rank receives
+    // spikes whose sources connect to only a subset of its threads; the
+    // sharded router must drop the rest without observable effect
+    let spec = models::sanity_net(150, 3).unwrap();
+    let seq =
+        run_exec(&spec, Strategy::Conventional, 3, 3, 100.0, ExecMode::Sequential);
+    assert!(seq.len() > 100, "too quiet to be meaningful");
+    let bar =
+        run_exec(&spec, Strategy::Conventional, 3, 3, 100.0, ExecMode::Pooled);
+    assert_eq!(seq, bar);
+}
+
+#[test]
+fn more_threads_than_spiking_neurons() {
+    // 12 neurons over 2 ranks x 8 threads: most threads host one neuron,
+    // some host none — every thread must still participate in all phase
+    // barriers every cycle
+    let spec = models::sanity_net(6, 2).unwrap();
+    for exec in [ExecMode::Pooled, ExecMode::PooledChannels] {
+        let seq = run_exec(
+            &spec,
+            Strategy::Conventional,
+            2,
+            8,
+            50.0,
+            ExecMode::Sequential,
+        );
+        let par = run_exec(&spec, Strategy::Conventional, 2, 8, 50.0, exec);
+        assert_eq!(seq, par, "diverged with exec={}", exec.name());
+        assert!(!seq.is_empty(), "expected some spikes");
+    }
+}
+
+#[test]
+fn structure_aware_with_sparse_threads() {
+    // dual pathways with more threads than neurons per area slice
+    let spec = models::sanity_net(8, 4).unwrap();
+    let seq = run_exec(
+        &spec,
+        Strategy::StructureAware,
+        4,
+        6,
+        50.0,
+        ExecMode::Sequential,
+    );
+    let bar = run_exec(
+        &spec,
+        Strategy::StructureAware,
+        4,
+        6,
+        50.0,
+        ExecMode::Pooled,
+    );
+    assert_eq!(seq, bar);
+}
+
+#[test]
+fn repeated_barrier_runs_are_deterministic() {
+    // the barrier runtime re-spawns workers every run; identical inputs
+    // must give bit-identical spike trains on every repetition
+    let spec = models::sanity_net(200, 4).unwrap();
+    let first = run_exec(
+        &spec,
+        Strategy::StructureAware,
+        4,
+        4,
+        100.0,
+        ExecMode::Pooled,
+    );
+    assert!(first.len() > 100);
+    for rep in 0..2 {
+        let again = run_exec(
+            &spec,
+            Strategy::StructureAware,
+            4,
+            4,
+            100.0,
+            ExecMode::Pooled,
+        );
+        assert_eq!(first, again, "repetition {rep} diverged");
+    }
+}

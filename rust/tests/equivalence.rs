@@ -130,9 +130,10 @@ fn spike_trains_independent_of_thread_count() {
 
 #[test]
 fn spike_trains_identical_across_exec_modes() {
-    // the tentpole invariant of the pooled execution path: same seed =>
-    // identical (step, gid) spike trains across thread counts and across
-    // sequential-vs-pooled execution, for both strategies
+    // the tentpole invariant of the parallel execution paths: same seed
+    // => identical (step, gid) spike trains across thread counts and
+    // across sequential vs barrier-runtime vs legacy channel-pool
+    // execution, for both strategies
     let spec = models::sanity_net(240, 4).unwrap();
     for strategy in [Strategy::Conventional, Strategy::StructureAware] {
         let base =
@@ -144,7 +145,11 @@ fn spike_trains_identical_across_exec_modes() {
             base.len()
         );
         for t in [1usize, 2, 4] {
-            for exec in [ExecMode::Sequential, ExecMode::Pooled] {
+            for exec in [
+                ExecMode::Sequential,
+                ExecMode::Pooled,
+                ExecMode::PooledChannels,
+            ] {
                 let got = run_exec(&spec, strategy, 4, t, 100.0, exec);
                 assert_eq!(
                     base,
