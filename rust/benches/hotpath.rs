@@ -13,12 +13,14 @@
 //! `--smoke` shrinks windows and model times for CI.
 
 use nsim::comm::{SpikeMsg, Transport, World};
-use nsim::config::{ExecMode, RunConfig, Strategy};
+use nsim::config::{CommMode, ExecMode, RunConfig, Strategy};
 use nsim::engine::neuron::NeuronBlock;
 use nsim::engine::ringbuffer::RingBuffer;
 use nsim::engine::simulate;
 use nsim::models;
-use nsim::network::spec::{LifParams, NeuronKind};
+use nsim::network::spec::{
+    AreaSpec, DelayDist, LifParams, NeuronKind, WeightRule,
+};
 use nsim::network::ModelSpec;
 use nsim::tables::{ConnTable, LocalConn, TargetTable};
 use nsim::util::json::Json;
@@ -67,6 +69,7 @@ impl Harness {
         spec: &ModelSpec,
         strategy: Strategy,
         exec: ExecMode,
+        comm: CommMode,
         m: usize,
         threads: usize,
         t_model_ms: f64,
@@ -78,6 +81,7 @@ impl Harness {
             t_model_ms,
             seed: 654,
             exec,
+            comm,
             ..RunConfig::default()
         };
         let t0 = Instant::now();
@@ -86,17 +90,22 @@ impl Harness {
         let neuron_steps = spec.total_neurons() as f64 * res.s_cycles as f64;
         let mcps = neuron_steps / secs / 1e6;
         println!(
-            "engine: {model:<14} {:<16} {:<16} T={threads} {} neurons x \
-             {} cycles in {secs:.3} s = {mcps:.2} M neuron-cycles/s",
+            "engine: {model:<14} {:<16} {:<16} {:<8} T={threads} {} neurons \
+             x {} cycles in {secs:.3} s = {mcps:.2} M neuron-cycles/s \
+             (sync {:.4} s, hidden {:.4} s)",
             strategy.name(),
             exec.name(),
+            comm.name(),
             spec.total_neurons(),
             res.s_cycles,
+            res.mean_times.get(Phase::Synchronize),
+            res.comm_stats.hidden_secs / m as f64,
         );
         self.engine.push(Json::obj(vec![
             ("model", model.into()),
             ("strategy", strategy.name().into()),
             ("exec", exec.name().into()),
+            ("comm", comm.name().into()),
             ("ranks", m.into()),
             ("threads", threads.into()),
             ("t_model_ms", t_model_ms.into()),
@@ -114,8 +123,57 @@ impl Harness {
                 "exchange_s",
                 res.mean_times.get(Phase::DataExchange).into(),
             ),
+            // total split-phase completions across all m ranks
+            (
+                "overlapped_exchanges",
+                (res.comm_stats.overlapped_exchanges as f64).into(),
+            ),
+            // per-rank means, same scale as the phase timings above (the
+            // CommStats duration counters aggregate over all m ranks)
+            ("post_s", (res.comm_stats.post_secs / m as f64).into()),
+            (
+                "complete_wait_s",
+                (res.comm_stats.complete_wait_secs / m as f64).into(),
+            ),
+            (
+                "hidden_s",
+                (res.comm_stats.hidden_secs / m as f64).into(),
+            ),
         ]));
     }
+}
+
+/// Deliver-heavy LIF net for the overlap A/B: four areas with the last
+/// one 3x larger, so under area-aligned placement its rank is the
+/// persistent straggler every blocking barrier waits for.  Inter-area
+/// delays are drawn tightly around 5 ms, keeping every rank's realized
+/// minimum incoming long-range delay far above the 1 ms `d_min_inter`
+/// cutoff (D = 10) — multi-cycle deadline slack for the split-phase
+/// exchange to hide the straggler's skew in.
+fn overlap_net(n_base: u32) -> anyhow::Result<ModelSpec> {
+    let params = LifParams {
+        i_e_pa: LifParams::default().i_e_for_rate(30.0),
+        ..LifParams::default()
+    };
+    let areas = (0..4u32)
+        .map(|i| AreaSpec {
+            name: format!("O{i}"),
+            n: if i == 3 { 3 * n_base } else { n_base },
+            neuron: NeuronKind::Lif(params),
+        })
+        .collect();
+    let k_intra = (n_base / 10).clamp(1, n_base - 1);
+    let k_inter = (n_base / 20).max(1);
+    ModelSpec::new(
+        format!("overlap-{n_base}"),
+        areas,
+        k_intra,
+        k_inter,
+        WeightRule { w_mv: 0.25, g: 4.0, inh_fraction: 0.2 },
+        DelayDist::new(1.25, 0.625, 0.1),
+        DelayDist::new(5.0, 0.4, 1.0),
+        0.1,
+    )
 }
 
 fn main() {
@@ -357,6 +415,7 @@ fn main() {
                 &spec,
                 strategy,
                 exec,
+                CommMode::Blocking,
                 4,
                 threads,
                 t_model,
@@ -382,9 +441,34 @@ fn main() {
             &heavy,
             Strategy::Conventional,
             exec,
+            CommMode::Blocking,
             2,
             threads,
             heavy_t_model,
+        );
+    }
+
+    // --- latency-hiding A/B: blocking vs split-phase overlap ----------
+    // deliver-heavy LIF net with deliberately imbalanced areas (the last
+    // area is 3x the others, so its rank is the persistent straggler
+    // every rank waits for at the blocking barrier) and realized
+    // inter-area delays well above the d_min_inter cutoff (narrow-sigma
+    // distribution), which gives every rank several cycles of deadline
+    // slack to hide the straggler's skew in
+    println!();
+    let ov_n = if smoke { 400 } else { 1200 };
+    let ov_t_model = if smoke { 20.0 } else { 100.0 };
+    let ov_spec = overlap_net(ov_n).unwrap();
+    for comm in [CommMode::Blocking, CommMode::Overlap] {
+        h.engine_run(
+            "deliver-heavy-ov",
+            &ov_spec,
+            Strategy::StructureAware,
+            ExecMode::Pooled,
+            comm,
+            4,
+            2,
+            ov_t_model,
         );
     }
 

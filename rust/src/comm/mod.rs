@@ -12,6 +12,16 @@
 //!   exchange round follows.
 //! * [`Transport::local_swap_into`] — the structure-aware local pathway:
 //!   a rank-local swap of send and receive buffers, no synchronization.
+//! * [`SplitTransport::alltoall_start`] / [`PendingExchange::complete`] —
+//!   the **split-phase** form of the global exchange ([`nonblocking`]):
+//!   the post side deposits into epoch-stamped double-buffered mailboxes
+//!   without waiting, and the completion side rendezvous with each
+//!   sender's deposit only when the receiver actually needs the data.
+//!   The slack between post and completion — bounded by the inter-area
+//!   delay of the spikes on the wire — is latency-hiding budget: compute
+//!   of the next epoch runs while peers catch up.  See the
+//!   [`nonblocking`] module docs for the protocol, the split-phase
+//!   quota-resize and the hidden-latency accounting.
 //!
 //! # The [`Transport`] abstraction
 //!
@@ -45,6 +55,12 @@
 //! interconnect is modelled separately by `vcluster::interconnect` (the
 //! hardware substitution of DESIGN.md §2).
 
+pub mod nonblocking;
+
+pub use nonblocking::{
+    CompletionTiming, Pending, PendingExchange, SplitTransport,
+};
+
 use crate::network::Gid;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
@@ -70,19 +86,51 @@ pub struct CommStats {
     pub bytes_sent: AtomicU64,
     pub resize_rounds: AtomicU64,
     pub max_send_per_pair: AtomicUsize,
+    /// Split-phase exchanges completed (counted per rank, like
+    /// `alltoall_calls`, which also counts them).
+    pub overlapped_exchanges: AtomicU64,
+    /// Post-side time of split-phase exchanges (depositing; never waits).
+    pub post_nanos: AtomicU64,
+    /// Completion-side time blocked waiting for missing deposits — the
+    /// un-hidden residue of the peers' synchronization skew.
+    pub complete_wait_nanos: AtomicU64,
+    /// Peer skew that elapsed between post and completion while the rank
+    /// was computing — synchronization time moved off the critical path.
+    pub hidden_nanos: AtomicU64,
+}
+
+/// Point-in-time view of [`CommStats`], with durations in seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommStatsSnapshot {
+    pub alltoall_calls: u64,
+    pub local_swaps: u64,
+    pub bytes_sent: u64,
+    pub resize_rounds: u64,
+    pub max_send_per_pair: u64,
+    pub overlapped_exchanges: u64,
+    pub post_secs: f64,
+    pub complete_wait_secs: f64,
+    pub hidden_secs: f64,
 }
 
 impl CommStats {
-    /// (alltoall calls, local swaps, bytes sent, resize rounds, largest
-    /// single send buffer observed per rank pair).
-    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
-        (
-            self.alltoall_calls.load(Ordering::Relaxed),
-            self.local_swaps.load(Ordering::Relaxed),
-            self.bytes_sent.load(Ordering::Relaxed),
-            self.resize_rounds.load(Ordering::Relaxed),
-            self.max_send_per_pair.load(Ordering::Relaxed) as u64,
-        )
+    pub fn snapshot(&self) -> CommStatsSnapshot {
+        CommStatsSnapshot {
+            alltoall_calls: self.alltoall_calls.load(Ordering::Relaxed),
+            local_swaps: self.local_swaps.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            resize_rounds: self.resize_rounds.load(Ordering::Relaxed),
+            max_send_per_pair: self.max_send_per_pair.load(Ordering::Relaxed)
+                as u64,
+            overlapped_exchanges: self
+                .overlapped_exchanges
+                .load(Ordering::Relaxed),
+            post_secs: self.post_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            complete_wait_secs: self.complete_wait_nanos.load(Ordering::Relaxed)
+                as f64
+                / 1e9,
+            hidden_secs: self.hidden_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
     }
 }
 
@@ -94,6 +142,8 @@ struct WorldInner {
     /// Current buffer quota in spikes per rank pair (grows on overflow).
     quota: AtomicUsize,
     overflow: AtomicBool,
+    /// Split-phase mailbox state (epoch-stamped double buffers).
+    nb: nonblocking::NbWorld,
     stats: CommStats,
 }
 
@@ -119,6 +169,7 @@ impl World {
                 mailboxes,
                 quota: AtomicUsize::new(initial_quota.max(1)),
                 overflow: AtomicBool::new(false),
+                nb: nonblocking::NbWorld::new(m),
                 stats: CommStats::default(),
             }),
         }
@@ -411,9 +462,12 @@ mod tests {
                 });
             }
         });
-        let (_, _, _, resizes, max_pair) = w2.stats().snapshot();
-        assert_eq!(resizes, 1);
-        assert_eq!(max_pair, 10, "largest per-pair send not tracked");
+        let snap = w2.stats().snapshot();
+        assert_eq!(snap.resize_rounds, 1);
+        assert_eq!(
+            snap.max_send_per_pair, 10,
+            "largest per-pair send not tracked"
+        );
         assert!(w2.current_quota() >= 10);
     }
 
@@ -425,11 +479,11 @@ mod tests {
         let recv = comm.local_swap(&mut send);
         assert_eq!(recv, vec![msg(1, 2), msg(3, 4)]);
         assert!(send.is_empty());
-        let (a2a, swaps, _, _, max_pair) = world.stats().snapshot();
-        assert_eq!(a2a, 0);
-        assert_eq!(swaps, 1);
+        let snap = world.stats().snapshot();
+        assert_eq!(snap.alltoall_calls, 0);
+        assert_eq!(snap.local_swaps, 1);
         // local swaps bypass the global exchange: no per-pair maximum
-        assert_eq!(max_pair, 0);
+        assert_eq!(snap.max_send_per_pair, 0);
     }
 
     #[test]
@@ -446,11 +500,14 @@ mod tests {
                 });
             }
         });
-        let (calls, _, bytes, _, max_pair) = world.stats().snapshot();
-        assert_eq!(calls, 2);
+        let snap = world.stats().snapshot();
+        assert_eq!(snap.alltoall_calls, 2);
         // 2 ranks x 2 dests x 3 spikes x 8 bytes
-        assert_eq!(bytes, 96);
-        assert_eq!(max_pair, 3);
+        assert_eq!(snap.bytes_sent, 96);
+        assert_eq!(snap.max_send_per_pair, 3);
+        // no split-phase traffic in a blocking-only run
+        assert_eq!(snap.overlapped_exchanges, 0);
+        assert_eq!(snap.hidden_secs, 0.0);
     }
 
     #[test]
@@ -523,10 +580,16 @@ mod tests {
         let expect: usize =
             (0..50u32).map(|r| per_round(r) * M).sum();
         assert!(results.iter().all(|&t| t == expect), "{results:?}");
-        let (calls, _, _, resizes, max_pair) = w2.stats().snapshot();
-        assert_eq!(calls, 50 * M as u64);
-        assert_eq!(resizes, 1, "overflow round must resize exactly once");
-        assert_eq!(max_pair, 9, "per-pair maximum is the overflow round");
+        let snap = w2.stats().snapshot();
+        assert_eq!(snap.alltoall_calls, 50 * M as u64);
+        assert_eq!(
+            snap.resize_rounds, 1,
+            "overflow round must resize exactly once"
+        );
+        assert_eq!(
+            snap.max_send_per_pair, 9,
+            "per-pair maximum is the overflow round"
+        );
         assert!(w2.current_quota() >= 9);
     }
 

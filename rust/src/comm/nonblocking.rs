@@ -1,0 +1,568 @@
+//! Split-phase (nonblocking) global exchange over epoch-stamped
+//! double-buffered mailboxes.
+//!
+//! The blocking [`Transport::alltoall_into`](super::Transport) pays the
+//! full synchronization skew on the critical path: an explicit barrier
+//! in front of the collective makes every rank wait for the slowest one
+//! before any data moves.  The split-phase protocol decomposes the
+//! collective into
+//!
+//! * [`SplitTransport::alltoall_start`] — the *post* side.  The sender
+//!   deposits its per-destination buffers into the mailboxes and returns
+//!   immediately; no rank ever waits here.  Returns a [`PendingExchange`]
+//!   handle representing the in-flight collective.
+//! * [`PendingExchange::complete`] — the *completion* side.  The receiver
+//!   rendezvous with each sender's deposit only at the moment it actually
+//!   needs the data; senders that already deposited cost nothing, and the
+//!   wait for stragglers is exactly the latency that could not be hidden
+//!   by the work done since the post.
+//!
+//! # Epoch-stamped double buffering
+//!
+//! Every (dest, src) pair owns **two** mailbox slots, indexed by the
+//! parity of the exchange sequence number, and each deposit is stamped
+//! with its sequence number.  A sender may therefore post exchange `k+1`
+//! before its receivers have drained exchange `k` (the two live in
+//! different slots), which is what lets the engine keep **one exchange
+//! in flight** while the next epoch's spikes accumulate.  Depth is
+//! bounded at one in-flight exchange per rank: posting `k+1` requires
+//! having completed `k` (debug-asserted), which in turn guarantees a
+//! slot's previous occupant (`k-2`, same parity) was consumed before it
+//! is overwritten.
+//!
+//! # The split-phase quota-resize protocol
+//!
+//! The blocking collective agrees on buffer overflow via a flag guarded
+//! by two barriers.  Split-phase, the agreement rides on the rendezvous
+//! that happens anyway: a sender whose largest per-pair deposit exceeds
+//! the current quota marks the exchange round's overflow flag at post
+//! time; completion waits for all `M` deposits, so by the time any rank
+//! finishes completing, the flag is final.  The **last** rank to
+//! complete the round settles it — doubling the quota until the largest
+//! observed message fits and counting one secondary round — exactly the
+//! two-round semantics of the blocking protocol, with both rounds
+//! posted eagerly and no extra synchronization.
+//!
+//! # Buffer recycling
+//!
+//! Deposits and drains both *swap* vectors with the mailbox slot, so
+//! capacity circulates sender → slot → receiver → sender per parity and
+//! no steady-state round allocates — the same contract as the blocking
+//! [`Transport`](super::Transport) (see the module docs of
+//! [`crate::comm`]).
+//!
+//! # Latency-hiding accounting
+//!
+//! Each deposit is timestamped.  At completion the receiver computes the
+//! *hidden* latency of the exchange — the part of the peers' post skew
+//! that elapsed while this rank was doing useful work between
+//! [`SplitTransport::alltoall_start`] and [`PendingExchange::complete`]:
+//!
+//! ```text
+//! hidden = clamp(min(t_complete_entry, t_last_deposit) - t_post, >= 0)
+//! ```
+//!
+//! A blocking exchange would have waited `t_last_deposit - t_post` at
+//! the barrier; the completion side only waits for whatever of that is
+//! left.  The sums land in
+//! [`CommStats::hidden_nanos`](super::CommStats) /
+//! [`CommStats::overlapped_exchanges`](super::CommStats) and surface
+//! through [`CommStatsSnapshot`](super::CommStatsSnapshot).
+
+use super::{Communicator, SpikeMsg, Transport, WorldInner, SPIKE_WIRE_BYTES};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One epoch-stamped mailbox slot of a (dest, src) pair.
+#[derive(Default)]
+struct NbSlot {
+    state: Mutex<SlotState>,
+    ready: Condvar,
+}
+
+#[derive(Default)]
+struct SlotState {
+    /// Sequence number of the current deposit (valid when `filled`).
+    seq: u64,
+    filled: bool,
+    payload: Vec<SpikeMsg>,
+    deposited_at: Option<Instant>,
+}
+
+/// Shared per-round state of the split-phase resize protocol, indexed by
+/// sequence parity.  Reused every second exchange; the depth-one flight
+/// bound guarantees a round is fully completed (and reset by its last
+/// completer) before the parity is reused.
+struct RoundState {
+    overflow: AtomicBool,
+    /// Counts down from M as ranks complete the round; the rank that
+    /// takes it to zero settles the resize and re-arms the counter.
+    pending_completions: AtomicUsize,
+}
+
+/// Split-phase mailbox state of a [`super::World`]; lives next to the
+/// blocking mailboxes so the two protocols can be mixed call-by-call
+/// (the engine builds with the blocking collective and runs overlapped).
+pub(super) struct NbWorld {
+    /// `slots[dest][src][seq % 2]`.
+    slots: Vec<Vec<[NbSlot; 2]>>,
+    rounds: [RoundState; 2],
+    /// Per-rank posted-exchange counter (the sequence number source).
+    next_seq: Vec<AtomicU64>,
+    /// Per-rank completed-exchange counter (depth bookkeeping).
+    completed: Vec<AtomicU64>,
+}
+
+impl NbWorld {
+    pub(super) fn new(m: usize) -> NbWorld {
+        NbWorld {
+            slots: (0..m)
+                .map(|_| {
+                    (0..m)
+                        .map(|_| [NbSlot::default(), NbSlot::default()])
+                        .collect()
+                })
+                .collect(),
+            rounds: [
+                RoundState {
+                    overflow: AtomicBool::new(false),
+                    pending_completions: AtomicUsize::new(m),
+                },
+                RoundState {
+                    overflow: AtomicBool::new(false),
+                    pending_completions: AtomicUsize::new(m),
+                },
+            ],
+            next_seq: (0..m).map(|_| AtomicU64::new(0)).collect(),
+            completed: (0..m).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// Timing of the completion side of a split-phase exchange.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompletionTiming {
+    /// Time spent blocked waiting for deposits that had not landed yet —
+    /// the completion-side synchronization wait (the un-hidden residue
+    /// of the peers' skew).
+    pub wait_secs: f64,
+    /// Time spent draining the mailboxes (the data movement proper).
+    pub drain_secs: f64,
+}
+
+/// An in-flight split-phase collective.  Must be completed exactly once;
+/// dropping it without [`PendingExchange::complete`] panics in debug
+/// builds (a dropped exchange would deadlock the peers' completions, as
+/// losing an `MPI_Ialltoall` request would).
+pub trait Pending {
+    /// Seconds the post side spent depositing (never waits on peers).
+    fn post_secs(&self) -> f64;
+
+    /// Rendezvous with all deposits of this exchange: `recv` is resized
+    /// to M slots and `recv[s]` is overwritten with the spikes from
+    /// source rank `s` (per-source order preserved, capacity recycled
+    /// through the mailbox).  Blocks only for senders that have not
+    /// deposited yet.
+    fn complete(self, recv: &mut Vec<Vec<SpikeMsg>>) -> CompletionTiming;
+}
+
+/// A transport with a split-phase global exchange in addition to the
+/// blocking collectives of [`Transport`].  All ranks must issue the same
+/// sequence of starts and completions (collective semantics), with at
+/// most one exchange in flight per rank.
+pub trait SplitTransport: Transport {
+    type Pending: Pending;
+
+    /// Post the send buffers of a global exchange without waiting for
+    /// any other rank.  `send[d]` is drained into the mailbox for rank
+    /// `d` (capacity recycled).  The returned handle must be completed
+    /// before the next `alltoall_start` on this rank.
+    fn alltoall_start(&self, send: &mut [Vec<SpikeMsg>]) -> Self::Pending;
+}
+
+/// Handle to an in-flight exchange of the shared-memory world.
+#[must_use = "an unfinished exchange deadlocks its peers; call complete()"]
+pub struct PendingExchange {
+    world: Arc<WorldInner>,
+    rank: usize,
+    seq: u64,
+    posted_at: Instant,
+    post_secs: f64,
+    completed: bool,
+}
+
+impl Drop for PendingExchange {
+    fn drop(&mut self) {
+        if !self.completed && !std::thread::panicking() {
+            debug_assert!(
+                false,
+                "PendingExchange (rank {}, seq {}) dropped without \
+                 complete(); peers would deadlock at their rendezvous",
+                self.rank, self.seq
+            );
+        }
+    }
+}
+
+impl Pending for PendingExchange {
+    fn post_secs(&self) -> f64 {
+        self.post_secs
+    }
+
+    fn complete(mut self, recv: &mut Vec<Vec<SpikeMsg>>) -> CompletionTiming {
+        self.completed = true;
+        let w = &*self.world;
+        let seq = self.seq;
+        let parity = (seq % 2) as usize;
+        let t0 = Instant::now();
+        let mut wait_secs = 0.0;
+        let mut last_arrival = self.posted_at;
+
+        recv.resize_with(w.m, Vec::new);
+        for (src, out) in recv.iter_mut().enumerate() {
+            let slot = &w.nb.slots[self.rank][src][parity];
+            let mut st = slot.state.lock().unwrap();
+            if !(st.filled && st.seq == seq) {
+                let w0 = Instant::now();
+                while !(st.filled && st.seq == seq) {
+                    st = slot.ready.wait(st).unwrap();
+                }
+                wait_secs += w0.elapsed().as_secs_f64();
+            }
+            if let Some(at) = st.deposited_at {
+                if at > last_arrival {
+                    last_arrival = at;
+                }
+            }
+            out.clear();
+            std::mem::swap(&mut st.payload, out);
+            st.filled = false;
+        }
+
+        // settle the split-phase resize round (see module docs): the
+        // last rank to complete applies the quota growth and re-arms
+        // the round for its next (same-parity) reuse
+        let round = &w.nb.rounds[parity];
+        if round.pending_completions.fetch_sub(1, Ordering::AcqRel) == 1 {
+            if round.overflow.swap(false, Ordering::Relaxed) {
+                let need = w.stats.max_send_per_pair.load(Ordering::Relaxed);
+                let mut q = w.quota.load(Ordering::Relaxed);
+                while q < need {
+                    q *= 2;
+                }
+                w.quota.store(q, Ordering::Relaxed);
+                w.stats.resize_rounds.fetch_add(1, Ordering::Relaxed);
+            }
+            round.pending_completions.store(w.m, Ordering::Release);
+        }
+
+        w.nb.completed[self.rank].fetch_add(1, Ordering::Relaxed);
+        w.stats.alltoall_calls.fetch_add(1, Ordering::Relaxed);
+        w.stats.overlapped_exchanges.fetch_add(1, Ordering::Relaxed);
+        // hidden latency: the part of the peers' post skew that elapsed
+        // while this rank computed between post and completion
+        let hidden_end = if last_arrival < t0 { last_arrival } else { t0 };
+        let hidden = hidden_end.duration_since(self.posted_at);
+        w.stats
+            .hidden_nanos
+            .fetch_add(hidden.as_nanos() as u64, Ordering::Relaxed);
+        w.stats.complete_wait_nanos.fetch_add(
+            (wait_secs * 1e9) as u64,
+            Ordering::Relaxed,
+        );
+
+        let total = t0.elapsed().as_secs_f64();
+        CompletionTiming {
+            wait_secs,
+            drain_secs: (total - wait_secs).max(0.0),
+        }
+    }
+}
+
+impl SplitTransport for Communicator {
+    type Pending = PendingExchange;
+
+    fn alltoall_start(&self, send: &mut [Vec<SpikeMsg>]) -> PendingExchange {
+        let w = &*self.world;
+        assert_eq!(send.len(), w.m, "send buffer per rank required");
+        let t0 = Instant::now();
+        let seq = w.nb.next_seq[self.rank].fetch_add(1, Ordering::Relaxed);
+        debug_assert_eq!(
+            seq,
+            w.nb.completed[self.rank].load(Ordering::Relaxed),
+            "rank {}: more than one exchange in flight",
+            self.rank
+        );
+        let quota = w.quota.load(Ordering::Relaxed);
+        let parity = (seq % 2) as usize;
+        let my_max = send.iter().map(|b| b.len()).max().unwrap_or(0);
+        let bytes: usize =
+            send.iter().map(|b| b.len() * SPIKE_WIRE_BYTES).sum();
+        // publish the overflow mark and the per-pair maximum *before*
+        // depositing: consuming any of this rank's deposits (through the
+        // slot mutex) then implies both are visible, so the round's last
+        // completer can neither settle the resize ahead of a straggling
+        // flag nor size the quota below the largest message
+        if my_max > quota {
+            w.nb.rounds[parity].overflow.store(true, Ordering::Relaxed);
+        }
+        w.stats
+            .max_send_per_pair
+            .fetch_max(my_max, Ordering::Relaxed);
+        let now = Instant::now();
+        for (dest, buf) in send.iter_mut().enumerate() {
+            let slot = &w.nb.slots[dest][self.rank][parity];
+            let mut st = slot.state.lock().unwrap();
+            debug_assert!(
+                !st.filled,
+                "mailbox slot overrun: deposit {} not yet consumed",
+                st.seq
+            );
+            debug_assert!(st.payload.is_empty(), "recycled slot not drained");
+            std::mem::swap(&mut st.payload, buf);
+            st.seq = seq;
+            st.filled = true;
+            st.deposited_at = Some(now);
+            slot.ready.notify_all();
+        }
+        w.stats
+            .bytes_sent
+            .fetch_add(bytes as u64, Ordering::Relaxed);
+        let post_secs = t0.elapsed().as_secs_f64();
+        w.stats
+            .post_nanos
+            .fetch_add((post_secs * 1e9) as u64, Ordering::Relaxed);
+        PendingExchange {
+            world: self.world.clone(),
+            rank: self.rank,
+            seq,
+            posted_at: t0,
+            post_secs,
+            completed: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::network::Gid;
+    use std::thread;
+    use std::time::Duration;
+
+    fn msg(source: Gid, cycle: u32) -> SpikeMsg {
+        SpikeMsg { source, cycle }
+    }
+
+    /// Run `f(rank, comm)` on m rank threads, collect results by rank.
+    fn run_ranks<F, R>(m: usize, quota: usize, f: F) -> (World, Vec<R>)
+    where
+        F: Fn(usize, Communicator) -> R + Send + Sync,
+        R: Send,
+    {
+        let world = World::new(m, quota);
+        let results = thread::scope(|s| {
+            let handles: Vec<_> = (0..m)
+                .map(|rank| {
+                    let comm = world.communicator(rank);
+                    let f = &f;
+                    s.spawn(move || f(rank, comm))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect::<Vec<_>>()
+        });
+        (world, results)
+    }
+
+    #[test]
+    fn split_phase_routes_messages() {
+        let (_, results) = run_ranks(4, 64, |rank, comm| {
+            let mut send: Vec<Vec<SpikeMsg>> = (0..4)
+                .map(|d| vec![msg((100 * rank + d) as Gid, 7)])
+                .collect();
+            let pending = comm.alltoall_start(&mut send);
+            assert!(send.iter().all(|b| b.is_empty()), "send not drained");
+            let mut recv = Vec::new();
+            pending.complete(&mut recv);
+            recv
+        });
+        for (rank, recv) in results.iter().enumerate() {
+            assert_eq!(recv.len(), 4);
+            for (src, buf) in recv.iter().enumerate() {
+                assert_eq!(buf.len(), 1);
+                assert_eq!(buf[0].source, (100 * src + rank) as Gid);
+                assert_eq!(buf[0].cycle, 7);
+            }
+        }
+    }
+
+    #[test]
+    fn split_phase_preserves_per_source_order() {
+        let (_, results) = run_ranks(2, 64, |rank, comm| {
+            let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+                .map(|_| (0..10).map(|i| msg(rank as Gid, i)).collect())
+                .collect();
+            let pending = comm.alltoall_start(&mut send);
+            let mut recv = Vec::new();
+            pending.complete(&mut recv);
+            recv
+        });
+        for recv in &results {
+            for (src, buf) in recv.iter().enumerate() {
+                let cycles: Vec<u32> = buf.iter().map(|m| m.cycle).collect();
+                assert_eq!(cycles, (0..10).collect::<Vec<_>>());
+                assert!(buf.iter().all(|m| m.source == src as Gid));
+            }
+        }
+    }
+
+    #[test]
+    fn many_rounds_recycle_capacity_and_do_not_leak() {
+        // one in-flight exchange per rank, 40 rounds over both slot
+        // parities; payload varies per round so stale spikes would show
+        const M: usize = 3;
+        let (world, results) = run_ranks(M, 64, |rank, comm| {
+            let mut send: Vec<Vec<SpikeMsg>> =
+                (0..M).map(|_| Vec::new()).collect();
+            let mut recv: Vec<Vec<SpikeMsg>> = Vec::new();
+            let mut total = 0usize;
+            for round in 0..40u32 {
+                let n = 1 + (round as usize % 4);
+                for buf in &mut send {
+                    for i in 0..n {
+                        buf.push(msg((1000 * rank + i) as Gid, round));
+                    }
+                }
+                let pending = comm.alltoall_start(&mut send);
+                pending.complete(&mut recv);
+                for (src, buf) in recv.iter().enumerate() {
+                    assert_eq!(buf.len(), n, "round {round} from {src}");
+                    assert!(
+                        buf.iter().all(|m| m.cycle == round),
+                        "stale spikes leaked into round {round}"
+                    );
+                }
+                total += recv.iter().map(|b| b.len()).sum::<usize>();
+            }
+            total
+        });
+        let expect: usize = (0..40u32).map(|r| (1 + r as usize % 4) * M).sum();
+        assert!(results.iter().all(|&t| t == expect), "{results:?}");
+        let snap = world.stats().snapshot();
+        assert_eq!(snap.alltoall_calls, 40 * M as u64);
+        assert_eq!(snap.overlapped_exchanges, 40 * M as u64);
+        assert_eq!(snap.resize_rounds, 0);
+    }
+
+    #[test]
+    fn resize_triggered_while_in_flight() {
+        // quota 4; rank 0 posts 10 spikes per pair, keeps computing with
+        // the exchange in flight, then completes: the overflow must be
+        // settled by the completion rendezvous (one secondary round)
+        let (world, results) = run_ranks(2, 4, |rank, comm| {
+            let n = if rank == 0 { 10 } else { 1 };
+            let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+                .map(|_| (0..n).map(|i| msg(rank as Gid, i)).collect())
+                .collect();
+            let pending = comm.alltoall_start(&mut send);
+            // simulated compute while the exchange is in flight
+            std::hint::black_box(
+                (0..200_000u64).map(|x| x.wrapping_mul(7)).sum::<u64>(),
+            );
+            let mut recv = Vec::new();
+            pending.complete(&mut recv);
+            recv.iter().map(|b| b.len()).sum::<usize>()
+        });
+        assert!(results.iter().all(|&t| t == 11));
+        let snap = world.stats().snapshot();
+        assert_eq!(snap.resize_rounds, 1, "overflow must settle one round");
+        assert_eq!(snap.max_send_per_pair, 10);
+        assert!(world.current_quota() >= 10);
+
+        // follow-up rounds settle under the grown quota: the resize
+        // count stops growing once the quota fits (a rank may post its
+        // second round before the last completer of the first grew the
+        // quota, so up to one extra settle is legitimate — never more)
+        let (world2, _) = run_ranks(2, 4, |rank, comm| {
+            for round in 0..4u32 {
+                let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+                    .map(|_| {
+                        (0..10).map(|i| msg(rank as Gid, i + round)).collect()
+                    })
+                    .collect();
+                let pending = comm.alltoall_start(&mut send);
+                let mut recv = Vec::new();
+                pending.complete(&mut recv);
+                assert!(recv.iter().all(|b| b.len() == 10));
+            }
+        });
+        let resizes = world2.stats().snapshot().resize_rounds;
+        assert!((1..=2).contains(&resizes), "resize rounds: {resizes}");
+        assert!(world2.current_quota() >= 10);
+    }
+
+    #[test]
+    fn completion_reports_hidden_latency() {
+        // rank 1 posts late; rank 0 posts early and completes even
+        // later, so rank 1's post latency is fully hidden for rank 0
+        let (world, _) = run_ranks(2, 64, |rank, comm| {
+            if rank == 1 {
+                thread::sleep(Duration::from_millis(20));
+            }
+            let mut send: Vec<Vec<SpikeMsg>> =
+                (0..2).map(|_| vec![msg(rank as Gid, 0)]).collect();
+            let pending = comm.alltoall_start(&mut send);
+            if rank == 0 {
+                thread::sleep(Duration::from_millis(60));
+            }
+            let mut recv = Vec::new();
+            let timing = pending.complete(&mut recv);
+            assert!(timing.wait_secs >= 0.0 && timing.drain_secs >= 0.0);
+        });
+        let snap = world.stats().snapshot();
+        assert_eq!(snap.overlapped_exchanges, 2);
+        assert!(
+            snap.hidden_secs > 0.005,
+            "rank 1's late post should be hidden: {snap:?}"
+        );
+    }
+
+    #[test]
+    fn mixes_with_blocking_collective_on_one_world() {
+        // the engine builds its tables with the blocking collective and
+        // then runs split-phase; both must coexist on one world
+        let (_, results) = run_ranks(2, 64, |rank, comm| {
+            let mut send: Vec<Vec<SpikeMsg>> =
+                (0..2).map(|_| vec![msg(rank as Gid, 1)]).collect();
+            let (recv_blocking, _) = comm.alltoall(&mut send);
+            let mut send: Vec<Vec<SpikeMsg>> =
+                (0..2).map(|_| vec![msg(rank as Gid, 2)]).collect();
+            let pending = comm.alltoall_start(&mut send);
+            let mut recv = Vec::new();
+            pending.complete(&mut recv);
+            (recv_blocking, recv)
+        });
+        for (blocking, split) in &results {
+            assert!(blocking.iter().flatten().all(|m| m.cycle == 1));
+            assert!(split.iter().flatten().all(|m| m.cycle == 2));
+            assert_eq!(blocking.iter().flatten().count(), 2);
+            assert_eq!(split.iter().flatten().count(), 2);
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "dropped without")]
+    fn drop_without_complete_panics_in_debug() {
+        let world = World::new(1, 4);
+        let comm = world.communicator(0);
+        let mut send = vec![vec![msg(1, 0)]];
+        let pending = comm.alltoall_start(&mut send);
+        drop(pending);
+    }
+}

@@ -91,6 +91,38 @@ impl ExecMode {
     }
 }
 
+/// How the engine runs the epoch-boundary global exchange.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommMode {
+    /// The blocking collective: a barrier in front of the exchange puts
+    /// the full synchronization skew on the critical path once per epoch.
+    Blocking,
+    /// Split-phase exchange (`comm::nonblocking`): post at the epoch
+    /// boundary without waiting, keep running local cycles of the next
+    /// epoch, and complete just before the first cycle whose delivery
+    /// deadline — epoch boundary plus the rank's realized inter-area
+    /// delay slack (floored by `d_min_inter`) — needs the spikes.
+    /// Bit-identical spike trains to `Blocking` by construction.
+    Overlap,
+}
+
+impl CommMode {
+    pub fn parse(s: &str) -> Result<CommMode> {
+        Ok(match s {
+            "blocking" | "block" | "sync" => CommMode::Blocking,
+            "overlap" | "nonblocking" | "nb" | "async" => CommMode::Overlap,
+            other => bail!("unknown comm mode {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommMode::Blocking => "blocking",
+            CommMode::Overlap => "overlap",
+        }
+    }
+}
+
 /// How the update phase executes the neuron model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum UpdatePath {
@@ -127,6 +159,8 @@ pub struct RunConfig {
     pub update_path: UpdatePath,
     /// How each rank executes its virtual threads.
     pub exec: ExecMode,
+    /// Blocking vs split-phase (overlapped) global exchange.
+    pub comm: CommMode,
     /// Initial spike quota per rank pair of the communication buffers
     /// (NEST starts small and grows via the two-round resize protocol).
     pub comm_quota: usize,
@@ -146,6 +180,7 @@ impl Default for RunConfig {
             seed: 12,
             update_path: UpdatePath::Native,
             exec: ExecMode::Pooled,
+            comm: CommMode::Blocking,
             comm_quota: 1024,
             record_spikes: false,
             record_cycle_times: false,
@@ -155,7 +190,8 @@ impl Default for RunConfig {
 
 impl RunConfig {
     /// Apply `--strategy --ranks --threads --t-model --seed --update-path
-    /// --exec --quota --record-spikes --record-cycle-times` CLI overrides.
+    /// --exec --comm --quota --record-spikes --record-cycle-times` CLI
+    /// overrides.
     pub fn override_from_args(mut self, args: &Args) -> Result<RunConfig> {
         if let Some(s) = args.str_opt("strategy") {
             self.strategy = Strategy::parse(&s)?;
@@ -170,6 +206,9 @@ impl RunConfig {
         }
         if let Some(s) = args.str_opt("exec") {
             self.exec = ExecMode::parse(&s)?;
+        }
+        if let Some(s) = args.str_opt("comm") {
+            self.comm = CommMode::parse(&s)?;
         }
         self.comm_quota = args.usize_or("quota", self.comm_quota)?;
         if args.flag("record-spikes") {
@@ -205,6 +244,9 @@ impl RunConfig {
         }
         if let Some(s) = v.get("exec").and_then(Json::as_str) {
             cfg.exec = ExecMode::parse(s)?;
+        }
+        if let Some(s) = v.get("comm").and_then(Json::as_str) {
+            cfg.comm = CommMode::parse(s)?;
         }
         if let Some(x) = v.get("comm_quota").and_then(Json::as_usize) {
             cfg.comm_quota = x;
@@ -326,6 +368,34 @@ mod tests {
             ExecMode::PooledChannels
         );
         assert!(ExecMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn comm_mode_parse_roundtrip() {
+        for c in [CommMode::Blocking, CommMode::Overlap] {
+            assert_eq!(CommMode::parse(c.name()).unwrap(), c);
+        }
+        assert_eq!(CommMode::parse("nb").unwrap(), CommMode::Overlap);
+        assert_eq!(
+            CommMode::parse("nonblocking").unwrap(),
+            CommMode::Overlap
+        );
+        assert_eq!(CommMode::parse("sync").unwrap(), CommMode::Blocking);
+        assert!(CommMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn comm_mode_overrides() {
+        // conservative default: the blocking collective
+        assert_eq!(RunConfig::default().comm, CommMode::Blocking);
+
+        let args = Args::parse(["run", "--comm", "overlap"]).unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert_eq!(cfg.comm, CommMode::Overlap);
+
+        let v = json::parse(r#"{"comm": "overlap"}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.comm, CommMode::Overlap);
     }
 
     #[test]

@@ -15,13 +15,20 @@
 //! and the bit-identity argument; `ExecMode::Sequential` is the
 //! reference schedule and `ExecMode::PooledChannels` the legacy PR 1
 //! channel pool kept for A/B comparison.
+//!
+//! The epoch-boundary global exchange runs blocking or split-phase
+//! ([`crate::config::CommMode`]): under `CommMode::Overlap` each rank
+//! posts the exchange without waiting and completes it cycles later,
+//! just before its delivery deadline — see `engine::rank` for the
+//! deadline argument and `comm::nonblocking` for the protocol.  Both
+//! modes produce bit-identical spike trains in every exec mode.
 
 pub mod neuron;
 pub mod rank;
 pub mod ringbuffer;
 pub mod update;
 
-use crate::comm::World;
+use crate::comm::{CommStatsSnapshot, World};
 use crate::config::{RunConfig, Strategy, UpdatePath};
 use crate::network::{Gid, ModelSpec};
 use crate::placement::Placement;
@@ -55,9 +62,8 @@ pub struct SimResult {
     pub rank_neurons: Vec<usize>,
     /// Per-rank synapse counts (short, long pathway).
     pub rank_conns: Vec<(usize, usize)>,
-    /// (alltoall calls, local swaps, bytes sent, resize rounds, largest
-    /// single send buffer per rank pair).
-    pub comm_stats: (u64, u64, u64, u64, u64),
+    /// Aggregate communication statistics of the run's [`World`].
+    pub comm_stats: CommStatsSnapshot,
 }
 
 impl SimResult {
@@ -122,6 +128,21 @@ pub fn simulate_with(
         s_cycles >= 1,
         "t_model shorter than one simulation cycle"
     );
+    // Guard the partial tail epoch: under the structure-aware strategy
+    // the global exchange only runs at epoch boundaries, so spikes
+    // collocated into the send buffers during a trailing partial epoch
+    // would silently never be exchanged.  Reject such runs instead.
+    if cfg.strategy.dual_pathways() {
+        let epoch_cycles = (spec.delay_ratio() as u64).max(1);
+        anyhow::ensure!(
+            s_cycles % epoch_cycles == 0,
+            "run length of {s_cycles} cycles is not a multiple of the \
+             structure-aware communication epoch ({epoch_cycles} cycles): \
+             long-range spikes of the trailing partial epoch would never \
+             be exchanged; pick t_model as a multiple of {} ms",
+            epoch_cycles as f64 * steps_per_cycle as f64 * spec.h_ms,
+        );
+    }
 
     let world = World::new(cfg.m_ranks, cfg.comm_quota);
     let results: Vec<RankResult> = std::thread::scope(|scope| {
@@ -135,6 +156,7 @@ pub fn simulate_with(
                         spec,
                         placement,
                         cfg.strategy,
+                        cfg.comm,
                         cfg.seed,
                         &comm,
                         cfg.record_spikes,

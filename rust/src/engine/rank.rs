@@ -48,9 +48,34 @@
 //! Workers know the cycle count up front, so termination needs no
 //! signalling: after the last cycle they return their recorded spikes
 //! and table statistics through the scoped-thread join handles.
+//!
+//! # Overlapped communication ([`crate::config::CommMode::Overlap`])
+//!
+//! Under the split-phase comm mode the epoch-boundary global exchange is
+//! *posted* ([`crate::comm::SplitTransport::alltoall_start`]) at the end
+//! of the boundary cycle without waiting for any peer, the rank keeps
+//! running local cycles of the next epoch, and the exchange is
+//! *completed* just before the first cycle whose delivery deadline needs
+//! the spikes.  The deadline is sound by construction: every spike in
+//! the exchange was emitted no earlier than the first cycle of the
+//! posting epoch and travels a connection of at least
+//! `min_remote_delay_steps` — the rank's *realized* minimum incoming
+//! delay over the tables the exchange delivers through (floored by the
+//! model's `d_min_inter` cutoff, but typically several cycles above it,
+//! which is the latency-hiding budget).  Completion is clamped to the
+//! next epoch boundary so at most one exchange is in flight (matching
+//! the transport's double-buffered mailboxes).  The double buffering of
+//! `global_send`/`recv_global` lives in the transport's parity slots:
+//! posting swaps each send buffer against an empty recycled vector, so
+//! the rank's single send/recv sets are immediately reusable while the
+//! deposited data rides the in-flight slot.  Because every delivered
+//! spike still lands in the ring buffer strictly before the first row
+//! that could contain it is read — the causality `debug_assert` in
+//! [`ThreadState::deliver_sorted`] checks exactly this deadline — spike
+//! trains are bit-identical to the blocking mode in every exec mode.
 
-use crate::comm::{SpikeMsg, Transport};
-use crate::config::{ExecMode, Strategy};
+use crate::comm::{Pending, SpikeMsg, SplitTransport, Transport};
+use crate::config::{CommMode, ExecMode, Strategy};
 use crate::engine::neuron::NeuronBlock;
 use crate::engine::ringbuffer::RingBuffer;
 use crate::engine::update::Updater;
@@ -100,8 +125,9 @@ impl ThreadState {
                 let arrive = msg.cycle as u64 + c.delay_steps as u64;
                 debug_assert!(
                     arrive >= first_step,
-                    "causality violation: spike from {} arrives at \
-                     step {arrive} < current step {first_step}",
+                    "spike from {} missed its delivery deadline: arrives \
+                     at step {arrive} < current step {first_step} (its \
+                     ring-buffer row was already consumed)",
                     msg.source
                 );
                 self.ring.add(arrive, c.target_local, c.weight);
@@ -463,13 +489,29 @@ fn barrier_worker(
     )
 }
 
+/// One in-flight split-phase exchange and the cycle before whose deliver
+/// phase it must be completed.
+struct InFlight<P: Pending> {
+    pending: P,
+    deadline_cycle: u64,
+}
+
 /// Full per-rank state.
 pub struct RankState {
     rank: usize,
     strategy: Strategy,
+    /// Blocking or split-phase (overlapped) global exchange.
+    comm_mode: CommMode,
     /// Cycles between global exchanges (1 unless structure-aware).
     epoch_cycles: u64,
     steps_per_cycle: u64,
+    /// Realized minimum delay (steps) over the connections that the
+    /// global exchange delivers through — the long-range tables under
+    /// dual pathways, all tables otherwise.  Lower-bounds how early any
+    /// exchanged spike can arrive and therefore how long an overlapped
+    /// exchange may stay in flight.  `u16::MAX` when the rank hosts no
+    /// such connection (the deadline then clamps to the next boundary).
+    min_remote_delay_steps: u64,
     threads: Vec<ThreadState>,
     /// Source → owning-threads routing index per pathway (thread-sharded
     /// delivery of the barrier runtime).
@@ -490,10 +532,12 @@ impl RankState {
     /// Build tables and state for `rank`.  Collective: performs the
     /// target-table construction exchange, so *all* ranks must call this
     /// concurrently (as NEST's preparation phase does, §4.1.2).
+    #[allow(clippy::too_many_arguments)]
     pub fn build<T: Transport>(
         spec: &ModelSpec,
         placement: &Placement,
         strategy: Strategy,
+        comm_mode: CommMode,
         seed: u64,
         comm: &T,
         record_spikes: bool,
@@ -522,6 +566,7 @@ impl RankState {
         let mut notify: Vec<std::collections::HashSet<(Gid, bool)>> =
             vec![Default::default(); m];
         let mut built_threads = Vec::with_capacity(t_m);
+        let mut min_remote_delay: u16 = u16::MAX;
         for gids in threads {
             let mut entries_short: Vec<(Gid, LocalConn)> = Vec::new();
             let mut entries_long: Vec<(Gid, LocalConn)> = Vec::new();
@@ -535,6 +580,12 @@ impl RankState {
                         delay_steps: c.delay_steps,
                     };
                     max_delay = max_delay.max(c.delay_steps);
+                    // connections fed by the *global* exchange bound the
+                    // overlap deadline: the long pathway under dual
+                    // strategies, every connection otherwise
+                    if !dual || long_range {
+                        min_remote_delay = min_remote_delay.min(c.delay_steps);
+                    }
                     if long_range {
                         entries_long.push((c.source, lc));
                     } else {
@@ -548,6 +599,15 @@ impl RankState {
                 short: ConnTable::build(entries_short),
                 long: ConnTable::build(entries_long),
             };
+            // horizon: largest write-ahead (max delay) plus the epoch of
+            // lumped delivery.  This also covers the in-flight window of
+            // an overlapped exchange: delaying completion by up to an
+            // epoch only *advances* the read cursor past already-consumed
+            // rows, so the write-ahead distance `arrive - first_step` at
+            // delivery time shrinks (never grows) relative to delivering
+            // at the boundary — no extra rows are needed, and the
+            // deadline debug_assert in `deliver_sorted` would catch any
+            // spike whose row was already consumed.
             let n_slots = max_delay as usize
                 + (epoch_cycles * steps_per_cycle) as usize
                 + 2;
@@ -622,8 +682,10 @@ impl RankState {
         RankState {
             rank,
             strategy,
+            comm_mode,
             epoch_cycles,
             steps_per_cycle,
+            min_remote_delay_steps: min_remote_delay as u64,
             threads,
             shards,
             local_index,
@@ -659,33 +721,103 @@ impl RankState {
         buf.clear();
     }
 
+    /// Cycle before whose deliver phase an exchange posted at the end of
+    /// cycle `post_cycle` must complete.  The exchange carries spikes
+    /// emitted no earlier than the first cycle of the posting epoch, so
+    /// none can arrive before `first_emission + min_remote_delay`;
+    /// completion is clamped to the next boundary so at most one
+    /// exchange is ever in flight.
+    fn overlap_deadline(&self, post_cycle: u64) -> u64 {
+        let d = self.epoch_cycles;
+        let steps = self.steps_per_cycle;
+        let first_emission_step = (post_cycle + 1 - d) * steps;
+        let earliest_arrival = first_emission_step
+            .saturating_add(self.min_remote_delay_steps);
+        (earliest_arrival / steps)
+            .clamp(post_cycle + 1, post_cycle + d)
+    }
+
+    /// Complete an in-flight exchange if cycle `s` has reached its
+    /// delivery deadline (or unconditionally with `force`, for the final
+    /// exchange whose spikes fall beyond the simulated horizon), filling
+    /// `recv_long` exactly as the blocking path does.  Completion-side
+    /// wait is charged to `Synchronize`, the drain to `DataExchange`.
+    fn complete_due<P: Pending>(
+        &mut self,
+        inflight: &mut Option<InFlight<P>>,
+        s: u64,
+        force: bool,
+        phase_times: &mut PhaseTimes,
+    ) {
+        let due = inflight
+            .as_ref()
+            .is_some_and(|f| force || f.deadline_cycle <= s);
+        if !due {
+            return;
+        }
+        let f = inflight.take().unwrap();
+        let timing = f.pending.complete(&mut self.recv_global);
+        phase_times.add(Phase::Synchronize, timing.wait_secs);
+        phase_times.add(Phase::DataExchange, timing.drain_secs);
+        self.flatten_recv_global();
+    }
+
+    /// Flatten the per-source receive buffers into `recv_long` — the one
+    /// drain both comm modes share, so their delivery input is built by
+    /// the same code (part of the bit-identity argument).
+    fn flatten_recv_global(&mut self) {
+        self.recv_long.clear();
+        for buf in &self.recv_global {
+            self.recv_long.extend_from_slice(buf);
+        }
+    }
+
     /// The communicate step of one cycle: local pathway swap (dual
     /// strategies) every cycle, global exchange every `epoch_cycles`-th
-    /// cycle — with all buffers recycled through the transport.
-    fn communicate<T: Transport>(
+    /// cycle — blocking, or posted split-phase and completed later by
+    /// [`RankState::complete_due`] — with all buffers recycled through
+    /// the transport.
+    fn communicate<T: SplitTransport>(
         &mut self,
         comm: &T,
         s: u64,
         dual: bool,
         phase_times: &mut PhaseTimes,
+        inflight: &mut Option<InFlight<T::Pending>>,
     ) {
         if dual {
             comm.local_swap_into(&mut self.local_send, &mut self.recv_short);
         }
         if (s + 1) % self.epoch_cycles == 0 {
-            let timing =
-                comm.alltoall_into(&mut self.global_send, &mut self.recv_global);
-            phase_times.add(Phase::Synchronize, timing.sync_secs);
-            phase_times.add(Phase::DataExchange, timing.data_secs);
-            self.recv_long.clear();
-            for buf in &self.recv_global {
-                self.recv_long.extend_from_slice(buf);
+            match self.comm_mode {
+                CommMode::Blocking => {
+                    let timing = comm.alltoall_into(
+                        &mut self.global_send,
+                        &mut self.recv_global,
+                    );
+                    phase_times.add(Phase::Synchronize, timing.sync_secs);
+                    phase_times.add(Phase::DataExchange, timing.data_secs);
+                    self.flatten_recv_global();
+                }
+                CommMode::Overlap => {
+                    debug_assert!(
+                        inflight.is_none(),
+                        "previous exchange still in flight at its \
+                         successor's post"
+                    );
+                    let pending = comm.alltoall_start(&mut self.global_send);
+                    phase_times.add(Phase::DataExchange, pending.post_secs());
+                    *inflight = Some(InFlight {
+                        pending,
+                        deadline_cycle: self.overlap_deadline(s),
+                    });
+                }
             }
         }
     }
 
     /// Run the state-propagation loop for `s_cycles` cycles.
-    pub fn run<T: Transport>(
+    pub fn run<T: SplitTransport>(
         self,
         comm: &T,
         s_cycles: u64,
@@ -717,7 +849,7 @@ impl RankState {
 
     /// Virtual threads iterated in place on the rank's OS thread — the
     /// reference schedule the pooled path must reproduce bit-exactly.
-    fn run_sequential<T: Transport>(
+    fn run_sequential<T: SplitTransport>(
         mut self,
         comm: &T,
         s_cycles: u64,
@@ -731,9 +863,13 @@ impl RankState {
             0
         });
         let dual = self.strategy.dual_pathways();
+        let mut inflight: Option<InFlight<T::Pending>> = None;
 
         for s in 0..s_cycles {
             let first_step = s * self.steps_per_cycle;
+            // complete a due overlapped exchange before the deliver
+            // phase (charged to its own phases, not this cycle's timer)
+            self.complete_due(&mut inflight, s, false, &mut phase_times);
             let mut sw = Stopwatch::start();
             let mut cycle_secs = 0.0;
 
@@ -779,8 +915,12 @@ impl RankState {
             }
 
             // ---- communicate ---------------------------------------------
-            self.communicate(comm, s, dual, &mut phase_times);
+            self.communicate(comm, s, dual, &mut phase_times, &mut inflight);
         }
+        // the final posted exchange carries spikes beyond the simulated
+        // horizon; complete it for collective symmetry and drop the data
+        // (the blocking path likewise never delivers its last receive)
+        self.complete_due(&mut inflight, s_cycles, true, &mut phase_times);
 
         let (mut n_short, mut n_long, mut n_neurons) = (0usize, 0usize, 0usize);
         for th in &self.threads {
@@ -806,7 +946,7 @@ impl RankState {
     /// spikes its connection tables can consume.  The coordinator keeps
     /// the communicate step and all ordering decisions, so results match
     /// the sequential schedule bit-exactly.
-    fn run_barrier<T: Transport>(
+    fn run_barrier<T: SplitTransport>(
         mut self,
         comm: &T,
         s_cycles: u64,
@@ -858,8 +998,11 @@ impl RankState {
                         })
                     })
                     .collect();
+                let mut inflight: Option<InFlight<T::Pending>> = None;
 
                 for s in 0..s_cycles {
+                    // complete a due overlapped exchange before routing
+                    self.complete_due(&mut inflight, s, false, &mut phase_times);
                     let mut sw = Stopwatch::start();
                     let mut cycle_secs = 0.0;
 
@@ -913,8 +1056,20 @@ impl RankState {
                     }
 
                     // ---- communicate -------------------------------------
-                    self.communicate(comm, s, dual, &mut phase_times);
+                    self.communicate(
+                        comm,
+                        s,
+                        dual,
+                        &mut phase_times,
+                        &mut inflight,
+                    );
                 }
+                self.complete_due(
+                    &mut inflight,
+                    s_cycles,
+                    true,
+                    &mut phase_times,
+                );
 
                 let mut spikes = std::mem::take(&mut self.spikes);
                 let (mut n_short, mut n_long, mut n_neurons) =
@@ -948,7 +1103,7 @@ impl RankState {
     /// barrier runtime.  The coordinator (this rank's OS thread) keeps
     /// the communicate step and all ordering decisions, so results match
     /// the sequential schedule.
-    fn run_pooled_channels<T: Transport>(
+    fn run_pooled_channels<T: SplitTransport>(
         mut self,
         comm: &T,
         s_cycles: u64,
@@ -988,9 +1143,12 @@ impl RankState {
                             (Vec::new(), (0..m).map(|_| Vec::new()).collect())
                         })
                         .collect();
+                let mut inflight: Option<InFlight<T::Pending>> = None;
 
                 for s in 0..s_cycles {
                     let first_step = s * steps;
+                    // complete a due overlapped exchange before delivery
+                    self.complete_due(&mut inflight, s, false, &mut phase_times);
                     let mut sw = Stopwatch::start();
                     let mut cycle_secs = 0.0;
 
@@ -1059,8 +1217,20 @@ impl RankState {
                     }
 
                     // ---- communicate -------------------------------------
-                    self.communicate(comm, s, dual, &mut phase_times);
+                    self.communicate(
+                        comm,
+                        s,
+                        dual,
+                        &mut phase_times,
+                        &mut inflight,
+                    );
                 }
+                self.complete_due(
+                    &mut inflight,
+                    s_cycles,
+                    true,
+                    &mut phase_times,
+                );
 
                 for tx in &cmd_txs {
                     tx.send(Cmd::Finish).expect("pool worker died");

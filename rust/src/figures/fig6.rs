@@ -16,7 +16,7 @@ use anyhow::Result;
 /// M in {64, 128} and the upper-3.5 % quantile markers.
 pub fn fig6a() -> Result<FigureOutput> {
     // parameterized like the measured MAM-benchmark distribution
-    let model = CycleTimeModel { mu: 1.6e-3, sigma: 0.09e-3 };
+    let model = CycleTimeModel::paper_default();
     let lumped = model.lumped(10);
     let mut table = Table::new(&[
         "distribution",

@@ -49,6 +49,7 @@ fn print_usage() {
                     [--ranks M] [--threads T] [--t-model ms] [--seed n]\n\
                     [--scale f] [--areas n] [--update-path native|xla]\n\
                     [--exec sequential|pooled|pooled-channels]\n\
+                    [--comm blocking|overlap]\n\
                     [--quota spikes]\n\
                     [--record-spikes]\n\
            figure <name> [--t-model ms] [--seed n] [--out dir]\n\
@@ -95,7 +96,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     println!(
         "model {} | {} areas | {} neurons | strategy {} | M={} T={} | \
-         exec {} | T_model {} ms | D={}",
+         exec {} | comm {} | T_model {} ms | D={}",
         spec.name,
         spec.n_areas(),
         spec.total_neurons(),
@@ -103,6 +104,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cfg.m_ranks,
         cfg.threads_per_rank,
         cfg.exec.name(),
+        cfg.comm.name(),
         cfg.t_model_ms,
         spec.delay_ratio(),
     );
@@ -124,13 +126,26 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("{}", table.render());
     println!(
         "cycles {} | spikes {} | mean rate {:.2} /s | RTF {:.1} | \
-         wall {:.2}s | comm (a2a, swaps, bytes, resizes, max/pair) {:?}",
+         wall {:.2}s",
         res.s_cycles,
         res.n_spikes(),
         res.mean_rate_hz(spec.total_neurons() as usize),
         res.rtf(),
         wall,
-        res.comm_stats,
+    );
+    let cs = &res.comm_stats;
+    println!(
+        "comm: a2a {} | swaps {} | bytes {} | resizes {} | max/pair {} | \
+         overlapped {} | post {} | wait {} | hidden {}",
+        cs.alltoall_calls,
+        cs.local_swaps,
+        cs.bytes_sent,
+        cs.resize_rounds,
+        cs.max_send_per_pair,
+        cs.overlapped_exchanges,
+        fnum(cs.post_secs),
+        fnum(cs.complete_wait_secs),
+        fnum(cs.hidden_secs),
     );
     Ok(())
 }
@@ -179,6 +194,15 @@ fn cmd_theory(args: &Args) -> Result<()> {
     println!(
         "upper 3.5% of cycle times cover {:.1}% of per-cycle maxima (eq 12)",
         100.0 * sync::maxima_tail_coverage(0.035, m)
+    );
+    let model = sync::CycleTimeModel::paper_default();
+    let window = d.saturating_sub(1);
+    println!(
+        "split-phase overlap: a window of D-1={window} cycles hides \
+         {:.0}% of the remaining sync time \
+         (predicted gain {:.2} s per 100k cycles)",
+        100.0 * sync::overlap_hidden_fraction(model, m, d, window),
+        sync::predicted_overlap_gain(model, m, 100_000, d, window),
     );
     let sc = delivery::DeliveryScenario::default();
     println!("\n== spike-delivery theory (eqs 13-17) ==");

@@ -16,6 +16,13 @@ pub struct CycleTimeModel {
 }
 
 impl CycleTimeModel {
+    /// The paper's measured MAM-benchmark cycle-time distribution
+    /// (mu = 1.6 ms, sigma = 0.09 ms) — the default parameterization
+    /// shared by `nsim theory` and the fig 6 harness.
+    pub const fn paper_default() -> CycleTimeModel {
+        CycleTimeModel { mu: 1.6e-3, sigma: 0.09e-3 }
+    }
+
     /// Lumped model over D cycles (eq 6): `N(D mu, D sigma²)`.
     pub fn lumped(&self, d: u32) -> CycleTimeModel {
         CycleTimeModel {
@@ -76,6 +83,47 @@ pub fn sync_ratio(d: u32) -> f64 {
     1.0 / (d as f64).sqrt()
 }
 
+/// Predicted synchronization time hidden by the split-phase exchange
+/// over a whole run of `s` cycles (`CommMode::Overlap`).
+///
+/// Per epoch of `d` lumped cycles the expected skew at the boundary is
+/// `xi_M sigma sqrt(D)` (the sync term of eq 9).  A split-phase post
+/// lets a rank compute up to `overlap_cycles` further cycles — bounded
+/// by its realized inter-area delay slack, and by `d - 1` since the
+/// next boundary forces completion — before it must rendezvous, so up
+/// to `min(skew, overlap_cycles * mu)` of each epoch's skew moves off
+/// the critical path.
+pub fn predicted_overlap_gain(
+    model: CycleTimeModel,
+    m: usize,
+    s: u64,
+    d: u32,
+    overlap_cycles: u32,
+) -> f64 {
+    let epochs = s as f64 / d as f64;
+    let skew_per_epoch = blom_xi(m) * (d as f64).sqrt() * model.sigma;
+    let window = overlap_cycles.min(d.saturating_sub(1)) as f64 * model.mu;
+    epochs * skew_per_epoch.min(window)
+}
+
+/// Fraction of the structure-aware synchronization time (eq 9's sync
+/// term) that the overlap window hides: [`predicted_overlap_gain`]
+/// normalized by the expected sync time of the same span (one epoch).
+pub fn overlap_hidden_fraction(
+    model: CycleTimeModel,
+    m: usize,
+    d: u32,
+    overlap_cycles: u32,
+) -> f64 {
+    let (_, sync_per_epoch) = expected_sync_times(model, m, d as u64, d);
+    if sync_per_epoch <= 0.0 {
+        return 0.0;
+    }
+    let gain =
+        predicted_overlap_gain(model, m, d as u64, d, overlap_cycles);
+    (gain / sync_per_epoch).min(1.0)
+}
+
 /// Ratio of coefficients of variation after lumping (eq 7).
 pub fn cv_ratio(d: u32) -> f64 {
     1.0 / (d as f64).sqrt()
@@ -122,7 +170,7 @@ mod tests {
     use crate::util::rng::Pcg64;
     use crate::util::stats;
 
-    const MODEL: CycleTimeModel = CycleTimeModel { mu: 1.6e-3, sigma: 0.09e-3 };
+    const MODEL: CycleTimeModel = CycleTimeModel::paper_default();
 
     #[test]
     fn lumping_scales_mean_by_d_and_sigma_by_sqrt_d() {
@@ -169,6 +217,45 @@ mod tests {
             "ratio {ratio} vs {}",
             sync_ratio(d as u32)
         );
+    }
+
+    #[test]
+    fn overlap_gain_clamps_to_sync_time() {
+        let (s, m, d) = (100_000u64, 128usize, 10u32);
+        let (_, sync_struct) = expected_sync_times(MODEL, m, s, d);
+        // no overlap window -> nothing hidden
+        assert_eq!(predicted_overlap_gain(MODEL, m, s, d, 0), 0.0);
+        // a huge window hides the entire sync term, never more
+        let all = predicted_overlap_gain(MODEL, m, s, d, 1_000);
+        assert!((all - sync_struct).abs() < 1e-9 * sync_struct.max(1.0));
+        assert!(all <= sync_struct + 1e-12);
+        // monotone in the window
+        let g1 = predicted_overlap_gain(MODEL, m, s, d, 1);
+        let g4 = predicted_overlap_gain(MODEL, m, s, d, 4);
+        assert!(0.0 < g1 && g1 <= g4 && g4 <= all);
+    }
+
+    #[test]
+    fn overlap_window_clamped_by_epoch() {
+        // the window cannot exceed d-1 cycles: completion is forced at
+        // the next boundary, so d-1 and 10*d give the same prediction
+        let (s, m, d) = (10_000u64, 64usize, 10u32);
+        assert_eq!(
+            predicted_overlap_gain(MODEL, m, s, d, d - 1),
+            predicted_overlap_gain(MODEL, m, s, d, 10 * d),
+        );
+    }
+
+    #[test]
+    fn overlap_hidden_fraction_bounded() {
+        let f0 = overlap_hidden_fraction(MODEL, 128, 10, 0);
+        let f9 = overlap_hidden_fraction(MODEL, 128, 10, 9);
+        assert_eq!(f0, 0.0);
+        assert!(f0 <= f9 && f9 <= 1.0);
+        // with mu >> sigma even one cycle of slack hides everything
+        let wide = CycleTimeModel { mu: 1.0, sigma: 1e-6 };
+        let f = overlap_hidden_fraction(wide, 128, 10, 1);
+        assert!((f - 1.0).abs() < 1e-12, "fraction {f}");
     }
 
     #[test]

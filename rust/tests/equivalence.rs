@@ -6,7 +6,7 @@
 //! This is what licenses the paper's performance comparison: the
 //! communication restructuring must not change the dynamics.
 
-use nsim::config::{ExecMode, RunConfig, Strategy, UpdatePath};
+use nsim::config::{CommMode, ExecMode, RunConfig, Strategy, UpdatePath};
 use nsim::engine::simulate;
 use nsim::models;
 use nsim::network::ModelSpec;
@@ -40,6 +40,19 @@ fn run_exec(
     t_model_ms: f64,
     exec: ExecMode,
 ) -> Vec<(u64, u32)> {
+    run_comm(spec, strategy, m, t, t_model_ms, exec, CommMode::Blocking)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_comm(
+    spec: &ModelSpec,
+    strategy: Strategy,
+    m: usize,
+    t: usize,
+    t_model_ms: f64,
+    exec: ExecMode,
+    comm: CommMode,
+) -> Vec<(u64, u32)> {
     let cfg = RunConfig {
         strategy,
         m_ranks: m,
@@ -47,6 +60,7 @@ fn run_exec(
         t_model_ms,
         seed: 12,
         exec,
+        comm,
         record_spikes: true,
         ..RunConfig::default()
     };
@@ -190,27 +204,158 @@ fn ianf_model_identical_across_exec_modes() {
 }
 
 #[test]
+fn spike_trains_identical_across_comm_modes() {
+    // the tentpole invariant of the split-phase exchange: posting the
+    // global alltoall at the epoch boundary and completing it cycles
+    // later must not move a single spike, for every strategy and every
+    // exec mode, across thread counts
+    let spec = models::sanity_net(240, 4).unwrap();
+    for strategy in [
+        Strategy::Conventional,
+        Strategy::Intermediate,
+        Strategy::StructureAware,
+    ] {
+        let base = run_comm(
+            &spec,
+            strategy,
+            4,
+            1,
+            100.0,
+            ExecMode::Sequential,
+            CommMode::Blocking,
+        );
+        assert!(
+            base.len() > 100,
+            "{}: too quiet for a meaningful test ({} spikes)",
+            strategy.name(),
+            base.len()
+        );
+        for exec in [
+            ExecMode::Sequential,
+            ExecMode::Pooled,
+            ExecMode::PooledChannels,
+        ] {
+            for t in [1usize, 3] {
+                let got = run_comm(
+                    &spec,
+                    strategy,
+                    4,
+                    t,
+                    100.0,
+                    exec,
+                    CommMode::Overlap,
+                );
+                assert_eq!(
+                    base,
+                    got,
+                    "{} diverged under overlap at T={t} exec={}",
+                    strategy.name(),
+                    exec.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_comm_stats_track_split_phase_traffic() {
+    // under overlap every epoch-boundary exchange is split-phase: the
+    // overlapped counter equals the alltoall count and the byte/call
+    // totals match the blocking run exactly
+    let spec = models::sanity_net(200, 4).unwrap();
+    let run_stats = |comm: CommMode| {
+        let cfg = RunConfig {
+            strategy: Strategy::StructureAware,
+            m_ranks: 4,
+            threads_per_rank: 2,
+            t_model_ms: 100.0,
+            seed: 12,
+            comm,
+            record_spikes: true,
+            ..RunConfig::default()
+        };
+        simulate(&spec, &cfg).expect("simulation failed").comm_stats
+    };
+    let blocking = run_stats(CommMode::Blocking);
+    let overlap = run_stats(CommMode::Overlap);
+    assert_eq!(blocking.overlapped_exchanges, 0);
+    assert_eq!(blocking.hidden_secs, 0.0);
+    assert!(overlap.alltoall_calls > 0);
+    // the engine's collective traffic is identical, only its phasing
+    // differs (the preparation exchange stays blocking in both modes)
+    assert_eq!(overlap.alltoall_calls, blocking.alltoall_calls);
+    assert_eq!(overlap.bytes_sent, blocking.bytes_sent);
+    assert_eq!(overlap.local_swaps, blocking.local_swaps);
+    // every run-loop exchange was split-phase: one blocking collective
+    // per rank remains from the target-table preparation
+    assert_eq!(
+        overlap.overlapped_exchanges + 4,
+        overlap.alltoall_calls,
+        "expected all run-loop exchanges overlapped"
+    );
+    assert!(overlap.hidden_secs >= 0.0);
+}
+
+#[test]
+fn partial_tail_epoch_rejected_for_structure_aware() {
+    // 10.5 ms at h=0.1 and D=10 leaves a 5-cycle partial epoch whose
+    // long-range spikes would silently never be exchanged
+    let spec = models::sanity_net(120, 2).unwrap();
+    let cfg = RunConfig {
+        strategy: Strategy::StructureAware,
+        m_ranks: 2,
+        threads_per_rank: 2,
+        t_model_ms: 10.5,
+        seed: 12,
+        record_spikes: true,
+        ..RunConfig::default()
+    };
+    let err = match simulate(&spec, &cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("partial tail epoch was not rejected"),
+    };
+    assert!(
+        format!("{err:#}").contains("partial epoch"),
+        "unexpected error: {err:#}"
+    );
+    // conventional communicates every cycle: same t_model is fine
+    let cfg = RunConfig {
+        strategy: Strategy::Conventional,
+        ..cfg
+    };
+    assert!(simulate(&spec, &cfg).is_ok());
+}
+
+#[test]
 fn tiny_comm_quota_equivalent_to_default() {
     // a starting quota of 1 forces the two-round resize protocol to fire
-    // under real engine traffic; dynamics must not change
+    // under real engine traffic — in both its blocking (barrier-agreed)
+    // and split-phase (rendezvous-settled) forms; dynamics must not
+    // change either way
     let spec = models::sanity_net(200, 2).unwrap();
-    let run_quota = |quota: usize| {
+    let run_quota = |quota: usize, comm: CommMode| {
         let cfg = RunConfig {
             strategy: Strategy::Conventional,
             m_ranks: 2,
             threads_per_rank: 2,
             t_model_ms: 100.0,
             seed: 12,
+            comm,
             comm_quota: quota,
             record_spikes: true,
             ..RunConfig::default()
         };
         simulate(&spec, &cfg).expect("simulation failed").spikes
     };
-    let tiny = run_quota(1);
-    let default = run_quota(4096);
+    let tiny = run_quota(1, CommMode::Blocking);
+    let default = run_quota(4096, CommMode::Blocking);
     assert!(!tiny.is_empty());
     assert_eq!(tiny, default, "quota resize protocol changed dynamics");
+    let tiny_overlap = run_quota(1, CommMode::Overlap);
+    assert_eq!(
+        tiny, tiny_overlap,
+        "split-phase quota resize changed dynamics"
+    );
 }
 
 #[test]
