@@ -1,0 +1,153 @@
+"""Unit tests for the CI bench-regression gate (tools/bench_compare.py).
+
+The gate must fail loudly on genuine regressions and never false-positive
+on incomparable inputs: placeholder baselines, mismatched smoke/full
+profiles, missing files, or smoke-profile noise within the advisory band.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(
+    0,
+    os.path.join(os.path.dirname(__file__), "..", "..", "tools"),
+)
+
+import bench_compare as bc
+
+
+def _doc(smoke=True, micro=(), engine=()):
+    return {
+        "bench": "hotpath",
+        "smoke": smoke,
+        "micro": [
+            {"name": n, "ns_per_op": ns, "mops_per_s": 1.0}
+            for (n, ns) in micro
+        ],
+        "engine": [
+            {
+                "model": "m",
+                "strategy": "conventional",
+                "exec": "pooled",
+                "comm": "overlap",
+                "comm_depth": depth,
+                "ranks": 4,
+                "threads": 2,
+                "rtf": rtf,
+            }
+            for (depth, rtf) in engine
+        ],
+    }
+
+
+def test_within_tolerance_passes():
+    base = _doc(micro=[("a", 100.0)], engine=[(1, 10.0)])
+    cur = _doc(micro=[("a", 112.0)], engine=[(1, 11.0)])
+    rows, fails, warns = bc.compare(base, cur, 0.15)
+    assert len(rows) == 2
+    assert not fails and not warns
+
+
+def test_regression_detected_on_full_profile():
+    base = _doc(smoke=False, micro=[("a", 100.0)])
+    cur = _doc(smoke=False, micro=[("a", 140.0)])
+    _, fails, warns = bc.compare(base, cur, 0.15)
+    assert len(fails) == 1
+    assert not warns
+    kind, name, old, new, delta = fails[0]
+    assert (kind, name) == ("micro", "a")
+    assert abs(delta - 0.4) < 1e-9
+
+
+def test_improvement_never_fails():
+    base = _doc(micro=[("a", 100.0)], engine=[(4, 10.0)])
+    cur = _doc(micro=[("a", 40.0)], engine=[(4, 3.0)])
+    _, fails, warns = bc.compare(base, cur, 0.15)
+    assert not fails and not warns
+
+
+def test_noise_floor_suppresses_tiny_absolute_deltas():
+    # +50% relative but only +1 ns absolute: below the micro floor
+    base = _doc(micro=[("a", 2.0)])
+    cur = _doc(micro=[("a", 3.0)])
+    _, fails, warns = bc.compare(base, cur, 0.15)
+    assert not fails and not warns
+
+
+def test_smoke_profile_warns_before_failing():
+    base = _doc(micro=[("a", 100.0)])
+    noisy = _doc(micro=[("a", 160.0)])  # +60%: advisory band
+    _, fails, warns = bc.compare(base, noisy, 0.15, smoke_fail_factor=6.0)
+    assert not fails and len(warns) == 1
+    terrible = _doc(micro=[("a", 400.0)])  # +300%: beyond 6 x 15%
+    _, fails, warns = bc.compare(base, terrible, 0.15, smoke_fail_factor=6.0)
+    assert len(fails) == 1
+
+
+def test_engine_keyed_by_full_config_including_depth():
+    # same model at different depths must not be cross-compared
+    base = _doc(engine=[(1, 10.0), (4, 5.0)])
+    cur = _doc(engine=[(1, 10.0), (2, 50.0)])
+    rows, fails, _ = bc.compare(base, cur, 0.15)
+    assert len(rows) == 1  # only the depth-1 config overlaps
+    assert not fails
+
+
+def test_disjoint_configs_compare_nothing():
+    base = _doc(micro=[("a", 100.0)])
+    cur = _doc(micro=[("b", 100.0)])
+    rows, fails, warns = bc.compare(base, cur, 0.15)
+    assert rows == [] and not fails and not warns
+
+
+def test_missing_configs_reported():
+    # configs that vanish from the current results are surfaced so a
+    # green gate cannot silently mean "stopped measuring"
+    base = _doc(micro=[("a", 100.0), ("b", 5.0)], engine=[(4, 10.0)])
+    cur = _doc(micro=[("a", 100.0)])
+    gone = bc.missing_configs(base, cur)
+    assert gone == ["micro: b", "engine: m/conventional/pooled/overlap/d4/M4/T2"]
+    assert bc.missing_configs(base, base) == []
+
+
+def test_cli_paths(tmp_path):
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(_doc(micro=[("a", 100.0)])))
+
+    # no baseline at all: pass
+    assert bc.main(["--current", str(cur)]) == 0
+
+    # placeholder fallback: pass
+    ph = tmp_path / "ph.json"
+    ph.write_text(json.dumps({"placeholder": True, "smoke": True}))
+    assert (
+        bc.main(
+            [
+                "--current",
+                str(cur),
+                "--baseline",
+                str(tmp_path / "missing.json"),
+                "--fallback",
+                str(ph),
+            ]
+        )
+        == 0
+    )
+
+    # profile mismatch (full baseline vs smoke current): pass
+    full = tmp_path / "full.json"
+    full.write_text(json.dumps(_doc(smoke=False, micro=[("a", 1.0)])))
+    assert (
+        bc.main(["--current", str(cur), "--baseline", str(full)]) == 0
+    )
+
+    # genuine smoke regression beyond the advisory band: fail
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_doc(micro=[("a", 10.0)])))
+    assert (
+        bc.main(["--current", str(cur), "--baseline", str(base)]) == 1
+    )
+
+    # missing current file is a usage error, not a silent pass
+    assert bc.main(["--current", str(tmp_path / "nope.json")]) == 2

@@ -9,8 +9,12 @@
 //!
 //! `--bench-json <path>` writes every measurement — micro ns/op plus the
 //! engine end-to-end comparisons with per-phase timings and RTF — as a
-//! JSON document so the perf trajectory is tracked across PRs;
-//! `--smoke` shrinks windows and model times for CI.
+//! JSON document so the perf trajectory is tracked across PRs (the CI
+//! bench-regression job diffs it against the base branch via
+//! `tools/bench_compare.py`); `--smoke` shrinks windows and model times
+//! for CI.  The engine section includes a split-phase depth sweep
+//! (`comm_depth` 1/2/4 on the deep-pipeline net) next to the
+//! blocking-vs-overlap A/B.
 
 use nsim::comm::{SpikeMsg, Transport, World};
 use nsim::config::{CommMode, ExecMode, RunConfig, Strategy};
@@ -70,6 +74,7 @@ impl Harness {
         strategy: Strategy,
         exec: ExecMode,
         comm: CommMode,
+        comm_depth: usize,
         m: usize,
         threads: usize,
         t_model_ms: f64,
@@ -82,6 +87,7 @@ impl Harness {
             seed: 654,
             exec,
             comm,
+            comm_depth,
             ..RunConfig::default()
         };
         let t0 = Instant::now();
@@ -90,9 +96,9 @@ impl Harness {
         let neuron_steps = spec.total_neurons() as f64 * res.s_cycles as f64;
         let mcps = neuron_steps / secs / 1e6;
         println!(
-            "engine: {model:<14} {:<16} {:<16} {:<8} T={threads} {} neurons \
-             x {} cycles in {secs:.3} s = {mcps:.2} M neuron-cycles/s \
-             (sync {:.4} s, hidden {:.4} s)",
+            "engine: {model:<14} {:<16} {:<16} {:<8} d={comm_depth} \
+             T={threads} {} neurons x {} cycles in {secs:.3} s = \
+             {mcps:.2} M neuron-cycles/s (sync {:.4} s, hidden {:.4} s)",
             strategy.name(),
             exec.name(),
             comm.name(),
@@ -106,6 +112,7 @@ impl Harness {
             ("strategy", strategy.name().into()),
             ("exec", exec.name().into()),
             ("comm", comm.name().into()),
+            ("comm_depth", comm_depth.into()),
             ("ranks", m.into()),
             ("threads", threads.into()),
             ("t_model_ms", t_model_ms.into()),
@@ -416,6 +423,7 @@ fn main() {
                 strategy,
                 exec,
                 CommMode::Blocking,
+                1,
                 4,
                 threads,
                 t_model,
@@ -442,6 +450,7 @@ fn main() {
             Strategy::Conventional,
             exec,
             CommMode::Blocking,
+            1,
             2,
             threads,
             heavy_t_model,
@@ -466,9 +475,46 @@ fn main() {
             Strategy::StructureAware,
             ExecMode::Pooled,
             comm,
+            1,
             4,
             2,
             ov_t_model,
+        );
+    }
+
+    // --- depth sweep: conventional pipeline depth 1 / 2 / 4 -----------
+    // deep-pipeline net: every realized delay sits near 5 cycles above
+    // the 1 ms cutoff, so a conventional run — which normally eats the
+    // full barrier skew every min-delay interval — can keep up to four
+    // exchange rounds in flight.  The sweep is the A/B for the depth-D
+    // split-phase pipeline: blocking baseline, then overlap at depth 1
+    // (post/complete within one interval), 2 and 4.
+    println!();
+    let dp_n = if smoke { 300 } else { 1000 };
+    let dp_t_model = if smoke { 20.0 } else { 100.0 };
+    let dp_spec = models::deep_pipeline_net(dp_n, 4).unwrap();
+    h.engine_run(
+        "deep-pipeline",
+        &dp_spec,
+        Strategy::Conventional,
+        ExecMode::Pooled,
+        CommMode::Blocking,
+        1,
+        4,
+        2,
+        dp_t_model,
+    );
+    for depth in [1usize, 2, 4] {
+        h.engine_run(
+            "deep-pipeline",
+            &dp_spec,
+            Strategy::Conventional,
+            ExecMode::Pooled,
+            CommMode::Overlap,
+            depth,
+            4,
+            2,
+            dp_t_model,
         );
     }
 

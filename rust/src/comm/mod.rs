@@ -14,14 +14,18 @@
 //!   a rank-local swap of send and receive buffers, no synchronization.
 //! * [`SplitTransport::alltoall_start`] / [`PendingExchange::complete`] —
 //!   the **split-phase** form of the global exchange ([`nonblocking`]):
-//!   the post side deposits into epoch-stamped double-buffered mailboxes
+//!   the post side deposits into a ring of epoch-stamped mailbox slots
 //!   without waiting, and the completion side rendezvous with each
-//!   sender's deposit only when the receiver actually needs the data.
-//!   The slack between post and completion — bounded by the inter-area
-//!   delay of the spikes on the wire — is latency-hiding budget: compute
-//!   of the next epoch runs while peers catch up.  See the
-//!   [`nonblocking`] module docs for the protocol, the split-phase
-//!   quota-resize and the hidden-latency accounting.
+//!   sender's deposit only when the receiver actually needs the data —
+//!   or earlier, source by source, through the incremental
+//!   [`Pending::try_complete_source`] fast path.  The ring holds up to a
+//!   configurable depth of exchanges in flight per rank
+//!   ([`World::with_depth`]); the slack between post and completion —
+//!   bounded by the inter-area delay of the spikes on the wire — is
+//!   latency-hiding budget: compute of the following cycles runs while
+//!   peers catch up.  See the [`nonblocking`] module docs for the ring
+//!   protocol, the split-phase quota-resize and the hidden-latency
+//!   accounting.
 //!
 //! # The [`Transport`] abstraction
 //!
@@ -97,6 +101,10 @@ pub struct CommStats {
     /// Peer skew that elapsed between post and completion while the rank
     /// was computing — synchronization time moved off the critical path.
     pub hidden_nanos: AtomicU64,
+    /// Sources drained *early* through the incremental completion fast
+    /// path ([`Pending::try_complete_source`]) — deposits consumed during
+    /// the in-flight window instead of at the deadline rendezvous.
+    pub early_drained_sources: AtomicU64,
 }
 
 /// Point-in-time view of [`CommStats`], with durations in seconds.
@@ -108,6 +116,7 @@ pub struct CommStatsSnapshot {
     pub resize_rounds: u64,
     pub max_send_per_pair: u64,
     pub overlapped_exchanges: u64,
+    pub early_drained_sources: u64,
     pub post_secs: f64,
     pub complete_wait_secs: f64,
     pub hidden_secs: f64,
@@ -124,6 +133,9 @@ impl CommStats {
                 as u64,
             overlapped_exchanges: self
                 .overlapped_exchanges
+                .load(Ordering::Relaxed),
+            early_drained_sources: self
+                .early_drained_sources
                 .load(Ordering::Relaxed),
             post_secs: self.post_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             complete_wait_secs: self.complete_wait_nanos.load(Ordering::Relaxed)
@@ -142,7 +154,9 @@ struct WorldInner {
     /// Current buffer quota in spikes per rank pair (grows on overflow).
     quota: AtomicUsize,
     overflow: AtomicBool,
-    /// Split-phase mailbox state (epoch-stamped double buffers).
+    /// Scratch register of [`Transport::allreduce_min_u64`].
+    reduce_slot: AtomicU64,
+    /// Split-phase mailbox state (epoch-stamped ring buffers).
     nb: nonblocking::NbWorld,
     stats: CommStats,
 }
@@ -157,8 +171,19 @@ pub struct World {
 impl World {
     /// `initial_quota` is the starting spike-buffer size per rank pair
     /// (NEST starts small and grows; tests exercise the resize protocol).
+    /// The split-phase mailboxes are sized for one exchange in flight per
+    /// rank; use [`World::with_depth`] for deeper pipelines.
     pub fn new(m: usize, initial_quota: usize) -> World {
+        World::with_depth(m, initial_quota, 1)
+    }
+
+    /// As [`World::new`], with split-phase mailboxes sized for up to
+    /// `depth` exchanges in flight per rank (a ring of `2·depth`
+    /// epoch-stamped slots per (dest, src) pair — see the
+    /// [`nonblocking`] module docs for why `2·depth` suffices).
+    pub fn with_depth(m: usize, initial_quota: usize, depth: usize) -> World {
         assert!(m >= 1);
+        assert!(depth >= 1, "pipeline depth must be >= 1");
         let mailboxes = (0..m)
             .map(|_| (0..m).map(|_| Mutex::new(Vec::new())).collect())
             .collect();
@@ -169,7 +194,8 @@ impl World {
                 mailboxes,
                 quota: AtomicUsize::new(initial_quota.max(1)),
                 overflow: AtomicBool::new(false),
-                nb: nonblocking::NbWorld::new(m),
+                reduce_slot: AtomicU64::new(u64::MAX),
+                nb: nonblocking::NbWorld::new(m, depth),
                 stats: CommStats::default(),
             }),
         }
@@ -233,6 +259,14 @@ pub trait Transport {
         send: &mut Vec<SpikeMsg>,
         recv: &mut Vec<SpikeMsg>,
     );
+
+    /// Control-plane collective: the minimum of `v` over all ranks (an
+    /// `MPI_Allreduce(MIN)`).  Cold path — used to agree on run-wide
+    /// parameters derived from rank-local state (e.g. the sustainable
+    /// split-phase pipeline depth), so it deliberately stays off the
+    /// spike-statistics counters.  Collective semantics: every rank must
+    /// call it the same number of times.
+    fn allreduce_min_u64(&self, v: u64) -> u64;
 
     /// Allocating convenience wrapper around [`Transport::alltoall_into`]
     /// for cold paths (setup exchanges, tests).
@@ -353,6 +387,22 @@ impl Transport for Communicator {
         self.world.stats.local_swaps.fetch_add(1, Ordering::Relaxed);
         recv.clear();
         std::mem::swap(send, recv);
+    }
+
+    fn allreduce_min_u64(&self, v: u64) -> u64 {
+        let w = &*self.world;
+        // barrier-framed register protocol: no rank can still be reading
+        // the previous reduction when rank 0 resets (it could not have
+        // reached this call's first barrier otherwise), and no rank can
+        // read before every contribution landed
+        w.barrier.wait();
+        if self.rank == 0 {
+            w.reduce_slot.store(u64::MAX, Ordering::Relaxed);
+        }
+        w.barrier.wait();
+        w.reduce_slot.fetch_min(v, Ordering::Relaxed);
+        w.barrier.wait();
+        w.reduce_slot.load(Ordering::Relaxed)
     }
 }
 
@@ -644,6 +694,32 @@ mod tests {
         }
         // the two buffers ping-pong; both hold capacity after warm-up
         assert!(send.capacity() >= 16 && recv.capacity() >= 16);
+    }
+
+    #[test]
+    fn allreduce_min_agrees_across_ranks_and_rounds() {
+        let results = run_ranks(4, 64, |rank, comm| {
+            // round 1: min of (10 + rank); round 2: min of (100 - rank).
+            // Back-to-back calls exercise the register-reset framing.
+            let a = comm.allreduce_min_u64(10 + rank as u64);
+            let b = comm.allreduce_min_u64(100 - rank as u64);
+            (a, b)
+        });
+        assert!(results.iter().all(|&(a, b)| a == 10 && b == 97));
+    }
+
+    #[test]
+    fn allreduce_min_does_not_touch_spike_stats() {
+        let world = World::new(2, 64);
+        thread::scope(|s| {
+            for rank in 0..2 {
+                let comm = world.communicator(rank);
+                s.spawn(move || comm.allreduce_min_u64(rank as u64));
+            }
+        });
+        let snap = world.stats().snapshot();
+        assert_eq!(snap.alltoall_calls, 0);
+        assert_eq!(snap.bytes_sent, 0);
     }
 
     #[test]

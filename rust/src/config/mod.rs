@@ -161,6 +161,14 @@ pub struct RunConfig {
     pub exec: ExecMode,
     /// Blocking vs split-phase (overlapped) global exchange.
     pub comm: CommMode,
+    /// Split-phase pipeline depth: how many exchange rounds may be in
+    /// flight per rank under `CommMode::Overlap` (1 = post one round and
+    /// complete it before the next boundary, today's overlap; >1 keeps D
+    /// consecutive min-delay intervals' exchanges in flight — only
+    /// sustainable when the realized remote delays exceed `depth` cycles,
+    /// which the engine validates collectively at startup).  Ignored
+    /// under `CommMode::Blocking`.
+    pub comm_depth: usize,
     /// Initial spike quota per rank pair of the communication buffers
     /// (NEST starts small and grows via the two-round resize protocol).
     pub comm_quota: usize,
@@ -181,6 +189,7 @@ impl Default for RunConfig {
             update_path: UpdatePath::Native,
             exec: ExecMode::Pooled,
             comm: CommMode::Blocking,
+            comm_depth: 1,
             comm_quota: 1024,
             record_spikes: false,
             record_cycle_times: false,
@@ -190,8 +199,8 @@ impl Default for RunConfig {
 
 impl RunConfig {
     /// Apply `--strategy --ranks --threads --t-model --seed --update-path
-    /// --exec --comm --quota --record-spikes --record-cycle-times` CLI
-    /// overrides.
+    /// --exec --comm --comm-depth --quota --record-spikes
+    /// --record-cycle-times` CLI overrides.
     pub fn override_from_args(mut self, args: &Args) -> Result<RunConfig> {
         if let Some(s) = args.str_opt("strategy") {
             self.strategy = Strategy::parse(&s)?;
@@ -210,6 +219,7 @@ impl RunConfig {
         if let Some(s) = args.str_opt("comm") {
             self.comm = CommMode::parse(&s)?;
         }
+        self.comm_depth = args.usize_or("comm-depth", self.comm_depth)?;
         self.comm_quota = args.usize_or("quota", self.comm_quota)?;
         if args.flag("record-spikes") {
             self.record_spikes = true;
@@ -248,6 +258,9 @@ impl RunConfig {
         if let Some(s) = v.get("comm").and_then(Json::as_str) {
             cfg.comm = CommMode::parse(s)?;
         }
+        if let Some(x) = v.get("comm_depth").and_then(Json::as_usize) {
+            cfg.comm_depth = x;
+        }
         if let Some(x) = v.get("comm_quota").and_then(Json::as_usize) {
             cfg.comm_quota = x;
         }
@@ -278,6 +291,12 @@ impl RunConfig {
         }
         if self.comm_quota == 0 {
             bail!("comm_quota must be >= 1");
+        }
+        if self.comm_depth == 0 {
+            bail!(
+                "comm_depth must be >= 1 (1 = one exchange in flight, \
+                 today's overlap; >1 pipelines that many rounds)"
+            );
         }
         Ok(())
     }
@@ -349,6 +368,13 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.comm_quota = 0;
         assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.comm_depth = 0;
+        let err = cfg.validate().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("comm_depth must be >= 1"),
+            "unexpected error: {err:#}"
+        );
     }
 
     #[test]
@@ -396,6 +422,30 @@ mod tests {
         let v = json::parse(r#"{"comm": "overlap"}"#).unwrap();
         let cfg = RunConfig::from_json(&v).unwrap();
         assert_eq!(cfg.comm, CommMode::Overlap);
+    }
+
+    #[test]
+    fn comm_depth_overrides() {
+        // default: one exchange in flight (exactly the PR 3 behavior)
+        assert_eq!(RunConfig::default().comm_depth, 1);
+
+        let args =
+            Args::parse(["run", "--comm", "overlap", "--comm-depth", "4"])
+                .unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert_eq!(cfg.comm_depth, 4);
+
+        let v = json::parse(r#"{"comm": "overlap", "comm_depth": 2}"#)
+            .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.comm_depth, 2);
+
+        // --comm-depth 0 is rejected at parse time with the actionable
+        // message (not deferred to the engine)
+        let args = Args::parse(["run", "--comm-depth", "0"]).unwrap();
+        assert!(RunConfig::default().override_from_args(&args).is_err());
+        let v = json::parse(r#"{"comm_depth": 0}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -19,17 +19,21 @@
 //! The epoch-boundary global exchange runs blocking or split-phase
 //! ([`crate::config::CommMode`]): under `CommMode::Overlap` each rank
 //! posts the exchange without waiting and completes it cycles later,
-//! just before its delivery deadline — see `engine::rank` for the
-//! deadline argument and `comm::nonblocking` for the protocol.  Both
-//! modes produce bit-identical spike trains in every exec mode.
+//! just before its delivery deadline, keeping up to `comm_depth`
+//! exchange rounds in flight (`--comm-depth`; validated collectively
+//! against the realized delay slack) and draining early-arrived peers
+//! incrementally during the in-flight window — see `engine::rank` for
+//! the deadline schedule and `comm::nonblocking` for the ring protocol.
+//! All modes and depths produce bit-identical spike trains in every
+//! exec mode.
 
 pub mod neuron;
 pub mod rank;
 pub mod ringbuffer;
 pub mod update;
 
-use crate::comm::{CommStatsSnapshot, World};
-use crate::config::{RunConfig, Strategy, UpdatePath};
+use crate::comm::{CommStatsSnapshot, Transport, World};
+use crate::config::{CommMode, RunConfig, Strategy, UpdatePath};
 use crate::network::{Gid, ModelSpec};
 use crate::placement::Placement;
 use crate::util::timers::PhaseTimes;
@@ -64,6 +68,11 @@ pub struct SimResult {
     pub rank_conns: Vec<(usize, usize)>,
     /// Aggregate communication statistics of the run's [`World`].
     pub comm_stats: CommStatsSnapshot,
+    /// Split-phase pipeline depth the run actually used: the configured
+    /// `comm_depth` under `CommMode::Overlap` (validated against the
+    /// realized delay slack of every rank), 1 under
+    /// `CommMode::Blocking`.
+    pub effective_comm_depth: u64,
 }
 
 impl SimResult {
@@ -144,30 +153,54 @@ pub fn simulate_with(
         );
     }
 
-    let world = World::new(cfg.m_ranks, cfg.comm_quota);
-    let results: Vec<RankResult> = std::thread::scope(|scope| {
+    let world =
+        World::with_depth(cfg.m_ranks, cfg.comm_quota, cfg.comm_depth);
+    let results: Result<Vec<RankResult>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.m_ranks)
             .map(|r| {
                 let comm = world.communicator(r);
                 let placement = &placement;
                 let updater = &updater;
-                scope.spawn(move || {
+                scope.spawn(move || -> Result<RankResult> {
                     let state = RankState::build(
                         spec,
                         placement,
                         cfg.strategy,
                         cfg.comm,
+                        cfg.comm_depth,
                         cfg.seed,
                         &comm,
                         cfg.record_spikes,
                     );
-                    state.run(
+                    // a pipeline deeper than the *realized* delay slack
+                    // would force completing an exchange in the very
+                    // cycle that needs its spikes; reduce the rank-local
+                    // bound collectively so every rank takes the same
+                    // accept/reject branch (no rank left at a barrier)
+                    if cfg.comm == CommMode::Overlap && cfg.comm_depth > 1 {
+                        let sustainable = comm
+                            .allreduce_min_u64(state.max_sustainable_depth());
+                        anyhow::ensure!(
+                            cfg.comm_depth as u64 <= sustainable,
+                            "comm depth {} exceeds the realized delay \
+                             slack: the most constrained rank can keep at \
+                             most {} exchange(s) in flight before the \
+                             causality deadline forces completion; lower \
+                             --comm-depth to {} or pick a model whose \
+                             remote delays exceed the min-delay cutoff by \
+                             more cycles",
+                            cfg.comm_depth,
+                            sustainable,
+                            sustainable,
+                        );
+                    }
+                    Ok(state.run(
                         &comm,
                         s_cycles,
                         updater,
                         cfg.record_cycle_times,
                         cfg.exec,
-                    )
+                    ))
                 })
             })
             .collect();
@@ -176,6 +209,7 @@ pub fn simulate_with(
             .map(|h| h.join().expect("rank thread panicked"))
             .collect()
     });
+    let results = results?;
 
     let mut rank_times = vec![PhaseTimes::new(); cfg.m_ranks];
     let mut cycle_times = vec![Vec::new(); cfg.m_ranks];
@@ -206,5 +240,9 @@ pub fn simulate_with(
         rank_neurons,
         rank_conns,
         comm_stats: world.stats().snapshot(),
+        effective_comm_depth: match cfg.comm {
+            CommMode::Blocking => 1,
+            CommMode::Overlap => cfg.comm_depth as u64,
+        },
     })
 }

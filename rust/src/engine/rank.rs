@@ -54,25 +54,60 @@
 //! Under the split-phase comm mode the epoch-boundary global exchange is
 //! *posted* ([`crate::comm::SplitTransport::alltoall_start`]) at the end
 //! of the boundary cycle without waiting for any peer, the rank keeps
-//! running local cycles of the next epoch, and the exchange is
-//! *completed* just before the first cycle whose delivery deadline needs
-//! the spikes.  The deadline is sound by construction: every spike in
-//! the exchange was emitted no earlier than the first cycle of the
-//! posting epoch and travels a connection of at least
-//! `min_remote_delay_steps` — the rank's *realized* minimum incoming
-//! delay over the tables the exchange delivers through (floored by the
-//! model's `d_min_inter` cutoff, but typically several cycles above it,
-//! which is the latency-hiding budget).  Completion is clamped to the
-//! next epoch boundary so at most one exchange is in flight (matching
-//! the transport's double-buffered mailboxes).  The double buffering of
-//! `global_send`/`recv_global` lives in the transport's parity slots:
-//! posting swaps each send buffer against an empty recycled vector, so
-//! the rank's single send/recv sets are immediately reusable while the
-//! deposited data rides the in-flight slot.  Because every delivered
-//! spike still lands in the ring buffer strictly before the first row
-//! that could contain it is read — the causality `debug_assert` in
-//! [`ThreadState::deliver_sorted`] checks exactly this deadline — spike
-//! trains are bit-identical to the blocking mode in every exec mode.
+//! running local cycles, and the exchange is *completed* just before the
+//! first cycle whose delivery deadline needs the spikes.  The deadline
+//! is sound by construction: every spike in the exchange was emitted no
+//! earlier than the first cycle of the posting epoch and travels a
+//! connection of at least `min_remote_delay_steps` — the rank's
+//! *realized* minimum incoming delay over the tables the exchange
+//! delivers through (floored by the model's `d_min_inter` cutoff, but
+//! typically several cycles above it, which is the latency-hiding
+//! budget).
+//!
+//! ## The depth-D deadline schedule
+//!
+//! With `comm_depth = D` (`--comm-depth`) the rank keeps up to `D`
+//! exchanges in flight across consecutive epoch boundaries; each
+//! exchange completes at the earlier of its causality deadline and the
+//! `D`-th boundary after its post (the transport's mailbox-ring bound):
+//!
+//! ```text
+//! cycle    0    1    2    3    4    5    ...        (epoch = 1 cycle,
+//! post     e0   e1   e2   e3   e4   e5              realized min remote
+//!          ├────┼────┼────╮                          delay = 3 cycles,
+//!          │    ├────┼────┼────╮                     depth D = 3)
+//!          │    │    ├────┼────┼────╮
+//! complete ▼    ▼    e0   e1   e2   e3 ...
+//!                    ▲ deliver of cycle 3 consumes e0's spikes:
+//!                      deadline(e_k) = k + min(slack, D) cycles
+//! ```
+//!
+//! Every cycle, `RankState::service_exchanges` first runs the
+//! **incremental per-source completion** fast path: a condvar-free
+//! try-drain of every (in-flight exchange, source) pair, consuming
+//! deposits that already landed while the exchange stays pending.  At
+//! the deadline, the final rendezvous then waits only for peers whose
+//! deposit is still missing.  Deadlines of consecutive exchanges are
+//! strictly increasing (the clamp window translates by one epoch per
+//! post), so completions are FIFO and the in-flight count never exceeds
+//! the lesser of `D` and the realized slack — which is why depths
+//! beyond the collectively-reduced [`RankState::max_sustainable_depth`]
+//! are rejected at startup rather than silently under-delivered.
+//!
+//! Each in-flight exchange owns a recycled per-source receive-buffer
+//! set (checked out of `recv_pool` at post, returned at completion), so
+//! early drains of a younger exchange never clobber an older one's
+//! spikes and no *spike buffer* is allocated in steady state at any
+//! depth (the transport's per-post drained-flag vector — M bytes — is
+//! the one steady-state allocation of the overlapped path).  Posting
+//! swaps each send buffer against an empty recycled vector, so the
+//! rank's single send set is immediately reusable while the deposited
+//! data rides its ring slot.  Because every delivered spike still lands
+//! in the ring buffer strictly before the first row that could contain
+//! it is read — the causality `debug_assert` in
+//! `ThreadState::deliver_sorted` checks exactly this deadline — spike
+//! trains are bit-identical to the blocking mode in every exec mode at
+//! every depth.
 
 use crate::comm::{Pending, SpikeMsg, SplitTransport, Transport};
 use crate::config::{CommMode, ExecMode, Strategy};
@@ -85,9 +120,10 @@ use crate::tables::{
     mask_test, ConnTable, LocalConn, Pathways, SourceShards, TargetTable,
 };
 use crate::util::timers::{Phase, PhaseTimes, Stopwatch};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex, MutexGuard};
+use std::time::Instant;
 
 /// One virtual thread's worth of state.
 pub struct ThreadState {
@@ -489,11 +525,15 @@ fn barrier_worker(
     )
 }
 
-/// One in-flight split-phase exchange and the cycle before whose deliver
-/// phase it must be completed.
+/// One in-flight split-phase exchange, the cycle before whose deliver
+/// phase it must be completed, and the per-source receive buffers it
+/// drains into — owned per exchange so the incremental fast path can
+/// fill them while older exchanges are still pending (buffer sets are
+/// recycled through `RankState::recv_pool`).
 struct InFlight<P: Pending> {
     pending: P,
     deadline_cycle: u64,
+    recv: Vec<Vec<SpikeMsg>>,
 }
 
 /// Full per-rank state.
@@ -502,6 +542,9 @@ pub struct RankState {
     strategy: Strategy,
     /// Blocking or split-phase (overlapped) global exchange.
     comm_mode: CommMode,
+    /// Split-phase pipeline depth: up to this many exchanges in flight
+    /// per rank (1 under `CommMode::Blocking`).
+    comm_depth: u64,
     /// Cycles between global exchanges (1 unless structure-aware).
     epoch_cycles: u64,
     steps_per_cycle: u64,
@@ -524,6 +567,10 @@ pub struct RankState {
     recv_long: Vec<SpikeMsg>,
     /// Recycled per-source transport buffers of the global exchange.
     recv_global: Vec<Vec<SpikeMsg>>,
+    /// Recycled per-exchange receive-buffer sets of the overlapped path
+    /// (one set checked out per posted exchange, returned at its
+    /// completion — no steady-state allocation at any pipeline depth).
+    recv_pool: Vec<Vec<Vec<SpikeMsg>>>,
     record_spikes: bool,
     spikes: Vec<(u64, Gid)>,
 }
@@ -538,6 +585,7 @@ impl RankState {
         placement: &Placement,
         strategy: Strategy,
         comm_mode: CommMode,
+        comm_depth: usize,
         seed: u64,
         comm: &T,
         record_spikes: bool,
@@ -601,13 +649,15 @@ impl RankState {
             };
             // horizon: largest write-ahead (max delay) plus the epoch of
             // lumped delivery.  This also covers the in-flight window of
-            // an overlapped exchange: delaying completion by up to an
-            // epoch only *advances* the read cursor past already-consumed
-            // rows, so the write-ahead distance `arrive - first_step` at
-            // delivery time shrinks (never grows) relative to delivering
-            // at the boundary — no extra rows are needed, and the
-            // deadline debug_assert in `deliver_sorted` would catch any
-            // spike whose row was already consumed.
+            // overlapped exchanges at *any* pipeline depth: delaying
+            // completion — by up to an epoch at depth 1, up to depth·D
+            // cycles in a deeper pipeline — only *advances* the read
+            // cursor past already-consumed rows, so the write-ahead
+            // distance `arrive - first_step` at delivery time shrinks
+            // (never grows) relative to delivering at the boundary — no
+            // extra rows are needed for deeper rings, and the deadline
+            // debug_assert in `deliver_sorted` would catch any spike
+            // whose row was already consumed.
             let n_slots = max_delay as usize
                 + (epoch_cycles * steps_per_cycle) as usize
                 + 2;
@@ -683,6 +733,10 @@ impl RankState {
             rank,
             strategy,
             comm_mode,
+            comm_depth: match comm_mode {
+                CommMode::Blocking => 1,
+                CommMode::Overlap => (comm_depth as u64).max(1),
+            },
             epoch_cycles,
             steps_per_cycle,
             min_remote_delay_steps: min_remote_delay as u64,
@@ -694,6 +748,7 @@ impl RankState {
             recv_short: Vec::new(),
             recv_long: Vec::new(),
             recv_global: Vec::new(),
+            recv_pool: Vec::new(),
             record_spikes,
             spikes: Vec::new(),
         }
@@ -725,8 +780,12 @@ impl RankState {
     /// cycle `post_cycle` must complete.  The exchange carries spikes
     /// emitted no earlier than the first cycle of the posting epoch, so
     /// none can arrive before `first_emission + min_remote_delay`;
-    /// completion is clamped to the next boundary so at most one
-    /// exchange is ever in flight.
+    /// completion is clamped to the `comm_depth`-th following boundary
+    /// so at most `comm_depth` exchanges are ever in flight (matching
+    /// the transport's mailbox ring).  Because the clamp window shifts
+    /// by exactly one epoch per posted exchange, deadlines of
+    /// consecutive exchanges are strictly increasing — the pipeline
+    /// completes in FIFO order, one exchange per epoch in steady state.
     fn overlap_deadline(&self, post_cycle: u64) -> u64 {
         let d = self.epoch_cycles;
         let steps = self.steps_per_cycle;
@@ -734,32 +793,73 @@ impl RankState {
         let earliest_arrival = first_emission_step
             .saturating_add(self.min_remote_delay_steps);
         (earliest_arrival / steps)
-            .clamp(post_cycle + 1, post_cycle + d)
+            .clamp(post_cycle + 1, post_cycle + self.comm_depth * d)
     }
 
-    /// Complete an in-flight exchange if cycle `s` has reached its
-    /// delivery deadline (or unconditionally with `force`, for the final
-    /// exchange whose spikes fall beyond the simulated horizon), filling
-    /// `recv_long` exactly as the blocking path does.  Completion-side
-    /// wait is charged to `Synchronize`, the drain to `DataExchange`.
-    fn complete_due<P: Pending>(
+    /// Largest split-phase pipeline depth this rank can sustain without
+    /// the causality deadline forcing a completion in the very cycle
+    /// that needs the spikes: how many epoch boundaries fit between an
+    /// exchange's post and the arrival cycle of its earliest possible
+    /// spike.  Depends on the *realized* minimum remote delay, so it is
+    /// rank-local; the engine reduces it over all ranks (collectively)
+    /// before accepting a `comm_depth > 1` run.
+    pub fn max_sustainable_depth(&self) -> u64 {
+        let slack_cycles =
+            self.min_remote_delay_steps / self.steps_per_cycle;
+        let window = (slack_cycles + 1).saturating_sub(self.epoch_cycles);
+        // ceil(window / epoch), floored at depth 1 (plain overlap)
+        ((window + self.epoch_cycles - 1) / self.epoch_cycles).max(1)
+    }
+
+    /// Service the in-flight exchange pipeline at the start of cycle
+    /// `s`: first the incremental fast path — drain every source whose
+    /// deposit already landed, across *all* in-flight exchanges, without
+    /// blocking — then complete (FIFO) every exchange whose delivery
+    /// deadline has arrived (or all of them with `force`, for the final
+    /// exchanges whose spikes fall beyond the simulated horizon),
+    /// appending their spikes to `recv_long` exactly as the blocking
+    /// path does.  Completion-side wait is charged to `Synchronize`,
+    /// drains to `DataExchange`.
+    fn service_exchanges<P: Pending>(
         &mut self,
-        inflight: &mut Option<InFlight<P>>,
+        inflight: &mut VecDeque<InFlight<P>>,
         s: u64,
         force: bool,
         phase_times: &mut PhaseTimes,
     ) {
-        let due = inflight
-            .as_ref()
-            .is_some_and(|f| force || f.deadline_cycle <= s);
-        if !due {
+        if inflight.is_empty() {
             return;
         }
-        let f = inflight.take().unwrap();
-        let timing = f.pending.complete(&mut self.recv_global);
-        phase_times.add(Phase::Synchronize, timing.wait_secs);
-        phase_times.add(Phase::DataExchange, timing.drain_secs);
-        self.flatten_recv_global();
+        // incremental per-source completion: a condvar-free try-drain
+        // over every pending (exchange, source) pair, so the deadline
+        // rendezvous below only ever waits for genuinely late peers
+        let t0 = Instant::now();
+        for f in inflight.iter_mut() {
+            let InFlight { pending, recv, .. } = f;
+            for (src, out) in recv.iter_mut().enumerate() {
+                pending.try_complete_source(src, out);
+            }
+        }
+        phase_times.add(Phase::DataExchange, t0.elapsed().as_secs_f64());
+
+        while inflight
+            .front()
+            .is_some_and(|f| force || f.deadline_cycle <= s)
+        {
+            let InFlight { pending, mut recv, .. } =
+                inflight.pop_front().unwrap();
+            let timing = pending.complete(&mut recv);
+            phase_times.add(Phase::Synchronize, timing.wait_secs);
+            phase_times.add(Phase::DataExchange, timing.drain_secs);
+            // append (two pipelined exchanges may reach their deadlines
+            // before the same deliver phase transiently at startup);
+            // recv_long is the one delivery input both comm modes share
+            for buf in &mut recv {
+                self.recv_long.extend_from_slice(buf);
+                buf.clear();
+            }
+            self.recv_pool.push(recv);
+        }
     }
 
     /// Flatten the per-source receive buffers into `recv_long` — the one
@@ -774,16 +874,16 @@ impl RankState {
 
     /// The communicate step of one cycle: local pathway swap (dual
     /// strategies) every cycle, global exchange every `epoch_cycles`-th
-    /// cycle — blocking, or posted split-phase and completed later by
-    /// [`RankState::complete_due`] — with all buffers recycled through
-    /// the transport.
+    /// cycle — blocking, or posted split-phase into the in-flight
+    /// pipeline and completed later by `service_exchanges` — with all
+    /// buffers recycled through the transport.
     fn communicate<T: SplitTransport>(
         &mut self,
         comm: &T,
         s: u64,
         dual: bool,
         phase_times: &mut PhaseTimes,
-        inflight: &mut Option<InFlight<T::Pending>>,
+        inflight: &mut VecDeque<InFlight<T::Pending>>,
     ) {
         if dual {
             comm.local_swap_into(&mut self.local_send, &mut self.recv_short);
@@ -801,15 +901,20 @@ impl RankState {
                 }
                 CommMode::Overlap => {
                     debug_assert!(
-                        inflight.is_none(),
-                        "previous exchange still in flight at its \
-                         successor's post"
+                        (inflight.len() as u64) < self.comm_depth,
+                        "pipeline full at post: {} in flight, depth {}",
+                        inflight.len(),
+                        self.comm_depth
                     );
                     let pending = comm.alltoall_start(&mut self.global_send);
                     phase_times.add(Phase::DataExchange, pending.post_secs());
-                    *inflight = Some(InFlight {
+                    let mut recv =
+                        self.recv_pool.pop().unwrap_or_default();
+                    recv.resize_with(self.global_send.len(), Vec::new);
+                    inflight.push_back(InFlight {
                         pending,
                         deadline_cycle: self.overlap_deadline(s),
+                        recv,
                     });
                 }
             }
@@ -863,13 +968,14 @@ impl RankState {
             0
         });
         let dual = self.strategy.dual_pathways();
-        let mut inflight: Option<InFlight<T::Pending>> = None;
+        let mut inflight: VecDeque<InFlight<T::Pending>> = VecDeque::new();
 
         for s in 0..s_cycles {
             let first_step = s * self.steps_per_cycle;
-            // complete a due overlapped exchange before the deliver
-            // phase (charged to its own phases, not this cycle's timer)
-            self.complete_due(&mut inflight, s, false, &mut phase_times);
+            // drain early deposits and complete due overlapped exchanges
+            // before the deliver phase (charged to their own phases, not
+            // this cycle's timer)
+            self.service_exchanges(&mut inflight, s, false, &mut phase_times);
             let mut sw = Stopwatch::start();
             let mut cycle_secs = 0.0;
 
@@ -917,10 +1023,11 @@ impl RankState {
             // ---- communicate ---------------------------------------------
             self.communicate(comm, s, dual, &mut phase_times, &mut inflight);
         }
-        // the final posted exchange carries spikes beyond the simulated
-        // horizon; complete it for collective symmetry and drop the data
-        // (the blocking path likewise never delivers its last receive)
-        self.complete_due(&mut inflight, s_cycles, true, &mut phase_times);
+        // the final posted exchanges carry spikes beyond the simulated
+        // horizon; complete them for collective symmetry and drop the
+        // data (the blocking path likewise never delivers its last
+        // receive)
+        self.service_exchanges(&mut inflight, s_cycles, true, &mut phase_times);
 
         let (mut n_short, mut n_long, mut n_neurons) = (0usize, 0usize, 0usize);
         for th in &self.threads {
@@ -998,11 +1105,18 @@ impl RankState {
                         })
                     })
                     .collect();
-                let mut inflight: Option<InFlight<T::Pending>> = None;
+                let mut inflight: VecDeque<InFlight<T::Pending>> =
+                    VecDeque::new();
 
                 for s in 0..s_cycles {
-                    // complete a due overlapped exchange before routing
-                    self.complete_due(&mut inflight, s, false, &mut phase_times);
+                    // drain early deposits and complete due exchanges
+                    // before routing
+                    self.service_exchanges(
+                        &mut inflight,
+                        s,
+                        false,
+                        &mut phase_times,
+                    );
                     let mut sw = Stopwatch::start();
                     let mut cycle_secs = 0.0;
 
@@ -1064,7 +1178,7 @@ impl RankState {
                         &mut inflight,
                     );
                 }
-                self.complete_due(
+                self.service_exchanges(
                     &mut inflight,
                     s_cycles,
                     true,
@@ -1143,12 +1257,19 @@ impl RankState {
                             (Vec::new(), (0..m).map(|_| Vec::new()).collect())
                         })
                         .collect();
-                let mut inflight: Option<InFlight<T::Pending>> = None;
+                let mut inflight: VecDeque<InFlight<T::Pending>> =
+                    VecDeque::new();
 
                 for s in 0..s_cycles {
                     let first_step = s * steps;
-                    // complete a due overlapped exchange before delivery
-                    self.complete_due(&mut inflight, s, false, &mut phase_times);
+                    // drain early deposits and complete due exchanges
+                    // before delivery
+                    self.service_exchanges(
+                        &mut inflight,
+                        s,
+                        false,
+                        &mut phase_times,
+                    );
                     let mut sw = Stopwatch::start();
                     let mut cycle_secs = 0.0;
 
@@ -1225,7 +1346,7 @@ impl RankState {
                         &mut inflight,
                     );
                 }
-                self.complete_due(
+                self.service_exchanges(
                     &mut inflight,
                     s_cycles,
                     true,

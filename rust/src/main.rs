@@ -49,7 +49,7 @@ fn print_usage() {
                     [--ranks M] [--threads T] [--t-model ms] [--seed n]\n\
                     [--scale f] [--areas n] [--update-path native|xla]\n\
                     [--exec sequential|pooled|pooled-channels]\n\
-                    [--comm blocking|overlap]\n\
+                    [--comm blocking|overlap] [--comm-depth D]\n\
                     [--quota spikes]\n\
                     [--record-spikes]\n\
            figure <name> [--t-model ms] [--seed n] [--out dir]\n\
@@ -96,7 +96,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     println!(
         "model {} | {} areas | {} neurons | strategy {} | M={} T={} | \
-         exec {} | comm {} | T_model {} ms | D={}",
+         exec {} | comm {} (depth {}) | T_model {} ms | D={}",
         spec.name,
         spec.n_areas(),
         spec.total_neurons(),
@@ -105,6 +105,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cfg.threads_per_rank,
         cfg.exec.name(),
         cfg.comm.name(),
+        cfg.comm_depth,
         cfg.t_model_ms,
         spec.delay_ratio(),
     );
@@ -136,13 +137,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let cs = &res.comm_stats;
     println!(
         "comm: a2a {} | swaps {} | bytes {} | resizes {} | max/pair {} | \
-         overlapped {} | post {} | wait {} | hidden {}",
+         depth {} | overlapped {} | early-drained {} | post {} | wait {} \
+         | hidden {}",
         cs.alltoall_calls,
         cs.local_swaps,
         cs.bytes_sent,
         cs.resize_rounds,
         cs.max_send_per_pair,
+        res.effective_comm_depth,
         cs.overlapped_exchanges,
+        cs.early_drained_sources,
         fnum(cs.post_secs),
         fnum(cs.complete_wait_secs),
         fnum(cs.hidden_secs),
@@ -203,6 +207,15 @@ fn cmd_theory(args: &Args) -> Result<()> {
          (predicted gain {:.2} s per 100k cycles)",
         100.0 * sync::overlap_hidden_fraction(model, m, d, window),
         sync::predicted_overlap_gain(model, m, 100_000, d, window),
+    );
+    // conventional runs (d = 1) gain nothing at depth 1; a depth-D
+    // pipeline opens a window of depth-1 cycles of the realized slack
+    let slack = 4u32;
+    println!(
+        "depth-D pipeline (conventional, {slack} cycles realized slack): \
+         gain per 100k cycles = {:.2} s (depth 2), {:.2} s (depth 4)",
+        sync::predicted_depth_gain(model, m, 100_000, 1, 2, slack),
+        sync::predicted_depth_gain(model, m, 100_000, 1, 4, slack),
     );
     let sc = delivery::DeliveryScenario::default();
     println!("\n== spike-delivery theory (eqs 13-17) ==");

@@ -175,6 +175,49 @@ pub fn sanity_net(n_per_area: u32, n_areas: usize) -> Result<ModelSpec> {
     )
 }
 
+/// Deep-pipeline LIF net: every delay — intra *and* inter — is drawn
+/// tightly around 5 ms (sigma 0.05 ms) over a 1 ms min-delay cutoff, so
+/// the cycle stays 1 ms while every rank's *realized* minimum incoming
+/// delay sits near 5 ms ≈ 5 cycles.  That multi-cycle slack is exactly
+/// what a depth-D split-phase pipeline (`--comm-depth`) needs:
+/// conventional runs on this net sustain up to 4 exchange rounds in
+/// flight.  Weights are binary fractions (exact f64 ring-buffer sums)
+/// like `sanity_net`, so depth-equivalence tests can require bit-exact
+/// spike trains.
+pub fn deep_pipeline_net(
+    n_per_area: u32,
+    n_areas: usize,
+) -> Result<ModelSpec> {
+    anyhow::ensure!(
+        n_per_area >= 2,
+        "deep_pipeline_net needs at least 2 neurons per area (got \
+         {n_per_area}): the indegree clamp requires n - 1 >= 1"
+    );
+    let params = LifParams {
+        i_e_pa: LifParams::default().i_e_for_rate(30.0),
+        ..LifParams::default()
+    };
+    let areas = (0..n_areas)
+        .map(|i| AreaSpec {
+            name: format!("P{i}"),
+            n: n_per_area,
+            neuron: NeuronKind::Lif(params),
+        })
+        .collect();
+    let k_intra = (n_per_area / 10).clamp(1, n_per_area - 1);
+    let k_inter = if n_areas > 1 { (n_per_area / 20).max(1) } else { 0 };
+    ModelSpec::new(
+        format!("deep-pipeline-{n_areas}x{n_per_area}"),
+        areas,
+        k_intra,
+        k_inter,
+        WeightRule { w_mv: 0.25, g: 4.0, inh_fraction: 0.2 },
+        DelayDist::new(5.0, 0.05, 1.0),
+        DelayDist::new(5.0, 0.05, 1.0),
+        0.1,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +287,22 @@ mod tests {
             })
             .collect();
         assert_eq!(intervals.len(), 1);
+    }
+
+    #[test]
+    fn deep_pipeline_net_has_multicycle_slack() {
+        let m = deep_pipeline_net(100, 2).unwrap();
+        // cycle = the 1 ms cutoff (10 steps at h = 0.1), while drawn
+        // delays concentrate near 5 ms = 5 cycles
+        assert_eq!(m.d_min_steps(), 10);
+        assert_eq!(m.delay_ratio(), 1);
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(3);
+        for _ in 0..5000 {
+            let d = m.delay_intra.draw_steps(&mut rng, m.h_ms);
+            assert!((40..=60).contains(&d), "delay {d} steps off 5 ms");
+            let d = m.delay_inter.draw_steps(&mut rng, m.h_ms);
+            assert!((40..=60).contains(&d), "delay {d} steps off 5 ms");
+        }
     }
 
     #[test]

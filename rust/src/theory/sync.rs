@@ -90,9 +90,9 @@ pub fn sync_ratio(d: u32) -> f64 {
 /// `xi_M sigma sqrt(D)` (the sync term of eq 9).  A split-phase post
 /// lets a rank compute up to `overlap_cycles` further cycles — bounded
 /// by its realized inter-area delay slack, and by `d - 1` since the
-/// next boundary forces completion — before it must rendezvous, so up
-/// to `min(skew, overlap_cycles * mu)` of each epoch's skew moves off
-/// the critical path.
+/// next boundary forces completion at pipeline depth 1 — before it must
+/// rendezvous, so up to `min(skew, overlap_cycles * mu)` of each
+/// epoch's skew moves off the critical path.
 pub fn predicted_overlap_gain(
     model: CycleTimeModel,
     m: usize,
@@ -100,10 +100,29 @@ pub fn predicted_overlap_gain(
     d: u32,
     overlap_cycles: u32,
 ) -> f64 {
+    predicted_depth_gain(model, m, s, d, 1, overlap_cycles)
+}
+
+/// [`predicted_overlap_gain`] generalized to a depth-`depth` exchange
+/// pipeline (`--comm-depth`): with `depth` rounds in flight, completion
+/// of an exchange is only forced at its `depth`-th following boundary,
+/// so the compute window grows to `min(overlap_cycles, depth·d − 1)`
+/// cycles.  This is what makes conventional runs (`d = 1`) profit from
+/// the split phase at all — at depth 1 their window is zero, at depth
+/// `n` it is `n − 1` cycles of the realized delay slack.
+pub fn predicted_depth_gain(
+    model: CycleTimeModel,
+    m: usize,
+    s: u64,
+    d: u32,
+    depth: u32,
+    overlap_cycles: u32,
+) -> f64 {
     let epochs = s as f64 / d as f64;
     let skew_per_epoch = blom_xi(m) * (d as f64).sqrt() * model.sigma;
-    let window = overlap_cycles.min(d.saturating_sub(1)) as f64 * model.mu;
-    epochs * skew_per_epoch.min(window)
+    let window_cycles =
+        overlap_cycles.min((depth * d).saturating_sub(1)) as f64;
+    epochs * skew_per_epoch.min(window_cycles * model.mu)
 }
 
 /// Fraction of the structure-aware synchronization time (eq 9's sync
@@ -233,6 +252,36 @@ mod tests {
         let g1 = predicted_overlap_gain(MODEL, m, s, d, 1);
         let g4 = predicted_overlap_gain(MODEL, m, s, d, 4);
         assert!(0.0 < g1 && g1 <= g4 && g4 <= all);
+    }
+
+    #[test]
+    fn depth_gain_reduces_to_overlap_gain_at_depth_one() {
+        let (s, m, d) = (50_000u64, 64usize, 10u32);
+        for w in [0u32, 1, 4, 9, 100] {
+            assert_eq!(
+                predicted_depth_gain(MODEL, m, s, d, 1, w),
+                predicted_overlap_gain(MODEL, m, s, d, w),
+            );
+        }
+    }
+
+    #[test]
+    fn conventional_runs_gain_only_with_depth() {
+        // d = 1: depth 1 has a zero window (the next boundary forces a
+        // same-boundary completion), deeper pipelines open it up
+        let (s, m) = (100_000u64, 128usize);
+        assert_eq!(predicted_depth_gain(MODEL, m, s, 1, 1, 4), 0.0);
+        let g2 = predicted_depth_gain(MODEL, m, s, 1, 2, 4);
+        let g4 = predicted_depth_gain(MODEL, m, s, 1, 4, 4);
+        assert!(0.0 < g2 && g2 <= g4, "g2={g2} g4={g4}");
+        // the window never exceeds the realized slack: depth 8 with 4
+        // cycles of slack gains no more than depth 5
+        let g5 = predicted_depth_gain(MODEL, m, s, 1, 5, 4);
+        let g8 = predicted_depth_gain(MODEL, m, s, 1, 8, 4);
+        assert_eq!(g5, g8);
+        // and the gain is bounded by the total sync time of the run
+        let (sync_conv, _) = expected_sync_times(MODEL, m, s, 1);
+        assert!(g8 <= sync_conv + 1e-12);
     }
 
     #[test]

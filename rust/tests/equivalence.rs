@@ -53,6 +53,20 @@ fn run_comm(
     exec: ExecMode,
     comm: CommMode,
 ) -> Vec<(u64, u32)> {
+    run_depth(spec, strategy, m, t, t_model_ms, exec, comm, 1)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_depth(
+    spec: &ModelSpec,
+    strategy: Strategy,
+    m: usize,
+    t: usize,
+    t_model_ms: f64,
+    exec: ExecMode,
+    comm: CommMode,
+    comm_depth: usize,
+) -> Vec<(u64, u32)> {
     let cfg = RunConfig {
         strategy,
         m_ranks: m,
@@ -61,6 +75,7 @@ fn run_comm(
         seed: 12,
         exec,
         comm,
+        comm_depth,
         record_spikes: true,
         ..RunConfig::default()
     };
@@ -255,6 +270,163 @@ fn spike_trains_identical_across_comm_modes() {
             }
         }
     }
+}
+
+#[test]
+fn spike_trains_identical_across_comm_depths() {
+    // the tentpole invariant of the depth-D pipeline: keeping several
+    // exchange rounds in flight (and draining early deposits source by
+    // source during the window) must not move a single spike — across
+    // depth x comm mode x exec mode x thread count.  The deep-pipeline
+    // net realizes ~5 cycles of delay slack, so conventional runs
+    // sustain depth 4.
+    let spec = models::deep_pipeline_net(240, 4).unwrap();
+    for strategy in [Strategy::Conventional, Strategy::StructureAware] {
+        let base = run_depth(
+            &spec,
+            strategy,
+            4,
+            1,
+            100.0,
+            ExecMode::Sequential,
+            CommMode::Blocking,
+            1,
+        );
+        assert!(
+            base.len() > 100,
+            "{}: too quiet for a meaningful test ({} spikes)",
+            strategy.name(),
+            base.len()
+        );
+        for depth in [1usize, 2, 4] {
+            for exec in [
+                ExecMode::Sequential,
+                ExecMode::Pooled,
+                ExecMode::PooledChannels,
+            ] {
+                for t in [1usize, 3] {
+                    let got = run_depth(
+                        &spec,
+                        strategy,
+                        4,
+                        t,
+                        100.0,
+                        exec,
+                        CommMode::Overlap,
+                        depth,
+                    );
+                    assert_eq!(
+                        base,
+                        got,
+                        "{} diverged at depth={depth} T={t} exec={}",
+                        strategy.name(),
+                        exec.name()
+                    );
+                }
+            }
+        }
+        // depth is ignored under the blocking collective: same train,
+        // and the run is accepted even where overlap would reject it
+        let blocking_deep = run_depth(
+            &spec,
+            strategy,
+            4,
+            2,
+            100.0,
+            ExecMode::Pooled,
+            CommMode::Blocking,
+            64,
+        );
+        assert_eq!(base, blocking_deep, "{}", strategy.name());
+    }
+}
+
+#[test]
+fn excessive_comm_depth_rejected_with_actionable_error() {
+    // deep-pipeline net: ~5 cycles of slack sustain at most a handful
+    // of rounds in flight; a depth-16 pipeline must be rejected with
+    // the sustainable bound in the message
+    let spec = models::deep_pipeline_net(150, 2).unwrap();
+    let cfg = RunConfig {
+        strategy: Strategy::Conventional,
+        m_ranks: 2,
+        threads_per_rank: 2,
+        t_model_ms: 50.0,
+        seed: 12,
+        comm: CommMode::Overlap,
+        comm_depth: 16,
+        record_spikes: true,
+        ..RunConfig::default()
+    };
+    let err = match simulate(&spec, &cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("excessive comm depth was not rejected"),
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("exceeds the realized delay slack"),
+        "unexpected error: {msg}"
+    );
+    assert!(msg.contains("--comm-depth"), "unexpected error: {msg}");
+
+    // the sanity net's realized minimum delay is the cutoff itself (one
+    // cycle of slack): even depth 2 cannot be sustained conventionally
+    let spec = models::sanity_net(200, 2).unwrap();
+    let cfg = RunConfig {
+        comm_depth: 2,
+        t_model_ms: 100.0,
+        ..cfg
+    };
+    assert!(simulate(&spec, &cfg).is_err(), "depth 2 on 1-cycle slack");
+    // while depth 1 (the default) runs fine
+    let cfg = RunConfig { comm_depth: 1, ..cfg };
+    assert!(simulate(&spec, &cfg).is_ok());
+}
+
+#[test]
+fn depth_pipeline_comm_stats_account_early_drains() {
+    // under a deep pipeline the per-cycle poll drains early deposits;
+    // the counters must stay consistent with the exchange counts and
+    // the effective depth must surface in the result
+    let spec = models::deep_pipeline_net(200, 4).unwrap();
+    let run_stats = |comm: CommMode, depth: usize| {
+        let cfg = RunConfig {
+            strategy: Strategy::Conventional,
+            m_ranks: 4,
+            threads_per_rank: 2,
+            t_model_ms: 100.0,
+            seed: 12,
+            comm,
+            comm_depth: depth,
+            record_spikes: true,
+            ..RunConfig::default()
+        };
+        simulate(&spec, &cfg).expect("simulation failed")
+    };
+    let blocking = run_stats(CommMode::Blocking, 1);
+    assert_eq!(blocking.effective_comm_depth, 1);
+    assert_eq!(blocking.comm_stats.early_drained_sources, 0);
+
+    let deep = run_stats(CommMode::Overlap, 4);
+    assert_eq!(deep.effective_comm_depth, 4);
+    let cs = &deep.comm_stats;
+    // traffic identical to blocking, only its phasing differs
+    assert_eq!(cs.alltoall_calls, blocking.comm_stats.alltoall_calls);
+    assert_eq!(cs.bytes_sent, blocking.comm_stats.bytes_sent);
+    assert!(cs.overlapped_exchanges > 0);
+    // every early-drained source belongs to exactly one completed
+    // exchange, and each exchange has at most m sources to drain
+    assert!(
+        cs.early_drained_sources <= cs.overlapped_exchanges * 4,
+        "{cs:?}"
+    );
+    // with ~4 in-flight cycles per exchange the fast path should catch
+    // a decent share of deposits before the deadline rendezvous
+    assert!(cs.early_drained_sources > 0, "{cs:?}");
+    // duration ledger: nothing negative, post/wait/hidden all tracked
+    assert!(cs.post_secs >= 0.0);
+    assert!(cs.complete_wait_secs >= 0.0);
+    assert!(cs.hidden_secs >= 0.0);
 }
 
 #[test]

@@ -1,0 +1,209 @@
+#!/usr/bin/env python3
+"""Compare a BENCH_hotpath.json against a baseline and gate on regressions.
+
+Used by the CI ``bench-regression`` job: the previous ``BENCH_hotpath``
+artifact of the base branch is the baseline; when no artifact exists the
+committed ``BENCH_baseline.json`` is used; when neither exists (or the
+baseline is a placeholder) the gate passes with a note, never fails.
+
+Two metric families are compared, both lower-is-better:
+
+* micro benches: ``ns_per_op`` keyed by bench name;
+* engine runs: ``rtf`` (real-time factor) keyed by the full config tuple
+  (model, strategy, exec, comm, comm_depth, ranks, threads).
+
+A config regresses when the relative delta exceeds the tolerance *and*
+the absolute delta exceeds a noise floor.  Smoke-profile runs (tiny
+measurement windows, shared CI runners) are far noisier than full runs,
+so on smoke data the strict tolerance only *warns*; the job fails only
+beyond the generous ``--smoke-fail-factor`` multiple.  Profiles are
+never cross-compared: a smoke baseline cannot judge a full run.
+
+Exit status: 0 = pass (possibly with warnings), 1 = regression,
+2 = usage/IO error on the *current* file (the baseline is optional by
+design, the current result is not).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# Absolute noise floors: deltas below these are never regressions even
+# if the relative tolerance is exceeded (sub-ns micro jitter, scheduler
+# hiccups on near-instant engine runs).
+MICRO_FLOOR_NS = 2.0
+ENGINE_FLOOR_RTF = 0.5
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def micro_map(doc):
+    return {m["name"]: m["ns_per_op"] for m in doc.get("micro", [])}
+
+
+def engine_map(doc):
+    out = {}
+    for e in doc.get("engine", []):
+        key = (
+            e.get("model"),
+            e.get("strategy"),
+            e.get("exec"),
+            e.get("comm"),
+            e.get("comm_depth", 1),
+            e.get("ranks"),
+            e.get("threads"),
+        )
+        out[key] = e.get("rtf")
+    return out
+
+
+def missing_configs(baseline, current):
+    """Baseline configs with no counterpart in the current results —
+    silently shrinking coverage must at least be called out."""
+    gone = []
+    for name in sorted(set(micro_map(baseline)) - set(micro_map(current))):
+        gone.append(f"micro: {name}")
+    base_eng, cur_eng = engine_map(baseline), engine_map(current)
+    for key in sorted(set(base_eng) - set(cur_eng), key=str):
+        gone.append("engine: {}/{}/{}/{}/d{}/M{}/T{}".format(*key))
+    return gone
+
+
+def compare(baseline, current, tolerance, smoke_fail_factor=None):
+    """Pure comparison: returns (rows, failures, warnings).
+
+    ``rows`` is the full delta table (one tuple per config present in
+    both documents); ``failures`` / ``warnings`` are subsets of rows.
+    ``smoke_fail_factor``: when not None, the data is smoke-profile —
+    deltas beyond ``tolerance`` only warn, deltas beyond
+    ``tolerance * smoke_fail_factor`` fail.
+    """
+    rows, failures, warnings = [], [], []
+
+    def judge(kind, name, old, new, floor):
+        if old is None or new is None or old <= 0:
+            return
+        delta = (new - old) / old
+        row = (kind, name, old, new, delta)
+        rows.append(row)
+        if delta <= tolerance or (new - old) <= floor:
+            return
+        if smoke_fail_factor is not None:
+            if delta > tolerance * smoke_fail_factor:
+                failures.append(row)
+            else:
+                warnings.append(row)
+        else:
+            failures.append(row)
+
+    base_micro, cur_micro = micro_map(baseline), micro_map(current)
+    for name in sorted(set(base_micro) & set(cur_micro)):
+        judge("micro", name, base_micro[name], cur_micro[name],
+              MICRO_FLOOR_NS)
+
+    base_eng, cur_eng = engine_map(baseline), engine_map(current)
+    for key in sorted(set(base_eng) & set(cur_eng), key=str):
+        name = "{}/{}/{}/{}/d{}/M{}/T{}".format(*key)
+        judge("engine", name, base_eng[key], cur_eng[key],
+              ENGINE_FLOOR_RTF)
+
+    return rows, failures, warnings
+
+
+def render_table(rows, failures, warnings):
+    failed, warned = set(map(id, failures)), set(map(id, warnings))
+    lines = []
+    header = "{:<7} {:<52} {:>12} {:>12} {:>8}".format(
+        "kind", "config", "baseline", "current", "delta")
+    lines.append(header)
+    lines.append("-" * len(header))
+    for row in rows:
+        kind, name, old, new, delta = row
+        mark = ""
+        if id(row) in failed:
+            mark = "  << REGRESSION"
+        elif id(row) in warned:
+            mark = "  <- above tolerance (smoke noise, not gating)"
+        lines.append(
+            "{:<7} {:<52} {:>12.4g} {:>12.4g} {:>+7.1%}{}".format(
+                kind, name[:52], old, new, delta, mark))
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True,
+                    help="BENCH_hotpath.json of this run")
+    ap.add_argument("--baseline",
+                    help="baseline BENCH_hotpath.json (base-branch artifact)")
+    ap.add_argument("--fallback",
+                    help="committed fallback baseline when no artifact exists")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="relative regression tolerance (default 0.15)")
+    ap.add_argument("--smoke-fail-factor", type=float, default=6.0,
+                    help="on smoke profiles, fail only beyond "
+                         "tolerance*factor (default 6.0, i.e. 90%%)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.current):
+        print(f"bench_compare: current results {args.current!r} missing")
+        return 2
+    current = load(args.current)
+
+    baseline_path = None
+    for cand in (args.baseline, args.fallback):
+        if cand and os.path.exists(cand):
+            baseline_path = cand
+            break
+    if baseline_path is None:
+        print("bench_compare: no baseline available (first run on this "
+              "branch?) — passing without comparison")
+        return 0
+    baseline = load(baseline_path)
+
+    if baseline.get("placeholder"):
+        print(f"bench_compare: baseline {baseline_path!r} is a placeholder "
+              "(no recorded numbers yet) — passing without comparison")
+        return 0
+    if bool(baseline.get("smoke")) != bool(current.get("smoke")):
+        print("bench_compare: baseline and current use different bench "
+              "profiles (smoke vs full) — incomparable, passing")
+        return 0
+
+    smoke = bool(current.get("smoke"))
+    rows, failures, warnings = compare(
+        baseline, current, args.tolerance,
+        smoke_fail_factor=args.smoke_fail_factor if smoke else None)
+
+    profile = "smoke" if smoke else "full"
+    print(f"bench_compare: {len(rows)} comparable configs "
+          f"({profile} profile, baseline {baseline_path})")
+    print(render_table(rows, failures, warnings))
+    gone = missing_configs(baseline, current)
+    if gone:
+        print(f"\nWARNING: {len(gone)} baseline config(s) have no "
+              "counterpart in the current results — coverage shrank, "
+              "these are NOT being gated:")
+        for g in gone:
+            print(f"  - {g}")
+    if warnings:
+        print(f"\n{len(warnings)} config(s) above the strict tolerance on "
+              "the smoke profile; not gating (measurement noise).")
+    if failures:
+        print(f"\n{len(failures)} regression(s) beyond tolerance "
+              f"{args.tolerance:.0%}"
+              + (f" x {args.smoke_fail_factor:g} (smoke)" if smoke else "")
+              + " — failing the gate.")
+        return 1
+    print("\nno regressions beyond tolerance.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
