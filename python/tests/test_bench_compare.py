@@ -17,7 +17,7 @@ sys.path.insert(
 import bench_compare as bc
 
 
-def _doc(smoke=True, micro=(), engine=()):
+def _doc(smoke=True, micro=(), engine=(), engine_raw=()):
     return {
         "bench": "hotpath",
         "smoke": smoke,
@@ -32,13 +32,31 @@ def _doc(smoke=True, micro=(), engine=()):
                 "exec": "pooled",
                 "comm": "overlap",
                 "comm_depth": depth,
+                "ranks_per_area": 1,
                 "ranks": 4,
                 "threads": 2,
                 "rtf": rtf,
             }
             for (depth, rtf) in engine
-        ],
+        ]
+        + list(engine_raw),
     }
+
+
+def _hier_entry(rpa, rtf, ranks=4, with_key=True):
+    e = {
+        "model": "m",
+        "strategy": "structure-aware",
+        "exec": "pooled",
+        "comm": "blocking",
+        "comm_depth": 1,
+        "ranks": ranks,
+        "threads": 2,
+        "rtf": rtf,
+    }
+    if with_key:
+        e["ranks_per_area"] = rpa
+    return e
 
 
 def test_within_tolerance_passes():
@@ -94,6 +112,34 @@ def test_engine_keyed_by_full_config_including_depth():
     assert not fails
 
 
+def test_engine_keyed_by_ranks_per_area():
+    # a hierarchical (ranks_per_area=2) config is a different schedule:
+    # it must never be cross-compared with the flat config of the same
+    # model/strategy/ranks
+    base = _doc(engine_raw=[_hier_entry(1, 10.0), _hier_entry(2, 30.0)])
+    cur = _doc(engine_raw=[_hier_entry(1, 10.5), _hier_entry(2, 31.0)])
+    rows, fails, _ = bc.compare(base, cur, 0.15)
+    assert len(rows) == 2
+    assert not fails
+    # regression only on the hierarchical variant is attributed to it
+    worse = _doc(engine_raw=[_hier_entry(1, 10.0), _hier_entry(2, 300.0)])
+    _, fails, warns = bc.compare(base, worse, 0.15, smoke_fail_factor=6.0)
+    flagged = fails + warns
+    assert len(flagged) == 1
+    assert "/R2/" in flagged[0][1]
+
+
+def test_ranks_per_area_defaults_to_one_for_old_baselines():
+    # baselines recorded before the hierarchical key existed carry no
+    # ranks_per_area field; they must keep comparing against current
+    # flat (R=1) runs
+    base = _doc(engine_raw=[_hier_entry(1, 10.0, with_key=False)])
+    cur = _doc(engine_raw=[_hier_entry(1, 11.0)])
+    rows, fails, _ = bc.compare(base, cur, 0.15)
+    assert len(rows) == 1
+    assert not fails
+
+
 def test_disjoint_configs_compare_nothing():
     base = _doc(micro=[("a", 100.0)])
     cur = _doc(micro=[("b", 100.0)])
@@ -107,7 +153,10 @@ def test_missing_configs_reported():
     base = _doc(micro=[("a", 100.0), ("b", 5.0)], engine=[(4, 10.0)])
     cur = _doc(micro=[("a", 100.0)])
     gone = bc.missing_configs(base, cur)
-    assert gone == ["micro: b", "engine: m/conventional/pooled/overlap/d4/M4/T2"]
+    assert gone == [
+        "micro: b",
+        "engine: m/conventional/pooled/overlap/d4/R1/M4/T2",
+    ]
     assert bc.missing_configs(base, base) == []
 
 

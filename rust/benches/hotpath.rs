@@ -13,10 +13,12 @@
 //! bench-regression job diffs it against the base branch via
 //! `tools/bench_compare.py`); `--smoke` shrinks windows and model times
 //! for CI.  The engine section includes a split-phase depth sweep
-//! (`comm_depth` 1/2/4 on the deep-pipeline net) next to the
+//! (`comm_depth` 1/2/4 on the deep-pipeline net), a flat-vs-hierarchical
+//! structure-aware pair (`ranks_per_area` 1 and 2 on the deliver-heavy
+//! net, with per-tier local/global traffic and wait in the JSON) and the
 //! blocking-vs-overlap A/B.
 
-use nsim::comm::{SpikeMsg, Transport, World};
+use nsim::comm::{SpikeMsg, Transport, WorldBuilder};
 use nsim::config::{CommMode, ExecMode, RunConfig, Strategy};
 use nsim::engine::neuron::NeuronBlock;
 use nsim::engine::ringbuffer::RingBuffer;
@@ -75,6 +77,7 @@ impl Harness {
         exec: ExecMode,
         comm: CommMode,
         comm_depth: usize,
+        ranks_per_area: usize,
         m: usize,
         threads: usize,
         t_model_ms: f64,
@@ -88,6 +91,7 @@ impl Harness {
             exec,
             comm,
             comm_depth,
+            ranks_per_area,
             ..RunConfig::default()
         };
         let t0 = Instant::now();
@@ -97,8 +101,9 @@ impl Harness {
         let mcps = neuron_steps / secs / 1e6;
         println!(
             "engine: {model:<14} {:<16} {:<16} {:<8} d={comm_depth} \
-             T={threads} {} neurons x {} cycles in {secs:.3} s = \
-             {mcps:.2} M neuron-cycles/s (sync {:.4} s, hidden {:.4} s)",
+             R={ranks_per_area} T={threads} {} neurons x {} cycles in \
+             {secs:.3} s = {mcps:.2} M neuron-cycles/s (sync {:.4} s, \
+             hidden {:.4} s)",
             strategy.name(),
             exec.name(),
             comm.name(),
@@ -107,12 +112,14 @@ impl Harness {
             res.mean_times.get(Phase::Synchronize),
             res.comm_stats.hidden_secs / m as f64,
         );
+        let tiers = &res.comm_tiers;
         self.engine.push(Json::obj(vec![
             ("model", model.into()),
             ("strategy", strategy.name().into()),
             ("exec", exec.name().into()),
             ("comm", comm.name().into()),
             ("comm_depth", comm_depth.into()),
+            ("ranks_per_area", ranks_per_area.into()),
             ("ranks", m.into()),
             ("threads", threads.into()),
             ("t_model_ms", t_model_ms.into()),
@@ -145,6 +152,32 @@ impl Harness {
             (
                 "hidden_s",
                 (res.comm_stats.hidden_secs / m as f64).into(),
+            ),
+            // per-tier traffic and wait of the hierarchical schedule
+            // (local tier all zero unless the run splits communicators)
+            (
+                "local_exchanges",
+                (tiers.local.alltoall_calls as f64).into(),
+            ),
+            ("local_swaps", (tiers.local.local_swaps as f64).into()),
+            ("local_bytes", (tiers.local.bytes_sent as f64).into()),
+            (
+                "local_wait_s",
+                ((tiers.local.sync_secs + tiers.local.complete_wait_secs)
+                    / m as f64)
+                    .into(),
+            ),
+            (
+                "global_exchanges",
+                (tiers.global.alltoall_calls as f64).into(),
+            ),
+            ("global_bytes", (tiers.global.bytes_sent as f64).into()),
+            (
+                "global_wait_s",
+                ((tiers.global.sync_secs
+                    + tiers.global.complete_wait_secs)
+                    / m as f64)
+                    .into(),
             ),
         ]));
     }
@@ -325,7 +358,7 @@ fn main() {
     );
 
     // --- exchange: recycled vs allocating transport -------------------
-    let world = World::new(1, 1024);
+    let world = WorldBuilder::new(1).build();
     let comm = world.communicator(0);
     let payload: Vec<SpikeMsg> = (0..512)
         .map(|i| SpikeMsg { source: i, cycle: 0 })
@@ -424,6 +457,7 @@ fn main() {
                 exec,
                 CommMode::Blocking,
                 1,
+                1,
                 4,
                 threads,
                 t_model,
@@ -451,8 +485,32 @@ fn main() {
             exec,
             CommMode::Blocking,
             1,
+            1,
             2,
             threads,
+            heavy_t_model,
+        );
+    }
+
+    // --- hierarchical two-tier: areas spanning rank groups ------------
+    // the same deliver-heavy net under the structure-aware strategy:
+    // flat (one area per rank, M=4) vs hierarchical (each area spanning
+    // a two-rank group, M=8, ranks_per_area=2).  The hierarchical config
+    // runs a real intra-group alltoall on the local tier every cycle;
+    // its local/global tier stats land in the bench JSON next to the
+    // RTF, keyed by ranks_per_area.
+    println!();
+    for (m, rpa) in [(4usize, 1usize), (8, 2)] {
+        h.engine_run(
+            "deliver-heavy",
+            &heavy,
+            Strategy::StructureAware,
+            ExecMode::Pooled,
+            CommMode::Blocking,
+            1,
+            rpa,
+            m,
+            2,
             heavy_t_model,
         );
     }
@@ -475,6 +533,7 @@ fn main() {
             Strategy::StructureAware,
             ExecMode::Pooled,
             comm,
+            1,
             1,
             4,
             2,
@@ -500,6 +559,7 @@ fn main() {
         ExecMode::Pooled,
         CommMode::Blocking,
         1,
+        1,
         4,
         2,
         dp_t_model,
@@ -512,6 +572,7 @@ fn main() {
             ExecMode::Pooled,
             CommMode::Overlap,
             depth,
+            1,
             4,
             2,
             dp_t_model,

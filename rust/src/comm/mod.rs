@@ -20,12 +20,30 @@
 //!   or earlier, source by source, through the incremental
 //!   [`Pending::try_complete_source`] fast path.  The ring holds up to a
 //!   configurable depth of exchanges in flight per rank
-//!   ([`World::with_depth`]); the slack between post and completion —
+//!   ([`WorldBuilder::depth`]); the slack between post and completion —
 //!   bounded by the inter-area delay of the spikes on the wire — is
 //!   latency-hiding budget: compute of the following cycles runs while
 //!   peers catch up.  See the [`nonblocking`] module docs for the ring
 //!   protocol, the split-phase quota-resize and the hidden-latency
 //!   accounting.
+//!
+//! # Hierarchical communicators ([`Transport::split`])
+//!
+//! The paper's hybrid architecture maps every area onto a *group* of
+//! compute nodes: the group exchanges its short-range spikes over a
+//! **local communicator** every min-delay interval, while the global
+//! exchange across areas runs only once per epoch.  [`Transport::split`]
+//! is the primitive that builds this hierarchy (the `MPI_Comm_split`
+//! shape): a collective call in which every rank passes a `color` and a
+//! `key`; ranks sharing a color form one sub-communicator, ranked by
+//! `(key, rank)`.  A sub-communicator is a full [`Transport`] (and, for
+//! the shared-memory world, a full [`SplitTransport`]) with its **own**
+//! barrier, mailboxes, quota, split-phase slot rings and [`CommStats`] —
+//! collectives on different sub-communicators never synchronize with
+//! each other, and statistics stay attributable per tier
+//! ([`World::tiered_stats`] aggregates the children as the *local* tier
+//! next to the parent's *global* tier).  Splitting is a cold-path setup
+//! operation; the per-cycle hot paths are unchanged.
 //!
 //! # The [`Transport`] abstraction
 //!
@@ -33,7 +51,10 @@
 //! [`Transport`] trait, so the shared-memory [`World`] of this module is
 //! one implementation among possible others (a real MPI binding, an
 //! RDMA fabric, a loopback test double).  [`Communicator`] — the
-//! per-rank handle into a [`World`] — is the first implementor.
+//! per-rank handle into a [`World`] — is the first implementor; because
+//! [`Transport::split`] yields the implementor's own communicator type
+//! ([`Transport::Sub`]), every backend exposes one coherent two-tier
+//! API.
 //!
 //! # Buffer-recycling contract
 //!
@@ -82,7 +103,11 @@ pub struct SpikeMsg {
 
 pub const SPIKE_WIRE_BYTES: usize = 8;
 
-/// Aggregate communication statistics across all ranks.
+/// Aggregate communication statistics across all ranks of one
+/// communicator.  Every [`World`] — including the sub-worlds produced by
+/// [`Transport::split`] — owns its own instance, so exchanges stay
+/// attributable to the communicator (and therefore the tier) that
+/// carried them.
 #[derive(Debug, Default)]
 pub struct CommStats {
     pub alltoall_calls: AtomicU64,
@@ -90,6 +115,9 @@ pub struct CommStats {
     pub bytes_sent: AtomicU64,
     pub resize_rounds: AtomicU64,
     pub max_send_per_pair: AtomicUsize,
+    /// Barrier wait in front of blocking collectives — the
+    /// synchronization share of [`Transport::alltoall_into`].
+    pub sync_nanos: AtomicU64,
     /// Split-phase exchanges completed (counted per rank, like
     /// `alltoall_calls`, which also counts them).
     pub overlapped_exchanges: AtomicU64,
@@ -117,9 +145,53 @@ pub struct CommStatsSnapshot {
     pub max_send_per_pair: u64,
     pub overlapped_exchanges: u64,
     pub early_drained_sources: u64,
+    /// Barrier wait of blocking collectives (see
+    /// [`CommStats::sync_nanos`]).
+    pub sync_secs: f64,
     pub post_secs: f64,
     pub complete_wait_secs: f64,
     pub hidden_secs: f64,
+}
+
+impl CommStatsSnapshot {
+    /// Field-wise combination of two tiers' snapshots: counters and
+    /// durations add, the per-pair maximum takes the larger tier.
+    pub fn merged(&self, other: &CommStatsSnapshot) -> CommStatsSnapshot {
+        CommStatsSnapshot {
+            alltoall_calls: self.alltoall_calls + other.alltoall_calls,
+            local_swaps: self.local_swaps + other.local_swaps,
+            bytes_sent: self.bytes_sent + other.bytes_sent,
+            resize_rounds: self.resize_rounds + other.resize_rounds,
+            max_send_per_pair: self
+                .max_send_per_pair
+                .max(other.max_send_per_pair),
+            overlapped_exchanges: self.overlapped_exchanges
+                + other.overlapped_exchanges,
+            early_drained_sources: self.early_drained_sources
+                + other.early_drained_sources,
+            sync_secs: self.sync_secs + other.sync_secs,
+            post_secs: self.post_secs + other.post_secs,
+            complete_wait_secs: self.complete_wait_secs
+                + other.complete_wait_secs,
+            hidden_secs: self.hidden_secs + other.hidden_secs,
+        }
+    }
+}
+
+/// Per-tier communication statistics of a hierarchical run: the parent
+/// communicator's traffic (`global`) next to the aggregate of every
+/// sub-communicator split off it (`local`).  [`TieredCommStats::combined`]
+/// is the flat single-communicator view kept for existing consumers.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TieredCommStats {
+    pub global: CommStatsSnapshot,
+    pub local: CommStatsSnapshot,
+}
+
+impl TieredCommStats {
+    pub fn combined(&self) -> CommStatsSnapshot {
+        self.global.merged(&self.local)
+    }
 }
 
 impl CommStats {
@@ -137,6 +209,7 @@ impl CommStats {
             early_drained_sources: self
                 .early_drained_sources
                 .load(Ordering::Relaxed),
+            sync_secs: self.sync_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             post_secs: self.post_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             complete_wait_secs: self.complete_wait_nanos.load(Ordering::Relaxed)
                 as f64
@@ -154,34 +227,68 @@ struct WorldInner {
     /// Current buffer quota in spikes per rank pair (grows on overflow).
     quota: AtomicUsize,
     overflow: AtomicBool,
+    /// Split-phase pipeline depth (sub-worlds inherit it on split).
+    depth: usize,
     /// Scratch register of [`Transport::allreduce_min_u64`].
     reduce_slot: AtomicU64,
+    /// Per-rank `(color, key)` contributions of the in-flight
+    /// [`Transport::split`] collective (barrier-framed, cold path).
+    split_slots: Mutex<Vec<(u64, u64)>>,
+    /// Published outcome of the split: each rank's sub-world and its
+    /// rank within it, deposited by rank 0 and taken by the owner.
+    split_result: Mutex<Vec<Option<(World, usize)>>>,
+    /// Sub-worlds created by [`Transport::split`], kept for per-tier
+    /// statistics aggregation ([`World::local_stats`]).
+    children: Mutex<Vec<World>>,
     /// Split-phase mailbox state (epoch-stamped ring buffers).
     nb: nonblocking::NbWorld,
     stats: CommStats,
 }
 
-/// Shared communication world; create once, then [`World::communicator`]
-/// per rank thread.
+/// Shared communication world; build once via [`WorldBuilder`], then
+/// [`World::communicator`] per rank thread.
 #[derive(Clone)]
 pub struct World {
     inner: Arc<WorldInner>,
 }
 
-impl World {
-    /// `initial_quota` is the starting spike-buffer size per rank pair
-    /// (NEST starts small and grows; tests exercise the resize protocol).
-    /// The split-phase mailboxes are sized for one exchange in flight per
-    /// rank; use [`World::with_depth`] for deeper pipelines.
-    pub fn new(m: usize, initial_quota: usize) -> World {
-        World::with_depth(m, initial_quota, 1)
+/// The one constructor of [`World`]: number of ranks plus the two tuning
+/// knobs that used to be spread over a constructor pair.
+///
+/// * `quota` — starting spike-buffer size per rank pair (NEST starts
+///   small and grows via the two-round resize protocol; tests exercise
+///   it with tiny quotas).  Default 1024.
+/// * `depth` — split-phase pipeline depth: the mailbox ring holds up to
+///   this many exchanges in flight per rank (`2·depth` epoch-stamped
+///   slots per (dest, src) pair — see the [`nonblocking`] module docs
+///   for why `2·depth` suffices).  Default 1.
+///
+/// Sub-worlds created by [`Transport::split`] inherit the parent's depth
+/// and its *current* quota.
+#[derive(Clone, Copy, Debug)]
+pub struct WorldBuilder {
+    m: usize,
+    quota: usize,
+    depth: usize,
+}
+
+impl WorldBuilder {
+    pub fn new(m: usize) -> WorldBuilder {
+        WorldBuilder { m, quota: 1024, depth: 1 }
     }
 
-    /// As [`World::new`], with split-phase mailboxes sized for up to
-    /// `depth` exchanges in flight per rank (a ring of `2·depth`
-    /// epoch-stamped slots per (dest, src) pair — see the
-    /// [`nonblocking`] module docs for why `2·depth` suffices).
-    pub fn with_depth(m: usize, initial_quota: usize, depth: usize) -> World {
+    pub fn quota(mut self, quota: usize) -> WorldBuilder {
+        self.quota = quota;
+        self
+    }
+
+    pub fn depth(mut self, depth: usize) -> WorldBuilder {
+        self.depth = depth;
+        self
+    }
+
+    pub fn build(self) -> World {
+        let WorldBuilder { m, quota, depth } = self;
         assert!(m >= 1);
         assert!(depth >= 1, "pipeline depth must be >= 1");
         let mailboxes = (0..m)
@@ -192,15 +299,21 @@ impl World {
                 m,
                 barrier: Barrier::new(m),
                 mailboxes,
-                quota: AtomicUsize::new(initial_quota.max(1)),
+                quota: AtomicUsize::new(quota.max(1)),
                 overflow: AtomicBool::new(false),
+                depth,
                 reduce_slot: AtomicU64::new(u64::MAX),
+                split_slots: Mutex::new(vec![(0, 0); m]),
+                split_result: Mutex::new((0..m).map(|_| None).collect()),
+                children: Mutex::new(Vec::new()),
                 nb: nonblocking::NbWorld::new(m, depth),
                 stats: CommStats::default(),
             }),
         }
     }
+}
 
+impl World {
     pub fn communicator(&self, rank: usize) -> Communicator {
         assert!(rank < self.inner.m);
         Communicator { world: self.inner.clone(), rank }
@@ -212,6 +325,25 @@ impl World {
 
     pub fn stats(&self) -> &CommStats {
         &self.inner.stats
+    }
+
+    /// Aggregate statistics of every sub-communicator split off this
+    /// world (recursively) — the *local* tier of a hierarchical run.
+    /// Empty-default when no split ever happened.
+    pub fn local_stats(&self) -> CommStatsSnapshot {
+        let children = self.inner.children.lock().unwrap();
+        children.iter().fold(CommStatsSnapshot::default(), |acc, c| {
+            acc.merged(&c.stats().snapshot()).merged(&c.local_stats())
+        })
+    }
+
+    /// Per-tier view: this world's own traffic as the *global* tier,
+    /// the aggregated sub-communicators as the *local* tier.
+    pub fn tiered_stats(&self) -> TieredCommStats {
+        TieredCommStats {
+            global: self.stats().snapshot(),
+            local: self.local_stats(),
+        }
     }
 
     pub fn current_quota(&self) -> usize {
@@ -229,11 +361,26 @@ pub struct Communicator {
 /// exchange and the rank-local pathway, with recycled buffers (see the
 /// module docs for the buffer-recycling contract).
 pub trait Transport {
+    /// Communicator type produced by [`Transport::split`].  The
+    /// shared-memory world splits into further shared-memory worlds; an
+    /// MPI binding would split into MPI sub-communicators.
+    type Sub: Transport;
+
     /// This rank's id within the world.
     fn rank(&self) -> usize;
 
     /// Number of ranks in the world.
     fn m_ranks(&self) -> usize;
+
+    /// Collective communicator split, the `MPI_Comm_split` shape: every
+    /// rank calls `split` concurrently; ranks passing the same `color`
+    /// form one sub-communicator, with ranks assigned in ascending
+    /// `(key, rank)` order.  The sub-communicator is fully independent
+    /// of its parent — own barrier, own mailboxes and quota, own
+    /// statistics — so collectives on disjoint groups never synchronize
+    /// with each other.  Cold path (setup only): the engine splits once
+    /// to build the per-area-group local tier.
+    fn split(&self, color: u64, key: u64) -> Self::Sub;
 
     /// Collective all-to-all spike exchange.  `send[d]` is the buffer
     /// destined for rank `d` (must have length M) and is drained by the
@@ -298,12 +445,56 @@ pub struct ExchangeTiming {
 }
 
 impl Transport for Communicator {
+    type Sub = Communicator;
+
     fn rank(&self) -> usize {
         self.rank
     }
 
     fn m_ranks(&self) -> usize {
         self.world.m
+    }
+
+    fn split(&self, color: u64, key: u64) -> Communicator {
+        let w = &*self.world;
+        // barrier-framed register protocol (cold path).  Frame start:
+        // nobody can deposit into `split_slots` while a straggler of the
+        // previous collective is still inside it.
+        w.barrier.wait();
+        w.split_slots.lock().unwrap()[self.rank] = (color, key);
+        w.barrier.wait();
+        // every contribution is visible; rank 0 materializes one
+        // sub-world per color (they must be *shared*, so a single rank
+        // creates them) and publishes each rank's handle + sub-rank
+        if self.rank == 0 {
+            let slots = w.split_slots.lock().unwrap().clone();
+            let mut groups: std::collections::BTreeMap<u64, Vec<usize>> =
+                std::collections::BTreeMap::new();
+            for (rank, &(c, _)) in slots.iter().enumerate() {
+                groups.entry(c).or_default().push(rank);
+            }
+            let mut results = w.split_result.lock().unwrap();
+            let mut children = w.children.lock().unwrap();
+            for mut members in groups.into_values() {
+                members.sort_by_key(|&r| (slots[r].1, r));
+                let sub = WorldBuilder::new(members.len())
+                    .quota(w.quota.load(Ordering::Relaxed))
+                    .depth(w.depth)
+                    .build();
+                children.push(sub.clone());
+                for (sub_rank, &r) in members.iter().enumerate() {
+                    results[r] = Some((sub.clone(), sub_rank));
+                }
+            }
+        }
+        w.barrier.wait();
+        // each rank takes exactly its own entry; re-entry into the next
+        // collective's first barrier implies every entry was taken, so
+        // the register is reusable without a fourth barrier
+        let (sub, sub_rank) = w.split_result.lock().unwrap()[self.rank]
+            .take()
+            .expect("split result not published");
+        sub.communicator(sub_rank)
     }
 
     fn alltoall_into(
@@ -319,6 +510,9 @@ impl Transport for Communicator {
         w.barrier.wait();
         let t1 = Instant::now();
         let sync_secs = (t1 - t0).as_secs_f64();
+        w.stats
+            .sync_nanos
+            .fetch_add((sync_secs * 1e9) as u64, Ordering::Relaxed);
 
         // --- overflow detection (two-round resize protocol)
         let quota = w.quota.load(Ordering::Relaxed);
@@ -421,7 +615,7 @@ mod tests {
         F: Fn(usize, Communicator) -> R + Send + Sync,
         R: Send,
     {
-        let world = World::new(m, quota);
+        let world = WorldBuilder::new(m).quota(quota).build();
         thread::scope(|s| {
             let handles: Vec<_> = (0..m)
                 .map(|rank| {
@@ -495,7 +689,7 @@ mod tests {
 
     #[test]
     fn overflow_triggers_resize_round() {
-        let world = World::new(2, 4);
+        let world = WorldBuilder::new(2).quota(4).build();
         let w2 = world.clone();
         thread::scope(|s| {
             for rank in 0..2 {
@@ -523,7 +717,7 @@ mod tests {
 
     #[test]
     fn local_swap_returns_buffer_without_barrier() {
-        let world = World::new(1, 4);
+        let world = WorldBuilder::new(1).quota(4).build();
         let comm = world.communicator(0);
         let mut send = vec![msg(1, 2), msg(3, 4)];
         let recv = comm.local_swap(&mut send);
@@ -538,7 +732,7 @@ mod tests {
 
     #[test]
     fn stats_count_bytes() {
-        let world = World::new(2, 64);
+        let world = WorldBuilder::new(2).quota(64).build();
         thread::scope(|s| {
             for rank in 0..2 {
                 let comm = world.communicator(rank);
@@ -574,7 +768,7 @@ mod tests {
                 1 + (round as usize % 3)
             }
         };
-        let world = World::new(M, 4);
+        let world = WorldBuilder::new(M).quota(4).build();
         let w2 = world.clone();
         let results = thread::scope(|s| {
             let handles: Vec<_> = (0..M)
@@ -648,7 +842,7 @@ mod tests {
         // With swap-based recycling, buffer capacity circulates between
         // the send buffer, the mailbox slot and the receive buffer; once
         // all three are warm no round allocates, so capacities stay put.
-        let world = World::new(1, 64);
+        let world = WorldBuilder::new(1).quota(64).build();
         let comm = world.communicator(0);
         let mut send = vec![Vec::new()];
         let mut recv: Vec<Vec<SpikeMsg>> = Vec::new();
@@ -679,7 +873,7 @@ mod tests {
 
     #[test]
     fn local_swap_into_recycles_capacity() {
-        let world = World::new(1, 4);
+        let world = WorldBuilder::new(1).quota(4).build();
         let comm = world.communicator(0);
         let mut send = Vec::new();
         let mut recv = Vec::new();
@@ -710,7 +904,7 @@ mod tests {
 
     #[test]
     fn allreduce_min_does_not_touch_spike_stats() {
-        let world = World::new(2, 64);
+        let world = WorldBuilder::new(2).quota(64).build();
         thread::scope(|s| {
             for rank in 0..2 {
                 let comm = world.communicator(rank);
@@ -720,6 +914,209 @@ mod tests {
         let snap = world.stats().snapshot();
         assert_eq!(snap.alltoall_calls, 0);
         assert_eq!(snap.bytes_sent, 0);
+    }
+
+    #[test]
+    fn split_isolates_disjoint_groups() {
+        // colors [0,0,1,1]: two groups of two; intra-group alltoalls
+        // carry group-tagged payloads and must never leak across groups,
+        // while the parent world's own counters stay untouched (tier
+        // attribution)
+        let world = WorldBuilder::new(4).quota(64).build();
+        let results = thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|rank| {
+                    let comm = world.communicator(rank);
+                    s.spawn(move || {
+                        let color = (rank / 2) as u64;
+                        let local = comm.split(color, rank as u64);
+                        assert_eq!(local.m_ranks(), 2);
+                        assert_eq!(local.rank(), rank % 2);
+                        let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+                            .map(|_| {
+                                vec![msg((100 * rank) as Gid, color as u32)]
+                            })
+                            .collect();
+                        let (recv, _) = local.alltoall(&mut send);
+                        recv
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect::<Vec<_>>()
+        });
+        for (rank, recv) in results.iter().enumerate() {
+            let group = rank / 2;
+            assert_eq!(recv.len(), 2);
+            for (src_local, buf) in recv.iter().enumerate() {
+                assert_eq!(buf.len(), 1);
+                // the source is the group-mate, never a foreign rank
+                assert_eq!(
+                    buf[0].source,
+                    (100 * (group * 2 + src_local)) as Gid
+                );
+                assert_eq!(buf[0].cycle, group as u32, "cross-group leak");
+            }
+        }
+        let tiers = world.tiered_stats();
+        assert_eq!(tiers.global.alltoall_calls, 0);
+        assert_eq!(tiers.global.bytes_sent, 0);
+        assert_eq!(tiers.local.alltoall_calls, 4);
+        assert_eq!(
+            tiers.local.bytes_sent,
+            4 * 2 * SPIKE_WIRE_BYTES as u64
+        );
+        assert_eq!(tiers.combined().alltoall_calls, 4);
+    }
+
+    #[test]
+    fn split_stats_attributed_per_tier() {
+        // each rank exchanges on both tiers: parent counters carry the
+        // global traffic, children the local tier, and the combined view
+        // sums both for flat consumers
+        let world = WorldBuilder::new(2).quota(64).build();
+        thread::scope(|s| {
+            for rank in 0..2 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    let local = comm.split(0, rank as u64);
+                    let mut send: Vec<Vec<SpikeMsg>> =
+                        (0..2).map(|_| vec![msg(rank as Gid, 1)]).collect();
+                    local.alltoall(&mut send);
+                    let mut lsend = vec![msg(rank as Gid, 2)];
+                    let mut lrecv = Vec::new();
+                    local.local_swap_into(&mut lsend, &mut lrecv);
+                    let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+                        .map(|_| vec![msg(rank as Gid, 3); 2])
+                        .collect();
+                    comm.alltoall(&mut send);
+                });
+            }
+        });
+        let tiers = world.tiered_stats();
+        assert_eq!(tiers.local.alltoall_calls, 2);
+        assert_eq!(tiers.local.local_swaps, 2);
+        assert_eq!(
+            tiers.local.bytes_sent,
+            2 * 2 * SPIKE_WIRE_BYTES as u64
+        );
+        assert_eq!(tiers.global.alltoall_calls, 2);
+        assert_eq!(tiers.global.local_swaps, 0);
+        assert_eq!(
+            tiers.global.bytes_sent,
+            2 * 2 * 2 * SPIKE_WIRE_BYTES as u64
+        );
+        let combined = tiers.combined();
+        assert_eq!(combined.alltoall_calls, 4);
+        assert_eq!(combined.local_swaps, 2);
+        assert_eq!(
+            combined.bytes_sent,
+            tiers.local.bytes_sent + tiers.global.bytes_sent
+        );
+        assert!(combined.sync_secs >= tiers.global.sync_secs);
+    }
+
+    #[test]
+    fn split_orders_ranks_by_key_then_rank() {
+        // MPI_Comm_split semantics: descending keys reverse the
+        // sub-ranks
+        let results = run_ranks(3, 64, |rank, comm| {
+            let local = comm.split(7, (10 - rank) as u64);
+            (local.rank(), local.m_ranks())
+        });
+        assert_eq!(results, vec![(2, 3), (1, 3), (0, 3)]);
+    }
+
+    #[test]
+    fn split_singleton_groups_degenerate() {
+        // every rank its own color: 1-rank sub-worlds whose collectives
+        // are self-delivery — the degenerate form the engine uses at
+        // ranks_per_area = 1
+        let world = WorldBuilder::new(3).quota(64).build();
+        thread::scope(|s| {
+            for rank in 0..3 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    let local = comm.split(rank as u64, 0);
+                    assert_eq!(local.m_ranks(), 1);
+                    assert_eq!(local.rank(), 0);
+                    let mut send = vec![vec![msg(rank as Gid, 5)]];
+                    let (recv, _) = local.alltoall(&mut send);
+                    assert_eq!(recv[0], vec![msg(rank as Gid, 5)]);
+                    let mut lsend = vec![msg(rank as Gid, 6)];
+                    let recv = local.local_swap(&mut lsend);
+                    assert_eq!(recv, vec![msg(rank as Gid, 6)]);
+                });
+            }
+        });
+        let tiers = world.tiered_stats();
+        assert_eq!(tiers.local.alltoall_calls, 3);
+        assert_eq!(tiers.local.local_swaps, 3);
+        assert_eq!(tiers.global.alltoall_calls, 0);
+        assert_eq!(tiers.global.local_swaps, 0);
+    }
+
+    #[test]
+    fn repeated_and_nested_splits() {
+        // the barrier-framed register survives back-to-back splits, and
+        // a sub-communicator can itself be split (grandchildren roll up
+        // recursively into the parent's local tier)
+        let world = WorldBuilder::new(4).quota(64).build();
+        thread::scope(|s| {
+            for rank in 0..4 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    let a = comm.split((rank % 2) as u64, rank as u64);
+                    assert_eq!(a.m_ranks(), 2);
+                    let b = comm.split((rank / 2) as u64, rank as u64);
+                    assert_eq!(b.m_ranks(), 2);
+                    let c = b.split(b.rank() as u64, 0);
+                    assert_eq!(c.m_ranks(), 1);
+                    let mut send = vec![vec![msg(rank as Gid, 9)]];
+                    let (recv, _) = c.alltoall(&mut send);
+                    assert_eq!(recv[0].len(), 1);
+                });
+            }
+        });
+        assert_eq!(world.local_stats().alltoall_calls, 4);
+        assert_eq!(world.stats().snapshot().alltoall_calls, 0);
+    }
+
+    #[test]
+    fn split_inherits_grown_quota() {
+        // the resize protocol grows the parent quota before the split;
+        // the sub-world must start from the grown value (no secondary
+        // resize on the local tier for the same message size)
+        let world = WorldBuilder::new(2).quota(4).build();
+        thread::scope(|s| {
+            for rank in 0..2 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+                        .map(|_| {
+                            (0..10).map(|i| msg(rank as Gid, i)).collect()
+                        })
+                        .collect();
+                    comm.alltoall(&mut send);
+                    let local = comm.split(0, rank as u64);
+                    let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+                        .map(|_| {
+                            (0..10).map(|i| msg(rank as Gid, i)).collect()
+                        })
+                        .collect();
+                    local.alltoall(&mut send);
+                });
+            }
+        });
+        assert!(world.current_quota() >= 10);
+        let tiers = world.tiered_stats();
+        assert_eq!(tiers.global.resize_rounds, 1);
+        assert_eq!(
+            tiers.local.resize_rounds, 0,
+            "sub-world must inherit the grown quota"
+        );
     }
 
     #[test]

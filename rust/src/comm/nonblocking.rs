@@ -19,8 +19,15 @@
 //!
 //! # The depth-D ring of epoch-stamped slots
 //!
+//! The slot rings are **keyed by communicator**: every world — including
+//! each sub-world produced by [`Transport::split`](super::Transport) —
+//! owns a complete, independent set of rings, sequence counters and
+//! round states, so split-phase pipelines on the global communicator and
+//! collectives on the per-area local communicators never share mailbox
+//! state (mixing tiers call-by-call is safe by construction).
+//!
 //! Every (dest, src) pair owns a **ring of `2·D` mailbox slots** (`D` =
-//! the world's pipeline depth, [`super::World::with_depth`]), indexed by
+//! the world's pipeline depth, [`super::WorldBuilder::depth`]), indexed by
 //! `seq % 2D`, and each deposit is stamped with its sequence number.  A
 //! sender may therefore post up to `D` exchanges before its receivers
 //! have drained the oldest one — each lives in its own slot — which is
@@ -459,7 +466,7 @@ impl SplitTransport for Communicator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::World;
+    use crate::comm::WorldBuilder;
     use crate::network::Gid;
     use std::thread;
     use std::time::Duration;
@@ -469,7 +476,11 @@ mod tests {
     }
 
     /// Run `f(rank, comm)` on m rank threads, collect results by rank.
-    fn run_ranks<F, R>(m: usize, quota: usize, f: F) -> (World, Vec<R>)
+    fn run_ranks<F, R>(
+        m: usize,
+        quota: usize,
+        f: F,
+    ) -> (crate::comm::World, Vec<R>)
     where
         F: Fn(usize, Communicator) -> R + Send + Sync,
         R: Send,
@@ -484,12 +495,12 @@ mod tests {
         quota: usize,
         depth: usize,
         f: F,
-    ) -> (World, Vec<R>)
+    ) -> (crate::comm::World, Vec<R>)
     where
         F: Fn(usize, Communicator) -> R + Send + Sync,
         R: Send,
     {
-        let world = World::with_depth(m, quota, depth);
+        let world = WorldBuilder::new(m).quota(quota).depth(depth).build();
         let results = thread::scope(|s| {
             let handles: Vec<_> = (0..m)
                 .map(|rank| {
@@ -686,7 +697,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "dropped without")]
     fn drop_without_complete_panics_in_debug() {
-        let world = World::new(1, 4);
+        let world = WorldBuilder::new(1).quota(4).build();
         let comm = world.communicator(0);
         let mut send = vec![vec![msg(1, 0)]];
         let pending = comm.alltoall_start(&mut send);
@@ -789,7 +800,7 @@ mod tests {
     fn early_drain_survives_complete() {
         // a source drained through the fast path keeps its payload in
         // recv[src] across the final complete() (which must skip it)
-        let world = World::with_depth(1, 64, 1);
+        let world = WorldBuilder::new(1).quota(64).build();
         let comm = world.communicator(0);
         let mut send = vec![vec![msg(7, 0)]];
         let mut pending = comm.alltoall_start(&mut send);
@@ -860,6 +871,89 @@ mod tests {
         // below the original quota of 4, strictly-greater never fires),
         // so exactly one settle despite the slot's ten reuses
         assert_eq!(snap.resize_rounds, 1);
+    }
+
+    #[test]
+    fn split_groups_pipeline_independently_under_depth() {
+        // depth-2 world split into two groups of two: each group runs a
+        // split-phase pipeline on its sub-communicator *while* the
+        // parent pipelines global exchanges.  Slot rings are keyed by
+        // communicator, so the interleaving cannot cross state: every
+        // deposit completes on the tier it was posted on.
+        const ROUNDS: u32 = 12;
+        let world = WorldBuilder::new(4).quota(64).depth(2).build();
+        thread::scope(|s| {
+            for rank in 0..4usize {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    let group = rank / 2;
+                    let local = comm.split(group as u64, rank as u64);
+                    assert_eq!(local.m_ranks(), 2);
+                    let check_local = |round: u32,
+                                       recv: &Vec<Vec<SpikeMsg>>| {
+                        assert_eq!(recv.len(), 2);
+                        for (src_local, buf) in recv.iter().enumerate() {
+                            assert_eq!(buf.len(), 1, "round {round}");
+                            assert_eq!(
+                                buf[0].source as usize,
+                                group * 2 + src_local,
+                                "cross-group deposit leaked"
+                            );
+                            assert_eq!(buf[0].cycle, round);
+                        }
+                    };
+                    let check_global = |round: u32,
+                                        recv: &Vec<Vec<SpikeMsg>>| {
+                        assert_eq!(recv.len(), 4);
+                        for (src, buf) in recv.iter().enumerate() {
+                            assert_eq!(buf.len(), 1, "round {round}");
+                            assert_eq!(buf[0].source as usize, 100 + src);
+                            assert_eq!(buf[0].cycle, round);
+                        }
+                    };
+                    let mut local_pipe: Option<(u32, PendingExchange)> =
+                        None;
+                    let mut global_pipe: Option<(u32, PendingExchange)> =
+                        None;
+                    for round in 0..ROUNDS {
+                        // one exchange in flight per tier (the depth of
+                        // 2 is inherited by the sub-world)
+                        let mut lsend: Vec<Vec<SpikeMsg>> = (0..2)
+                            .map(|_| vec![msg(rank as Gid, round)])
+                            .collect();
+                        let lp = local.alltoall_start(&mut lsend);
+                        let mut gsend: Vec<Vec<SpikeMsg>> = (0..4)
+                            .map(|_| vec![msg((100 + rank) as Gid, round)])
+                            .collect();
+                        let gp = comm.alltoall_start(&mut gsend);
+                        if let Some((r0, p)) = local_pipe.take() {
+                            let mut recv = Vec::new();
+                            p.complete(&mut recv);
+                            check_local(r0, &recv);
+                        }
+                        if let Some((r0, p)) = global_pipe.take() {
+                            let mut recv = Vec::new();
+                            p.complete(&mut recv);
+                            check_global(r0, &recv);
+                        }
+                        local_pipe = Some((round, lp));
+                        global_pipe = Some((round, gp));
+                    }
+                    let mut recv = Vec::new();
+                    let (r0, p) = local_pipe.take().unwrap();
+                    p.complete(&mut recv);
+                    check_local(r0, &recv);
+                    let (r0, p) = global_pipe.take().unwrap();
+                    p.complete(&mut recv);
+                    check_global(r0, &recv);
+                });
+            }
+        });
+        let tiers = world.tiered_stats();
+        assert_eq!(tiers.global.alltoall_calls, ROUNDS as u64 * 4);
+        assert_eq!(tiers.local.alltoall_calls, ROUNDS as u64 * 4);
+        assert_eq!(tiers.global.overlapped_exchanges, ROUNDS as u64 * 4);
+        assert_eq!(tiers.local.overlapped_exchanges, ROUNDS as u64 * 4);
     }
 
     #[test]

@@ -172,6 +172,16 @@ pub struct RunConfig {
     /// Initial spike quota per rank pair of the communication buffers
     /// (NEST starts small and grows via the two-round resize protocol).
     pub comm_quota: usize,
+    /// Ranks jointly hosting one area under the structure-aware
+    /// placements: the `m_ranks` ranks split into `m_ranks /
+    /// ranks_per_area` contiguous groups, each area maps onto one group,
+    /// and the group exchanges the area's short-range spikes every cycle
+    /// over its own local sub-communicator (the paper's hybrid
+    /// local/global architecture).  1 (the default) keeps one area per
+    /// rank with an intra-rank buffer swap — bit-identical to the
+    /// pre-hierarchical engine.  Requires a structure-aware strategy and
+    /// `m_ranks % ranks_per_area == 0`.
+    pub ranks_per_area: usize,
     /// Record (cycle, gid) spike events for verification.
     pub record_spikes: bool,
     /// Record per-rank per-cycle times for the distribution figures.
@@ -191,6 +201,7 @@ impl Default for RunConfig {
             comm: CommMode::Blocking,
             comm_depth: 1,
             comm_quota: 1024,
+            ranks_per_area: 1,
             record_spikes: false,
             record_cycle_times: false,
         }
@@ -199,8 +210,8 @@ impl Default for RunConfig {
 
 impl RunConfig {
     /// Apply `--strategy --ranks --threads --t-model --seed --update-path
-    /// --exec --comm --comm-depth --quota --record-spikes
-    /// --record-cycle-times` CLI overrides.
+    /// --exec --comm --comm-depth --quota --ranks-per-area
+    /// --record-spikes --record-cycle-times` CLI overrides.
     pub fn override_from_args(mut self, args: &Args) -> Result<RunConfig> {
         if let Some(s) = args.str_opt("strategy") {
             self.strategy = Strategy::parse(&s)?;
@@ -221,6 +232,8 @@ impl RunConfig {
         }
         self.comm_depth = args.usize_or("comm-depth", self.comm_depth)?;
         self.comm_quota = args.usize_or("quota", self.comm_quota)?;
+        self.ranks_per_area =
+            args.usize_or("ranks-per-area", self.ranks_per_area)?;
         if args.flag("record-spikes") {
             self.record_spikes = true;
         }
@@ -264,6 +277,9 @@ impl RunConfig {
         if let Some(x) = v.get("comm_quota").and_then(Json::as_usize) {
             cfg.comm_quota = x;
         }
+        if let Some(x) = v.get("ranks_per_area").and_then(Json::as_usize) {
+            cfg.ranks_per_area = x;
+        }
         if let Some(b) = v.get("record_spikes").and_then(Json::as_bool) {
             cfg.record_spikes = b;
         }
@@ -296,6 +312,31 @@ impl RunConfig {
             bail!(
                 "comm_depth must be >= 1 (1 = one exchange in flight, \
                  today's overlap; >1 pipelines that many rounds)"
+            );
+        }
+        if self.ranks_per_area == 0 {
+            bail!(
+                "ranks_per_area must be >= 1 (1 = one area per rank, \
+                 today's layout; >1 spans each area over a rank group \
+                 with a local sub-communicator)"
+            );
+        }
+        if self.ranks_per_area > 1
+            && !self.strategy.structure_aware_placement()
+        {
+            bail!(
+                "ranks_per_area > 1 requires a structure-aware strategy \
+                 (intermediate or structure-aware): the conventional \
+                 round-robin placement scatters every area across all \
+                 ranks, so there is no area group to form"
+            );
+        }
+        if self.m_ranks % self.ranks_per_area != 0 {
+            bail!(
+                "ranks ({}) must be a multiple of ranks_per_area ({}): \
+                 area groups are contiguous rank blocks of equal size",
+                self.m_ranks,
+                self.ranks_per_area
             );
         }
         Ok(())
@@ -446,6 +487,76 @@ mod tests {
         assert!(RunConfig::default().override_from_args(&args).is_err());
         let v = json::parse(r#"{"comm_depth": 0}"#).unwrap();
         assert!(RunConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn ranks_per_area_overrides_and_validation() {
+        // default: one area per rank (the pre-hierarchical layout)
+        assert_eq!(RunConfig::default().ranks_per_area, 1);
+
+        let args = Args::parse([
+            "run",
+            "--strategy",
+            "struct",
+            "--ranks",
+            "8",
+            "--ranks-per-area",
+            "2",
+        ])
+        .unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert_eq!(cfg.ranks_per_area, 2);
+
+        let v = json::parse(
+            r#"{"strategy": "structure-aware", "ranks": 4,
+                "ranks_per_area": 2}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.ranks_per_area, 2);
+
+        // zero rejected with the actionable message
+        let cfg = RunConfig {
+            ranks_per_area: 0,
+            ..RunConfig::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("ranks_per_area must be >= 1"),
+            "unexpected error: {err:#}"
+        );
+
+        // conventional placement has no area groups to form
+        let cfg = RunConfig {
+            strategy: Strategy::Conventional,
+            m_ranks: 4,
+            ranks_per_area: 2,
+            ..RunConfig::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("structure-aware strategy"),
+            "unexpected error: {err:#}"
+        );
+        // the intermediate strategy places by area: groups allowed
+        let cfg = RunConfig {
+            strategy: Strategy::Intermediate,
+            ..cfg
+        };
+        assert!(cfg.validate().is_ok());
+
+        // rank count must tile into equal groups
+        let cfg = RunConfig {
+            strategy: Strategy::StructureAware,
+            m_ranks: 6,
+            ranks_per_area: 4,
+            ..RunConfig::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("multiple of ranks_per_area"),
+            "unexpected error: {err:#}"
+        );
     }
 
     #[test]

@@ -16,6 +16,20 @@
 //! reference schedule and `ExecMode::PooledChannels` the legacy PR 1
 //! channel pool kept for A/B comparison.
 //!
+//! Communication follows the paper's **hierarchical two-tier
+//! architecture**: the engine builds one global [`crate::comm::World`]
+//! and, for
+//! dual-pathway strategies, splits one **local communicator per area
+//! group** off it ([`Transport::split`], colored by
+//! `Placement::group_of_rank`).  With `--ranks-per-area 1` (default)
+//! every group is a singleton and the local tier is the intra-rank
+//! buffer swap — bit-identical to the pre-hierarchical engine.  With
+//! `ranks_per_area > 1` an area spans a group of ranks that exchange its
+//! short-range spikes over their sub-communicator every cycle, while the
+//! long-range exchange across areas stays on the global communicator
+//! once per epoch.  [`SimResult::comm_tiers`] reports both tiers'
+//! statistics; [`SimResult::comm_stats`] keeps the combined flat view.
+//!
 //! The epoch-boundary global exchange runs blocking or split-phase
 //! ([`crate::config::CommMode`]): under `CommMode::Overlap` each rank
 //! posts the exchange without waiting and completes it cycles later,
@@ -24,15 +38,17 @@
 //! against the realized delay slack) and draining early-arrived peers
 //! incrementally during the in-flight window — see `engine::rank` for
 //! the deadline schedule and `comm::nonblocking` for the ring protocol.
-//! All modes and depths produce bit-identical spike trains in every
-//! exec mode.
+//! All modes, depths and group sizes produce bit-identical spike trains
+//! in every exec mode.
 
 pub mod neuron;
 pub mod rank;
 pub mod ringbuffer;
 pub mod update;
 
-use crate::comm::{CommStatsSnapshot, Transport, World};
+use crate::comm::{
+    CommStatsSnapshot, TieredCommStats, Transport, WorldBuilder,
+};
 use crate::config::{CommMode, RunConfig, Strategy, UpdatePath};
 use crate::network::{Gid, ModelSpec};
 use crate::placement::Placement;
@@ -66,8 +82,13 @@ pub struct SimResult {
     pub rank_neurons: Vec<usize>,
     /// Per-rank synapse counts (short, long pathway).
     pub rank_conns: Vec<(usize, usize)>,
-    /// Aggregate communication statistics of the run's [`World`].
+    /// Combined (both tiers) communication statistics of the run — the
+    /// flat single-communicator view kept for existing consumers.
     pub comm_stats: CommStatsSnapshot,
+    /// Per-tier communication statistics: the global (inter-area)
+    /// communicator next to the aggregated per-area-group local
+    /// communicators.
+    pub comm_tiers: TieredCommStats,
     /// Split-phase pipeline depth the run actually used: the configured
     /// `comm_depth` under `CommMode::Overlap` (validated against the
     /// realized delay slack of every rank), 1 under
@@ -96,13 +117,19 @@ impl SimResult {
     }
 }
 
-/// Build the placement implied by the strategy.
+/// Build the placement implied by the strategy (including the
+/// area→rank-group mapping when `ranks_per_area > 1`).
 pub fn placement_for(
     spec: &ModelSpec,
     cfg: &RunConfig,
 ) -> Result<Placement> {
     if cfg.strategy.structure_aware_placement() {
-        Placement::area_aligned(spec, cfg.m_ranks, cfg.threads_per_rank)
+        Placement::area_aligned_grouped(
+            spec,
+            cfg.m_ranks,
+            cfg.threads_per_rank,
+            cfg.ranks_per_area,
+        )
     } else {
         Ok(Placement::round_robin(cfg.m_ranks, cfg.threads_per_rank))
     }
@@ -153,8 +180,10 @@ pub fn simulate_with(
         );
     }
 
-    let world =
-        World::with_depth(cfg.m_ranks, cfg.comm_quota, cfg.comm_depth);
+    let world = WorldBuilder::new(cfg.m_ranks)
+        .quota(cfg.comm_quota)
+        .depth(cfg.comm_depth)
+        .build();
     let results: Result<Vec<RankResult>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.m_ranks)
             .map(|r| {
@@ -162,6 +191,18 @@ pub fn simulate_with(
                 let placement = &placement;
                 let updater = &updater;
                 scope.spawn(move || -> Result<RankResult> {
+                    // hierarchical communicators: dual-pathway runs
+                    // split one local communicator per area group off
+                    // the global world (collective: every rank calls
+                    // split exactly once, colored by its group)
+                    let local_comm = if cfg.strategy.dual_pathways() {
+                        Some(comm.split(
+                            placement.group_of_rank(r) as u64,
+                            r as u64,
+                        ))
+                    } else {
+                        None
+                    };
                     let state = RankState::build(
                         spec,
                         placement,
@@ -196,6 +237,7 @@ pub fn simulate_with(
                     }
                     Ok(state.run(
                         &comm,
+                        local_comm.as_ref(),
                         s_cycles,
                         updater,
                         cfg.record_cycle_times,
@@ -226,6 +268,7 @@ pub fn simulate_with(
     spikes.sort_unstable();
     let mean_times = PhaseTimes::mean_of(&rank_times);
     let max_times = PhaseTimes::max_of(&rank_times);
+    let comm_tiers = world.tiered_stats();
 
     Ok(SimResult {
         strategy: cfg.strategy,
@@ -239,7 +282,8 @@ pub fn simulate_with(
         t_model_ms: cfg.t_model_ms,
         rank_neurons,
         rank_conns,
-        comm_stats: world.stats().snapshot(),
+        comm_stats: comm_tiers.combined(),
+        comm_tiers,
         effective_comm_depth: match cfg.comm {
             CommMode::Blocking => 1,
             CommMode::Overlap => cfg.comm_depth as u64,

@@ -5,7 +5,34 @@
 //! ring buffers.  `run()` iterates deliver → update → collocate →
 //! communicate for `S` cycles, with the communicate step depending on the
 //! strategy: global exchange every cycle (conventional/intermediate) or
-//! local swap + global exchange every D-th cycle (structure-aware).
+//! the **two-tier hybrid schedule** (structure-aware) — a local-tier
+//! exchange every cycle plus the global exchange every D-th cycle.
+//!
+//! # The two-tier communicate step
+//!
+//! Under the structure-aware strategy every area lives on one **rank
+//! group** of `ranks_per_area` ranks, and each rank holds a *local
+//! communicator* for its group (split off the global world via
+//! [`Transport::split`]) next to the *global communicator* shared by all
+//! ranks:
+//!
+//! * **local tier, every cycle**: the area's short-range spikes move
+//!   between the group's ranks.  With a singleton group
+//!   (`ranks_per_area = 1`, the default) this is the intra-rank buffer
+//!   swap of [`Transport::local_swap_into`] — no synchronization, the
+//!   pre-hierarchical behavior bit-identically.  With a multi-rank group
+//!   it is a real [`Transport::alltoall_into`] over the group's
+//!   sub-communicator: frequent, but only among the few ranks of one
+//!   area (the paper's local communication).
+//! * **global tier, every `epoch_cycles`-th cycle**: the long-range
+//!   exchange across areas on the global communicator — blocking, or
+//!   the split-phase depth-D pipeline under `CommMode::Overlap`
+//!   (posting/completion schedule below), unchanged by the grouping.
+//!
+//! Short-range collocation routes spikes per group member through the
+//! short-pathway target tables (global rank minus the group's first
+//! rank); a singleton group skips the routing since every short-range
+//! target is local by construction.
 //!
 //! Virtual threads execute either *sequentially* on the rank's OS thread
 //! ([`crate::config::ExecMode::Sequential`]), on the persistent
@@ -206,24 +233,52 @@ impl ThreadState {
     }
 
     /// Drain this thread's spike registers into send buffers: the local
-    /// pathway into `local_out`, the global pathway into `global_out[d]`
-    /// per destination rank (spike compression: one entry per target
-    /// rank).  Register order — (step, local index) within the cycle —
-    /// is preserved, so concatenating per-thread output in thread order
-    /// reproduces the sequential collocation exactly.
+    /// pathway into the per-group-member buffers `local_out` (one per
+    /// rank of this rank's area group; member `i` is global rank
+    /// `group_start + i`), the global pathway into `global_out[d]` per
+    /// destination rank (spike compression: one entry per target rank).
+    /// A singleton group (`local_out.len() == 1`) skips the per-member
+    /// routing — every short-range target is on this rank by
+    /// construction, the pre-hierarchical behavior.  Register order —
+    /// (step, local index) within the cycle — is preserved, so
+    /// concatenating per-thread output in thread order reproduces the
+    /// sequential collocation exactly.
     fn collocate_into(
         &mut self,
         dual: bool,
-        local_out: &mut Vec<SpikeMsg>,
+        group_start: u16,
+        local_out: &mut [Vec<SpikeMsg>],
         global_out: &mut [Vec<SpikeMsg>],
     ) {
         if dual {
-            // short-range spikes into the local exchange buffer
-            for &(idx, step) in &self.register.short {
-                local_out.push(SpikeMsg {
-                    source: self.gids[idx as usize],
-                    cycle: step as u32,
-                });
+            if local_out.len() == 1 {
+                // short-range spikes into the (sole) local exchange
+                // buffer: the whole area lives on this rank
+                for &(idx, step) in &self.register.short {
+                    local_out[0].push(SpikeMsg {
+                        source: self.gids[idx as usize],
+                        cycle: step as u32,
+                    });
+                }
+            } else {
+                // the area spans a rank group: route per group member
+                // through the short-pathway target tables (the same
+                // spike compression as the global pathway)
+                for &(idx, step) in &self.register.short {
+                    let gid = self.gids[idx as usize];
+                    for &r in self.targets.short.ranks(idx as usize) {
+                        debug_assert!(
+                            r >= group_start
+                                && ((r - group_start) as usize)
+                                    < local_out.len(),
+                            "short-range target rank {r} outside the \
+                             area group starting at {group_start}"
+                        );
+                        local_out[(r - group_start) as usize].push(
+                            SpikeMsg { source: gid, cycle: step as u32 },
+                        );
+                    }
+                }
             }
             self.register.short.clear();
             // long-range spikes accumulate in the global MPI buffers
@@ -287,7 +342,8 @@ enum Cmd {
     },
     Collocate {
         dual: bool,
-        local: Vec<SpikeMsg>,
+        /// One buffer per rank of this rank's area group.
+        local: Vec<Vec<SpikeMsg>>,
         global: Vec<Vec<SpikeMsg>>,
     },
     Finish,
@@ -296,7 +352,7 @@ enum Cmd {
 enum Reply {
     Done,
     Collocated {
-        local: Vec<SpikeMsg>,
+        local: Vec<Vec<SpikeMsg>>,
         global: Vec<Vec<SpikeMsg>>,
     },
     Finished {
@@ -312,6 +368,7 @@ enum Reply {
 fn worker_loop(
     mut th: ThreadState,
     updater: &Updater,
+    group_start: u16,
     rx: Receiver<Cmd>,
     tx: Sender<Reply>,
 ) {
@@ -341,7 +398,7 @@ fn worker_loop(
                 }
             }
             Cmd::Collocate { dual, mut local, mut global } => {
-                th.collocate_into(dual, &mut local, &mut global);
+                th.collocate_into(dual, group_start, &mut local, &mut global);
                 if tx.send(Reply::Collocated { local, global }).is_err() {
                     return;
                 }
@@ -424,8 +481,10 @@ struct SlotData {
     deliver_short: Vec<SpikeMsg>,
     /// Coordinator → worker: share of the long-pathway batch.
     deliver_long: Vec<SpikeMsg>,
-    /// Worker → coordinator: local-pathway collocation output.
-    local_out: Vec<SpikeMsg>,
+    /// Worker → coordinator: local-pathway collocation output, one
+    /// buffer per rank of the area group (a single buffer for the
+    /// degenerate one-rank group).
+    local_out: Vec<Vec<SpikeMsg>>,
     /// Worker → coordinator: per-destination-rank collocation output.
     global_out: Vec<Vec<SpikeMsg>>,
 }
@@ -490,6 +549,7 @@ fn barrier_worker(
     s_cycles: u64,
     steps: u64,
     dual: bool,
+    group_start: u16,
     record_spikes: bool,
 ) -> (Vec<(u64, Gid)>, usize, usize, usize) {
     let _abort_guard = AbortOnPanic;
@@ -513,7 +573,12 @@ fn barrier_worker(
             &mut spikes,
         );
         barrier.wait(); // update done
-        th.collocate_into(dual, &mut d.local_out, &mut d.global_out);
+        th.collocate_into(
+            dual,
+            group_start,
+            &mut d.local_out,
+            &mut d.global_out,
+        );
         drop(guard);
         barrier.wait(); // collocate done
     }
@@ -555,6 +620,11 @@ pub struct RankState {
     /// exchange may stay in flight.  `u16::MAX` when the rank hosts no
     /// such connection (the deadline then clamps to the next boundary).
     min_remote_delay_steps: u64,
+    /// First global rank of this rank's area group (contiguous ranks).
+    group_start: usize,
+    /// Ranks in this rank's area group; 1 = singleton group (one area
+    /// per rank, local tier degenerates to the intra-rank swap).
+    group_size: usize,
     threads: Vec<ThreadState>,
     /// Source → owning-threads routing index per pathway (thread-sharded
     /// delivery of the barrier runtime).
@@ -563,10 +633,16 @@ pub struct RankState {
     local_index: HashMap<Gid, (u16, u32)>,
     global_send: Vec<Vec<SpikeMsg>>,
     local_send: Vec<SpikeMsg>,
+    /// Per-group-member send buffers of the local tier (used instead of
+    /// `local_send` when the group spans more than one rank).
+    local_send_group: Vec<Vec<SpikeMsg>>,
     recv_short: Vec<SpikeMsg>,
     recv_long: Vec<SpikeMsg>,
     /// Recycled per-source transport buffers of the global exchange.
     recv_global: Vec<Vec<SpikeMsg>>,
+    /// Recycled per-source transport buffers of the local-tier group
+    /// alltoall.
+    recv_local_group: Vec<Vec<SpikeMsg>>,
     /// Recycled per-exchange receive-buffer sets of the overlapped path
     /// (one set checked out per posted exchange, returned at its
     /// completion — no steady-state allocation at any pipeline depth).
@@ -729,6 +805,9 @@ impl RankState {
             long: SourceShards::build(threads.iter().map(|t| &t.conn.long)),
         };
 
+        let group = placement.group_ranks(rank);
+        let (group_start, group_size) = (group.start, group.len());
+
         RankState {
             rank,
             strategy,
@@ -740,14 +819,18 @@ impl RankState {
             epoch_cycles,
             steps_per_cycle,
             min_remote_delay_steps: min_remote_delay as u64,
+            group_start,
+            group_size,
             threads,
             shards,
             local_index,
             global_send: (0..m).map(|_| Vec::new()).collect(),
             local_send: Vec::new(),
+            local_send_group: (0..group_size).map(|_| Vec::new()).collect(),
             recv_short: Vec::new(),
             recv_long: Vec::new(),
             recv_global: Vec::new(),
+            recv_local_group: Vec::new(),
             recv_pool: Vec::new(),
             record_spikes,
             spikes: Vec::new(),
@@ -872,21 +955,93 @@ impl RankState {
         }
     }
 
-    /// The communicate step of one cycle: local pathway swap (dual
-    /// strategies) every cycle, global exchange every `epoch_cycles`-th
-    /// cycle — blocking, or posted split-phase into the in-flight
-    /// pipeline and completed later by `service_exchanges` — with all
-    /// buffers recycled through the transport.
+    /// Merge one worker's per-group-member collocation output into this
+    /// rank's local-tier send buffers — the one place the
+    /// singleton/grouped branch lives for both pooled runtimes, so the
+    /// exec modes cannot diverge on the local-tier merge.
+    fn merge_local_out(&mut self, local_out: &mut [Vec<SpikeMsg>]) {
+        if self.group_size > 1 {
+            for (mbr, part) in local_out.iter_mut().enumerate() {
+                self.local_send_group[mbr].append(part);
+            }
+        } else {
+            self.local_send.append(&mut local_out[0]);
+        }
+    }
+
+    /// Collocate every virtual thread's registers into this rank's send
+    /// buffers, in virtual-thread order (the sequential reference the
+    /// pooled paths reproduce).
+    fn collocate_all(&mut self, dual: bool) {
+        let group_start = self.group_start as u16;
+        if self.group_size > 1 {
+            for th in &mut self.threads {
+                th.collocate_into(
+                    dual,
+                    group_start,
+                    &mut self.local_send_group,
+                    &mut self.global_send,
+                );
+            }
+        } else {
+            for th in &mut self.threads {
+                th.collocate_into(
+                    dual,
+                    group_start,
+                    std::slice::from_mut(&mut self.local_send),
+                    &mut self.global_send,
+                );
+            }
+        }
+    }
+
+    /// The communicate step of one cycle, the two-tier hybrid schedule:
+    /// the local tier every cycle under dual strategies — an intra-group
+    /// alltoall on the area's sub-communicator when the group spans
+    /// several ranks, the intra-rank buffer swap for a singleton group —
+    /// and the global exchange every `epoch_cycles`-th cycle on the
+    /// global communicator — blocking, or posted split-phase into the
+    /// in-flight pipeline and completed later by `service_exchanges` —
+    /// with all buffers recycled through the transport.
     fn communicate<T: SplitTransport>(
         &mut self,
         comm: &T,
+        local: Option<&T::Sub>,
         s: u64,
         dual: bool,
         phase_times: &mut PhaseTimes,
         inflight: &mut VecDeque<InFlight<T::Pending>>,
     ) {
         if dual {
-            comm.local_swap_into(&mut self.local_send, &mut self.recv_short);
+            let local = local.expect(
+                "dual-pathway strategies need a local communicator \
+                 (Transport::split per area group)",
+            );
+            if self.group_size > 1 {
+                // real intra-group alltoall every min-delay interval:
+                // the area spans several ranks, so short-range spikes
+                // cross rank boundaries inside the group
+                let timing = local.alltoall_into(
+                    &mut self.local_send_group,
+                    &mut self.recv_local_group,
+                );
+                phase_times.add(Phase::Synchronize, timing.sync_secs);
+                phase_times.add(Phase::DataExchange, timing.data_secs);
+                // flatten into recv_short — the one delivery input the
+                // singleton and grouped local tiers share
+                self.recv_short.clear();
+                for buf in &mut self.recv_local_group {
+                    self.recv_short.extend_from_slice(buf);
+                    buf.clear();
+                }
+            } else {
+                // singleton group: the local tier degenerates to the
+                // intra-rank buffer swap (no synchronization)
+                local.local_swap_into(
+                    &mut self.local_send,
+                    &mut self.recv_short,
+                );
+            }
         }
         if (s + 1) % self.epoch_cycles == 0 {
             match self.comm_mode {
@@ -921,10 +1076,14 @@ impl RankState {
         }
     }
 
-    /// Run the state-propagation loop for `s_cycles` cycles.
+    /// Run the state-propagation loop for `s_cycles` cycles.  `local` is
+    /// the rank's area-group sub-communicator (required by dual-pathway
+    /// strategies, where it carries the local tier of the hybrid
+    /// schedule; `None` is fine otherwise).
     pub fn run<T: SplitTransport>(
         self,
         comm: &T,
+        local: Option<&T::Sub>,
         s_cycles: u64,
         updater: &Updater,
         record_cycle_times: bool,
@@ -933,18 +1092,24 @@ impl RankState {
         match exec {
             // a single virtual thread gains nothing from workers; run it
             // in place so `threads_per_rank = 1` has zero overhead
-            ExecMode::Pooled if self.threads.len() > 1 => {
-                self.run_barrier(comm, s_cycles, updater, record_cycle_times)
-            }
+            ExecMode::Pooled if self.threads.len() > 1 => self.run_barrier(
+                comm,
+                local,
+                s_cycles,
+                updater,
+                record_cycle_times,
+            ),
             ExecMode::PooledChannels if self.threads.len() > 1 => self
                 .run_pooled_channels(
                     comm,
+                    local,
                     s_cycles,
                     updater,
                     record_cycle_times,
                 ),
             _ => self.run_sequential(
                 comm,
+                local,
                 s_cycles,
                 updater,
                 record_cycle_times,
@@ -957,6 +1122,7 @@ impl RankState {
     fn run_sequential<T: SplitTransport>(
         mut self,
         comm: &T,
+        local: Option<&T::Sub>,
         s_cycles: u64,
         updater: &Updater,
         record_cycle_times: bool,
@@ -1008,20 +1174,21 @@ impl RankState {
             cycle_secs += sw.charge(&mut phase_times, Phase::Update);
 
             // ---- collocate -----------------------------------------------
-            for th in &mut self.threads {
-                th.collocate_into(
-                    dual,
-                    &mut self.local_send,
-                    &mut self.global_send,
-                );
-            }
+            self.collocate_all(dual);
             cycle_secs += sw.charge(&mut phase_times, Phase::Collocate);
             if record_cycle_times {
                 cycle_times.push(cycle_secs);
             }
 
             // ---- communicate ---------------------------------------------
-            self.communicate(comm, s, dual, &mut phase_times, &mut inflight);
+            self.communicate(
+                comm,
+                local,
+                s,
+                dual,
+                &mut phase_times,
+                &mut inflight,
+            );
         }
         // the final posted exchanges carry spikes beyond the simulated
         // horizon; complete them for collective symmetry and drop the
@@ -1056,6 +1223,7 @@ impl RankState {
     fn run_barrier<T: SplitTransport>(
         mut self,
         comm: &T,
+        local: Option<&T::Sub>,
         s_cycles: u64,
         updater: &Updater,
         record_cycle_times: bool,
@@ -1066,6 +1234,8 @@ impl RankState {
         let n_workers = worker_states.len();
         let steps = self.steps_per_cycle;
         let record_spikes = self.record_spikes;
+        let group_start = self.group_start as u16;
+        let group_size = self.group_size;
         let mut phase_times = PhaseTimes::new();
         let mut cycle_times = Vec::with_capacity(if record_cycle_times {
             s_cycles as usize
@@ -1076,6 +1246,7 @@ impl RankState {
         let slots: Vec<WorkerSlot> = (0..n_workers)
             .map(|_| WorkerSlot {
                 data: Mutex::new(SlotData {
+                    local_out: (0..group_size).map(|_| Vec::new()).collect(),
                     global_out: (0..m).map(|_| Vec::new()).collect(),
                     ..SlotData::default()
                 }),
@@ -1100,6 +1271,7 @@ impl RankState {
                                 s_cycles,
                                 steps,
                                 dual,
+                                group_start,
                                 record_spikes,
                             )
                         })
@@ -1156,7 +1328,7 @@ impl RankState {
                     for sl in &slots {
                         let mut guard = sl.data.lock().unwrap();
                         let d = &mut *guard;
-                        self.local_send.append(&mut d.local_out);
+                        self.merge_local_out(&mut d.local_out);
                         for (dest, part) in
                             d.global_out.iter_mut().enumerate()
                         {
@@ -1172,6 +1344,7 @@ impl RankState {
                     // ---- communicate -------------------------------------
                     self.communicate(
                         comm,
+                        local,
                         s,
                         dual,
                         &mut phase_times,
@@ -1220,6 +1393,7 @@ impl RankState {
     fn run_pooled_channels<T: SplitTransport>(
         mut self,
         comm: &T,
+        local: Option<&T::Sub>,
         s_cycles: u64,
         updater: &Updater,
         record_cycle_times: bool,
@@ -1230,6 +1404,8 @@ impl RankState {
         let n_workers = worker_states.len();
         let steps = self.steps_per_cycle;
         let record_spikes = self.record_spikes;
+        let group_start = self.group_start as u16;
+        let group_size = self.group_size;
         let mut phase_times = PhaseTimes::new();
         let mut cycle_times = Vec::with_capacity(if record_cycle_times {
             s_cycles as usize
@@ -1245,18 +1421,24 @@ impl RankState {
                     let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
                     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
                     scope.spawn(move || {
-                        worker_loop(th, updater, cmd_rx, reply_tx)
+                        worker_loop(th, updater, group_start, cmd_rx, reply_tx)
                     });
                     cmd_txs.push(cmd_tx);
                     reply_rxs.push(reply_rx);
                 }
                 // per-worker collocation buffers, recycled every cycle
-                let mut coll_bufs: Vec<(Vec<SpikeMsg>, Vec<Vec<SpikeMsg>>)> =
-                    (0..n_workers)
-                        .map(|_| {
-                            (Vec::new(), (0..m).map(|_| Vec::new()).collect())
-                        })
-                        .collect();
+                #[allow(clippy::type_complexity)]
+                let mut coll_bufs: Vec<(
+                    Vec<Vec<SpikeMsg>>,
+                    Vec<Vec<SpikeMsg>>,
+                )> = (0..n_workers)
+                    .map(|_| {
+                        (
+                            (0..group_size).map(|_| Vec::new()).collect(),
+                            (0..m).map(|_| Vec::new()).collect(),
+                        )
+                    })
+                    .collect();
                 let mut inflight: VecDeque<InFlight<T::Pending>> =
                     VecDeque::new();
 
@@ -1319,14 +1501,17 @@ impl RankState {
                         reply_rxs.iter().zip(coll_bufs.iter_mut())
                     {
                         match rx.recv().expect("pool worker died") {
-                            Reply::Collocated { mut local, mut global } => {
-                                self.local_send.append(&mut local);
+                            Reply::Collocated {
+                                local: mut loc,
+                                mut global,
+                            } => {
+                                self.merge_local_out(&mut loc);
                                 for (dest, part) in
                                     global.iter_mut().enumerate()
                                 {
                                     self.global_send[dest].append(part);
                                 }
-                                *bufs = (local, global);
+                                *bufs = (loc, global);
                             }
                             _ => unreachable!("unexpected collocate reply"),
                         }
@@ -1340,6 +1525,7 @@ impl RankState {
                     // ---- communicate -------------------------------------
                     self.communicate(
                         comm,
+                        local,
                         s,
                         dual,
                         &mut phase_times,

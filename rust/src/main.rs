@@ -50,11 +50,11 @@ fn print_usage() {
                     [--scale f] [--areas n] [--update-path native|xla]\n\
                     [--exec sequential|pooled|pooled-channels]\n\
                     [--comm blocking|overlap] [--comm-depth D]\n\
-                    [--quota spikes]\n\
+                    [--quota spikes] [--ranks-per-area R]\n\
                     [--record-spikes]\n\
            figure <name> [--t-model ms] [--seed n] [--out dir]\n\
            figures [--t-model ms] [--out dir]\n\
-           theory [--d D] [--ranks M] [--threads T]\n\
+           theory [--d D] [--ranks M] [--threads T] [--ranks-per-area R]\n\
            info\n\
          \n\
          figures: {}",
@@ -95,14 +95,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     args.finish()?;
 
     println!(
-        "model {} | {} areas | {} neurons | strategy {} | M={} T={} | \
-         exec {} | comm {} (depth {}) | T_model {} ms | D={}",
+        "model {} | {} areas | {} neurons | strategy {} | M={} T={} \
+         R/area={} | exec {} | comm {} (depth {}) | T_model {} ms | D={}",
         spec.name,
         spec.n_areas(),
         spec.total_neurons(),
         cfg.strategy.name(),
         cfg.m_ranks,
         cfg.threads_per_rank,
+        cfg.ranks_per_area,
         cfg.exec.name(),
         cfg.comm.name(),
         cfg.comm_depth,
@@ -151,6 +152,22 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         fnum(cs.complete_wait_secs),
         fnum(cs.hidden_secs),
     );
+    for (tier, ts) in [
+        ("global", &res.comm_tiers.global),
+        ("local", &res.comm_tiers.local),
+    ] {
+        println!(
+            "comm[{tier}]: a2a {} | swaps {} | bytes {} | resizes {} | \
+             sync {} | wait {} | hidden {}",
+            ts.alltoall_calls,
+            ts.local_swaps,
+            ts.bytes_sent,
+            ts.resize_rounds,
+            fnum(ts.sync_secs),
+            fnum(ts.complete_wait_secs),
+            fnum(ts.hidden_secs),
+        );
+    }
     Ok(())
 }
 
@@ -187,6 +204,13 @@ fn cmd_theory(args: &Args) -> Result<()> {
     let d = args.usize_or("d", 10)? as u32;
     let m = args.usize_or("ranks", 128)?;
     let t_m = args.usize_or("threads", 48)?;
+    let ranks_per_area = args.usize_or("ranks-per-area", 1)?;
+    if ranks_per_area == 0 || m % ranks_per_area != 0 {
+        bail!(
+            "--ranks-per-area must be >= 1 and divide --ranks \
+             ({m} % {ranks_per_area} != 0)"
+        );
+    }
     args.finish()?;
 
     println!("== synchronization theory (eqs 2-12) ==");
@@ -216,6 +240,33 @@ fn cmd_theory(args: &Args) -> Result<()> {
          gain per 100k cycles = {:.2} s (depth 2), {:.2} s (depth 4)",
         sync::predicted_depth_gain(model, m, 100_000, 1, 2, slack),
         sync::predicted_depth_gain(model, m, 100_000, 1, 4, slack),
+    );
+    // hybrid two-tier schedule: D local rounds per epoch inside each
+    // area group, one global exchange across the groups per epoch
+    let (local_sync, global_sync) = sync::expected_hybrid_sync_times(
+        model,
+        m,
+        ranks_per_area,
+        100_000,
+        d,
+        d,
+    );
+    println!(
+        "hybrid two-tier (R={ranks_per_area}/area, {} groups, D={d} \
+         local rounds/epoch): per 100k cycles local sync {local_sync:.2} \
+         s, global sync {global_sync:.2} s; overlap hides up to {:.2} s \
+         of the global tier",
+        m / ranks_per_area,
+        sync::predicted_hybrid_depth_gain(
+            model,
+            m,
+            ranks_per_area,
+            100_000,
+            d,
+            1,
+            d.saturating_sub(1),
+            d,
+        ),
     );
     let sc = delivery::DeliveryScenario::default();
     println!("\n== spike-delivery theory (eqs 13-17) ==");

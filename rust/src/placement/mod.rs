@@ -4,10 +4,17 @@
 //!   process `vp = gid mod (M·T)`, rank `vp mod M`.  Balances workload but
 //!   scatters every area across all ranks.
 //! * [`Placement::AreaAligned`] — the structure-aware scheme: every area is
-//!   confined to one rank (`rank = area mod M`), neurons spread round-robin
-//!   over the rank's threads.  Heterogeneous area sizes then produce the
-//!   load imbalance the paper analyses; the implied padding of NEST's
-//!   en-bloc creation is reported as ghost neurons.
+//!   confined to one **rank group** of `ranks_per_area` consecutive ranks
+//!   (`group = area mod (M / ranks_per_area)`), neurons spread round-robin
+//!   over the group's `ranks_per_area · T` virtual slots (rank-major, so
+//!   `ranks_per_area = 1` degenerates to the original one-area-per-rank
+//!   scheme with `thread = local mod T`, bit-identically).  Rank groups
+//!   are what the hierarchical communicator API maps local communicators
+//!   onto: the ranks of one group exchange the area's short-range spikes
+//!   every cycle over their own sub-communicator.  Heterogeneous area
+//!   sizes still produce the load imbalance the paper analyses; the
+//!   implied padding of NEST's en-bloc creation is reported as ghost
+//!   neurons.
 
 use crate::network::spec::ModelSpec;
 use crate::network::Gid;
@@ -15,8 +22,19 @@ use anyhow::{bail, Result};
 
 #[derive(Clone, Debug)]
 pub enum Placement {
-    RoundRobin { m: usize, t: usize },
-    AreaAligned { m: usize, t: usize, area_rank: Vec<usize> },
+    RoundRobin {
+        m: usize,
+        t: usize,
+    },
+    AreaAligned {
+        m: usize,
+        t: usize,
+        /// Ranks jointly hosting each area group; group `g` owns the
+        /// contiguous ranks `g·ranks_per_area .. (g+1)·ranks_per_area`.
+        ranks_per_area: usize,
+        /// Area → rank-group index.
+        area_group: Vec<usize>,
+    },
 }
 
 impl Placement {
@@ -24,18 +42,47 @@ impl Placement {
         Placement::RoundRobin { m, t }
     }
 
-    /// Area-aligned placement over `m` ranks: area `a` lives on rank
-    /// `a mod m`.  Errors if there are fewer areas than ranks (idle ranks
-    /// have no neurons to host — the paper never runs this regime).
+    /// Area-aligned placement over `m` ranks with one rank per area
+    /// group: area `a` lives on rank `a mod m`.  Shorthand for
+    /// [`Placement::area_aligned_grouped`] with `ranks_per_area = 1`.
     pub fn area_aligned(spec: &ModelSpec, m: usize, t: usize) -> Result<Placement> {
-        if spec.n_areas() < m {
+        Placement::area_aligned_grouped(spec, m, t, 1)
+    }
+
+    /// Area-aligned placement with multi-rank area groups: the `m` ranks
+    /// split into `m / ranks_per_area` contiguous groups, area `a` maps
+    /// onto group `a mod (m / ranks_per_area)`, and its neurons spread
+    /// round-robin over the group's `ranks_per_area · t` virtual slots
+    /// (rank-major).  Errors if `m` is not a multiple of
+    /// `ranks_per_area` or there are fewer areas than groups (idle
+    /// groups have no neurons to host — the paper never runs this
+    /// regime).
+    pub fn area_aligned_grouped(
+        spec: &ModelSpec,
+        m: usize,
+        t: usize,
+        ranks_per_area: usize,
+    ) -> Result<Placement> {
+        if ranks_per_area == 0 {
+            bail!("ranks_per_area must be >= 1");
+        }
+        if m % ranks_per_area != 0 {
             bail!(
-                "area-aligned placement needs >= {m} areas, model has {}",
+                "ranks ({m}) must be a multiple of ranks_per_area \
+                 ({ranks_per_area}): area groups are contiguous rank \
+                 blocks of equal size"
+            );
+        }
+        let n_groups = m / ranks_per_area;
+        if spec.n_areas() < n_groups {
+            bail!(
+                "area-aligned placement needs >= {n_groups} areas (one \
+                 per rank group of {ranks_per_area}), model has {}",
                 spec.n_areas()
             );
         }
-        let area_rank = (0..spec.n_areas()).map(|a| a % m).collect();
-        Ok(Placement::AreaAligned { m, t, area_rank })
+        let area_group = (0..spec.n_areas()).map(|a| a % n_groups).collect();
+        Ok(Placement::AreaAligned { m, t, ranks_per_area, area_group })
     }
 
     pub fn m_ranks(&self) -> usize {
@@ -52,12 +99,48 @@ impl Placement {
         }
     }
 
+    /// Ranks jointly hosting one area group (1 unless grouped
+    /// area-aligned placement is in use).
+    pub fn ranks_per_area(&self) -> usize {
+        match self {
+            Placement::RoundRobin { .. } => 1,
+            Placement::AreaAligned { ranks_per_area, .. } => *ranks_per_area,
+        }
+    }
+
+    /// Communicator-group color of `rank`: its area group under the
+    /// structure-aware placement, the rank itself otherwise (every rank
+    /// a singleton group).
+    pub fn group_of_rank(&self, rank: usize) -> usize {
+        match self {
+            Placement::RoundRobin { .. } => rank,
+            Placement::AreaAligned { ranks_per_area, .. } => {
+                rank / ranks_per_area
+            }
+        }
+    }
+
+    /// Global rank ids of `rank`'s area group, ascending (contiguous by
+    /// construction).
+    pub fn group_ranks(&self, rank: usize) -> std::ops::Range<usize> {
+        match self {
+            Placement::RoundRobin { .. } => rank..rank + 1,
+            Placement::AreaAligned { ranks_per_area, .. } => {
+                let g = rank / ranks_per_area;
+                g * ranks_per_area..(g + 1) * ranks_per_area
+            }
+        }
+    }
+
     /// Rank hosting `gid`.
     pub fn rank_of(&self, spec: &ModelSpec, gid: Gid) -> usize {
         match self {
             Placement::RoundRobin { m, t } => (gid as usize) % (m * t) % m,
-            Placement::AreaAligned { area_rank, .. } => {
-                area_rank[spec.area_of(gid)]
+            Placement::AreaAligned { t, ranks_per_area, area_group, .. } => {
+                let area = spec.area_of(gid);
+                let local = (gid - spec.area_range(area).start) as usize;
+                let slot = local % (ranks_per_area * t);
+                area_group[area] * ranks_per_area + slot % ranks_per_area
             }
         }
     }
@@ -66,10 +149,10 @@ impl Placement {
     pub fn thread_of(&self, spec: &ModelSpec, gid: Gid) -> usize {
         match self {
             Placement::RoundRobin { m, t } => (gid as usize) % (m * t) / m,
-            Placement::AreaAligned { t, .. } => {
+            Placement::AreaAligned { t, ranks_per_area, .. } => {
                 let area = spec.area_of(gid);
                 let local = (gid - spec.area_range(area).start) as usize;
-                local % t
+                local % (ranks_per_area * t) / ranks_per_area
             }
         }
     }
@@ -93,15 +176,22 @@ impl Placement {
                     .take_while(|&g| g < spec.total_neurons())
                     .collect()
             }
-            Placement::AreaAligned { area_rank, t, .. } => {
+            Placement::AreaAligned { area_group, t, ranks_per_area, .. } => {
+                let r = *ranks_per_area;
+                let my_group = rank / r;
+                // the virtual slot of this (rank, thread) within the
+                // group's rank-major slot cycle of length r·t
+                let my_slot = thread * r + rank % r;
                 let mut out = Vec::new();
-                for (a, &r) in area_rank.iter().enumerate() {
-                    if r != rank {
+                for (a, &g) in area_group.iter().enumerate() {
+                    if g != my_group {
                         continue;
                     }
                     let range = spec.area_range(a);
                     for gid in range.clone() {
-                        if ((gid - range.start) as usize) % t == thread {
+                        if ((gid - range.start) as usize) % (r * t)
+                            == my_slot
+                        {
                             out.push(gid);
                         }
                     }
@@ -121,10 +211,25 @@ impl Placement {
                     counts[self.rank_of(spec, gid)] += 1;
                 }
             }
-            Placement::AreaAligned { area_rank, .. } => {
-                for (a, &r) in area_rank.iter().enumerate() {
+            Placement::AreaAligned { area_group, t, ranks_per_area, .. } => {
+                // closed form: neurons with area-local index ≡ j
+                // (mod r·t) land on rank g·r + j mod r; count of such
+                // indices in [0, n) is ceil((n - j) / (r·t)) for j < n
+                let (r, t) = (*ranks_per_area, *t);
+                let cycle = r * t;
+                for (a, &g) in area_group.iter().enumerate() {
                     let range = spec.area_range(a);
-                    counts[r] += (range.end - range.start) as usize;
+                    let n = (range.end - range.start) as usize;
+                    for rr in 0..r {
+                        let mut c = 0usize;
+                        for th in 0..t {
+                            let j = th * r + rr;
+                            if j < n {
+                                c += (n - j).div_ceil(cycle);
+                            }
+                        }
+                        counts[g * r + rr] += c;
+                    }
                 }
             }
         }
@@ -256,6 +361,101 @@ mod tests {
         let min = counts.iter().min().unwrap();
         assert!(max - min <= 2, "{counts:?}");
         assert!(p.ghost_counts(&s).iter().all(|&g| g <= 2));
+    }
+
+    #[test]
+    fn grouped_matches_ungrouped_at_one_rank_per_area() {
+        // ranks_per_area = 1 must reproduce the original scheme
+        // bit-identically (same ranks, same threads, same counts)
+        let s = spec(&[33, 21, 17]);
+        let a = Placement::area_aligned(&s, 3, 2).unwrap();
+        let b = Placement::area_aligned_grouped(&s, 3, 2, 1).unwrap();
+        for gid in 0..s.total_neurons() {
+            assert_eq!(a.rank_of(&s, gid), b.rank_of(&s, gid));
+            assert_eq!(a.thread_of(&s, gid), b.thread_of(&s, gid));
+        }
+        assert_eq!(a.rank_counts(&s), b.rank_counts(&s));
+        assert_eq!(a.ranks_per_area(), 1);
+    }
+
+    #[test]
+    fn grouped_confines_areas_to_rank_groups() {
+        let s = spec(&[40, 30]);
+        let p = Placement::area_aligned_grouped(&s, 4, 2, 2).unwrap();
+        assert_eq!(p.ranks_per_area(), 2);
+        // area 0 -> group 0 (ranks 0..2), area 1 -> group 1 (ranks 2..4)
+        for gid in 0..40 {
+            assert!(p.rank_of(&s, gid) < 2);
+        }
+        for gid in 40..70 {
+            assert!((2..4).contains(&p.rank_of(&s, gid)));
+        }
+        // both ranks of a group host a share of their area
+        let counts = p.rank_counts(&s);
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        assert_eq!(counts.iter().sum::<usize>(), 70);
+        assert_eq!(p.group_of_rank(0), 0);
+        assert_eq!(p.group_of_rank(3), 1);
+        assert_eq!(p.group_ranks(1), 0..2);
+        assert_eq!(p.group_ranks(2), 2..4);
+        // round-robin placements are all singleton groups
+        let rr = Placement::round_robin(4, 2);
+        assert_eq!(rr.ranks_per_area(), 1);
+        assert_eq!(rr.group_of_rank(3), 3);
+        assert_eq!(rr.group_ranks(2), 2..3);
+    }
+
+    #[test]
+    fn grouped_partitions_everything() {
+        let s = spec(&[33, 21, 17, 29]);
+        for rpa in [1usize, 2, 4] {
+            let p =
+                Placement::area_aligned_grouped(&s, 4, 3, rpa).unwrap();
+            let mut seen = vec![false; s.total_neurons() as usize];
+            for rank in 0..p.m_ranks() {
+                for thread in 0..p.threads_per_rank() {
+                    let gids = p.local_gids(&s, rank, thread);
+                    assert!(gids.windows(2).all(|w| w[0] < w[1]));
+                    for gid in gids {
+                        assert_eq!(p.rank_of(&s, gid), rank);
+                        assert_eq!(p.thread_of(&s, gid), thread);
+                        assert!(
+                            !seen[gid as usize],
+                            "gid {gid} duplicated (rpa={rpa})"
+                        );
+                        seen[gid as usize] = true;
+                    }
+                }
+            }
+            assert!(
+                seen.iter().all(|&x| x),
+                "rpa={rpa}: not all gids placed"
+            );
+        }
+    }
+
+    #[test]
+    fn grouped_rank_counts_match_brute_force() {
+        let s = spec(&[31, 22, 17, 40]);
+        let p = Placement::area_aligned_grouped(&s, 6, 2, 3).unwrap();
+        let mut brute = vec![0usize; 6];
+        for gid in 0..s.total_neurons() {
+            brute[p.rank_of(&s, gid)] += 1;
+        }
+        assert_eq!(p.rank_counts(&s), brute);
+    }
+
+    #[test]
+    fn grouped_validation_errors() {
+        let s = spec(&[10, 10, 10]);
+        // m not a multiple of ranks_per_area
+        assert!(Placement::area_aligned_grouped(&s, 4, 1, 3).is_err());
+        // more groups than areas: 4 groups of 2 need >= 4 areas
+        assert!(Placement::area_aligned_grouped(&s, 8, 1, 2).is_err());
+        // zero group size
+        assert!(Placement::area_aligned_grouped(&s, 4, 1, 0).is_err());
+        // ok: 3 areas on 3 groups of 2
+        assert!(Placement::area_aligned_grouped(&s, 6, 2, 2).is_ok());
     }
 
     #[test]

@@ -125,6 +125,78 @@ pub fn predicted_depth_gain(
     epochs * skew_per_epoch.min(window_cycles * model.mu)
 }
 
+/// Expected synchronization time of the **hybrid two-tier schedule**,
+/// split by tier, over `s` cycles: areas span groups of `ranks_per_area`
+/// ranks; within each epoch of `d` lumped cycles the local tier
+/// rendezvous `local_rounds` times among the group's `ranks_per_area`
+/// ranks (the intra-group alltoall of the short-range pathway — a
+/// per-round expected skew of `xi_r · sigma`), and the global tier
+/// barriers once across the `m / ranks_per_area` groups (skew
+/// `xi_G · sqrt(d) · sigma`).  Returns `(local, global)` totals.
+///
+/// With `ranks_per_area = 1` the local tier costs nothing (`xi_1 = 0`,
+/// the intra-rank swap has no synchronization) and the global term
+/// reduces exactly to the flat model of [`expected_sync_times`].
+pub fn expected_hybrid_sync_times(
+    model: CycleTimeModel,
+    m: usize,
+    ranks_per_area: usize,
+    s: u64,
+    d: u32,
+    local_rounds: u32,
+) -> (f64, f64) {
+    assert!(ranks_per_area >= 1 && m >= ranks_per_area);
+    assert!(
+        m % ranks_per_area == 0,
+        "ranks must tile into equal area groups"
+    );
+    let epochs = s as f64 / d as f64;
+    let local = epochs
+        * local_rounds as f64
+        * blom_xi(ranks_per_area)
+        * model.sigma;
+    let n_groups = m / ranks_per_area;
+    let global = epochs * blom_xi(n_groups) * (d as f64).sqrt() * model.sigma;
+    (local, global)
+}
+
+/// [`predicted_depth_gain`] for the hybrid two-tier schedule: how much
+/// synchronization the split-phase depth-`depth` pipeline hides per run
+/// when the local tier exchanges `local_rounds` times per epoch among
+/// groups of `ranks_per_area` ranks.
+///
+/// Only the **global-tier** boundary skew is hideable — the local
+/// rounds rendezvous every cycle regardless of how the global exchange
+/// is phased.  With at least one local round per epoch the group's ranks
+/// arrive at the boundary together, so the hideable skew is across the
+/// `m / ranks_per_area` groups (`xi_G`), not across all `m` ranks; with
+/// `local_rounds = 0` (or singleton groups) it falls back to the flat
+/// cross-rank skew and reproduces [`predicted_depth_gain`] exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn predicted_hybrid_depth_gain(
+    model: CycleTimeModel,
+    m: usize,
+    ranks_per_area: usize,
+    s: u64,
+    d: u32,
+    depth: u32,
+    overlap_cycles: u32,
+    local_rounds: u32,
+) -> f64 {
+    assert!(ranks_per_area >= 1 && m >= ranks_per_area);
+    assert!(
+        m % ranks_per_area == 0,
+        "ranks must tile into equal area groups"
+    );
+    let groups_synced = ranks_per_area > 1 && local_rounds > 0;
+    let units = if groups_synced { m / ranks_per_area } else { m };
+    let epochs = s as f64 / d as f64;
+    let skew_per_epoch = blom_xi(units) * (d as f64).sqrt() * model.sigma;
+    let window_cycles =
+        overlap_cycles.min((depth * d).saturating_sub(1)) as f64;
+    epochs * skew_per_epoch.min(window_cycles * model.mu)
+}
+
 /// Fraction of the structure-aware synchronization time (eq 9's sync
 /// term) that the overlap window hides: [`predicted_overlap_gain`]
 /// normalized by the expected sync time of the same span (one epoch).
@@ -282,6 +354,60 @@ mod tests {
         // and the gain is bounded by the total sync time of the run
         let (sync_conv, _) = expected_sync_times(MODEL, m, s, 1);
         assert!(g8 <= sync_conv + 1e-12);
+    }
+
+    #[test]
+    fn hybrid_reduces_to_flat_at_one_rank_per_area() {
+        // ranks_per_area = 1: no local-tier cost, and the gain predictor
+        // equals the flat depth predictor for every window and depth
+        let (s, m, d) = (100_000u64, 128usize, 10u32);
+        let (local, global) =
+            expected_hybrid_sync_times(MODEL, m, 1, s, d, d);
+        let (_, flat) = expected_sync_times(MODEL, m, s, d);
+        assert_eq!(local, 0.0);
+        assert!((global - flat).abs() < 1e-12 * flat.max(1.0));
+        for depth in [1u32, 2, 4] {
+            for w in [0u32, 1, 4, 9] {
+                assert_eq!(
+                    predicted_hybrid_depth_gain(MODEL, m, 1, s, d, depth, w, d),
+                    predicted_depth_gain(MODEL, m, s, d, depth, w),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_local_tier_scales_with_rounds_and_group_size() {
+        let (s, m, d) = (10_000u64, 64usize, 10u32);
+        let (l1, _) = expected_hybrid_sync_times(MODEL, m, 4, s, d, 1);
+        let (l10, _) = expected_hybrid_sync_times(MODEL, m, 4, s, d, 10);
+        assert!(l1 > 0.0 && (l10 / l1 - 10.0).abs() < 1e-9);
+        // larger groups pay more skew per local round...
+        let (l_r8, g_r8) = expected_hybrid_sync_times(MODEL, m, 8, s, d, 10);
+        assert!(l_r8 > l10);
+        // ...but the global boundary sees fewer independent units
+        let (_, g_r4) = expected_hybrid_sync_times(MODEL, m, 4, s, d, 10);
+        assert!(g_r8 < g_r4);
+    }
+
+    #[test]
+    fn hybrid_gain_accounts_for_local_rounds() {
+        // skew-limited regime (huge window): grouping reduces the
+        // hideable boundary skew from xi_M to xi_{M/R} — the hybrid
+        // schedule has *less* left for the overlap to hide
+        let (s, m, d) = (100_000u64, 128usize, 10u32);
+        let flat = predicted_hybrid_depth_gain(MODEL, m, 1, s, d, 1, 999, d);
+        let grouped =
+            predicted_hybrid_depth_gain(MODEL, m, 4, s, d, 1, 999, d);
+        assert!(grouped < flat, "grouped {grouped} flat {flat}");
+        // without local rounds the groups never rendezvous mid-epoch:
+        // the boundary skew is across all ranks again
+        let no_rounds =
+            predicted_hybrid_depth_gain(MODEL, m, 4, s, d, 1, 999, 0);
+        assert_eq!(no_rounds, flat);
+        // the grouped gain equals the flat gain of M/R ranks
+        let as_groups = predicted_depth_gain(MODEL, m / 4, s, d, 1, 999);
+        assert!((grouped - as_groups).abs() < 1e-12 * as_groups.max(1.0));
     }
 
     #[test]

@@ -82,6 +82,36 @@ fn run_depth(
     simulate(spec, &cfg).expect("simulation failed").spikes
 }
 
+/// Hierarchical run: structure-aware placement with areas spanning
+/// `ranks_per_area`-rank groups (local tier = intra-group alltoall).
+#[allow(clippy::too_many_arguments)]
+fn run_hier(
+    spec: &ModelSpec,
+    strategy: Strategy,
+    m: usize,
+    ranks_per_area: usize,
+    t: usize,
+    t_model_ms: f64,
+    exec: ExecMode,
+    comm: CommMode,
+    comm_depth: usize,
+) -> Vec<(u64, u32)> {
+    let cfg = RunConfig {
+        strategy,
+        m_ranks: m,
+        threads_per_rank: t,
+        t_model_ms,
+        seed: 12,
+        exec,
+        comm,
+        comm_depth,
+        ranks_per_area,
+        record_spikes: true,
+        ..RunConfig::default()
+    };
+    simulate(spec, &cfg).expect("simulation failed").spikes
+}
+
 #[test]
 fn ianf_model_identical_across_strategies() {
     let spec = models::mam_benchmark(4, 0.004, 1.0).unwrap(); // 4x520
@@ -339,6 +369,199 @@ fn spike_trains_identical_across_comm_depths() {
         );
         assert_eq!(base, blocking_deep, "{}", strategy.name());
     }
+}
+
+#[test]
+fn hierarchical_groups_identical_to_flat() {
+    // the tentpole invariant of the hierarchical communicator API: an
+    // area spanning a multi-rank group — short-range spikes exchanged
+    // through a real intra-group alltoall on the area's sub-communicator
+    // every cycle — must not move a single spike relative to the flat
+    // runs, across exec x comm x depth x threads.  deep_pipeline_net has
+    // exact binary-fraction weights and ~4-5 cycles of realized slack,
+    // so depth-2 overlap is sustainable on the global tier.
+    let spec = models::deep_pipeline_net(240, 4).unwrap();
+    let base = run_comm(
+        &spec,
+        Strategy::Conventional,
+        8,
+        1,
+        100.0,
+        ExecMode::Sequential,
+        CommMode::Blocking,
+    );
+    assert!(
+        base.len() > 100,
+        "too quiet for a meaningful test ({} spikes)",
+        base.len()
+    );
+    // degenerate hierarchy: one rank per area group (must stay
+    // bit-identical to the pre-hierarchical engine)
+    let flat = run_hier(
+        &spec,
+        Strategy::StructureAware,
+        4,
+        1,
+        2,
+        100.0,
+        ExecMode::Pooled,
+        CommMode::Blocking,
+        1,
+    );
+    assert_eq!(base, flat, "ranks_per_area=1 diverged from flat");
+    // real hierarchy: 4 areas x 2-rank groups on 8 ranks
+    for comm in [CommMode::Blocking, CommMode::Overlap] {
+        for depth in [1usize, 2] {
+            if comm == CommMode::Blocking && depth > 1 {
+                continue;
+            }
+            for exec in [
+                ExecMode::Sequential,
+                ExecMode::Pooled,
+                ExecMode::PooledChannels,
+            ] {
+                for t in [1usize, 3] {
+                    let got = run_hier(
+                        &spec,
+                        Strategy::StructureAware,
+                        8,
+                        2,
+                        t,
+                        100.0,
+                        exec,
+                        comm,
+                        depth,
+                    );
+                    assert_eq!(
+                        base,
+                        got,
+                        "hierarchical diverged: comm={} depth={depth} \
+                         exec={} T={t}",
+                        comm.name(),
+                        exec.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_strategies_and_group_sizes_agree() {
+    // sanity net (exact weights): the flat conventional reference vs
+    // grouped structure-aware placements at ranks_per_area 2 and 4 —
+    // at R=4 each 4-rank group hosts *two* areas, exercising multiple
+    // areas per local communicator
+    let spec = models::sanity_net(240, 4).unwrap();
+    let base = run(&spec, Strategy::Conventional, 8, 2, 100.0);
+    assert!(
+        base.len() > 100,
+        "too quiet for a meaningful test ({} spikes)",
+        base.len()
+    );
+    for rpa in [2usize, 4] {
+        for strategy in
+            [Strategy::Intermediate, Strategy::StructureAware]
+        {
+            let got = run_hier(
+                &spec,
+                strategy,
+                8,
+                rpa,
+                2,
+                100.0,
+                ExecMode::Pooled,
+                CommMode::Blocking,
+                1,
+            );
+            assert_eq!(
+                base,
+                got,
+                "{} diverged at ranks_per_area={rpa}",
+                strategy.name()
+            );
+        }
+    }
+    // split-phase overlap on the global tier with a grouped local tier
+    let got = run_hier(
+        &spec,
+        Strategy::StructureAware,
+        8,
+        2,
+        2,
+        100.0,
+        ExecMode::Pooled,
+        CommMode::Overlap,
+        1,
+    );
+    assert_eq!(base, got, "overlap diverged under grouping");
+}
+
+#[test]
+fn hierarchical_tier_stats_attributed() {
+    let spec = models::sanity_net(200, 4).unwrap();
+    let run_cfg = |rpa: usize, m: usize| {
+        let cfg = RunConfig {
+            strategy: Strategy::StructureAware,
+            m_ranks: m,
+            threads_per_rank: 2,
+            t_model_ms: 100.0,
+            seed: 12,
+            ranks_per_area: rpa,
+            record_spikes: true,
+            ..RunConfig::default()
+        };
+        simulate(&spec, &cfg).expect("simulation failed")
+    };
+    // flat: the local tier is the intra-rank swap — no collectives, no
+    // wire bytes, one swap per cycle per rank
+    let flat = run_cfg(1, 4);
+    let lt = &flat.comm_tiers.local;
+    assert_eq!(lt.alltoall_calls, 0);
+    assert_eq!(lt.local_swaps, flat.s_cycles * 4);
+    assert_eq!(lt.bytes_sent, 0);
+    assert_eq!(flat.comm_stats, flat.comm_tiers.combined());
+    assert_eq!(
+        flat.comm_tiers.global.alltoall_calls,
+        flat.comm_stats.alltoall_calls
+    );
+
+    // hierarchical: a real group alltoall every cycle per rank carrying
+    // actual spikes; the global tier still runs once per epoch per rank
+    // (plus the preparation exchange)
+    let hier = run_cfg(2, 8);
+    let lt = &hier.comm_tiers.local;
+    assert_eq!(lt.local_swaps, 0);
+    assert_eq!(lt.alltoall_calls, hier.s_cycles * 8);
+    assert!(lt.bytes_sent > 0, "group exchange moves real spikes");
+    let epochs = hier.s_cycles / spec.delay_ratio() as u64;
+    assert_eq!(
+        hier.comm_tiers.global.alltoall_calls,
+        (epochs + 1) * 8
+    );
+    assert_eq!(hier.comm_stats, hier.comm_tiers.combined());
+}
+
+#[test]
+fn groups_allow_more_ranks_than_areas() {
+    // 4 areas cannot fill 8 ranks one-per-rank (placement rejects the
+    // idle ranks), but spanning each area over a 2-rank group can
+    let spec = models::sanity_net(120, 4).unwrap();
+    let cfg = RunConfig {
+        strategy: Strategy::StructureAware,
+        m_ranks: 8,
+        threads_per_rank: 2,
+        t_model_ms: 20.0,
+        seed: 12,
+        record_spikes: true,
+        ..RunConfig::default()
+    };
+    assert!(
+        simulate(&spec, &cfg).is_err(),
+        "flat 8-rank run should be short of areas"
+    );
+    let cfg = RunConfig { ranks_per_area: 2, ..cfg };
+    assert!(simulate(&spec, &cfg).is_ok());
 }
 
 #[test]
