@@ -15,6 +15,7 @@ sys.path.insert(
 )
 
 import bench_compare as bc
+import record_baseline as rb
 
 
 def _doc(smoke=True, micro=(), engine=(), engine_raw=()):
@@ -200,3 +201,87 @@ def test_cli_paths(tmp_path):
 
     # missing current file is a usage error, not a silent pass
     assert bc.main(["--current", str(tmp_path / "nope.json")]) == 2
+
+
+def test_placeholder_detection_covers_vacuous_baselines():
+    # the declared flag
+    assert bc.is_placeholder({"placeholder": True, "micro": [{}]})
+    # empty metric families are just as vacuous, flag or no flag
+    assert bc.is_placeholder({"micro": [], "engine": []})
+    assert bc.is_placeholder({})
+    # anything with at least one comparable family is real
+    assert not bc.is_placeholder(_doc(micro=[("a", 1.0)]))
+    assert not bc.is_placeholder(_doc(engine=[(1, 10.0)]))
+
+
+def test_placeholder_baseline_is_flagged_loudly(tmp_path, capsys):
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(_doc(micro=[("a", 100.0)])))
+
+    # declared placeholder: passes by default, but emits the GitHub
+    # annotation so the vacuous gate is visible on the run summary
+    ph = tmp_path / "ph.json"
+    ph.write_text(json.dumps({"placeholder": True, "smoke": True}))
+    args = ["--current", str(cur), "--baseline", str(ph)]
+    assert bc.main(args) == 0
+    out = capsys.readouterr().out
+    assert "::warning" in out
+    assert "record_baseline" in out
+
+    # --fail-on-placeholder turns the warning into a gate failure
+    assert bc.main(args + ["--fail-on-placeholder"]) == 1
+
+    # a baseline that is vacuous without saying so gets the same
+    # treatment — empty arrays compare nothing
+    vac = tmp_path / "vac.json"
+    vac.write_text(json.dumps(
+        {"smoke": True, "micro": [], "engine": []}))
+    args = ["--current", str(cur), "--baseline", str(vac)]
+    assert bc.main(args) == 0
+    assert "::warning" in capsys.readouterr().out
+    assert bc.main(args + ["--fail-on-placeholder"]) == 1
+
+
+def test_record_baseline_rejects_vacuous_input(tmp_path):
+    # a placeholder can never be promoted to a baseline
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(
+        {"placeholder": True, "smoke": True, "micro": [], "engine": []}))
+    out = tmp_path / "out.json"
+    assert rb.main([str(bad), "-o", str(out)]) == 1
+    assert not out.exists()
+
+    # non-empty micro but empty engine is still not a full baseline
+    half = tmp_path / "half.json"
+    half.write_text(json.dumps(_doc(micro=[("a", 100.0)])))
+    assert rb.main([str(half), "-o", str(out)]) == 1
+
+    # missing / unreadable input is a usage error
+    assert rb.main([str(tmp_path / "nope.json"), "-o", str(out)]) == 2
+
+
+def test_record_baseline_stamps_usable_input(tmp_path):
+    rec = tmp_path / "rec.json"
+    doc = _doc(micro=[("a", 100.0)], engine=[(1, 10.0)])
+    doc["placeholder"] = False  # any falsy leftover must be dropped
+    rec.write_text(json.dumps(doc))
+    out = tmp_path / "BENCH_baseline.json"
+    assert rb.main([str(rec), "-o", str(out), "--label", "run-42"]) == 0
+
+    stamped = json.loads(out.read_text())
+    assert "placeholder" not in stamped
+    assert "run-42" in stamped["note"]
+    assert "record_baseline.py" in stamped["note"]
+    # the stamped candidate is a real baseline for the gate...
+    assert not bc.is_placeholder(stamped)
+    # ...and compares cleanly against the run it was recorded from
+    rows, fails, warns = bc.compare(stamped, doc, 0.15)
+    assert len(rows) == 2 and not fails and not warns
+
+
+def test_record_baseline_rejects_nonpositive_numbers(tmp_path):
+    doc = _doc(micro=[("a", 100.0)], engine=[(1, 10.0)])
+    doc["micro"][0]["ns_per_op"] = 0.0
+    rec = tmp_path / "rec.json"
+    rec.write_text(json.dumps(doc))
+    assert rb.main([str(rec), "-o", str(tmp_path / "o.json")]) == 1

@@ -21,6 +21,7 @@
 use nsim::comm::{SpikeMsg, Transport, WorldBuilder};
 use nsim::config::{CommMode, ExecMode, RunConfig, Strategy};
 use nsim::engine::neuron::NeuronBlock;
+use nsim::engine::receive::{bucket_runs, merge_routed, RoutedSpike};
 use nsim::engine::ringbuffer::RingBuffer;
 use nsim::engine::simulate;
 use nsim::models;
@@ -28,7 +29,7 @@ use nsim::network::spec::{
     AreaSpec, DelayDist, LifParams, NeuronKind, WeightRule,
 };
 use nsim::network::ModelSpec;
-use nsim::tables::{ConnTable, LocalConn, TargetTable};
+use nsim::tables::{ConnTable, LocalConn, SourceShards, TargetTable};
 use nsim::util::json::Json;
 use nsim::util::rng::Pcg64;
 use nsim::util::timers::Phase;
@@ -113,10 +114,19 @@ impl Harness {
             res.comm_stats.hidden_secs / m as f64,
         );
         let tiers = &res.comm_tiers;
+        // which receive side the exec mode runs: the legacy channel pool
+        // is the coordinator-sorted broadcast (the "old" delivery arm),
+        // everything else the parallel bucket/merge path — the
+        // deliver-heavy configs pair the two as the engine-level A/B
+        let delivery = match exec {
+            ExecMode::PooledChannels => "broadcast",
+            _ => "merge",
+        };
         self.engine.push(Json::obj(vec![
             ("model", model.into()),
             ("strategy", strategy.name().into()),
             ("exec", exec.name().into()),
+            ("delivery", delivery.into()),
             ("comm", comm.name().into()),
             ("comm_depth", comm_depth.into()),
             ("ranks_per_area", ranks_per_area.into()),
@@ -275,7 +285,7 @@ fn main() {
         (0..1024).map(|_| rng.below(n_sources as u64) as u32).collect();
     h.bench("tables: ConnTable::lookup", probes.len() as u64, || {
         for &p in &probes {
-            black_box(table.lookup(p));
+            black_box(table.lookup(p).len());
         }
     });
 
@@ -295,26 +305,31 @@ fn main() {
     // --- delivery: lookup + ring add combined ------------------------
     h.bench("deliver: spike -> conns -> ring", probes.len() as u64, || {
         for &p in &probes {
-            for c in table.lookup(p) {
+            for c in table.lookup(p).iter() {
                 ring.add(10 + c.delay_steps as u64, c.target_local, c.weight);
             }
         }
     });
 
-    // --- delivery: full batch path (canonical sort + route) -----------
+    // --- delivery A/B: old broadcast walk vs new bucket/merge path -----
+    // unique (source, cycle) keys, as spike compression guarantees on
+    // the real receive path (i*97 is injective mod the source count)
     let batch: Vec<SpikeMsg> = (0..1024)
         .map(|i| SpikeMsg {
-            source: rng.below(n_sources as u64) as u32,
+            source: (i * 97 % n_sources as usize) as u32,
             cycle: (i % 10) as u32,
         })
         .collect();
+    // old arm: flatten, one canonical sort over the whole batch, then a
+    // per-spike binary-search lookup and per-connection ring adds — what
+    // `pooled_deliver` broadcast to every worker
     let mut scratch = batch.clone();
-    h.bench("deliver: batch sort + route", batch.len() as u64, || {
+    h.bench("deliver: batch sort + route (old)", batch.len() as u64, || {
         scratch.clear();
         scratch.extend_from_slice(&batch);
         scratch.sort_unstable_by_key(|m| (m.source, m.cycle));
         for msg in &scratch {
-            for c in table.lookup(msg.source) {
+            for c in table.lookup(msg.source).iter() {
                 ring.add(
                     msg.cycle as u64 + c.delay_steps as u64,
                     c.target_local,
@@ -323,6 +338,43 @@ fn main() {
             }
         }
     });
+    // new arm: the parallel receive path on the same batch — per-run
+    // sorts, shard-routed bucketing (group index resolved once), k-way
+    // merge, then whole delay buckets accumulated per slot row
+    let shards = SourceShards::build([&table]);
+    let n_runs = 4usize;
+    let run_src: Vec<Vec<SpikeMsg>> = (0..n_runs)
+        .map(|r| batch.iter().skip(r).step_by(n_runs).copied().collect())
+        .collect();
+    let mut runs: Vec<Vec<SpikeMsg>> = vec![Vec::new(); n_runs];
+    let mut heads: Vec<usize> = Vec::new();
+    let mut bucket: Vec<RoutedSpike> = Vec::new();
+    h.bench(
+        "deliver: bucket + merge + rows (new)",
+        batch.len() as u64,
+        || {
+            for (dst, src) in runs.iter_mut().zip(&run_src) {
+                dst.clear();
+                dst.extend_from_slice(src);
+            }
+            bucket.clear();
+            bucket_runs(&shards, &mut runs, &mut heads, |_, sp| {
+                bucket.push(sp)
+            });
+            let views = [bucket.as_slice()];
+            merge_routed(&views, &mut heads, |sp| {
+                for (delay, targets, weights) in
+                    table.group(sp.group as usize).delay_runs()
+                {
+                    ring.accumulate_row(
+                        sp.cycle as u64 + delay as u64,
+                        targets,
+                        weights,
+                    );
+                }
+            });
+        },
+    );
 
     // --- collocate: registers -> per-rank send buffers ----------------
     let m_dest = 8usize;

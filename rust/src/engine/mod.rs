@@ -9,12 +9,16 @@
 //! Within a rank, virtual threads run on the persistent phase-barrier
 //! worker runtime by default ([`crate::config::ExecMode::Pooled`]):
 //! workers are spawned once per run and advance through deliver →
-//! update → collocate in lock-step over a reusable barrier, with
-//! received spike batches routed once into per-thread delivery queues
-//! (thread-sharded delivery).  See `engine::rank` for the full protocol
-//! and the bit-identity argument; `ExecMode::Sequential` is the
-//! reference schedule and `ExecMode::PooledChannels` the legacy PR 1
-//! channel pool kept for A/B comparison.
+//! update → collocate in lock-step over a reusable barrier.  The
+//! receive side is fully parallel — workers cooperatively sort and
+//! bucket the incoming per-sender spike runs through a T×T grid, then
+//! each worker k-way merges its own column back into the canonical
+//! delivery order (`engine::receive`); the coordinator never sorts or
+//! scans a spike.  See `engine::rank` for the full protocol and the
+//! bit-identity argument; `ExecMode::Sequential` is the reference
+//! schedule (same bucket/merge code on one OS thread) and
+//! `ExecMode::PooledChannels` the legacy PR 1 channel pool with the old
+//! coordinator-sorted broadcast delivery, kept as the A/B baseline.
 //!
 //! Communication follows the paper's **hierarchical two-tier
 //! architecture**: the engine builds one global [`crate::comm::World`]
@@ -43,6 +47,7 @@
 
 pub mod neuron;
 pub mod rank;
+pub mod receive;
 pub mod ringbuffer;
 pub mod update;
 
@@ -94,6 +99,12 @@ pub struct SimResult {
     /// realized delay slack of every rank), 1 under
     /// `CommMode::Blocking`.
     pub effective_comm_depth: u64,
+    /// Residual ring-buffer mass per rank per virtual thread after the
+    /// last cycle — delivered input the run never consumed.  Exactly 0.0
+    /// everywhere when all delays fit inside the simulated horizon
+    /// (which the conservation test arranges); bit-identical across
+    /// exec/comm modes regardless.
+    pub ring_pending: Vec<Vec<f64>>,
 }
 
 impl SimResult {
@@ -257,12 +268,14 @@ pub fn simulate_with(
     let mut cycle_times = vec![Vec::new(); cfg.m_ranks];
     let mut rank_neurons = vec![0usize; cfg.m_ranks];
     let mut rank_conns = vec![(0usize, 0usize); cfg.m_ranks];
+    let mut ring_pending = vec![Vec::new(); cfg.m_ranks];
     let mut spikes = Vec::new();
     for r in results {
         rank_times[r.rank] = r.phase_times;
         cycle_times[r.rank] = r.cycle_times;
         rank_neurons[r.rank] = r.n_neurons;
         rank_conns[r.rank] = (r.n_conns_short, r.n_conns_long);
+        ring_pending[r.rank] = r.ring_pending;
         spikes.extend(r.spikes);
     }
     spikes.sort_unstable();
@@ -288,5 +301,6 @@ pub fn simulate_with(
             CommMode::Blocking => 1,
             CommMode::Overlap => cfg.comm_depth as u64,
         },
+        ring_pending,
     })
 }

@@ -8,73 +8,75 @@
 //! the **two-tier hybrid schedule** (structure-aware) — a local-tier
 //! exchange every cycle plus the global exchange every D-th cycle.
 //!
-//! # The two-tier communicate step
+//! # The parallel receive side
 //!
-//! Under the structure-aware strategy every area lives on one **rank
-//! group** of `ranks_per_area` ranks, and each rank holds a *local
-//! communicator* for its group (split off the global world via
-//! [`Transport::split`]) next to the *global communicator* shared by all
-//! ranks:
+//! Received spikes arrive as **runs** — the transport's per-sender
+//! buffers, absorbed into a per-pathway [`RunSet`] by the communicate
+//! step.  Delivery never flattens them into one batch: spike compression
+//! makes the canonical `(source, cycle)` key globally unique across a
+//! deliver phase, so sorting each run independently and k-way merging
+//! the sorted runs reproduces *the* canonical order bit-exactly (see
+//! `engine::receive`).  The work parallelizes across the receive side
+//! (arXiv 2109.11358) instead of serializing on the coordinator:
 //!
-//! * **local tier, every cycle**: the area's short-range spikes move
-//!   between the group's ranks.  With a singleton group
-//!   (`ranks_per_area = 1`, the default) this is the intra-rank buffer
-//!   swap of [`Transport::local_swap_into`] — no synchronization, the
-//!   pre-hierarchical behavior bit-identically.  With a multi-rank group
-//!   it is a real [`Transport::alltoall_into`] over the group's
-//!   sub-communicator: frequent, but only among the few ranks of one
-//!   area (the paper's local communication).
-//! * **global tier, every `epoch_cycles`-th cycle**: the long-range
-//!   exchange across areas on the global communicator — blocking, or
-//!   the split-phase depth-D pipeline under `CommMode::Overlap`
-//!   (posting/completion schedule below), unchanged by the grouping.
+//! 1. **bucket** (parallel over *producers*): each worker sorts its
+//!    share of the runs, merges them into its canonical substream, and
+//!    scatters every spike through [`SourceShards`] into per-(producer,
+//!    consumer) grid cells — already resolved to a connection-*group*
+//!    index, so the consumer never searches its table;
+//! 2. **merge** (parallel over *consumers*): each worker k-way merges
+//!    its own grid column back into the canonical order and accumulates
+//!    whole delay buckets into its ring buffer via
+//!    [`RingBuffer::accumulate_row`] (the cache-aware connection layout
+//!    of arXiv 2109.12855, see `tables`).
 //!
-//! Short-range collocation routes spikes per group member through the
-//! short-pathway target tables (global rank minus the group's first
-//! rank); a singleton group skips the routing since every short-range
-//! target is local by construction.
-//!
-//! Virtual threads execute either *sequentially* on the rank's OS thread
-//! ([`crate::config::ExecMode::Sequential`]), on the persistent
-//! barrier-synced worker runtime ([`crate::config::ExecMode::Pooled`],
-//! the default), or on the legacy per-phase channel pool kept for A/B
-//! comparison ([`crate::config::ExecMode::PooledChannels`]).  All paths
-//! produce bit-identical spike trains: every virtual thread owns its
-//! ring buffer and neuron block exclusively, delivery consumes spikes in
-//! the same canonical `(source, step)` order on every thread, and
-//! collocation output is concatenated in virtual-thread order — so no
-//! parallel schedule can reorder anything observable.  Send/receive
-//! buffers are recycled through the [`Transport`] layer across the whole
-//! run (no per-cycle allocation on the hot path).
+//! The sequential path runs the same bucket/merge code on one OS
+//! thread; the legacy channel pool keeps the old coordinator-sorted
+//! broadcast delivery as an A/B arm.  All paths produce bit-identical
+//! spike trains: the merged per-thread delivery sequence equals the
+//! canonical subsequence the old full-batch scan produced, every
+//! virtual thread owns its ring buffer and neuron block exclusively,
+//! and collocation output is concatenated in virtual-thread order.
+//! Delay-bucketed accumulation reorders f64 adds within a (source,
+//! step) group only — exact for the asserted binary-fraction weights
+//! (DESIGN.md §6), hence order-independent.
 //!
 //! # The phase-barrier worker protocol
 //!
 //! The barrier runtime spawns one worker OS thread per virtual thread
 //! *once per run*; workers then advance through the cycle phases in
 //! lock-step with the coordinator (the rank's OS thread) over a single
-//! reusable [`std::sync::Barrier`] of size `T + 1`, with **zero channel
-//! traffic and zero steady-state allocation**.  Each worker owns its
-//! [`ThreadState`] outright and shares one [`Mutex`]-guarded slot with
-//! the coordinator; the barriers partition time so the mutex is never
-//! contended — it only makes the hand-off points safe.  Per cycle:
+//! reusable [`std::sync::Barrier`] of size `T + 1`, with zero channel
+//! traffic and no steady-state *spike buffer* allocation (the bucket
+//! and merge phases each build one pointer-sized scratch vector of
+//! borrowed views per worker per cycle).  Each worker owns its
+//! [`ThreadState`] outright, shares one [`Mutex`]-guarded slot with the
+//! coordinator, and shares the T×T bucket grid with its siblings; the
+//! barriers partition time so no lock is ever contended — the bucket
+//! phase locks grid *row* `w` (disjoint across producers), the merge
+//! phase locks grid *column* `t` (disjoint across consumers), and a
+//! barrier separates the phases.  Per cycle:
 //!
-//! 1. coordinator: route the received spike batches into the per-thread
-//!    delivery queues (thread-sharded via [`SourceShards`] — each spike
-//!    goes only to threads owning connections from its source), then
-//!    `wait()` (**queues ready**);
-//! 2. workers: drain own delivery queues into the ring buffer, `wait()`
-//!    (**deliver done** — coordinator charges the deliver phase);
-//! 3. workers: advance neurons one cycle, `wait()` (**update done** —
+//! 1. coordinator: distribute the received runs round-robin over the
+//!    worker slots, then `wait()` (**runs ready**);
+//! 2. workers: sort + merge own runs, scatter into grid row (bucket
+//!    phase), `wait()` (**buckets ready**);
+//! 3. workers: k-way merge own grid column into the ring buffer (merge
+//!    phase), `wait()` (**deliver done** — coordinator charges the
+//!    deliver phase);
+//! 4. workers: advance neurons one cycle, `wait()` (**update done** —
 //!    coordinator charges the update phase);
-//! 4. workers: collocate spike registers into the slot's output buffers,
-//!    `wait()` (**collocate done**); coordinator drains the slots in
-//!    virtual-thread order (the determinism barrier), charges collocate
-//!    and runs the communicate step while workers park at the next
-//!    cycle's *queues ready* barrier.
+//! 5. workers: collocate spike registers into the slot's output
+//!    buffers, `wait()` (**collocate done**); coordinator drains the
+//!    slots in virtual-thread order (the determinism barrier), reclaims
+//!    the cleared run buffers into the [`RunSet`] pools, charges
+//!    collocate and runs the communicate step while workers park at the
+//!    next cycle's *runs ready* barrier.
 //!
 //! Workers know the cycle count up front, so termination needs no
-//! signalling: after the last cycle they return their recorded spikes
-//! and table statistics through the scoped-thread join handles.
+//! signalling: after the last cycle they return their recorded spikes,
+//! table statistics and residual ring-buffer mass through the
+//! scoped-thread join handles.
 //!
 //! # Overlapped communication ([`crate::config::CommMode::Overlap`])
 //!
@@ -131,20 +133,25 @@
 //! rank's single send set is immediately reusable while the deposited
 //! data rides its ring slot.  Because every delivered spike still lands
 //! in the ring buffer strictly before the first row that could contain
-//! it is read — the causality `debug_assert` in
-//! `ThreadState::deliver_sorted` checks exactly this deadline — spike
+//! it is read — the causality `debug_assert` in `deliver_conns` checks
+//! exactly this deadline, and [`RingBuffer::with_horizon`] asserts the
+//! ring can hold the full write-ahead window at construction — spike
 //! trains are bit-identical to the blocking mode in every exec mode at
 //! every depth.
 
 use crate::comm::{Pending, SpikeMsg, SplitTransport, Transport};
 use crate::config::{CommMode, ExecMode, Strategy};
 use crate::engine::neuron::NeuronBlock;
+use crate::engine::receive::{
+    bucket_runs, merge_routed, sort_canonical, sort_run, RoutedSpike, RunSet,
+};
 use crate::engine::ringbuffer::RingBuffer;
 use crate::engine::update::Updater;
 use crate::network::{incoming_connections, Gid, ModelSpec};
 use crate::placement::Placement;
 use crate::tables::{
-    mask_test, ConnTable, LocalConn, Pathways, SourceShards, TargetTable,
+    mask_test, ConnSlice, ConnTable, LocalConn, Pathways, SourceShards,
+    TargetTable,
 };
 use crate::util::timers::{Phase, PhaseTimes, Stopwatch};
 use std::collections::{HashMap, VecDeque};
@@ -173,29 +180,75 @@ pub struct ThreadState {
     register: Pathways<Vec<(u32, u64)>>,
 }
 
+/// Accumulate one spike's connection group into `ring`, one delay
+/// bucket at a time: every bucket is a single
+/// [`RingBuffer::accumulate_row`] call, so the writes walk one slot row
+/// sequentially (the access pattern the delay-bucketed [`ConnTable`]
+/// layout exists for).  The causality `debug_assert` is the delivery
+/// deadline check the overlapped comm mode relies on.
+#[inline]
+fn deliver_conns(
+    ring: &mut RingBuffer,
+    conns: ConnSlice<'_>,
+    source: Gid,
+    cycle: u32,
+    first_step: u64,
+) {
+    for (delay, targets, weights) in conns.delay_runs() {
+        let arrive = cycle as u64 + delay as u64;
+        debug_assert!(
+            arrive >= first_step,
+            "spike from {source} missed its delivery deadline: arrives \
+             at step {arrive} < current step {first_step} (its \
+             ring-buffer row was already consumed)"
+        );
+        ring.accumulate_row(arrive, targets, weights);
+    }
+}
+
 impl ThreadState {
     /// Deliver a `(source, step)`-sorted spike batch through this
-    /// thread's tables of the given pathway into its ring buffer.
+    /// thread's tables of the given pathway into its ring buffer, with
+    /// a per-spike table lookup — the legacy broadcast delivery of the
+    /// channel runtime, kept as the A/B baseline the parallel receive
+    /// path is measured against.
     fn deliver_sorted(
         &mut self,
         long_range: bool,
         batch: &[SpikeMsg],
         first_step: u64,
     ) {
-        let table = self.conn.get(long_range);
+        let ThreadState { conn, ring, .. } = self;
+        let table = conn.get(long_range);
         for msg in batch {
-            for c in table.lookup(msg.source) {
-                let arrive = msg.cycle as u64 + c.delay_steps as u64;
-                debug_assert!(
-                    arrive >= first_step,
-                    "spike from {} missed its delivery deadline: arrives \
-                     at step {arrive} < current step {first_step} (its \
-                     ring-buffer row was already consumed)",
-                    msg.source
-                );
-                self.ring.add(arrive, c.target_local, c.weight);
-            }
+            deliver_conns(
+                ring,
+                table.lookup(msg.source),
+                msg.source,
+                msg.cycle,
+                first_step,
+            );
         }
+    }
+
+    /// Deliver one routed spike: the connection group was already
+    /// resolved by [`SourceShards`] during bucketing, so this is a
+    /// direct CSR row access — no search on the hot path.
+    #[inline]
+    fn deliver_routed(
+        &mut self,
+        long_range: bool,
+        sp: RoutedSpike,
+        first_step: u64,
+    ) {
+        let ThreadState { conn, ring, .. } = self;
+        deliver_conns(
+            ring,
+            conn.get(long_range).group(sp.group as usize),
+            sp.source,
+            sp.cycle,
+            first_step,
+        );
     }
 
     /// Advance this thread's neurons through one cycle of `steps`
@@ -323,6 +376,13 @@ pub struct RankResult {
     pub n_conns_long: usize,
     /// Local neurons (real, not ghosts).
     pub n_neurons: usize,
+    /// Residual [`RingBuffer::pending_total`] per virtual thread after
+    /// the last cycle — input that was delivered but never consumed.
+    /// Exactly 0.0 when every delay fits inside the simulated horizon;
+    /// the conservation test pins delays to make that so, and the
+    /// equivalence tests assert the vector is bit-identical across exec
+    /// and comm modes either way.
+    pub ring_pending: Vec<f64>,
 }
 
 /// Commands from the rank's coordinator to one pool worker.  Buffers
@@ -360,6 +420,7 @@ enum Reply {
         n_conns_short: usize,
         n_conns_long: usize,
         n_neurons: usize,
+        ring_pending: f64,
     },
 }
 
@@ -409,18 +470,12 @@ fn worker_loop(
                     n_conns_short: th.conn.short.n_connections(),
                     n_conns_long: th.conn.long.n_connections(),
                     n_neurons: th.gids.len(),
+                    ring_pending: th.ring.pending_total(),
                 });
                 return;
             }
         }
     }
-}
-
-/// The canonical delivery order — (source, emission step).  Sequential
-/// and pooled execution both sort incoming batches with this exact key;
-/// sharing the helper is what keeps the two paths bit-identical.
-fn sort_canonical(batch: &mut [SpikeMsg]) {
-    batch.sort_unstable_by_key(|msg| (msg.source, msg.cycle));
 }
 
 fn expect_done(rx: &Receiver<Reply>) {
@@ -431,7 +486,10 @@ fn expect_done(rx: &Receiver<Reply>) {
 }
 
 /// Sort `buf` canonically, broadcast it to all workers for delivery, and
-/// reclaim the buffer for the next round once every worker is done.
+/// reclaim the buffer for the next round once every worker is done —
+/// the legacy coordinator-sorted delivery (the "old" arm of the
+/// delivery A/B; the barrier runtime replaces it with the cooperative
+/// bucket/merge protocol).
 fn pooled_deliver(
     buf: &mut Vec<SpikeMsg>,
     long_range: bool,
@@ -466,7 +524,7 @@ fn pooled_deliver(
 
 /// Coordinator↔worker hand-off slot of the barrier runtime.  The mutex
 /// is never contended: the barriers partition time so the coordinator
-/// touches it only between *collocate done* and the next *queues ready*,
+/// touches it only between *collocate done* and the next *runs ready*,
 /// and the owning worker only in between.
 struct WorkerSlot {
     data: Mutex<SlotData>,
@@ -476,11 +534,13 @@ struct WorkerSlot {
 /// cycles (cleared, never dropped).
 #[derive(Default)]
 struct SlotData {
-    /// Coordinator → worker: this thread's share of the received
-    /// short-pathway batch, in canonical `(source, cycle)` order.
-    deliver_short: Vec<SpikeMsg>,
-    /// Coordinator → worker: share of the long-pathway batch.
-    deliver_long: Vec<SpikeMsg>,
+    /// Coordinator → worker: this worker's share of the received
+    /// short-pathway runs (each run canonically sortable on its own).
+    /// The worker clears them during the bucket phase; the coordinator
+    /// reclaims the cleared buffers into the [`RunSet`] pool.
+    runs_short: Vec<Vec<SpikeMsg>>,
+    /// Coordinator → worker: share of the long-pathway runs.
+    runs_long: Vec<Vec<SpikeMsg>>,
     /// Worker → coordinator: local-pathway collocation output, one
     /// buffer per rank of the area group (a single buffer for the
     /// degenerate one-rank group).
@@ -489,33 +549,17 @@ struct SlotData {
     global_out: Vec<Vec<SpikeMsg>>,
 }
 
-/// Sort `buf` canonically and fan it out into the per-thread delivery
-/// queues of exactly the threads owning connections from each spike's
-/// source (`shards`).  Because routing preserves the canonical order,
-/// each thread sees the same subsequence it would extract from a full
-/// batch scan — which keeps the runtime bit-identical to the sequential
-/// schedule.  `buf` is cleared with its capacity kept.
-fn route_sharded(
-    shards: &SourceShards,
-    buf: &mut Vec<SpikeMsg>,
-    queues: &mut [MutexGuard<'_, SlotData>],
-    long_slot: bool,
-) {
-    if buf.is_empty() {
-        return;
-    }
-    sort_canonical(buf);
-    for msg in buf.iter() {
-        for &t in shards.lookup(msg.source) {
-            let d = &mut *queues[t as usize];
-            if long_slot {
-                d.deliver_long.push(*msg);
-            } else {
-                d.deliver_short.push(*msg);
-            }
-        }
-    }
-    buf.clear();
+/// One producer→consumer cell of the T×T bucket grid: the routed
+/// spikes producer `w` scattered for consumer `t`, per pathway, each
+/// in canonical order (a merge of canonically sorted runs scattered in
+/// order stays sorted).  Buffers are recycled across cycles.  The
+/// mutexes are never contended — the bucket phase locks whole rows
+/// (disjoint per producer), the merge phase whole columns (disjoint
+/// per consumer), and a barrier separates the phases.
+#[derive(Default)]
+struct BucketCell {
+    short: Vec<RoutedSpike>,
+    long: Vec<RoutedSpike>,
 }
 
 /// Aborts the process if dropped while panicking.  [`Barrier`] has no
@@ -538,31 +582,77 @@ impl Drop for AbortOnPanic {
 }
 
 /// Body of one persistent barrier-runtime worker (see the module docs
-/// for the phase protocol).  Owns its [`ThreadState`] for the whole run
-/// and returns its recorded spikes and table statistics on join.
+/// for the phase protocol).  Owns [`ThreadState`] number `me` for the
+/// whole run; participates in the cooperative bucket/merge receive as
+/// producer `me` (grid row) and consumer `me` (grid column).  Returns
+/// its recorded spikes, table statistics and residual ring mass on
+/// join.
 #[allow(clippy::too_many_arguments)]
 fn barrier_worker(
+    me: usize,
     mut th: ThreadState,
     updater: &Updater,
     slot: &WorkerSlot,
+    grid: &[Vec<Mutex<BucketCell>>],
+    shards: &Pathways<SourceShards>,
     barrier: &Barrier,
     s_cycles: u64,
     steps: u64,
     dual: bool,
     group_start: u16,
     record_spikes: bool,
-) -> (Vec<(u64, Gid)>, usize, usize, usize) {
+) -> (Vec<(u64, Gid)>, usize, usize, usize, f64) {
     let _abort_guard = AbortOnPanic;
     let mut spikes: Vec<(u64, Gid)> = Vec::new();
+    let mut heads: Vec<usize> = Vec::new();
     for s in 0..s_cycles {
         let first_step = s * steps;
-        barrier.wait(); // queues ready
+        barrier.wait(); // runs ready
         let mut guard = slot.data.lock().unwrap();
         let d = &mut *guard;
-        th.deliver_sorted(false, &d.deliver_short, first_step);
-        d.deliver_short.clear();
-        th.deliver_sorted(dual, &d.deliver_long, first_step);
-        d.deliver_long.clear();
+        // ---- bucket phase: sort + merge own runs, scatter into grid
+        // row `me` (locking the row; rows are disjoint across workers)
+        {
+            let mut row: Vec<MutexGuard<'_, BucketCell>> =
+                grid[me].iter().map(|c| c.lock().unwrap()).collect();
+            bucket_runs(
+                &shards.short,
+                &mut d.runs_short,
+                &mut heads,
+                |t, sp| row[t as usize].short.push(sp),
+            );
+            bucket_runs(
+                shards.get(dual),
+                &mut d.runs_long,
+                &mut heads,
+                |t, sp| row[t as usize].long.push(sp),
+            );
+        }
+        barrier.wait(); // buckets ready
+        // ---- merge phase: k-way merge grid column `me` into the ring
+        // (locking the column; columns are disjoint across workers)
+        {
+            let mut col: Vec<MutexGuard<'_, BucketCell>> =
+                grid.iter().map(|p| p[me].lock().unwrap()).collect();
+            {
+                let views: Vec<&[RoutedSpike]> =
+                    col.iter().map(|c| c.short.as_slice()).collect();
+                merge_routed(&views, &mut heads, |sp| {
+                    th.deliver_routed(false, sp, first_step)
+                });
+            }
+            {
+                let views: Vec<&[RoutedSpike]> =
+                    col.iter().map(|c| c.long.as_slice()).collect();
+                merge_routed(&views, &mut heads, |sp| {
+                    th.deliver_routed(dual, sp, first_step)
+                });
+            }
+            for c in col.iter_mut() {
+                c.short.clear();
+                c.long.clear();
+            }
+        }
         barrier.wait(); // deliver done
         th.update_cycle(
             updater,
@@ -582,11 +672,13 @@ fn barrier_worker(
         drop(guard);
         barrier.wait(); // collocate done
     }
+    let ring_pending = th.ring.pending_total();
     (
         spikes,
         th.conn.short.n_connections(),
         th.conn.long.n_connections(),
         th.gids.len(),
+        ring_pending,
     )
 }
 
@@ -626,8 +718,8 @@ pub struct RankState {
     /// per rank, local tier degenerates to the intra-rank swap).
     group_size: usize,
     threads: Vec<ThreadState>,
-    /// Source → owning-threads routing index per pathway (thread-sharded
-    /// delivery of the barrier runtime).
+    /// Source → (owning thread, connection group) routing index per
+    /// pathway; carries the rank's one dense source index per pathway.
     shards: Pathways<SourceShards>,
     /// gid -> (thread, local index) for neurons hosted here.
     local_index: HashMap<Gid, (u16, u32)>,
@@ -636,8 +728,12 @@ pub struct RankState {
     /// Per-group-member send buffers of the local tier (used instead of
     /// `local_send` when the group spans more than one rank).
     local_send_group: Vec<Vec<SpikeMsg>>,
-    recv_short: Vec<SpikeMsg>,
-    recv_long: Vec<SpikeMsg>,
+    /// The received-but-undelivered runs per pathway — the one delivery
+    /// input all exec modes and both comm modes share.
+    recv: Pathways<RunSet>,
+    /// Recycled intermediate of the singleton local tier's buffer swap
+    /// (the swap target, absorbed into `recv.short` as one run).
+    local_swap: Vec<SpikeMsg>,
     /// Recycled per-source transport buffers of the global exchange.
     recv_global: Vec<Vec<SpikeMsg>>,
     /// Recycled per-source transport buffers of the local-tier group
@@ -647,6 +743,11 @@ pub struct RankState {
     /// (one set checked out per posted exchange, returned at its
     /// completion — no steady-state allocation at any pipeline depth).
     recv_pool: Vec<Vec<Vec<SpikeMsg>>>,
+    /// Per-thread routed-spike buckets of the sequential receive path
+    /// (the barrier runtime uses the shared grid instead).
+    seq_buckets: Pathways<Vec<Vec<RoutedSpike>>>,
+    /// Scratch head indices for the k-way merges (sequential path).
+    merge_heads: Vec<usize>,
     record_spikes: bool,
     spikes: Vec<(u64, Gid)>,
 }
@@ -723,21 +824,21 @@ impl RankState {
                 short: ConnTable::build(entries_short),
                 long: ConnTable::build(entries_long),
             };
-            // horizon: largest write-ahead (max delay) plus the epoch of
-            // lumped delivery.  This also covers the in-flight window of
-            // overlapped exchanges at *any* pipeline depth: delaying
-            // completion — by up to an epoch at depth 1, up to depth·D
-            // cycles in a deeper pipeline — only *advances* the read
-            // cursor past already-consumed rows, so the write-ahead
-            // distance `arrive - first_step` at delivery time shrinks
-            // (never grows) relative to delivering at the boundary — no
-            // extra rows are needed for deeper rings, and the deadline
-            // debug_assert in `deliver_sorted` would catch any spike
-            // whose row was already consumed.
-            let n_slots = max_delay as usize
+            // write-ahead horizon: the largest `arrive - first_step` any
+            // delivery can produce — max delay plus the epoch of lumped
+            // delivery (+1 slack for the boundary cycle's own steps).
+            // This also covers the in-flight window of overlapped
+            // exchanges at *any* pipeline depth: delaying completion
+            // only *advances* the read cursor past already-consumed
+            // rows, so the write-ahead distance at delivery time shrinks
+            // (never grows) relative to delivering at the boundary.
+            // `with_horizon` asserts the sizing instead of trusting it;
+            // the deadline debug_assert in `deliver_conns` catches the
+            // other direction (a row consumed before its spike lands).
+            let horizon = max_delay as usize
                 + (epoch_cycles * steps_per_cycle) as usize
-                + 2;
-            let ring = RingBuffer::new(gids.len(), n_slots);
+                + 1;
+            let ring = RingBuffer::with_horizon(gids.len(), horizon + 1, horizon);
             let mut block = NeuronBlock::build(&gids, spec.h_ms, |g| {
                 spec.areas[spec.area_of(g)].neuron
             });
@@ -763,7 +864,12 @@ impl RankState {
         let mut threads = built_threads;
 
         // --- collective target-table construction: tell each source's
-        // host rank that we have targets of it (pathway encoded in cycle)
+        // host rank that we have targets of it (pathway encoded in
+        // cycle).  The batch goes through the one canonical sort helper
+        // (`sort_run`): (source, pathway) keys are unique per dest —
+        // they come out of a set — which `sort_run` debug_asserts, so
+        // the unstable sort cannot reorder equals differently than the
+        // stable sort it replaced.
         let mut send: Vec<Vec<SpikeMsg>> = notify
             .into_iter()
             .map(|set| {
@@ -774,7 +880,7 @@ impl RankState {
                         cycle: long as u32,
                     })
                     .collect();
-                v.sort_by_key(|msg| (msg.source, msg.cycle));
+                sort_run(&mut v);
                 v
             })
             .collect();
@@ -798,8 +904,9 @@ impl RankState {
             };
         }
 
-        // rank-level source → threads routing index for thread-sharded
-        // delivery (one per pathway, merged from the per-thread CSRs)
+        // rank-level source → (thread, group) routing index for the
+        // parallel receive path (one per pathway, merged from the
+        // per-thread CSRs; holds the rank's one dense index per pathway)
         let shards = Pathways {
             short: SourceShards::build(threads.iter().map(|t| &t.conn.short)),
             long: SourceShards::build(threads.iter().map(|t| &t.conn.long)),
@@ -808,6 +915,7 @@ impl RankState {
         let group = placement.group_ranks(rank);
         let (group_start, group_size) = (group.start, group.len());
 
+        let n_threads = threads.len();
         RankState {
             rank,
             strategy,
@@ -827,11 +935,16 @@ impl RankState {
             global_send: (0..m).map(|_| Vec::new()).collect(),
             local_send: Vec::new(),
             local_send_group: (0..group_size).map(|_| Vec::new()).collect(),
-            recv_short: Vec::new(),
-            recv_long: Vec::new(),
+            recv: Pathways::default(),
+            local_swap: Vec::new(),
             recv_global: Vec::new(),
             recv_local_group: Vec::new(),
             recv_pool: Vec::new(),
+            seq_buckets: Pathways {
+                short: (0..n_threads).map(|_| Vec::new()).collect(),
+                long: (0..n_threads).map(|_| Vec::new()).collect(),
+            },
+            merge_heads: Vec::new(),
             record_spikes,
             spikes: Vec::new(),
         }
@@ -841,22 +954,36 @@ impl RankState {
         self.local_index.len()
     }
 
-    /// Sort `buf` canonically and deliver it on every virtual thread in
-    /// place, then clear it (keeping capacity for the next round).
-    fn deliver_all(
-        threads: &mut [ThreadState],
-        buf: &mut Vec<SpikeMsg>,
-        long_range: bool,
-        first_step: u64,
-    ) {
-        if buf.is_empty() {
-            return;
+    /// The sequential receive path: for each pathway slot, sort + merge
+    /// the pending runs, scatter into per-thread routed buckets, then
+    /// deliver each thread's bucket in canonical order — the same
+    /// bucket/merge code the barrier workers run cooperatively, on one
+    /// OS thread (the reference schedule for bit-identity).
+    fn deliver_runs_sequential(&mut self, dual: bool, first_step: u64) {
+        let shards = &self.shards;
+        let heads = &mut self.merge_heads;
+        let threads = &mut self.threads;
+        let recv = &mut self.recv;
+        let buckets = &mut self.seq_buckets;
+        for long_slot in [false, true] {
+            let set = recv.get_mut(long_slot);
+            if set.is_empty() {
+                continue;
+            }
+            let bs = buckets.get_mut(long_slot);
+            let sh = if long_slot { shards.get(dual) } else { &shards.short };
+            bucket_runs(sh, set.runs_mut(), heads, |t, sp| {
+                bs[t as usize].push(sp)
+            });
+            set.reclaim();
+            let long_range = long_slot && dual;
+            for (t, th) in threads.iter_mut().enumerate() {
+                for &sp in &bs[t] {
+                    th.deliver_routed(long_range, sp, first_step);
+                }
+                bs[t].clear();
+            }
         }
-        sort_canonical(buf);
-        for th in threads.iter_mut() {
-            th.deliver_sorted(long_range, buf, first_step);
-        }
-        buf.clear();
     }
 
     /// Cycle before whose deliver phase an exchange posted at the end of
@@ -900,9 +1027,9 @@ impl RankState {
     /// blocking — then complete (FIFO) every exchange whose delivery
     /// deadline has arrived (or all of them with `force`, for the final
     /// exchanges whose spikes fall beyond the simulated horizon),
-    /// appending their spikes to `recv_long` exactly as the blocking
-    /// path does.  Completion-side wait is charged to `Synchronize`,
-    /// drains to `DataExchange`.
+    /// absorbing their per-source buffers as runs into `recv.long`
+    /// exactly as the blocking path does.  Completion-side wait is
+    /// charged to `Synchronize`, drains to `DataExchange`.
     fn service_exchanges<P: Pending>(
         &mut self,
         inflight: &mut VecDeque<InFlight<P>>,
@@ -934,24 +1061,14 @@ impl RankState {
             let timing = pending.complete(&mut recv);
             phase_times.add(Phase::Synchronize, timing.wait_secs);
             phase_times.add(Phase::DataExchange, timing.drain_secs);
-            // append (two pipelined exchanges may reach their deadlines
-            // before the same deliver phase transiently at startup);
-            // recv_long is the one delivery input both comm modes share
+            // absorb as runs (two pipelined exchanges may reach their
+            // deadlines before the same deliver phase transiently at
+            // startup — the RunSet simply accumulates both); recv.long
+            // is the one delivery input both comm modes share
             for buf in &mut recv {
-                self.recv_long.extend_from_slice(buf);
-                buf.clear();
+                self.recv.long.push_run(buf);
             }
             self.recv_pool.push(recv);
-        }
-    }
-
-    /// Flatten the per-source receive buffers into `recv_long` — the one
-    /// drain both comm modes share, so their delivery input is built by
-    /// the same code (part of the bit-identity argument).
-    fn flatten_recv_global(&mut self) {
-        self.recv_long.clear();
-        for buf in &self.recv_global {
-            self.recv_long.extend_from_slice(buf);
         }
     }
 
@@ -1001,8 +1118,10 @@ impl RankState {
     /// several ranks, the intra-rank buffer swap for a singleton group —
     /// and the global exchange every `epoch_cycles`-th cycle on the
     /// global communicator — blocking, or posted split-phase into the
-    /// in-flight pipeline and completed later by `service_exchanges` —
-    /// with all buffers recycled through the transport.
+    /// in-flight pipeline and completed later by `service_exchanges`.
+    /// Every received per-sender buffer becomes one [`RunSet`] run via
+    /// the swap of `push_run`, so transport capacity keeps circulating
+    /// (no flattening copy, no per-cycle allocation).
     fn communicate<T: SplitTransport>(
         &mut self,
         comm: &T,
@@ -1027,20 +1146,19 @@ impl RankState {
                 );
                 phase_times.add(Phase::Synchronize, timing.sync_secs);
                 phase_times.add(Phase::DataExchange, timing.data_secs);
-                // flatten into recv_short — the one delivery input the
-                // singleton and grouped local tiers share
-                self.recv_short.clear();
+                // absorb each group member's buffer as one run — the
+                // per-member canonical runs the parallel merge consumes
                 for buf in &mut self.recv_local_group {
-                    self.recv_short.extend_from_slice(buf);
-                    buf.clear();
+                    self.recv.short.push_run(buf);
                 }
             } else {
                 // singleton group: the local tier degenerates to the
                 // intra-rank buffer swap (no synchronization)
                 local.local_swap_into(
                     &mut self.local_send,
-                    &mut self.recv_short,
+                    &mut self.local_swap,
                 );
+                self.recv.short.push_run(&mut self.local_swap);
             }
         }
         if (s + 1) % self.epoch_cycles == 0 {
@@ -1052,7 +1170,9 @@ impl RankState {
                     );
                     phase_times.add(Phase::Synchronize, timing.sync_secs);
                     phase_times.add(Phase::DataExchange, timing.data_secs);
-                    self.flatten_recv_global();
+                    for buf in &mut self.recv_global {
+                        self.recv.long.push_run(buf);
+                    }
                 }
                 CommMode::Overlap => {
                     debug_assert!(
@@ -1146,18 +1266,7 @@ impl RankState {
             let mut cycle_secs = 0.0;
 
             // ---- deliver -------------------------------------------------
-            Self::deliver_all(
-                &mut self.threads,
-                &mut self.recv_short,
-                false,
-                first_step,
-            );
-            Self::deliver_all(
-                &mut self.threads,
-                &mut self.recv_long,
-                dual,
-                first_step,
-            );
+            self.deliver_runs_sequential(dual, first_step);
             cycle_secs += sw.charge(&mut phase_times, Phase::Deliver);
 
             // ---- update --------------------------------------------------
@@ -1197,10 +1306,12 @@ impl RankState {
         self.service_exchanges(&mut inflight, s_cycles, true, &mut phase_times);
 
         let (mut n_short, mut n_long, mut n_neurons) = (0usize, 0usize, 0usize);
+        let mut ring_pending = Vec::with_capacity(self.threads.len());
         for th in &self.threads {
             n_short += th.conn.short.n_connections();
             n_long += th.conn.long.n_connections();
             n_neurons += th.gids.len();
+            ring_pending.push(th.ring.pending_total());
         }
         RankResult {
             rank: self.rank,
@@ -1210,16 +1321,17 @@ impl RankState {
             n_conns_short: n_short,
             n_conns_long: n_long,
             n_neurons,
+            ring_pending,
         }
     }
 
     /// The persistent barrier-synced worker runtime (the default pooled
     /// path; protocol in the module docs): workers spawned once, phases
-    /// separated by a reusable [`Barrier`], received batches routed into
-    /// per-thread queues by [`route_sharded`] so each worker only walks
-    /// spikes its connection tables can consume.  The coordinator keeps
-    /// the communicate step and all ordering decisions, so results match
-    /// the sequential schedule bit-exactly.
+    /// separated by a reusable [`Barrier`], received runs distributed
+    /// round-robin and bucketed/merged *cooperatively by the workers*
+    /// through the T×T grid — the coordinator never sorts or scans a
+    /// spike.  The per-thread merged delivery order equals the
+    /// sequential schedule's, so results match bit-exactly.
     fn run_barrier<T: SplitTransport>(
         mut self,
         comm: &T,
@@ -1252,21 +1364,38 @@ impl RankState {
                 }),
             })
             .collect();
+        // the T×T bucket grid of the cooperative receive: row = producer
+        // (bucket phase), column = consumer (merge phase)
+        let grid: Vec<Vec<Mutex<BucketCell>>> = (0..n_workers)
+            .map(|_| {
+                (0..n_workers)
+                    .map(|_| Mutex::new(BucketCell::default()))
+                    .collect()
+            })
+            .collect();
+        // workers borrow the routing index for the whole scope; the
+        // coordinator does not route, so it lends the field out
+        let shards = std::mem::take(&mut self.shards);
         let barrier = Barrier::new(n_workers + 1);
 
-        let (spikes, n_short, n_long, n_neurons) = std::thread::scope(
-            |scope| {
+        let (spikes, n_short, n_long, n_neurons, ring_pending) =
+            std::thread::scope(|scope| {
                 let handles: Vec<_> = worker_states
                     .into_iter()
                     .enumerate()
                     .map(|(i, th)| {
                         let slot = &slots[i];
                         let barrier = &barrier;
+                        let grid = &grid;
+                        let shards = &shards;
                         scope.spawn(move || {
                             barrier_worker(
+                                i,
                                 th,
                                 updater,
                                 slot,
+                                grid,
+                                shards,
                                 barrier,
                                 s_cycles,
                                 steps,
@@ -1282,7 +1411,7 @@ impl RankState {
 
                 for s in 0..s_cycles {
                     // drain early deposits and complete due exchanges
-                    // before routing
+                    // before handing the runs out
                     self.service_exchanges(
                         &mut inflight,
                         s,
@@ -1292,27 +1421,26 @@ impl RankState {
                     let mut sw = Stopwatch::start();
                     let mut cycle_secs = 0.0;
 
-                    // ---- deliver: route once, then workers drain ---------
+                    // ---- deliver: distribute runs, workers bucket+merge --
                     {
                         let mut queues: Vec<MutexGuard<'_, SlotData>> =
                             slots
                                 .iter()
                                 .map(|sl| sl.data.lock().unwrap())
                                 .collect();
-                        route_sharded(
-                            &self.shards.short,
-                            &mut self.recv_short,
-                            &mut queues,
-                            false,
-                        );
-                        route_sharded(
-                            self.shards.get(dual),
-                            &mut self.recv_long,
-                            &mut queues,
-                            true,
-                        );
+                        for (i, run) in
+                            self.recv.short.drain_runs().enumerate()
+                        {
+                            queues[i % n_workers].runs_short.push(run);
+                        }
+                        for (i, run) in
+                            self.recv.long.drain_runs().enumerate()
+                        {
+                            queues[i % n_workers].runs_long.push(run);
+                        }
                     }
-                    barrier.wait(); // queues ready
+                    barrier.wait(); // runs ready
+                    barrier.wait(); // buckets ready
                     barrier.wait(); // deliver done
                     cycle_secs += sw.charge(&mut phase_times, Phase::Deliver);
 
@@ -1324,10 +1452,18 @@ impl RankState {
                     barrier.wait(); // collocate done
                     // drain in virtual-thread order: this concatenation is
                     // the ordering decision that matches the sequential
-                    // schedule
+                    // schedule.  Also reclaim the cleared run buffers the
+                    // workers consumed, so their capacity circulates back
+                    // through the RunSet pools.
                     for sl in &slots {
                         let mut guard = sl.data.lock().unwrap();
                         let d = &mut *guard;
+                        for run in d.runs_short.drain(..) {
+                            self.recv.short.recycle(run);
+                        }
+                        for run in d.runs_long.drain(..) {
+                            self.recv.long.recycle(run);
+                        }
                         self.merge_local_out(&mut d.local_out);
                         for (dest, part) in
                             d.global_out.iter_mut().enumerate()
@@ -1361,17 +1497,18 @@ impl RankState {
                 let mut spikes = std::mem::take(&mut self.spikes);
                 let (mut n_short, mut n_long, mut n_neurons) =
                     (0usize, 0usize, 0usize);
+                let mut ring_pending = Vec::with_capacity(handles.len());
                 for h in handles {
-                    let (worker_spikes, s_, l_, n_) =
+                    let (worker_spikes, s_, l_, n_, pending) =
                         h.join().expect("barrier worker panicked");
                     spikes.extend(worker_spikes);
                     n_short += s_;
                     n_long += l_;
                     n_neurons += n_;
+                    ring_pending.push(pending);
                 }
-                (spikes, n_short, n_long, n_neurons)
-            },
-        );
+                (spikes, n_short, n_long, n_neurons, ring_pending)
+            });
 
         RankResult {
             rank: self.rank,
@@ -1381,15 +1518,18 @@ impl RankState {
             n_conns_short: n_short,
             n_conns_long: n_long,
             n_neurons,
+            ring_pending,
         }
     }
 
     /// Virtual threads on dedicated worker OS threads: one scoped worker
     /// per [`ThreadState`], phase-stepped by command/reply channels — the
     /// PR 1 runtime, kept selectable for A/B comparison against the
-    /// barrier runtime.  The coordinator (this rank's OS thread) keeps
-    /// the communicate step and all ordering decisions, so results match
-    /// the sequential schedule.
+    /// barrier runtime.  Delivery here is the **old** receive side: the
+    /// runs are flattened into one batch, canonically sorted on the
+    /// coordinator, and broadcast to every worker, each of which walks
+    /// the whole batch with per-spike table lookups — the baseline the
+    /// parallel bucket/merge path is benchmarked against.
     fn run_pooled_channels<T: SplitTransport>(
         mut self,
         comm: &T,
@@ -1413,8 +1553,8 @@ impl RankState {
             0
         });
 
-        let (spikes, n_short, n_long, n_neurons) = std::thread::scope(
-            |scope| {
+        let (spikes, n_short, n_long, n_neurons, ring_pending) =
+            std::thread::scope(|scope| {
                 let mut cmd_txs = Vec::with_capacity(n_workers);
                 let mut reply_rxs = Vec::with_capacity(n_workers);
                 for th in worker_states {
@@ -1439,6 +1579,9 @@ impl RankState {
                         )
                     })
                     .collect();
+                // flattened delivery batches of the legacy path,
+                // recycled across cycles
+                let mut flat: Pathways<Vec<SpikeMsg>> = Pathways::default();
                 let mut inflight: VecDeque<InFlight<T::Pending>> =
                     VecDeque::new();
 
@@ -1456,15 +1599,17 @@ impl RankState {
                     let mut cycle_secs = 0.0;
 
                     // ---- deliver -----------------------------------------
+                    self.recv.short.flatten_into(&mut flat.short);
                     pooled_deliver(
-                        &mut self.recv_short,
+                        &mut flat.short,
                         false,
                         first_step,
                         &cmd_txs,
                         &reply_rxs,
                     );
+                    self.recv.long.flatten_into(&mut flat.long);
                     pooled_deliver(
-                        &mut self.recv_long,
+                        &mut flat.long,
                         dual,
                         first_step,
                         &cmd_txs,
@@ -1545,6 +1690,7 @@ impl RankState {
                 let mut spikes = std::mem::take(&mut self.spikes);
                 let (mut n_short, mut n_long, mut n_neurons) =
                     (0usize, 0usize, 0usize);
+                let mut ring_pending = Vec::with_capacity(n_workers);
                 for rx in &reply_rxs {
                     match rx.recv().expect("pool worker died") {
                         Reply::Finished {
@@ -1552,18 +1698,19 @@ impl RankState {
                             n_conns_short,
                             n_conns_long,
                             n_neurons: n,
+                            ring_pending: pending,
                         } => {
                             spikes.extend(worker_spikes);
                             n_short += n_conns_short;
                             n_long += n_conns_long;
                             n_neurons += n;
+                            ring_pending.push(pending);
                         }
                         _ => unreachable!("unexpected finish reply"),
                     }
                 }
-                (spikes, n_short, n_long, n_neurons)
-            },
-        );
+                (spikes, n_short, n_long, n_neurons, ring_pending)
+            });
 
         RankResult {
             rank: self.rank,
@@ -1573,6 +1720,7 @@ impl RankState {
             n_conns_short: n_short,
             n_conns_long: n_long,
             n_neurons,
+            ring_pending,
         }
     }
 }

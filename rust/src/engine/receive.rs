@@ -1,0 +1,484 @@
+//! The parallel receive path: sorting, routing and merging of incoming
+//! spike batches (arXiv 2109.11358's parallel spike sorting, adapted to
+//! this engine's thread-sharded delivery).
+//!
+//! Incoming spikes arrive as **runs** — the per-sender receive buffers
+//! of the transport, one per (exchange, source rank).  Spike compression
+//! emits one message per (source neuron, target rank) per emission step,
+//! and every source GID is hosted by exactly one rank, so the canonical
+//! key `(source, cycle)` is **globally unique across all runs of a
+//! deliver phase**.  That uniqueness is what makes the whole scheme
+//! exact rather than approximate:
+//!
+//! 1. each run is sorted canonically on its own ([`sort_run`] — workers
+//!    do this in parallel, replacing the coordinator's single
+//!    `sort_unstable` over the flattened batch);
+//! 2. a k-way merge of canonically sorted runs with unique keys produces
+//!    *the* canonical order — bit-identical to sorting the flattened
+//!    batch, with no reliance on f64 order-independence across modes;
+//! 3. scattering a canonically ordered stream into per-thread buckets
+//!    ([`bucket_runs`]) keeps every bucket canonically ordered, so the
+//!    consuming thread's merge over its buckets ([`merge_routed`]) again
+//!    yields the canonical order.
+//!
+//! Uniqueness is *asserted* (`debug_assert`), not assumed: a duplicate
+//! key would make unstable sorting and merge tie-breaking
+//! order-ambiguous, so any future change that breaks compression fails
+//! loudly in debug builds.
+//!
+//! Routing resolves each spike through [`SourceShards`] to
+//! `(owning thread, connection-group index)` pairs — the consuming
+//! thread receives [`RoutedSpike`]s whose `group` field already names
+//! its connection-table row, so the per-spike table search disappears
+//! from the delivery hot loop.
+//!
+//! [`RunSet`] owns the run buffers between communicate and deliver and
+//! recycles them through an internal pool, preserving the transport
+//! layer's zero-steady-state-allocation contract: capacity stolen from
+//! a transport receive buffer is returned to it from the pool on the
+//! next exchange.
+
+use crate::comm::SpikeMsg;
+use crate::network::Gid;
+use crate::tables::SourceShards;
+
+/// A received spike routed to one consuming thread: the canonical key
+/// plus the pre-resolved connection-group index in that thread's table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoutedSpike {
+    pub source: Gid,
+    pub cycle: u32,
+    /// Group index in the consuming thread's `ConnTable` of the pathway
+    /// this spike was routed through.
+    pub group: u32,
+}
+
+/// The canonical delivery order — (source, emission step).  Every batch
+/// sort in the engine goes through [`sort_canonical`] with this exact
+/// key; sharing the helper is what keeps all execution paths
+/// bit-identical.
+#[inline]
+pub fn canonical_key(msg: &SpikeMsg) -> (Gid, u32) {
+    (msg.source, msg.cycle)
+}
+
+/// Sort a batch into canonical order.  Unstable: safe because canonical
+/// keys are unique wherever the engine sorts (asserted by [`sort_run`]
+/// on the receive path and by the target-table notify batch in
+/// `engine::rank`).
+pub fn sort_canonical(batch: &mut [SpikeMsg]) {
+    batch.sort_unstable_by_key(canonical_key);
+}
+
+/// Sort one receive run canonically and assert key uniqueness — the
+/// precondition for unstable sorting and for the merge in
+/// [`bucket_runs`] being deterministic.
+pub fn sort_run(run: &mut [SpikeMsg]) {
+    sort_canonical(run);
+    debug_assert!(
+        run.windows(2)
+            .all(|w| canonical_key(&w[0]) < canonical_key(&w[1])),
+        "duplicate (source, cycle) key within a receive run — spike \
+         compression guarantees one message per (source, target rank) \
+         per step, so a duplicate means compression is broken and \
+         unstable canonical sorting is no longer order-safe"
+    );
+}
+
+/// Sort every run, k-way merge them into the canonical stream, and
+/// scatter each spike to its owning threads via `shards`: `push(t, sp)`
+/// is called for every (spike, owning thread) pair, in canonical spike
+/// order per thread.  All runs are cleared (capacity kept) — the caller
+/// recycles the buffers.  `heads` is caller-owned scratch so the merge
+/// allocates nothing in steady state.
+pub fn bucket_runs(
+    shards: &SourceShards,
+    runs: &mut [Vec<SpikeMsg>],
+    heads: &mut Vec<usize>,
+    mut push: impl FnMut(u16, RoutedSpike),
+) {
+    for run in runs.iter_mut() {
+        sort_run(run);
+    }
+    {
+        let mut scatter = |msg: SpikeMsg| {
+            let hit = shards.lookup(msg.source);
+            for (&t, &g) in hit.threads.iter().zip(hit.groups) {
+                push(
+                    t,
+                    RoutedSpike {
+                        source: msg.source,
+                        cycle: msg.cycle,
+                        group: g,
+                    },
+                );
+            }
+        };
+        match runs.len() {
+            0 => {}
+            // single sorted run: already the canonical stream
+            1 => {
+                for &msg in runs[0].iter() {
+                    scatter(msg);
+                }
+            }
+            _ => {
+                heads.clear();
+                heads.resize(runs.len(), 0);
+                loop {
+                    let mut best: Option<(usize, (Gid, u32))> = None;
+                    for (r, run) in runs.iter().enumerate() {
+                        if let Some(msg) = run.get(heads[r]) {
+                            let k = canonical_key(msg);
+                            match best {
+                                None => best = Some((r, k)),
+                                Some((_, kb)) => {
+                                    debug_assert_ne!(
+                                        k, kb,
+                                        "duplicate (source, cycle) key \
+                                         across receive runs"
+                                    );
+                                    if k < kb {
+                                        best = Some((r, k));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    let Some((r, _)) = best else { break };
+                    let msg = runs[r][heads[r]];
+                    heads[r] += 1;
+                    scatter(msg);
+                }
+            }
+        }
+    }
+    for run in runs.iter_mut() {
+        run.clear();
+    }
+}
+
+/// K-way merge of canonically sorted routed buckets: `deliver` sees
+/// every spike of every bucket exactly once, in canonical order — the
+/// consuming thread's half of the parallel receive.  Keys are unique
+/// across buckets (asserted), so the merge is deterministic.  `heads`
+/// is caller-owned scratch.
+pub fn merge_routed(
+    buckets: &[&[RoutedSpike]],
+    heads: &mut Vec<usize>,
+    mut deliver: impl FnMut(RoutedSpike),
+) {
+    match buckets.len() {
+        0 => {}
+        1 => {
+            for &sp in buckets[0] {
+                deliver(sp);
+            }
+        }
+        _ => {
+            heads.clear();
+            heads.resize(buckets.len(), 0);
+            loop {
+                let mut best: Option<(usize, (Gid, u32))> = None;
+                for (b, bucket) in buckets.iter().enumerate() {
+                    if let Some(sp) = bucket.get(heads[b]) {
+                        let k = (sp.source, sp.cycle);
+                        match best {
+                            None => best = Some((b, k)),
+                            Some((_, kb)) => {
+                                debug_assert_ne!(
+                                    k, kb,
+                                    "duplicate (source, cycle) key across \
+                                     delivery buckets"
+                                );
+                                if k < kb {
+                                    best = Some((b, k));
+                                }
+                            }
+                        }
+                    }
+                }
+                let Some((b, _)) = best else { break };
+                let sp = buckets[b][heads[b]];
+                heads[b] += 1;
+                deliver(sp);
+            }
+        }
+    }
+}
+
+/// The receive runs of one pathway between communicate and deliver,
+/// with an internal buffer pool so capacity circulates instead of
+/// being reallocated: [`RunSet::push_run`] *swaps* the caller's buffer
+/// against a pooled empty one (the transport keeps its capacity), and
+/// cleared run buffers return via [`RunSet::reclaim`] /
+/// [`RunSet::recycle`].
+#[derive(Default)]
+pub struct RunSet {
+    runs: Vec<Vec<SpikeMsg>>,
+    pool: Vec<Vec<SpikeMsg>>,
+}
+
+impl RunSet {
+    /// Take the contents of `buf` as a new run (no-op when empty).
+    /// `buf` is left holding a pooled empty buffer, so transport
+    /// receive buffers keep circulating capacity.
+    pub fn push_run(&mut self, buf: &mut Vec<SpikeMsg>) {
+        if buf.is_empty() {
+            return;
+        }
+        let mut run = self.pool.pop().unwrap_or_default();
+        debug_assert!(run.is_empty());
+        std::mem::swap(&mut run, buf);
+        self.runs.push(run);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    pub fn n_runs(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// The pending runs, for in-place sorting/bucketing.
+    pub fn runs_mut(&mut self) -> &mut [Vec<SpikeMsg>] {
+        &mut self.runs
+    }
+
+    /// Move the pending runs out (hand-off to barrier workers); the
+    /// cleared buffers come back through [`RunSet::recycle`].
+    pub fn drain_runs(&mut self) -> std::vec::Drain<'_, Vec<SpikeMsg>> {
+        self.runs.drain(..)
+    }
+
+    /// Return all in-place-consumed (now cleared) runs to the pool.
+    pub fn reclaim(&mut self) {
+        for run in self.runs.drain(..) {
+            debug_assert!(run.is_empty(), "reclaiming a non-empty run");
+            self.pool.push(run);
+        }
+    }
+
+    /// Return one cleared run buffer that traveled through a worker
+    /// slot to the pool.
+    pub fn recycle(&mut self, run: Vec<SpikeMsg>) {
+        debug_assert!(run.is_empty(), "recycling a non-empty run");
+        self.pool.push(run);
+    }
+
+    /// Flatten all pending runs into one batch (recycling the run
+    /// buffers) — the legacy channel runtime's delivery input, which
+    /// still sorts the flat batch on the coordinator.
+    pub fn flatten_into(&mut self, out: &mut Vec<SpikeMsg>) {
+        for mut run in self.runs.drain(..) {
+            out.extend_from_slice(&run);
+            run.clear();
+            self.pool.push(run);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::{ConnTable, LocalConn};
+    use crate::util::rng::Pcg64;
+
+    fn msg(source: Gid, cycle: u32) -> SpikeMsg {
+        SpikeMsg { source, cycle }
+    }
+
+    fn conn(t: u32, d: u16) -> LocalConn {
+        LocalConn { target_local: t, weight: 0.25, delay_steps: d }
+    }
+
+    /// Shards over `n_threads` tables where thread t owns the sources
+    /// with `src % n_threads == t` plus, optionally, broadcast sources
+    /// owned by every thread.
+    fn modulo_shards(
+        n_threads: usize,
+        n_sources: u32,
+        broadcast: &[Gid],
+    ) -> (SourceShards, Vec<ConnTable>) {
+        let tables: Vec<ConnTable> = (0..n_threads)
+            .map(|t| {
+                let mut entries: Vec<(Gid, LocalConn)> = (0..n_sources)
+                    .filter(|s| *s as usize % n_threads == t)
+                    .map(|s| (s, conn(s, 1)))
+                    .collect();
+                entries.extend(broadcast.iter().map(|&s| (s, conn(s, 2))));
+                ConnTable::build(entries)
+            })
+            .collect();
+        (SourceShards::build(tables.iter()), tables)
+    }
+
+    #[test]
+    fn sort_run_orders_canonically() {
+        let mut run = vec![msg(5, 2), msg(1, 9), msg(5, 1), msg(0, 3)];
+        sort_run(&mut run);
+        assert_eq!(run, vec![msg(0, 3), msg(1, 9), msg(5, 1), msg(5, 2)]);
+    }
+
+    #[test]
+    fn bucket_then_merge_equals_flat_canonical_sort() {
+        // the core bit-identity property: per thread, the merge over
+        // bucketed runs reproduces exactly the subsequence that thread
+        // would extract from the canonically sorted flat batch
+        let n_threads = 3;
+        let (shards, _) = modulo_shards(n_threads, 50, &[7]);
+        let mut rng = Pcg64::seed_from_u64(42);
+        // 4 runs with disjoint (source, cycle) keys, interleaved sources
+        let mut runs: Vec<Vec<SpikeMsg>> = (0..4)
+            .map(|r| {
+                (0..40)
+                    .map(|i| msg(rng.below(50) as Gid, (i * 4 + r) as u32))
+                    .collect()
+            })
+            .collect();
+        let mut flat: Vec<SpikeMsg> =
+            runs.iter().flatten().copied().collect();
+
+        // reference: flat canonical sort, scatter in order
+        sort_canonical(&mut flat);
+        let mut want: Vec<Vec<RoutedSpike>> = vec![Vec::new(); n_threads];
+        for m in &flat {
+            let hit = shards.lookup(m.source);
+            for (&t, &g) in hit.threads.iter().zip(hit.groups) {
+                want[t as usize].push(RoutedSpike {
+                    source: m.source,
+                    cycle: m.cycle,
+                    group: g,
+                });
+            }
+        }
+
+        // parallel path: bucket runs, then merge per thread
+        let mut buckets: Vec<Vec<RoutedSpike>> = vec![Vec::new(); n_threads];
+        let mut heads = Vec::new();
+        bucket_runs(&shards, &mut runs, &mut heads, |t, sp| {
+            buckets[t as usize].push(sp)
+        });
+        assert!(runs.iter().all(|r| r.is_empty()), "runs must be cleared");
+        for t in 0..n_threads {
+            let mut got = Vec::new();
+            merge_routed(&[buckets[t].as_slice()], &mut heads, |sp| {
+                got.push(sp)
+            });
+            assert_eq!(got, want[t], "thread {t}");
+        }
+    }
+
+    #[test]
+    fn merge_over_split_buckets_reproduces_single_bucket() {
+        // splitting a thread's spikes across producer buckets (as the
+        // cooperative grid does) must not change the merged order
+        let (shards, _) = modulo_shards(2, 20, &[]);
+        let mut rng = Pcg64::seed_from_u64(9);
+        let mut runs: Vec<Vec<SpikeMsg>> = vec![(0..60)
+            .map(|i| msg(rng.below(20) as Gid, i as u32))
+            .collect()];
+        let mut single: Vec<RoutedSpike> = Vec::new();
+        let mut heads = Vec::new();
+        let mut runs_copy = runs.clone();
+        bucket_runs(&shards, &mut runs_copy, &mut heads, |t, sp| {
+            if t == 0 {
+                single.push(sp)
+            }
+        });
+        // split the same stream across three buckets by round-robin of
+        // distinct sources (keeps each bucket canonically sorted)
+        let mut parts: Vec<Vec<RoutedSpike>> = vec![Vec::new(); 3];
+        bucket_runs(&shards, &mut runs, &mut heads, |t, sp| {
+            if t == 0 {
+                parts[(sp.source % 3) as usize].push(sp)
+            }
+        });
+        let views: Vec<&[RoutedSpike]> =
+            parts.iter().map(|p| p.as_slice()).collect();
+        let mut merged = Vec::new();
+        merge_routed(&views, &mut heads, |sp| merged.push(sp));
+        assert_eq!(merged, single);
+    }
+
+    #[test]
+    fn broadcast_source_reaches_every_thread() {
+        let n_threads = 4;
+        let (shards, tables) = modulo_shards(n_threads, 8, &[3]);
+        let mut runs = vec![vec![msg(3, 10)]];
+        let mut hits: Vec<(u16, RoutedSpike)> = Vec::new();
+        let mut heads = Vec::new();
+        bucket_runs(&shards, &mut runs, &mut heads, |t, sp| {
+            hits.push((t, sp))
+        });
+        assert_eq!(hits.len(), n_threads);
+        for (t, sp) in hits {
+            // the routed group must resolve to source 3 in that table
+            let cs = tables[t as usize].group(sp.group as usize);
+            let direct = tables[t as usize].lookup(3);
+            assert_eq!(
+                cs.iter().collect::<Vec<_>>(),
+                direct.iter().collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_shards_drop_everything() {
+        let shards = SourceShards::build(std::iter::empty::<&ConnTable>());
+        let mut runs = vec![vec![msg(1, 1), msg(2, 2)], vec![msg(3, 3)]];
+        let mut heads = Vec::new();
+        bucket_runs(&shards, &mut runs, &mut heads, |_, _| {
+            panic!("nothing should be routed through empty shards")
+        });
+        assert!(runs.iter().all(|r| r.is_empty()));
+    }
+
+    #[test]
+    fn empty_runs_and_buckets_are_noops() {
+        let (shards, _) = modulo_shards(2, 4, &[]);
+        let mut heads = Vec::new();
+        let mut runs: Vec<Vec<SpikeMsg>> = vec![Vec::new(), Vec::new()];
+        bucket_runs(&shards, &mut runs, &mut heads, |_, _| {
+            panic!("no spikes")
+        });
+        merge_routed(&[], &mut heads, |_| panic!("no buckets"));
+        merge_routed(&[&[], &[]], &mut heads, |_| panic!("empty buckets"));
+    }
+
+    #[test]
+    fn runset_recycles_capacity() {
+        let mut set = RunSet::default();
+        let mut buf = Vec::with_capacity(64);
+        buf.push(msg(1, 1));
+        set.push_run(&mut buf);
+        assert!(buf.is_empty());
+        assert_eq!(set.n_runs(), 1);
+        // consume in place, then reclaim
+        for run in set.runs_mut() {
+            run.clear();
+        }
+        set.reclaim();
+        assert!(set.is_empty());
+        // the pooled buffer (with its capacity) backs the next push
+        let mut buf2 = vec![msg(2, 2)];
+        set.push_run(&mut buf2);
+        assert!(buf2.capacity() >= 64, "pooled capacity must circulate");
+        // empty buffers are not runs
+        let mut empty = Vec::new();
+        set.push_run(&mut empty);
+        assert_eq!(set.n_runs(), 1);
+    }
+
+    #[test]
+    fn runset_flatten_preserves_contents() {
+        let mut set = RunSet::default();
+        set.push_run(&mut vec![msg(5, 1), msg(2, 1)]);
+        set.push_run(&mut vec![msg(9, 3)]);
+        let mut out = Vec::new();
+        set.flatten_into(&mut out);
+        assert_eq!(out.len(), 3);
+        assert!(set.is_empty());
+    }
+}

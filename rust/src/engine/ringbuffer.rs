@@ -5,6 +5,16 @@
 //! Accumulation is f64 so that sums of the bundled models' binary-fraction
 //! weights are exact and therefore order-independent — the property the
 //! strategy-equivalence test relies on (DESIGN.md §6).
+//!
+//! The engine constructs rings through [`RingBuffer::with_horizon`],
+//! which takes the computed write-ahead horizon next to the slot count
+//! and *asserts* `n_slots > horizon` — so a sizing bug fails at rank
+//! construction instead of surfacing as a silent wrap-around collision
+//! only the downstream delivery-deadline `debug_assert` might catch.
+//! Delivery writes whole delay buckets per spike via
+//! [`RingBuffer::accumulate_row`]: one call touches a single slot row
+//! sequentially (the cache-friendly write pattern of the delay-bucketed
+//! connection tables, see `tables`).
 
 /// Ring buffer of per-neuron delayed inputs.
 #[derive(Clone, Debug)]
@@ -16,14 +26,35 @@ pub struct RingBuffer {
 
 impl RingBuffer {
     /// `n_slots` must exceed the largest write-ahead distance
-    /// (max local delay + communication epoch).
+    /// (max local delay + communication epoch).  Callers that know the
+    /// horizon should use [`RingBuffer::with_horizon`], which enforces
+    /// the invariant instead of documenting it.
     pub fn new(n_neurons: usize, n_slots: usize) -> RingBuffer {
-        assert!(n_slots >= 1);
+        assert!(n_slots >= 1, "ring buffer needs at least one slot");
         RingBuffer {
-            slots: vec![0.0; n_neurons * n_slots.max(1)],
+            slots: vec![0.0; n_neurons * n_slots],
             n_neurons,
             n_slots,
         }
+    }
+
+    /// As [`RingBuffer::new`], asserting the documented sizing invariant
+    /// against the caller's computed write-ahead `horizon` (the largest
+    /// `arrive - consume_step` distance any delivery can produce): a
+    /// write `horizon` steps ahead of the consume cursor must land on a
+    /// row that is not still pending, i.e. `n_slots > horizon`.
+    pub fn with_horizon(
+        n_neurons: usize,
+        n_slots: usize,
+        horizon: usize,
+    ) -> RingBuffer {
+        assert!(
+            n_slots > horizon,
+            "ring buffer too small: {n_slots} slots cannot hold a \
+             write-ahead horizon of {horizon} steps without wrap-around \
+             collisions"
+        );
+        RingBuffer::new(n_neurons, n_slots)
     }
 
     pub fn n_slots(&self) -> usize {
@@ -35,6 +66,26 @@ impl RingBuffer {
     pub fn add(&mut self, step: u64, neuron: u32, weight: f32) {
         let slot = (step % self.n_slots as u64) as usize;
         self.slots[slot * self.n_neurons + neuron as usize] += weight as f64;
+    }
+
+    /// Accumulate one delay bucket: add `weights[i]` to `targets[i]`'s
+    /// input arriving at absolute `step`, for all `i`.  All writes hit
+    /// the single slot row of `step`, so the row base is computed once
+    /// and the walk stays within one `n_neurons`-sized row — the write
+    /// pattern the delay-bucketed connection layout exists for.
+    #[inline]
+    pub fn accumulate_row(
+        &mut self,
+        step: u64,
+        targets: &[u32],
+        weights: &[f32],
+    ) {
+        debug_assert_eq!(targets.len(), weights.len());
+        let slot = (step % self.n_slots as u64) as usize;
+        let row = &mut self.slots[slot * self.n_neurons..][..self.n_neurons];
+        for (&t, &w) in targets.iter().zip(weights) {
+            row[t as usize] += w as f64;
+        }
     }
 
     /// Read out the input row for `step` into `out` (as f32, matching the
@@ -99,6 +150,35 @@ mod tests {
             assert_eq!(row[1], 0.0);
         }
         assert_eq!(rb.pending_total(), 0.0);
+    }
+
+    #[test]
+    fn accumulate_row_matches_individual_adds() {
+        let targets = [0u32, 3, 1, 3];
+        let weights = [0.25f32, -0.625, 0.125, 0.5];
+        let mut batched = RingBuffer::new(4, 8);
+        batched.accumulate_row(5, &targets, &weights);
+        let mut single = RingBuffer::new(4, 8);
+        for (&t, &w) in targets.iter().zip(&weights) {
+            single.add(5, t, w);
+        }
+        let (mut a, mut b) = (vec![0.0f32; 4], vec![0.0f32; 4]);
+        batched.take_row(5, &mut a);
+        single.take_row(5, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a, vec![0.25, 0.125, 0.0, -0.125]);
+    }
+
+    #[test]
+    fn with_horizon_accepts_sufficient_slots() {
+        let rb = RingBuffer::with_horizon(2, 8, 7);
+        assert_eq!(rb.n_slots(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "ring buffer too small")]
+    fn with_horizon_rejects_insufficient_slots() {
+        let _ = RingBuffer::with_horizon(2, 4, 4);
     }
 
     #[test]

@@ -1,28 +1,44 @@
 //! The kernel's fundamental data structures (paper Fig 10), with the
-//! structure-aware duplication into short-/long-range pathways (§4.1.2).
+//! structure-aware duplication into short-/long-range pathways (§4.1.2)
+//! and the cache-aware layout of the receive side (arXiv 2109.12855).
 //!
 //! * [`ConnTable`] — postsynaptic side: per (rank, thread, pathway), the
-//!   thread-local connections in CSR form sorted by source GID (NEST's
-//!   merged connection + source table; the sort enables the binary-search
-//!   lookup a spike performs on arrival).
+//!   thread-local connections in CSR form grouped by source GID
+//!   (ascending) in **structure-of-arrays** layout: `target_local`,
+//!   `weight` and `delay_steps` live in three parallel arrays, so the
+//!   per-spike walk is three contiguous scans instead of a strided walk
+//!   over 12-byte structs.  Within a source group connections are
+//!   **delay-bucketed** (stable-sorted by `delay_steps`), so the ring
+//!   buffer writes of one spike hit each slot row once, sequentially —
+//!   see [`ConnSlice::delay_runs`].  Reordering by delay changes the
+//!   f64 accumulation order, which is only sound because the bundled
+//!   models use exact binary-fraction weights (order-independent sums,
+//!   DESIGN.md §6); `build` *asserts* that invariant instead of
+//!   assuming it.
 //! * [`TargetTable`] — presynaptic side: for every thread-local neuron the
 //!   deduplicated list of ranks hosting at least one of its targets
 //!   (NEST's *spike compression*: one message per target rank, not per
 //!   target thread).
-//! * [`SourceShards`] — rank-level source → owning-threads index built
-//!   from the per-thread [`ConnTable`]s: for every source GID with at
-//!   least one connection on this rank, the sorted list of virtual
-//!   threads hosting connections from it.  The deliver phase uses it to
-//!   route each received spike into exactly the per-thread queues that
-//!   will consume it (`O(batch + hits)` instead of every thread scanning
-//!   the full batch, `O(T·batch)`).
+//! * [`SourceShards`] — rank-level source → (owning thread, connection
+//!   group) index built from the per-thread [`ConnTable`]s: for every
+//!   source GID with at least one connection on this rank, the sorted
+//!   list of virtual threads hosting connections from it, each paired
+//!   with the *group index* of that source in the owning thread's table.
+//!   The parallel receive path uses it to scatter each received spike
+//!   into exactly the per-thread buckets that will consume it, already
+//!   resolved to a connection group — the consuming thread never
+//!   searches its table again.  The dense O(1) source index lives here,
+//!   **once per rank per pathway**, not in every per-thread
+//!   [`ConnTable`] (which would cost `2·T·4·max_gid` bytes per rank).
 //! * [`Pathways`] — the pair of short-/long-range copies of a structure;
 //!   the conventional strategy uses only the short slot.
 
 use crate::network::Gid;
 
 /// A connection as stored on the postsynaptic side; the source GID lives
-/// in the CSR index, not here.
+/// in the CSR index, not here.  [`ConnTable`] stores the three fields in
+/// parallel arrays; this struct is the per-connection view yielded by
+/// [`ConnSlice::iter`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LocalConn {
     /// Thread-local index of the target neuron.
@@ -32,76 +48,169 @@ pub struct LocalConn {
 }
 
 /// Above this source-GID range the dense index is not built and lookups
-/// fall back to binary search (NEST's memory/speed trade-off: a dense
-/// per-thread index costs 4 bytes x N_total).
+/// fall back to binary search (NEST's memory/speed trade-off: the dense
+/// index costs 4 bytes × `max_gid`, held once per rank per pathway in
+/// [`SourceShards`]).
 const DENSE_INDEX_LIMIT: usize = 1 << 24;
 
-/// CSR over connections grouped by source GID, sorted ascending.
+/// Build a dense `gid -> group index` map over `sources` (ascending,
+/// deduplicated); empty when the GID range exceeds
+/// [`DENSE_INDEX_LIMIT`].  `u32::MAX` marks "no connections".
+fn build_dense(sources: &[Gid]) -> Vec<u32> {
+    let max_src = sources.last().map(|&s| s as usize + 1).unwrap_or(0);
+    if max_src == 0 || max_src > DENSE_INDEX_LIMIT {
+        return Vec::new();
+    }
+    let mut d = vec![u32::MAX; max_src];
+    for (i, &s) in sources.iter().enumerate() {
+        d[s as usize] = i as u32;
+    }
+    d
+}
+
+/// One source group of a [`ConnTable`]: parallel borrows of the SoA
+/// columns.  The deliver hot path walks `delay_runs()`; everything else
+/// can reconstruct [`LocalConn`] values via `iter()`.
+#[derive(Clone, Copy, Debug)]
+pub struct ConnSlice<'a> {
+    pub targets: &'a [u32],
+    pub weights: &'a [f32],
+    pub delays: &'a [u16],
+}
+
+impl<'a> ConnSlice<'a> {
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    /// Per-connection view (cold paths and tests).
+    pub fn iter(&self) -> impl Iterator<Item = LocalConn> + 'a {
+        self.targets
+            .iter()
+            .zip(self.weights)
+            .zip(self.delays)
+            .map(|((&t, &w), &d)| LocalConn {
+                target_local: t,
+                weight: w,
+                delay_steps: d,
+            })
+    }
+
+    /// Iterate the delay buckets of this group: maximal runs of equal
+    /// `delay_steps` (contiguous because `build` sorts each group by
+    /// delay), yielding `(delay, targets, weights)`.  One run = one ring
+    /// slot row, so the caller's accumulation writes are sequential per
+    /// row.
+    pub fn delay_runs(
+        &self,
+    ) -> impl Iterator<Item = (u16, &'a [u32], &'a [f32])> + 'a {
+        let (targets, weights, delays) =
+            (self.targets, self.weights, self.delays);
+        let mut i = 0usize;
+        std::iter::from_fn(move || {
+            if i >= delays.len() {
+                return None;
+            }
+            let d = delays[i];
+            let mut j = i + 1;
+            while j < delays.len() && delays[j] == d {
+                j += 1;
+            }
+            let run = (d, &targets[i..j], &weights[i..j]);
+            i = j;
+            Some(run)
+        })
+    }
+}
+
+/// In debug builds, verify the order-independence invariant the
+/// delay-bucketed layout relies on: every weight must be an exact
+/// multiple of 2⁻²⁴ with magnitude below 2²⁰, so partial f64 sums of any
+/// realistic fan-in are exact and therefore independent of accumulation
+/// order (DESIGN.md §6).
+fn debug_assert_exact_weight(w: f32) {
+    debug_assert!(
+        {
+            let scaled = w as f64 * (1u64 << 24) as f64;
+            scaled.fract() == 0.0 && scaled.abs() < (1u64 << 44) as f64
+        },
+        "connection weight {w} is not an exact binary fraction \
+         (multiple of 2^-24, |w| < 2^20): delay-bucketed delivery \
+         reorders ring-buffer accumulation, which is only bit-safe for \
+         order-independent sums (DESIGN.md §6)"
+    );
+}
+
+/// CSR over connections grouped by source GID (ascending), columns in
+/// SoA layout, each group delay-bucketed.  See the module docs.
 #[derive(Clone, Debug, Default)]
 pub struct ConnTable {
     sources: Vec<Gid>,
     offsets: Vec<u32>,
-    conns: Vec<LocalConn>,
-    /// Dense `gid -> group index` map (`u32::MAX` = no connections);
-    /// empty when the GID range exceeds [`DENSE_INDEX_LIMIT`].
-    dense: Vec<u32>,
+    target_local: Vec<u32>,
+    weight: Vec<f32>,
+    delay_steps: Vec<u16>,
 }
 
 impl ConnTable {
-    /// Build from (source, connection) pairs.  The relative order of
-    /// connections with the same source is preserved (stable sort), which
-    /// makes multapse delivery order deterministic.
+    /// Build from (source, connection) pairs.  Connections are grouped
+    /// by source and delay-bucketed within each group (stable sort by
+    /// `(source, delay_steps)`): the relative order of connections with
+    /// the same source *and* delay is preserved, so multapse delivery
+    /// order within a delay bucket stays insertion-deterministic, while
+    /// the bucket reordering itself is covered by the asserted
+    /// binary-fraction weight invariant.
     pub fn build(mut entries: Vec<(Gid, LocalConn)>) -> ConnTable {
-        entries.sort_by_key(|(src, _)| *src);
+        entries.sort_by_key(|(src, c)| (*src, c.delay_steps));
+        let n = entries.len();
         let mut sources = Vec::new();
         let mut offsets = Vec::new();
-        let mut conns = Vec::with_capacity(entries.len());
+        let mut target_local = Vec::with_capacity(n);
+        let mut weight = Vec::with_capacity(n);
+        let mut delay_steps = Vec::with_capacity(n);
         let mut last: Option<Gid> = None;
         for (src, conn) in entries {
             if last != Some(src) {
                 sources.push(src);
-                offsets.push(conns.len() as u32);
+                offsets.push(target_local.len() as u32);
                 last = Some(src);
             }
-            conns.push(conn);
+            debug_assert_exact_weight(conn.weight);
+            target_local.push(conn.target_local);
+            weight.push(conn.weight);
+            delay_steps.push(conn.delay_steps);
         }
-        offsets.push(conns.len() as u32);
-        // dense O(1) index over the source-GID range (perf: replaces the
-        // per-spike binary search in the deliver hot path — see
-        // EXPERIMENTS.md §Perf)
-        let max_src = sources.last().map(|&s| s as usize + 1).unwrap_or(0);
-        let dense = if max_src > 0 && max_src <= DENSE_INDEX_LIMIT {
-            let mut d = vec![u32::MAX; max_src];
-            for (i, &s) in sources.iter().enumerate() {
-                d[s as usize] = i as u32;
-            }
-            d
-        } else {
-            Vec::new()
-        };
-        ConnTable { sources, offsets, conns, dense }
+        offsets.push(target_local.len() as u32);
+        ConnTable { sources, offsets, target_local, weight, delay_steps }
     }
 
-    /// Connections of `source` (empty slice if none) — the per-spike
-    /// lookup of the deliver phase.
+    /// The `i`-th source group (groups ascend by source GID) — the hot
+    /// lookup of the parallel receive path, where [`SourceShards`] has
+    /// already resolved each spike to its group index.
     #[inline]
-    pub fn lookup(&self, source: Gid) -> &[LocalConn] {
-        if !self.dense.is_empty() {
-            let i = match self.dense.get(source as usize) {
-                Some(&i) if i != u32::MAX => i as usize,
-                _ => return &[],
-            };
-            let lo = self.offsets[i] as usize;
-            let hi = self.offsets[i + 1] as usize;
-            return &self.conns[lo..hi];
+    pub fn group(&self, i: usize) -> ConnSlice<'_> {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        ConnSlice {
+            targets: &self.target_local[lo..hi],
+            weights: &self.weight[lo..hi],
+            delays: &self.delay_steps[lo..hi],
         }
+    }
+
+    /// Connections of `source` (empty if none) by binary search — the
+    /// cold-path lookup (tests, the legacy channel runtime).  Hot-path
+    /// routing goes through [`SourceShards`], which carries pre-resolved
+    /// group indices backed by the rank-level dense index.
+    #[inline]
+    pub fn lookup(&self, source: Gid) -> ConnSlice<'_> {
         match self.sources.binary_search(&source) {
-            Ok(i) => {
-                let lo = self.offsets[i] as usize;
-                let hi = self.offsets[i + 1] as usize;
-                &self.conns[lo..hi]
-            }
-            Err(_) => &[],
+            Ok(i) => self.group(i),
+            Err(_) => ConnSlice { targets: &[], weights: &[], delays: &[] },
         }
     }
 
@@ -109,30 +218,26 @@ impl ConnTable {
     /// `lookup` when only membership matters.)
     #[inline]
     pub fn has_source(&self, source: Gid) -> bool {
-        if !self.dense.is_empty() {
-            return matches!(self.dense.get(source as usize),
-                            Some(&i) if i != u32::MAX);
-        }
         self.sources.binary_search(&source).is_ok()
     }
 
     pub fn n_connections(&self) -> usize {
-        self.conns.len()
+        self.target_local.len()
     }
 
     pub fn n_sources(&self) -> usize {
         self.sources.len()
     }
 
-    /// Iterate `(source, connections)` groups in ascending source order.
+    /// Iterate `(source, group)` pairs in ascending source order; the
+    /// enumeration index is the group index [`SourceShards`] stores.
     pub fn iter_groups(
         &self,
-    ) -> impl Iterator<Item = (Gid, &[LocalConn])> + '_ {
-        self.sources.iter().enumerate().map(move |(i, &src)| {
-            let lo = self.offsets[i] as usize;
-            let hi = self.offsets[i + 1] as usize;
-            (src, &self.conns[lo..hi])
-        })
+    ) -> impl Iterator<Item = (Gid, ConnSlice<'_>)> + '_ {
+        self.sources
+            .iter()
+            .enumerate()
+            .map(move |(i, &src)| (src, self.group(i)))
     }
 
     /// Approximate heap footprint in bytes (for the memory-overhead
@@ -140,87 +245,105 @@ impl ConnTable {
     pub fn heap_bytes(&self) -> usize {
         self.sources.len() * std::mem::size_of::<Gid>()
             + self.offsets.len() * 4
-            + self.conns.len() * std::mem::size_of::<LocalConn>()
-            + self.dense.len() * 4
+            + self.target_local.len() * 4
+            + self.weight.len() * 4
+            + self.delay_steps.len() * 2
     }
 }
 
-/// Rank-level source-membership index for thread-sharded spike delivery:
-/// CSR from source GID to the virtual threads of this rank hosting at
-/// least one connection from that source.  Built once per pathway at
-/// rank-construction time by merging the per-thread connection tables;
-/// shares the dense-index trade-off of [`ConnTable`].
+/// One routing hit of [`SourceShards::lookup`]: for each owning thread
+/// (ascending), the group index of the source in that thread's
+/// [`ConnTable`] of the same pathway.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardHit<'a> {
+    pub threads: &'a [u16],
+    pub groups: &'a [u32],
+}
+
+impl ShardHit<'_> {
+    pub fn is_empty(&self) -> bool {
+        self.threads.is_empty()
+    }
+}
+
+/// Rank-level source → (owning thread, connection group) index for the
+/// parallel receive path: CSR from source GID to the virtual threads of
+/// this rank hosting at least one connection from that source, each
+/// entry carrying the source's group index in the owning thread's
+/// connection table.  Built once per pathway at rank-construction time
+/// by merging the per-thread connection tables.  This is where the
+/// dense O(1) source index lives — once per rank per pathway (4 bytes ×
+/// `max_gid`), replacing the former per-(thread, pathway) copies.
 #[derive(Clone, Debug, Default)]
 pub struct SourceShards {
     sources: Vec<Gid>,
     offsets: Vec<u32>,
     threads: Vec<u16>,
-    /// Dense `gid -> group index` map (`u32::MAX` = no connections);
+    /// Parallel to `threads`: group index of the source in the owning
+    /// thread's [`ConnTable`].
+    groups: Vec<u32>,
+    /// Dense `gid -> CSR group index` map (`u32::MAX` = no connections);
     /// empty when the GID range exceeds [`DENSE_INDEX_LIMIT`].
     dense: Vec<u32>,
 }
 
 impl SourceShards {
     /// Merge the per-thread connection tables (iterated in virtual-thread
-    /// order) into the rank-level source → threads index.
+    /// order) into the rank-level routing index.
     pub fn build<'a, I>(tables: I) -> SourceShards
     where
         I: IntoIterator<Item = &'a ConnTable>,
     {
-        let mut pairs: Vec<(Gid, u16)> = Vec::new();
+        let mut triples: Vec<(Gid, u16, u32)> = Vec::new();
         for (t, table) in tables.into_iter().enumerate() {
-            // iter_groups yields each source once per table, ascending
-            for (src, _) in table.iter_groups() {
-                pairs.push((src, t as u16));
+            // iter_groups yields each source once per table, ascending;
+            // the enumeration index is the group index group() resolves
+            for (g, (src, _)) in table.iter_groups().enumerate() {
+                triples.push((src, t as u16, g as u32));
             }
         }
-        pairs.sort_unstable();
+        // (source, thread) pairs are unique, so unstable is safe
+        triples.sort_unstable();
         let mut sources = Vec::new();
         let mut offsets = Vec::new();
-        let mut threads = Vec::with_capacity(pairs.len());
+        let mut threads = Vec::with_capacity(triples.len());
+        let mut groups = Vec::with_capacity(triples.len());
         let mut last: Option<Gid> = None;
-        for (src, t) in pairs {
+        for (src, t, g) in triples {
             if last != Some(src) {
                 sources.push(src);
                 offsets.push(threads.len() as u32);
                 last = Some(src);
             }
             threads.push(t);
+            groups.push(g);
         }
         offsets.push(threads.len() as u32);
-        let max_src = sources.last().map(|&s| s as usize + 1).unwrap_or(0);
-        let dense = if max_src > 0 && max_src <= DENSE_INDEX_LIMIT {
-            let mut d = vec![u32::MAX; max_src];
-            for (i, &s) in sources.iter().enumerate() {
-                d[s as usize] = i as u32;
-            }
-            d
-        } else {
-            Vec::new()
-        };
-        SourceShards { sources, offsets, threads, dense }
+        let dense = build_dense(&sources);
+        SourceShards { sources, offsets, threads, groups, dense }
     }
 
-    /// Virtual threads hosting connections from `source`, ascending
-    /// (empty slice if none) — the per-spike routing lookup.
+    /// Owning threads of `source` (ascending) with the matching group
+    /// indices (empty if none) — the per-spike routing lookup of the
+    /// receive path.
     #[inline]
-    pub fn lookup(&self, source: Gid) -> &[u16] {
-        if !self.dense.is_empty() {
-            let i = match self.dense.get(source as usize) {
+    pub fn lookup(&self, source: Gid) -> ShardHit<'_> {
+        let i = if !self.dense.is_empty() {
+            match self.dense.get(source as usize) {
                 Some(&i) if i != u32::MAX => i as usize,
-                _ => return &[],
-            };
-            let lo = self.offsets[i] as usize;
-            let hi = self.offsets[i + 1] as usize;
-            return &self.threads[lo..hi];
-        }
-        match self.sources.binary_search(&source) {
-            Ok(i) => {
-                let lo = self.offsets[i] as usize;
-                let hi = self.offsets[i + 1] as usize;
-                &self.threads[lo..hi]
+                _ => return ShardHit { threads: &[], groups: &[] },
             }
-            Err(_) => &[],
+        } else {
+            match self.sources.binary_search(&source) {
+                Ok(i) => i,
+                Err(_) => return ShardHit { threads: &[], groups: &[] },
+            }
+        };
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        ShardHit {
+            threads: &self.threads[lo..hi],
+            groups: &self.groups[lo..hi],
         }
     }
 
@@ -239,6 +362,7 @@ impl SourceShards {
         self.sources.len() * std::mem::size_of::<Gid>()
             + self.offsets.len() * 4
             + self.threads.len() * 2
+            + self.groups.len() * 4
             + self.dense.len() * 4
     }
 }
@@ -336,6 +460,10 @@ mod tests {
         LocalConn { target_local: t, weight: w, delay_steps: d }
     }
 
+    fn collect(cs: ConnSlice<'_>) -> Vec<LocalConn> {
+        cs.iter().collect()
+    }
+
     #[test]
     fn build_and_lookup() {
         let table = ConnTable::build(vec![
@@ -346,9 +474,12 @@ mod tests {
         ]);
         assert_eq!(table.n_sources(), 3);
         assert_eq!(table.n_connections(), 4);
-        assert_eq!(table.lookup(2), &[conn(1, 2.0, 1)]);
-        // multapse order preserved (stable by insertion)
-        assert_eq!(table.lookup(5), &[conn(0, 1.0, 1), conn(2, 3.0, 2)]);
+        assert_eq!(collect(table.lookup(2)), vec![conn(1, 2.0, 1)]);
+        // delay buckets ascend; insertion order preserved within each
+        assert_eq!(
+            collect(table.lookup(5)),
+            vec![conn(0, 1.0, 1), conn(2, 3.0, 2)]
+        );
         assert!(table.lookup(7).is_empty());
         assert!(table.has_source(9));
         assert!(!table.has_source(0));
@@ -359,6 +490,38 @@ mod tests {
         let table = ConnTable::build(vec![]);
         assert_eq!(table.n_connections(), 0);
         assert!(table.lookup(0).is_empty());
+    }
+
+    #[test]
+    fn groups_are_delay_bucketed_and_stable_within_bucket() {
+        let table = ConnTable::build(vec![
+            (3, conn(10, 0.5, 4)),
+            (3, conn(11, 0.25, 1)),
+            (3, conn(12, 0.5, 4)),
+            (3, conn(13, 0.125, 1)),
+            (3, conn(14, 0.5, 2)),
+        ]);
+        // sorted by delay; ties keep insertion order (stable)
+        assert_eq!(
+            collect(table.lookup(3)),
+            vec![
+                conn(11, 0.25, 1),
+                conn(13, 0.125, 1),
+                conn(14, 0.5, 2),
+                conn(10, 0.5, 4),
+                conn(12, 0.5, 4),
+            ]
+        );
+        // delay_runs covers the group as maximal equal-delay runs
+        let runs: Vec<(u16, usize)> = table
+            .lookup(3)
+            .delay_runs()
+            .map(|(d, t, w)| {
+                assert_eq!(t.len(), w.len());
+                (d, t.len())
+            })
+            .collect();
+        assert_eq!(runs, vec![(1, 2), (2, 1), (4, 2)]);
     }
 
     #[test]
@@ -389,7 +552,20 @@ mod tests {
                 .filter(|(s, _)| *s == probe)
                 .map(|(_, c)| *c)
                 .collect();
-            assert_eq!(table.lookup(probe), want.as_slice());
+            assert_eq!(collect(table.lookup(probe)), want);
+        }
+    }
+
+    #[test]
+    fn group_matches_lookup() {
+        let table = ConnTable::build(vec![
+            (4, conn(0, 1.0, 1)),
+            (8, conn(1, 2.0, 2)),
+            (8, conn(2, 3.0, 1)),
+        ]);
+        let srcs: Vec<Gid> = table.iter_groups().map(|(s, _)| s).collect();
+        for (i, src) in srcs.into_iter().enumerate() {
+            assert_eq!(collect(table.group(i)), collect(table.lookup(src)));
         }
     }
 
@@ -416,7 +592,7 @@ mod tests {
     }
 
     #[test]
-    fn source_shards_route_to_owning_threads() {
+    fn source_shards_route_to_owning_threads_with_groups() {
         // thread 0 owns sources {2, 5}, thread 1 owns {5, 9}, thread 2
         // owns nothing
         let t0 = ConnTable::build(vec![
@@ -430,24 +606,37 @@ mod tests {
         ]);
         let t2 = ConnTable::build(vec![]);
         let shards = SourceShards::build([&t0, &t1, &t2]);
-        assert_eq!(shards.lookup(2), &[0]);
-        assert_eq!(shards.lookup(5), &[0, 1]); // ascending thread order
-        assert_eq!(shards.lookup(9), &[1]);
-        assert_eq!(shards.lookup(7), &[] as &[u16]);
+        assert_eq!(shards.lookup(2).threads, &[0]);
+        assert_eq!(shards.lookup(5).threads, &[0, 1]); // ascending threads
+        assert_eq!(shards.lookup(9).threads, &[1]);
+        assert!(shards.lookup(7).is_empty());
         assert_eq!(shards.n_sources(), 3);
         assert_eq!(shards.total_entries(), 4);
+        // group indices resolve back to the right per-thread groups
+        let tables = [&t0, &t1, &t2];
+        for src in [2u32, 5, 9] {
+            let hit = shards.lookup(src);
+            for (&t, &g) in hit.threads.iter().zip(hit.groups) {
+                assert_eq!(
+                    collect(tables[t as usize].group(g as usize)),
+                    collect(tables[t as usize].lookup(src)),
+                    "source {src} thread {t}"
+                );
+            }
+        }
     }
 
     #[test]
     fn source_shards_empty() {
         let shards = SourceShards::build(std::iter::empty::<&ConnTable>());
         assert_eq!(shards.n_sources(), 0);
-        assert_eq!(shards.lookup(0), &[] as &[u16]);
+        assert!(shards.lookup(0).is_empty());
     }
 
     #[test]
     fn source_shards_match_per_table_membership() {
-        // property: shards.lookup(s) contains t iff tables[t].has_source(s)
+        // property: shards.lookup(s) contains (t, g) iff
+        // tables[t].has_source(s), with g resolving to s's group
         let mut rng = Pcg64::seed_from_u64(11);
         let tables: Vec<ConnTable> = (0..4)
             .map(|_| {
@@ -465,7 +654,15 @@ mod tests {
                 .filter(|(_, t)| t.has_source(src))
                 .map(|(i, _)| i as u16)
                 .collect();
-            assert_eq!(shards.lookup(src), want.as_slice(), "source {src}");
+            let hit = shards.lookup(src);
+            assert_eq!(hit.threads, want.as_slice(), "source {src}");
+            for (&t, &g) in hit.threads.iter().zip(hit.groups) {
+                assert_eq!(
+                    collect(tables[t as usize].group(g as usize)),
+                    collect(tables[t as usize].lookup(src)),
+                    "source {src} thread {t}"
+                );
+            }
         }
     }
 
@@ -494,5 +691,13 @@ mod tests {
             (0..1000).map(|i| (i as Gid, conn(i, 1.0, 1))).collect(),
         );
         assert!(big.heap_bytes() > small.heap_bytes() * 100);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "not an exact binary fraction")]
+    fn non_binary_weight_is_rejected_in_debug() {
+        // 0.3 has no finite binary expansion: order-dependent f64 sums
+        let _ = ConnTable::build(vec![(1, conn(0, 0.3, 1))]);
     }
 }

@@ -1,16 +1,23 @@
-//! Edge cases of the thread-sharded spike delivery and determinism of
-//! the persistent barrier worker runtime (`engine::rank`).
+//! Edge cases of the parallel receive side and determinism of the
+//! persistent barrier worker runtime (`engine::rank`, `engine::receive`).
 //!
-//! The routing layer fans each received spike batch into per-thread
-//! queues once, so correctness hinges on: empty batches being no-ops,
-//! spikes from sources without local connections being dropped cleanly,
-//! threads that own few (or zero) neurons staying in lock-step at the
-//! phase barriers, and repeated runs of the same configuration being
-//! bit-deterministic.
+//! Workers cooperatively sort the incoming per-sender spike runs,
+//! scatter them through `tables::SourceShards` into per-(producer,
+//! consumer) buckets, and k-way merge their own buckets back into the
+//! canonical delivery order — so correctness hinges on: empty runs and
+//! empty buckets being no-ops, spikes from sources without local
+//! connections being dropped cleanly, sources fanning out to every
+//! thread, interleaved multi-sender runs merging into one canonical
+//! stream, threads that own few (or zero) neurons staying in lock-step
+//! at the phase barriers, repeated runs being bit-deterministic, and
+//! the ring buffers conserving mass (everything delivered is consumed).
 
-use nsim::config::{ExecMode, RunConfig, Strategy};
-use nsim::engine::simulate;
+use nsim::config::{CommMode, ExecMode, RunConfig, Strategy};
+use nsim::engine::{simulate, SimResult};
 use nsim::models;
+use nsim::network::spec::{
+    AreaSpec, DelayDist, LifParams, NeuronKind, WeightRule,
+};
 use nsim::network::ModelSpec;
 
 fn run_exec(
@@ -128,6 +135,220 @@ fn structure_aware_with_sparse_threads() {
         ExecMode::Pooled,
     );
     assert_eq!(seq, bar);
+}
+
+/// Full result (spikes + ring_pending) for the conservation tests.
+#[allow(clippy::too_many_arguments)]
+fn run_full(
+    spec: &ModelSpec,
+    strategy: Strategy,
+    m: usize,
+    t: usize,
+    t_model_ms: f64,
+    exec: ExecMode,
+    comm: CommMode,
+) -> SimResult {
+    let cfg = RunConfig {
+        strategy,
+        m_ranks: m,
+        threads_per_rank: t,
+        t_model_ms,
+        seed: 12,
+        exec,
+        comm,
+        record_spikes: true,
+        ..RunConfig::default()
+    };
+    simulate(spec, &cfg).expect("simulation failed")
+}
+
+/// LIF net with zero-variance delays pinned to exactly one cycle
+/// (intra, 0.1 ms) and one epoch (inter, 1.0 ms), so every spike that is
+/// ever delivered into a ring buffer arrives at a step the run also
+/// consumes: residual ring mass must be *exactly* 0.0 on every thread —
+/// any leak (a write past the horizon, a slot cleared late, a duplicate
+/// delivery) shows up as a nonzero residue.
+fn conservation_net(n_per_area: u32) -> ModelSpec {
+    let params = LifParams {
+        i_e_pa: LifParams::default().i_e_for_rate(30.0),
+        ..LifParams::default()
+    };
+    let areas = (0..2u32)
+        .map(|i| AreaSpec {
+            name: format!("C{i}"),
+            n: n_per_area,
+            neuron: NeuronKind::Lif(params),
+        })
+        .collect();
+    let k_intra = (n_per_area / 10).clamp(1, n_per_area - 1);
+    let k_inter = (n_per_area / 20).max(1);
+    ModelSpec::new(
+        format!("conserve-{n_per_area}"),
+        areas,
+        k_intra,
+        k_inter,
+        WeightRule { w_mv: 0.25, g: 4.0, inh_fraction: 0.2 },
+        DelayDist::new(0.1, 0.0, 0.1),
+        DelayDist::new(1.0, 0.0, 1.0),
+        0.1,
+    )
+    .unwrap()
+}
+
+#[test]
+fn ring_buffers_conserve_mass_with_pinned_delays() {
+    // every delivered spike is consumed before the run ends (delays are
+    // pinned inside the simulated horizon), so pending ring mass is
+    // exactly 0.0 — for every strategy, exec mode and comm mode
+    let spec = conservation_net(120);
+    for strategy in [Strategy::Conventional, Strategy::StructureAware] {
+        for exec in [
+            ExecMode::Sequential,
+            ExecMode::Pooled,
+            ExecMode::PooledChannels,
+        ] {
+            for comm in [CommMode::Blocking, CommMode::Overlap] {
+                let res =
+                    run_full(&spec, strategy, 2, 3, 50.0, exec, comm);
+                assert!(
+                    res.spikes.len() > 100,
+                    "too quiet to be meaningful: {} spikes",
+                    res.spikes.len()
+                );
+                for (rank, threads) in res.ring_pending.iter().enumerate()
+                {
+                    assert_eq!(threads.len(), 3);
+                    for (th, &pending) in threads.iter().enumerate() {
+                        assert_eq!(
+                            pending, 0.0,
+                            "ring leak on rank {rank} thread {th}: \
+                             {pending} ({} exec={} comm={})",
+                            strategy.name(),
+                            exec.name(),
+                            comm.name(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn residual_ring_mass_bit_identical_across_modes() {
+    // on a net with delay variance the tail mass is nonzero — but it
+    // must be bit-identical across exec and comm modes, like the spike
+    // trains (the f64 order-independence invariant, asserted end to end)
+    let spec = models::sanity_net(200, 4).unwrap();
+    let bits = |res: &SimResult| -> Vec<Vec<u64>> {
+        res.ring_pending
+            .iter()
+            .map(|v| v.iter().map(|x| x.to_bits()).collect())
+            .collect()
+    };
+    let base = run_full(
+        &spec,
+        Strategy::StructureAware,
+        4,
+        3,
+        100.0,
+        ExecMode::Sequential,
+        CommMode::Blocking,
+    );
+    let nonzero = base
+        .ring_pending
+        .iter()
+        .flatten()
+        .filter(|&&p| p != 0.0)
+        .count();
+    assert!(nonzero > 0, "variance net left no tail mass — vacuous test");
+    for exec in [
+        ExecMode::Sequential,
+        ExecMode::Pooled,
+        ExecMode::PooledChannels,
+    ] {
+        for comm in [CommMode::Blocking, CommMode::Overlap] {
+            let got = run_full(
+                &spec,
+                Strategy::StructureAware,
+                4,
+                3,
+                100.0,
+                exec,
+                comm,
+            );
+            assert_eq!(base.spikes, got.spikes);
+            assert_eq!(
+                bits(&base),
+                bits(&got),
+                "residual ring mass diverged: exec={} comm={}",
+                exec.name(),
+                comm.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn source_fanning_out_to_every_thread() {
+    // all-to-all connectivity in one area: every spike's connection
+    // group exists on every thread, so each bucketed spike lands in all
+    // T grid buckets and every worker merges every source
+    let params = LifParams {
+        i_e_pa: LifParams::default().i_e_for_rate(30.0),
+        ..LifParams::default()
+    };
+    let n = 24u32;
+    let spec = ModelSpec::new(
+        "fanout".into(),
+        vec![AreaSpec {
+            name: "F".into(),
+            n,
+            neuron: NeuronKind::Lif(params),
+        }],
+        n - 1, // full intra-area fan-in
+        0,
+        WeightRule { w_mv: 0.25, g: 4.0, inh_fraction: 0.2 },
+        DelayDist::new(1.25, 0.625, 0.1),
+        DelayDist::new(5.0, 2.5, 1.0),
+        0.1,
+    )
+    .unwrap();
+    let seq =
+        run_exec(&spec, Strategy::Conventional, 1, 8, 100.0, ExecMode::Sequential);
+    assert!(seq.len() > 100, "too quiet to be meaningful");
+    for exec in [ExecMode::Pooled, ExecMode::PooledChannels] {
+        let par = run_exec(&spec, Strategy::Conventional, 1, 8, 100.0, exec);
+        assert_eq!(seq, par, "diverged with exec={}", exec.name());
+    }
+}
+
+#[test]
+fn interleaved_multi_sender_runs_merge_canonically() {
+    // grouped hierarchy: the local tier delivers one run per group
+    // member and the global tier one run per rank, so every deliver
+    // phase k-way merges interleaved multi-sender runs; the merged
+    // stream must reproduce the sequential reference exactly
+    let spec = models::sanity_net(160, 4).unwrap();
+    let run_hier = |exec: ExecMode| {
+        let cfg = RunConfig {
+            strategy: Strategy::StructureAware,
+            m_ranks: 8,
+            threads_per_rank: 4,
+            t_model_ms: 100.0,
+            seed: 12,
+            exec,
+            ranks_per_area: 2,
+            record_spikes: true,
+            ..RunConfig::default()
+        };
+        simulate(&spec, &cfg).expect("simulation failed").spikes
+    };
+    let seq = run_hier(ExecMode::Sequential);
+    assert!(seq.len() > 100, "too quiet to be meaningful");
+    for exec in [ExecMode::Pooled, ExecMode::PooledChannels] {
+        assert_eq!(seq, run_hier(exec), "diverged with exec={}", exec.name());
+    }
 }
 
 #[test]

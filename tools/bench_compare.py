@@ -3,8 +3,16 @@
 
 Used by the CI ``bench-regression`` job: the previous ``BENCH_hotpath``
 artifact of the base branch is the baseline; when no artifact exists the
-committed ``BENCH_baseline.json`` is used; when neither exists (or the
-baseline is a placeholder) the gate passes with a note, never fails.
+committed ``BENCH_baseline.json`` is used; when neither exists the gate
+passes with a note, never fails.
+
+A *placeholder* baseline (``"placeholder": true``, or empty ``micro``
+AND ``engine`` arrays — a baseline that compares nothing is vacuous no
+matter what it calls itself) makes the gate meaningless, so it is
+flagged loudly: a banner plus a GitHub Actions ``::warning::``
+annotation, and exit 1 under ``--fail-on-placeholder``.  Record a real
+baseline with ``tools/record_baseline.py`` (CI uploads one as the
+``BENCH_baseline_candidate`` artifact on every run).
 
 Two metric families are compared, both lower-is-better:
 
@@ -42,6 +50,18 @@ ENGINE_FLOOR_RTF = 0.5
 def load(path):
     with open(path, "r", encoding="utf-8") as fh:
         return json.load(fh)
+
+
+def is_placeholder(doc):
+    """A baseline that cannot gate anything.
+
+    Either it says so (``"placeholder": true``) or it is *vacuous* —
+    both metric families empty, so every comparison set is empty and
+    the gate passes no matter how bad the current numbers are.
+    """
+    if doc.get("placeholder"):
+        return True
+    return not doc.get("micro") and not doc.get("engine")
 
 
 def micro_map(doc):
@@ -153,6 +173,10 @@ def main(argv=None):
     ap.add_argument("--smoke-fail-factor", type=float, default=6.0,
                     help="on smoke profiles, fail only beyond "
                          "tolerance*factor (default 6.0, i.e. 90%%)")
+    ap.add_argument("--fail-on-placeholder", action="store_true",
+                    help="exit 1 when the baseline is a placeholder or "
+                         "vacuous (empty micro+engine) instead of "
+                         "passing with a warning")
     args = ap.parse_args(argv)
 
     if not os.path.exists(args.current):
@@ -171,9 +195,30 @@ def main(argv=None):
         return 0
     baseline = load(baseline_path)
 
-    if baseline.get("placeholder"):
-        print(f"bench_compare: baseline {baseline_path!r} is a placeholder "
-              "(no recorded numbers yet) — passing without comparison")
+    if is_placeholder(baseline):
+        kind = ("declared placeholder" if baseline.get("placeholder")
+                else "vacuous (empty micro AND engine arrays)")
+        banner = "!" * 66
+        print(banner)
+        print(f"!! bench_compare: baseline {baseline_path!r}")
+        print(f"!! is a {kind}: the regression gate compares NOTHING and")
+        print("!! passes no matter how bad the current numbers are.")
+        print("!! Record a real baseline:")
+        print("!!   cargo bench --bench hotpath -- --smoke "
+              "--bench-json BENCH_hotpath.json")
+        print("!!   python3 tools/record_baseline.py BENCH_hotpath.json "
+              "-o BENCH_baseline.json")
+        print("!! (CI uploads a ready-to-commit candidate as the "
+              "BENCH_baseline_candidate artifact.)")
+        print(banner)
+        # GitHub Actions annotation: visible on the run summary page,
+        # harmless plain text everywhere else
+        print(f"::warning title=vacuous bench baseline::{baseline_path} "
+              f"is a {kind}; the bench-regression gate is not gating. "
+              "Commit a recorded baseline (see tools/record_baseline.py).")
+        if args.fail_on_placeholder:
+            print("bench_compare: --fail-on-placeholder set — failing.")
+            return 1
         return 0
     if bool(baseline.get("smoke")) != bool(current.get("smoke")):
         print("bench_compare: baseline and current use different bench "
