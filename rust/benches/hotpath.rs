@@ -419,12 +419,14 @@ fn main() {
     let mut a2a_recv: Vec<Vec<SpikeMsg>> = Vec::new();
     h.bench("exchange: alltoall_into (recycled)", 512, || {
         a2a_send[0].extend_from_slice(&payload);
-        comm.alltoall_into(&mut a2a_send, &mut a2a_recv);
+        comm.alltoall_into(&mut a2a_send, &mut a2a_recv)
+            .expect("alltoall_into failed");
         black_box(a2a_recv[0].len());
     });
     h.bench("exchange: alltoall (fresh alloc)", 512, || {
         a2a_send[0].extend_from_slice(&payload);
-        let (recv, _) = comm.alltoall(&mut a2a_send);
+        let (recv, _) =
+            comm.alltoall(&mut a2a_send).expect("alltoall failed");
         black_box(recv[0].len());
     });
     let mut swap_send = Vec::with_capacity(512);

@@ -27,6 +27,22 @@
 //!   protocol, the split-phase quota-resize and the hidden-latency
 //!   accounting.
 //!
+//! # Fault model ([`CommError`], [`WorldBuilder::timeout`])
+//!
+//! Every blocking rendezvous in this layer — the barrier frames of the
+//! collectives and the split-phase completion wait — is *watchdogged*:
+//! with a deadline configured ([`WorldBuilder::timeout`], the engine's
+//! `--comm-timeout` knob; default off = wait forever, the historical
+//! behavior), a wait that expires returns a structured
+//! [`CommError::Timeout`] naming the communicator tier, the operation,
+//! the exchange epoch and ring slot (split-phase), and exactly which
+//! peer ranks have and haven't arrived/deposited — turning a silent
+//! deadlock caused by a stalled or dead rank into an actionable
+//! diagnostic.  A rank that panics while holding a mailbox or slot lock
+//! surfaces to its peers as [`CommError::Poisoned`] instead of a second
+//! opaque panic cascading through the barrier frames.  Timed-out waits
+//! are counted in [`CommStats::timeouts`].
+//!
 //! # Hierarchical communicators ([`Transport::split`])
 //!
 //! The paper's hybrid architecture maps every area onto a *group* of
@@ -43,7 +59,9 @@
 //! each other, and statistics stay attributable per tier
 //! ([`World::tiered_stats`] aggregates the children as the *local* tier
 //! next to the parent's *global* tier).  Splitting is a cold-path setup
-//! operation; the per-cycle hot paths are unchanged.
+//! operation; the per-cycle hot paths are unchanged.  Sub-communicators
+//! inherit the parent's watchdog deadline and report themselves as the
+//! `"local"` tier in diagnostics.
 //!
 //! # The [`Transport`] abstraction
 //!
@@ -87,9 +105,10 @@ pub use nonblocking::{
 };
 
 use crate::network::Gid;
+use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Barrier, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// One spike on the wire: source neuron and emission cycle.  The paper's
 /// spikes carry only the source id; we add the cycle so that lumped
@@ -102,6 +121,90 @@ pub struct SpikeMsg {
 }
 
 pub const SPIKE_WIRE_BYTES: usize = 8;
+
+/// Typed failure of a communication primitive.
+///
+/// With a watchdog deadline armed ([`WorldBuilder::timeout`]) every
+/// blocking rendezvous can expire into [`CommError::Timeout`] instead of
+/// hanging forever on a stalled peer; a peer that panicked while holding
+/// shared comm state surfaces as [`CommError::Poisoned`].  Both unwind
+/// the run cleanly through the engine's `Result` plumbing.
+#[derive(Clone, Debug)]
+pub enum CommError {
+    /// A collective wait expired: one or more peers never arrived.
+    Timeout {
+        /// Communicator tier ("global" or "local").
+        tier: &'static str,
+        /// The operation that was waiting (e.g. "alltoall",
+        /// "split-phase complete").
+        op: &'static str,
+        /// The rank that observed the expiry.
+        rank: usize,
+        /// Exchange epoch (split-phase sequence number), when the wait
+        /// belongs to a specific exchange round.
+        epoch: Option<u64>,
+        /// Mailbox ring slot of a split-phase wait (`seq % ring`).
+        ring_slot: Option<usize>,
+        /// How long the watchdog waited before firing.
+        waited: Duration,
+        /// Peer ranks that have **not** arrived/deposited.
+        missing: Vec<usize>,
+        /// Peer ranks that already arrived/deposited.
+        present: Vec<usize>,
+    },
+    /// A peer panicked while holding shared communication state.
+    Poisoned {
+        /// Communicator tier ("global" or "local").
+        tier: &'static str,
+        /// The rank that observed the poisoned lock.
+        rank: usize,
+        /// What the poisoning peer was holding, e.g.
+        /// "holding mailbox slot (dest=2, src=0)".
+        context: String,
+    },
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::Timeout {
+                tier,
+                op,
+                rank,
+                epoch,
+                ring_slot,
+                waited,
+                missing,
+                present,
+            } => {
+                write!(
+                    f,
+                    "comm watchdog: rank {rank} timed out after {:.3}s \
+                     in {op} on the {tier} tier",
+                    waited.as_secs_f64()
+                )?;
+                if let Some(e) = epoch {
+                    write!(f, " (exchange epoch {e}")?;
+                    if let Some(s) = ring_slot {
+                        write!(f, ", ring slot {s}")?;
+                    }
+                    write!(f, ")")?;
+                }
+                write!(
+                    f,
+                    "; missing ranks {missing:?}, arrived {present:?}"
+                )
+            }
+            CommError::Poisoned { tier, rank, context } => write!(
+                f,
+                "comm fabric poisoned on the {tier} tier: a rank \
+                 panicked while {context} (observed by rank {rank})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
 
 /// Aggregate communication statistics across all ranks of one
 /// communicator.  Every [`World`] — including the sub-worlds produced by
@@ -133,6 +236,8 @@ pub struct CommStats {
     /// path ([`Pending::try_complete_source`]) — deposits consumed during
     /// the in-flight window instead of at the deadline rendezvous.
     pub early_drained_sources: AtomicU64,
+    /// Watchdogged waits that expired into [`CommError::Timeout`].
+    pub timeouts: AtomicU64,
 }
 
 /// Point-in-time view of [`CommStats`], with durations in seconds.
@@ -145,6 +250,8 @@ pub struct CommStatsSnapshot {
     pub max_send_per_pair: u64,
     pub overlapped_exchanges: u64,
     pub early_drained_sources: u64,
+    /// Watchdogged waits that expired into [`CommError::Timeout`].
+    pub timeouts: u64,
     /// Barrier wait of blocking collectives (see
     /// [`CommStats::sync_nanos`]).
     pub sync_secs: f64,
@@ -169,6 +276,7 @@ impl CommStatsSnapshot {
                 + other.overlapped_exchanges,
             early_drained_sources: self.early_drained_sources
                 + other.early_drained_sources,
+            timeouts: self.timeouts + other.timeouts,
             sync_secs: self.sync_secs + other.sync_secs,
             post_secs: self.post_secs + other.post_secs,
             complete_wait_secs: self.complete_wait_secs
@@ -209,6 +317,7 @@ impl CommStats {
             early_drained_sources: self
                 .early_drained_sources
                 .load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
             sync_secs: self.sync_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             post_secs: self.post_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             complete_wait_secs: self.complete_wait_nanos.load(Ordering::Relaxed)
@@ -219,16 +328,117 @@ impl CommStats {
     }
 }
 
-struct WorldInner {
+/// A reusable generation barrier that knows *who* has arrived, so an
+/// expired wait can name the missing ranks — the watchdog form of
+/// `std::sync::Barrier`.
+///
+/// `wait(rank, None)` blocks forever like the std barrier; with a
+/// deadline it returns `Err(missing_ranks)` on expiry.  The expiring
+/// rank's own arrival stays registered, so peers armed with the same
+/// deadline expire too (everyone unwinds; nobody is left inside a
+/// half-completed generation that could complete later and corrupt
+/// state — the run is over either way).
+struct WaitBarrier {
+    state: Mutex<BarrierGen>,
+    cv: Condvar,
     m: usize,
-    barrier: Barrier,
+}
+
+struct BarrierGen {
+    arrived: Vec<bool>,
+    n_arrived: usize,
+    generation: u64,
+}
+
+impl WaitBarrier {
+    fn new(m: usize) -> WaitBarrier {
+        WaitBarrier {
+            state: Mutex::new(BarrierGen {
+                arrived: vec![false; m],
+                n_arrived: 0,
+                generation: 0,
+            }),
+            cv: Condvar::new(),
+            m,
+        }
+    }
+
+    /// Collective wait.  Returns `Err(missing)` if `timeout` expires
+    /// first, with the ranks that never arrived in this generation.
+    fn wait(
+        &self,
+        rank: usize,
+        timeout: Option<Duration>,
+    ) -> Result<(), Vec<usize>> {
+        // the barrier holds only bookkeeping flags: recover from a
+        // poisoned lock instead of cascading the peer's panic
+        let mut st =
+            self.state.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert!(
+            !st.arrived[rank],
+            "rank {rank} re-entered the barrier within one generation"
+        );
+        st.arrived[rank] = true;
+        st.n_arrived += 1;
+        if st.n_arrived == self.m {
+            st.n_arrived = 0;
+            st.arrived.iter_mut().for_each(|a| *a = false);
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let generation = st.generation;
+        match timeout {
+            None => {
+                while st.generation == generation {
+                    st = self
+                        .cv
+                        .wait(st)
+                        .unwrap_or_else(|e| e.into_inner());
+                }
+                Ok(())
+            }
+            Some(limit) => {
+                let deadline = Instant::now() + limit;
+                while st.generation == generation {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(st
+                            .arrived
+                            .iter()
+                            .enumerate()
+                            .filter(|&(_, &a)| !a)
+                            .map(|(r, _)| r)
+                            .collect());
+                    }
+                    st = self
+                        .cv
+                        .wait_timeout(st, deadline - now)
+                        .unwrap_or_else(|e| e.into_inner())
+                        .0;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+pub(crate) struct WorldInner {
+    pub(crate) m: usize,
+    barrier: WaitBarrier,
     /// mailboxes[dest][src]
     mailboxes: Vec<Vec<Mutex<Vec<SpikeMsg>>>>,
     /// Current buffer quota in spikes per rank pair (grows on overflow).
-    quota: AtomicUsize,
+    pub(crate) quota: AtomicUsize,
     overflow: AtomicBool,
     /// Split-phase pipeline depth (sub-worlds inherit it on split).
-    depth: usize,
+    pub(crate) depth: usize,
+    /// Watchdog deadline of every blocking rendezvous (None = wait
+    /// forever); sub-worlds inherit it on split.
+    pub(crate) timeout: Option<Duration>,
+    /// Tier label of diagnostics: "global" for a root world, "local"
+    /// for every sub-world produced by [`Transport::split`].
+    pub(crate) tier: &'static str,
     /// Scratch register of [`Transport::allreduce_min_u64`].
     reduce_slot: AtomicU64,
     /// Per-rank `(color, key)` contributions of the in-flight
@@ -241,8 +451,42 @@ struct WorldInner {
     /// statistics aggregation ([`World::local_stats`]).
     children: Mutex<Vec<World>>,
     /// Split-phase mailbox state (epoch-stamped ring buffers).
-    nb: nonblocking::NbWorld,
-    stats: CommStats,
+    pub(crate) nb: nonblocking::NbWorld,
+    pub(crate) stats: CommStats,
+}
+
+impl WorldInner {
+    /// Count and build a [`CommError::Timeout`] from a barrier expiry.
+    fn barrier_timeout(
+        &self,
+        rank: usize,
+        op: &'static str,
+        missing: Vec<usize>,
+    ) -> CommError {
+        self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+        let present = (0..self.m)
+            .filter(|r| !missing.contains(r))
+            .collect();
+        CommError::Timeout {
+            tier: self.tier,
+            op,
+            rank,
+            epoch: None,
+            ring_slot: None,
+            waited: self.timeout.unwrap_or_default(),
+            missing,
+            present,
+        }
+    }
+
+    /// Count and build a [`CommError::Poisoned`].
+    pub(crate) fn poisoned(
+        &self,
+        rank: usize,
+        context: String,
+    ) -> CommError {
+        CommError::Poisoned { tier: self.tier, rank, context }
+    }
 }
 
 /// Shared communication world; build once via [`WorldBuilder`], then
@@ -252,7 +496,7 @@ pub struct World {
     inner: Arc<WorldInner>,
 }
 
-/// The one constructor of [`World`]: number of ranks plus the two tuning
+/// The one constructor of [`World`]: number of ranks plus the tuning
 /// knobs that used to be spread over a constructor pair.
 ///
 /// * `quota` — starting spike-buffer size per rank pair (NEST starts
@@ -262,19 +506,30 @@ pub struct World {
 ///   this many exchanges in flight per rank (`2·depth` epoch-stamped
 ///   slots per (dest, src) pair — see the [`nonblocking`] module docs
 ///   for why `2·depth` suffices).  Default 1.
+/// * `timeout` — watchdog deadline of every blocking rendezvous
+///   (barrier frames and split-phase completion waits).  Default `None`
+///   = wait forever, the historical behavior.
 ///
-/// Sub-worlds created by [`Transport::split`] inherit the parent's depth
-/// and its *current* quota.
+/// Sub-worlds created by [`Transport::split`] inherit the parent's
+/// depth, timeout and its *current* quota.
 #[derive(Clone, Copy, Debug)]
 pub struct WorldBuilder {
     m: usize,
     quota: usize,
     depth: usize,
+    timeout: Option<Duration>,
+    tier: &'static str,
 }
 
 impl WorldBuilder {
     pub fn new(m: usize) -> WorldBuilder {
-        WorldBuilder { m, quota: 1024, depth: 1 }
+        WorldBuilder {
+            m,
+            quota: 1024,
+            depth: 1,
+            timeout: None,
+            tier: "global",
+        }
     }
 
     pub fn quota(mut self, quota: usize) -> WorldBuilder {
@@ -287,8 +542,20 @@ impl WorldBuilder {
         self
     }
 
+    /// Watchdog deadline for every blocking rendezvous of the world
+    /// (None = wait forever).
+    pub fn timeout(mut self, timeout: Option<Duration>) -> WorldBuilder {
+        self.timeout = timeout;
+        self
+    }
+
+    fn tier(mut self, tier: &'static str) -> WorldBuilder {
+        self.tier = tier;
+        self
+    }
+
     pub fn build(self) -> World {
-        let WorldBuilder { m, quota, depth } = self;
+        let WorldBuilder { m, quota, depth, timeout, tier } = self;
         assert!(m >= 1);
         assert!(depth >= 1, "pipeline depth must be >= 1");
         let mailboxes = (0..m)
@@ -297,11 +564,13 @@ impl WorldBuilder {
         World {
             inner: Arc::new(WorldInner {
                 m,
-                barrier: Barrier::new(m),
+                barrier: WaitBarrier::new(m),
                 mailboxes,
                 quota: AtomicUsize::new(quota.max(1)),
                 overflow: AtomicBool::new(false),
                 depth,
+                timeout,
+                tier,
                 reduce_slot: AtomicU64::new(u64::MAX),
                 split_slots: Mutex::new(vec![(0, 0); m]),
                 split_result: Mutex::new((0..m).map(|_| None).collect()),
@@ -353,13 +622,19 @@ impl World {
 
 /// Per-rank handle into the [`World`].
 pub struct Communicator {
-    world: Arc<WorldInner>,
-    rank: usize,
+    pub(crate) world: Arc<WorldInner>,
+    pub(crate) rank: usize,
 }
 
 /// Per-rank view of a communication fabric: the collective global
 /// exchange and the rank-local pathway, with recycled buffers (see the
 /// module docs for the buffer-recycling contract).
+///
+/// Collectives are fallible: with a watchdog deadline armed they return
+/// [`CommError::Timeout`] instead of hanging on a dead peer, and a
+/// poisoned shared lock surfaces as [`CommError::Poisoned`].  Without a
+/// deadline the historical wait-forever semantics apply and the
+/// `Result` is always `Ok` absent peer panics.
 pub trait Transport {
     /// Communicator type produced by [`Transport::split`].  The
     /// shared-memory world splits into further shared-memory worlds; an
@@ -372,6 +647,11 @@ pub trait Transport {
     /// Number of ranks in the world.
     fn m_ranks(&self) -> usize;
 
+    /// Current spike-buffer quota per rank pair (grows via the resize
+    /// protocol; checkpoints record it so a restored run starts from
+    /// the grown value instead of re-learning it).
+    fn quota(&self) -> usize;
+
     /// Collective communicator split, the `MPI_Comm_split` shape: every
     /// rank calls `split` concurrently; ranks passing the same `color`
     /// form one sub-communicator, with ranks assigned in ascending
@@ -380,7 +660,7 @@ pub trait Transport {
     /// statistics — so collectives on disjoint groups never synchronize
     /// with each other.  Cold path (setup only): the engine splits once
     /// to build the per-area-group local tier.
-    fn split(&self, color: u64, key: u64) -> Self::Sub;
+    fn split(&self, color: u64, key: u64) -> Result<Self::Sub, CommError>;
 
     /// Collective all-to-all spike exchange.  `send[d]` is the buffer
     /// destined for rank `d` (must have length M) and is drained by the
@@ -390,17 +670,19 @@ pub trait Transport {
     /// data-exchange parts.
     ///
     /// All ranks must call this the same number of times (collective
-    /// semantics); mismatch deadlocks, as real MPI would.
+    /// semantics); mismatch deadlocks — or, with a watchdog armed,
+    /// expires into [`CommError::Timeout`].
     fn alltoall_into(
         &self,
         send: &mut [Vec<SpikeMsg>],
         recv: &mut Vec<Vec<SpikeMsg>>,
-    ) -> ExchangeTiming;
+    ) -> Result<ExchangeTiming, CommError>;
 
     /// Rank-local exchange of the structure-aware short-range pathway:
     /// `recv` is cleared and swapped with `send`, so the sent spikes
     /// come back in `recv` and `send` is left empty (capacity
-    /// recycled).  No synchronization with other ranks.
+    /// recycled).  No synchronization with other ranks (and therefore
+    /// infallible).
     fn local_swap_into(
         &self,
         send: &mut Vec<SpikeMsg>,
@@ -410,20 +692,22 @@ pub trait Transport {
     /// Control-plane collective: the minimum of `v` over all ranks (an
     /// `MPI_Allreduce(MIN)`).  Cold path — used to agree on run-wide
     /// parameters derived from rank-local state (e.g. the sustainable
-    /// split-phase pipeline depth), so it deliberately stays off the
+    /// split-phase pipeline depth) and as the barrier framing of the
+    /// collective checkpoint write, so it deliberately stays off the
     /// spike-statistics counters.  Collective semantics: every rank must
     /// call it the same number of times.
-    fn allreduce_min_u64(&self, v: u64) -> u64;
+    fn allreduce_min_u64(&self, v: u64) -> Result<u64, CommError>;
 
     /// Allocating convenience wrapper around [`Transport::alltoall_into`]
     /// for cold paths (setup exchanges, tests).
+    #[allow(clippy::type_complexity)]
     fn alltoall(
         &self,
         send: &mut [Vec<SpikeMsg>],
-    ) -> (Vec<Vec<SpikeMsg>>, ExchangeTiming) {
+    ) -> Result<(Vec<Vec<SpikeMsg>>, ExchangeTiming), CommError> {
         let mut recv = Vec::new();
-        let timing = self.alltoall_into(send, &mut recv);
-        (recv, timing)
+        let timing = self.alltoall_into(send, &mut recv)?;
+        Ok((recv, timing))
     }
 
     /// Allocating convenience wrapper around
@@ -444,6 +728,17 @@ pub struct ExchangeTiming {
     pub data_secs: f64,
 }
 
+impl Communicator {
+    /// Watchdogged barrier frame: waits like `Barrier::wait`, expires
+    /// into a [`CommError::Timeout`] naming the missing ranks.
+    fn barrier_wait(&self, op: &'static str) -> Result<(), CommError> {
+        let w = &*self.world;
+        w.barrier
+            .wait(self.rank, w.timeout)
+            .map_err(|missing| w.barrier_timeout(self.rank, op, missing))
+    }
+}
+
 impl Transport for Communicator {
     type Sub = Communicator;
 
@@ -455,31 +750,67 @@ impl Transport for Communicator {
         self.world.m
     }
 
-    fn split(&self, color: u64, key: u64) -> Communicator {
+    fn quota(&self) -> usize {
+        self.world.quota.load(Ordering::Relaxed)
+    }
+
+    fn split(
+        &self,
+        color: u64,
+        key: u64,
+    ) -> Result<Communicator, CommError> {
         let w = &*self.world;
         // barrier-framed register protocol (cold path).  Frame start:
         // nobody can deposit into `split_slots` while a straggler of the
         // previous collective is still inside it.
-        w.barrier.wait();
-        w.split_slots.lock().unwrap()[self.rank] = (color, key);
-        w.barrier.wait();
+        self.barrier_wait("split")?;
+        w.split_slots
+            .lock()
+            .map_err(|_| {
+                w.poisoned(
+                    self.rank,
+                    "holding the split register".to_string(),
+                )
+            })?[self.rank] = (color, key);
+        self.barrier_wait("split")?;
         // every contribution is visible; rank 0 materializes one
         // sub-world per color (they must be *shared*, so a single rank
         // creates them) and publishes each rank's handle + sub-rank
         if self.rank == 0 {
-            let slots = w.split_slots.lock().unwrap().clone();
+            let slots = w
+                .split_slots
+                .lock()
+                .map_err(|_| {
+                    w.poisoned(
+                        self.rank,
+                        "holding the split register".to_string(),
+                    )
+                })?
+                .clone();
             let mut groups: std::collections::BTreeMap<u64, Vec<usize>> =
                 std::collections::BTreeMap::new();
             for (rank, &(c, _)) in slots.iter().enumerate() {
                 groups.entry(c).or_default().push(rank);
             }
-            let mut results = w.split_result.lock().unwrap();
-            let mut children = w.children.lock().unwrap();
+            let mut results = w.split_result.lock().map_err(|_| {
+                w.poisoned(
+                    self.rank,
+                    "holding the split result register".to_string(),
+                )
+            })?;
+            let mut children = w.children.lock().map_err(|_| {
+                w.poisoned(
+                    self.rank,
+                    "holding the child-world registry".to_string(),
+                )
+            })?;
             for mut members in groups.into_values() {
                 members.sort_by_key(|&r| (slots[r].1, r));
                 let sub = WorldBuilder::new(members.len())
                     .quota(w.quota.load(Ordering::Relaxed))
                     .depth(w.depth)
+                    .timeout(w.timeout)
+                    .tier("local")
                     .build();
                 children.push(sub.clone());
                 for (sub_rank, &r) in members.iter().enumerate() {
@@ -487,27 +818,35 @@ impl Transport for Communicator {
                 }
             }
         }
-        w.barrier.wait();
+        self.barrier_wait("split")?;
         // each rank takes exactly its own entry; re-entry into the next
         // collective's first barrier implies every entry was taken, so
         // the register is reusable without a fourth barrier
-        let (sub, sub_rank) = w.split_result.lock().unwrap()[self.rank]
+        let (sub, sub_rank) = w
+            .split_result
+            .lock()
+            .map_err(|_| {
+                w.poisoned(
+                    self.rank,
+                    "holding the split result register".to_string(),
+                )
+            })?[self.rank]
             .take()
             .expect("split result not published");
-        sub.communicator(sub_rank)
+        Ok(sub.communicator(sub_rank))
     }
 
     fn alltoall_into(
         &self,
         send: &mut [Vec<SpikeMsg>],
         recv: &mut Vec<Vec<SpikeMsg>>,
-    ) -> ExchangeTiming {
+    ) -> Result<ExchangeTiming, CommError> {
         assert_eq!(send.len(), self.world.m, "send buffer per rank required");
         let w = &*self.world;
 
         // --- synchronization: explicit barrier in front of the collective
         let t0 = Instant::now();
-        w.barrier.wait();
+        self.barrier_wait("alltoall (sync barrier)")?;
         let t1 = Instant::now();
         let sync_secs = (t1 - t0).as_secs_f64();
         w.stats
@@ -523,7 +862,7 @@ impl Transport for Communicator {
         w.stats
             .max_send_per_pair
             .fetch_max(my_max, Ordering::Relaxed);
-        w.barrier.wait();
+        self.barrier_wait("alltoall (overflow vote)")?;
         // after the barrier every rank observes the same flag; the reset
         // happens strictly between two further barriers so no rank can
         // read a half-updated flag (all ranks take the same branch)
@@ -531,7 +870,7 @@ impl Transport for Communicator {
         if need_resize {
             // every rank grows its buffers until the largest message fits,
             // then a secondary exchange round follows (paper §4.1)
-            w.barrier.wait();
+            self.barrier_wait("alltoall (resize round)")?;
             if self.rank == 0 {
                 let mut q = w.quota.load(Ordering::Relaxed);
                 let need = w.stats.max_send_per_pair.load(Ordering::Relaxed);
@@ -542,7 +881,7 @@ impl Transport for Communicator {
                 w.overflow.store(false, Ordering::Relaxed);
                 w.stats.resize_rounds.fetch_add(1, Ordering::Relaxed);
             }
-            w.barrier.wait();
+            self.barrier_wait("alltoall (resize round)")?;
         }
 
         // --- data exchange: write own column, then read own row.  Both
@@ -552,25 +891,43 @@ impl Transport for Communicator {
         let mut bytes = 0usize;
         for (dest, buf) in send.iter_mut().enumerate() {
             bytes += buf.len() * SPIKE_WIRE_BYTES;
-            let mut slot = w.mailboxes[dest][self.rank].lock().unwrap();
+            let mut slot =
+                w.mailboxes[dest][self.rank].lock().map_err(|_| {
+                    w.poisoned(
+                        self.rank,
+                        format!(
+                            "holding mailbox slot (dest={dest}, src={})",
+                            self.rank
+                        ),
+                    )
+                })?;
             debug_assert!(slot.is_empty(), "mailbox not drained");
             std::mem::swap(&mut *slot, buf);
         }
         w.stats
             .bytes_sent
             .fetch_add(bytes as u64, Ordering::Relaxed);
-        w.barrier.wait();
+        self.barrier_wait("alltoall (deposit)")?;
         recv.resize_with(w.m, Vec::new);
         for (src, out) in recv.iter_mut().enumerate() {
             out.clear();
-            let mut slot = w.mailboxes[self.rank][src].lock().unwrap();
+            let mut slot =
+                w.mailboxes[self.rank][src].lock().map_err(|_| {
+                    w.poisoned(
+                        self.rank,
+                        format!(
+                            "holding mailbox slot (dest={}, src={src})",
+                            self.rank
+                        ),
+                    )
+                })?;
             std::mem::swap(&mut *slot, out);
         }
         w.stats.alltoall_calls.fetch_add(1, Ordering::Relaxed);
         // final barrier so nobody races ahead into the next call's writes
-        w.barrier.wait();
+        self.barrier_wait("alltoall (drain)")?;
         let data_secs = t1.elapsed().as_secs_f64();
-        ExchangeTiming { sync_secs, data_secs }
+        Ok(ExchangeTiming { sync_secs, data_secs })
     }
 
     fn local_swap_into(
@@ -583,20 +940,20 @@ impl Transport for Communicator {
         std::mem::swap(send, recv);
     }
 
-    fn allreduce_min_u64(&self, v: u64) -> u64 {
+    fn allreduce_min_u64(&self, v: u64) -> Result<u64, CommError> {
         let w = &*self.world;
         // barrier-framed register protocol: no rank can still be reading
         // the previous reduction when rank 0 resets (it could not have
         // reached this call's first barrier otherwise), and no rank can
         // read before every contribution landed
-        w.barrier.wait();
+        self.barrier_wait("allreduce_min")?;
         if self.rank == 0 {
             w.reduce_slot.store(u64::MAX, Ordering::Relaxed);
         }
-        w.barrier.wait();
+        self.barrier_wait("allreduce_min")?;
         w.reduce_slot.fetch_min(v, Ordering::Relaxed);
-        w.barrier.wait();
-        w.reduce_slot.load(Ordering::Relaxed)
+        self.barrier_wait("allreduce_min")?;
+        Ok(w.reduce_slot.load(Ordering::Relaxed))
     }
 }
 
@@ -635,7 +992,7 @@ mod tests {
             let mut send: Vec<Vec<SpikeMsg>> = (0..4)
                 .map(|d| vec![msg((100 * rank + d) as Gid, 7)])
                 .collect();
-            let (recv, _) = comm.alltoall(&mut send);
+            let (recv, _) = comm.alltoall(&mut send).unwrap();
             recv
         });
         for (rank, recv) in results.iter().enumerate() {
@@ -654,7 +1011,7 @@ mod tests {
             let mut send: Vec<Vec<SpikeMsg>> = (0..2)
                 .map(|_| (0..10).map(|i| msg(rank as Gid, i)).collect())
                 .collect();
-            let (recv, _) = comm.alltoall(&mut send);
+            let (recv, _) = comm.alltoall(&mut send).unwrap();
             recv
         });
         for recv in &results {
@@ -675,7 +1032,7 @@ mod tests {
                 let mut send: Vec<Vec<SpikeMsg>> = (0..3)
                     .map(|_| vec![msg(rank as Gid, round)])
                     .collect();
-                let (recv, _) = comm.alltoall(&mut send);
+                let (recv, _) = comm.alltoall(&mut send).unwrap();
                 assert!(recv
                     .iter()
                     .flatten()
@@ -700,7 +1057,7 @@ mod tests {
                     let mut send: Vec<Vec<SpikeMsg>> = (0..2)
                         .map(|_| (0..n).map(|i| msg(rank as Gid, i)).collect())
                         .collect();
-                    let (recv, _) = comm.alltoall(&mut send);
+                    let (recv, _) = comm.alltoall(&mut send).unwrap();
                     let n: usize = recv.iter().map(|b| b.len()).sum();
                     assert_eq!(n, 10 + 1);
                 });
@@ -740,7 +1097,7 @@ mod tests {
                     let mut send: Vec<Vec<SpikeMsg>> = (0..2)
                         .map(|_| vec![msg(rank as Gid, 0); 3])
                         .collect();
-                    comm.alltoall(&mut send);
+                    comm.alltoall(&mut send).unwrap();
                 });
             }
         });
@@ -752,6 +1109,8 @@ mod tests {
         // no split-phase traffic in a blocking-only run
         assert_eq!(snap.overlapped_exchanges, 0);
         assert_eq!(snap.hidden_secs, 0.0);
+        // and no watchdog fired (none armed)
+        assert_eq!(snap.timeouts, 0);
     }
 
     #[test]
@@ -789,7 +1148,8 @@ mod tests {
                                     ));
                                 }
                             }
-                            comm.alltoall_into(&mut send, &mut recv);
+                            comm.alltoall_into(&mut send, &mut recv)
+                                .unwrap();
                             assert!(
                                 send.iter().all(|b| b.is_empty()),
                                 "send not drained in round {round}"
@@ -852,7 +1212,7 @@ mod tests {
             for i in 0..32 {
                 send[0].push(msg(i, round));
             }
-            comm.alltoall_into(send, recv);
+            comm.alltoall_into(send, recv).unwrap();
             assert_eq!(recv[0].len(), 32);
             assert!(recv[0].iter().all(|m| m.cycle == round));
         };
@@ -895,8 +1255,8 @@ mod tests {
         let results = run_ranks(4, 64, |rank, comm| {
             // round 1: min of (10 + rank); round 2: min of (100 - rank).
             // Back-to-back calls exercise the register-reset framing.
-            let a = comm.allreduce_min_u64(10 + rank as u64);
-            let b = comm.allreduce_min_u64(100 - rank as u64);
+            let a = comm.allreduce_min_u64(10 + rank as u64).unwrap();
+            let b = comm.allreduce_min_u64(100 - rank as u64).unwrap();
             (a, b)
         });
         assert!(results.iter().all(|&(a, b)| a == 10 && b == 97));
@@ -908,7 +1268,7 @@ mod tests {
         thread::scope(|s| {
             for rank in 0..2 {
                 let comm = world.communicator(rank);
-                s.spawn(move || comm.allreduce_min_u64(rank as u64));
+                s.spawn(move || comm.allreduce_min_u64(rank as u64).unwrap());
             }
         });
         let snap = world.stats().snapshot();
@@ -929,7 +1289,7 @@ mod tests {
                     let comm = world.communicator(rank);
                     s.spawn(move || {
                         let color = (rank / 2) as u64;
-                        let local = comm.split(color, rank as u64);
+                        let local = comm.split(color, rank as u64).unwrap();
                         assert_eq!(local.m_ranks(), 2);
                         assert_eq!(local.rank(), rank % 2);
                         let mut send: Vec<Vec<SpikeMsg>> = (0..2)
@@ -937,7 +1297,7 @@ mod tests {
                                 vec![msg((100 * rank) as Gid, color as u32)]
                             })
                             .collect();
-                        let (recv, _) = local.alltoall(&mut send);
+                        let (recv, _) = local.alltoall(&mut send).unwrap();
                         recv
                     })
                 })
@@ -981,17 +1341,17 @@ mod tests {
             for rank in 0..2 {
                 let comm = world.communicator(rank);
                 s.spawn(move || {
-                    let local = comm.split(0, rank as u64);
+                    let local = comm.split(0, rank as u64).unwrap();
                     let mut send: Vec<Vec<SpikeMsg>> =
                         (0..2).map(|_| vec![msg(rank as Gid, 1)]).collect();
-                    local.alltoall(&mut send);
+                    local.alltoall(&mut send).unwrap();
                     let mut lsend = vec![msg(rank as Gid, 2)];
                     let mut lrecv = Vec::new();
                     local.local_swap_into(&mut lsend, &mut lrecv);
                     let mut send: Vec<Vec<SpikeMsg>> = (0..2)
                         .map(|_| vec![msg(rank as Gid, 3); 2])
                         .collect();
-                    comm.alltoall(&mut send);
+                    comm.alltoall(&mut send).unwrap();
                 });
             }
         });
@@ -1023,7 +1383,7 @@ mod tests {
         // MPI_Comm_split semantics: descending keys reverse the
         // sub-ranks
         let results = run_ranks(3, 64, |rank, comm| {
-            let local = comm.split(7, (10 - rank) as u64);
+            let local = comm.split(7, (10 - rank) as u64).unwrap();
             (local.rank(), local.m_ranks())
         });
         assert_eq!(results, vec![(2, 3), (1, 3), (0, 3)]);
@@ -1039,11 +1399,11 @@ mod tests {
             for rank in 0..3 {
                 let comm = world.communicator(rank);
                 s.spawn(move || {
-                    let local = comm.split(rank as u64, 0);
+                    let local = comm.split(rank as u64, 0).unwrap();
                     assert_eq!(local.m_ranks(), 1);
                     assert_eq!(local.rank(), 0);
                     let mut send = vec![vec![msg(rank as Gid, 5)]];
-                    let (recv, _) = local.alltoall(&mut send);
+                    let (recv, _) = local.alltoall(&mut send).unwrap();
                     assert_eq!(recv[0], vec![msg(rank as Gid, 5)]);
                     let mut lsend = vec![msg(rank as Gid, 6)];
                     let recv = local.local_swap(&mut lsend);
@@ -1068,14 +1428,18 @@ mod tests {
             for rank in 0..4 {
                 let comm = world.communicator(rank);
                 s.spawn(move || {
-                    let a = comm.split((rank % 2) as u64, rank as u64);
+                    let a = comm
+                        .split((rank % 2) as u64, rank as u64)
+                        .unwrap();
                     assert_eq!(a.m_ranks(), 2);
-                    let b = comm.split((rank / 2) as u64, rank as u64);
+                    let b = comm
+                        .split((rank / 2) as u64, rank as u64)
+                        .unwrap();
                     assert_eq!(b.m_ranks(), 2);
-                    let c = b.split(b.rank() as u64, 0);
+                    let c = b.split(b.rank() as u64, 0).unwrap();
                     assert_eq!(c.m_ranks(), 1);
                     let mut send = vec![vec![msg(rank as Gid, 9)]];
-                    let (recv, _) = c.alltoall(&mut send);
+                    let (recv, _) = c.alltoall(&mut send).unwrap();
                     assert_eq!(recv[0].len(), 1);
                 });
             }
@@ -1099,14 +1463,15 @@ mod tests {
                             (0..10).map(|i| msg(rank as Gid, i)).collect()
                         })
                         .collect();
-                    comm.alltoall(&mut send);
-                    let local = comm.split(0, rank as u64);
+                    comm.alltoall(&mut send).unwrap();
+                    let local = comm.split(0, rank as u64).unwrap();
+                    assert_eq!(local.quota(), comm.quota());
                     let mut send: Vec<Vec<SpikeMsg>> = (0..2)
                         .map(|_| {
                             (0..10).map(|i| msg(rank as Gid, i)).collect()
                         })
                         .collect();
-                    local.alltoall(&mut send);
+                    local.alltoall(&mut send).unwrap();
                 });
             }
         });
@@ -1130,12 +1495,68 @@ mod tests {
             }
             let mut send: Vec<Vec<SpikeMsg>> =
                 (0..2).map(|_| Vec::new()).collect();
-            let (_, timing) = comm.alltoall(&mut send);
+            let (_, timing) = comm.alltoall(&mut send).unwrap();
             timing
         });
         for t in &results {
             assert!(t.sync_secs >= 0.0);
             assert!(t.data_secs >= 0.0);
         }
+    }
+
+    #[test]
+    fn barrier_timeout_names_missing_ranks() {
+        // rank 1 never shows up at the collective: the armed watchdog
+        // must fire with the missing rank and tier in the diagnostic
+        // instead of hanging forever
+        let world = WorldBuilder::new(2)
+            .quota(4)
+            .timeout(Some(Duration::from_millis(50)))
+            .build();
+        let comm = world.communicator(0);
+        let mut send: Vec<Vec<SpikeMsg>> =
+            (0..2).map(|_| Vec::new()).collect();
+        let mut recv = Vec::new();
+        let err = comm
+            .alltoall_into(&mut send, &mut recv)
+            .expect_err("watchdog did not fire");
+        match &err {
+            CommError::Timeout { tier, missing, present, .. } => {
+                assert_eq!(*tier, "global");
+                assert_eq!(missing, &vec![1]);
+                assert_eq!(present, &vec![0]);
+            }
+            other => panic!("unexpected error variant: {other}"),
+        }
+        let msg = err.to_string();
+        assert!(msg.contains("global"), "{msg}");
+        assert!(msg.contains("missing ranks [1]"), "{msg}");
+        assert_eq!(world.stats().snapshot().timeouts, 1);
+    }
+
+    #[test]
+    fn no_timeout_means_wait_forever_semantics_preserved() {
+        // without a deadline the world behaves exactly as before: a
+        // staggered arrival completes fine and counts no timeouts
+        let results = run_ranks(3, 64, |rank, comm| {
+            if rank == 2 {
+                thread::sleep(Duration::from_millis(20));
+            }
+            comm.allreduce_min_u64(rank as u64).unwrap()
+        });
+        assert!(results.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn split_timeout_fires_on_missing_rank() {
+        let world = WorldBuilder::new(2)
+            .quota(4)
+            .timeout(Some(Duration::from_millis(50)))
+            .build();
+        let comm = world.communicator(0);
+        let err = comm.split(0, 0).expect_err("split watchdog");
+        let msg = err.to_string();
+        assert!(msg.contains("split"), "{msg}");
+        assert!(msg.contains("missing ranks [1]"), "{msg}");
     }
 }

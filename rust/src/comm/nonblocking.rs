@@ -68,6 +68,17 @@
 //! rendezvous, quota settling and depth bookkeeping stay with
 //! `complete`, which must still be called exactly once per exchange.
 //!
+//! # The completion watchdog
+//!
+//! With a deadline armed on the world
+//! ([`super::WorldBuilder::timeout`]), the rendezvous wait inside
+//! [`Pending::complete`] expires into a structured
+//! [`CommError::Timeout`](super::CommError) instead of waiting forever
+//! on a dead peer.  The diagnostic names the tier, the exchange epoch
+//! (`seq`), the mailbox ring slot (`seq % 2D`) and — from the per-source
+//! drain flags that the incremental fast path maintains anyway — exactly
+//! which source ranks have deposited and which are missing.
+//!
 //! # The split-phase quota-resize protocol
 //!
 //! The blocking collective agrees on buffer overflow via a flag guarded
@@ -114,10 +125,13 @@
 //! [`CommStats::overlapped_exchanges`](super::CommStats) and surface
 //! through [`CommStatsSnapshot`](super::CommStatsSnapshot).
 
-use super::{Communicator, SpikeMsg, Transport, WorldInner, SPIKE_WIRE_BYTES};
+use super::{
+    CommError, Communicator, SpikeMsg, Transport, WorldInner,
+    SPIKE_WIRE_BYTES,
+};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex, TryLockError};
+use std::time::{Duration, Instant};
 
 /// One epoch-stamped mailbox slot of a (dest, src) pair.
 #[derive(Default)]
@@ -216,17 +230,19 @@ pub trait Pending {
     /// Incremental per-source completion: if source rank `src`'s deposit
     /// for this exchange has already landed, drain it into `out`
     /// (overwriting it, capacity recycled through the mailbox) and
-    /// return `true`; return `true` immediately if `src` was drained by
-    /// an earlier call (leaving `out` untouched).  **Never blocks** —
-    /// a missing deposit, or a sender currently holding the slot lock,
-    /// yields `false`.  A successful drain is remembered:
-    /// [`Pending::complete`] skips the source and must still be called
-    /// exactly once to finish the exchange.
+    /// return `Ok(true)`; return `Ok(true)` immediately if `src` was
+    /// drained by an earlier call (leaving `out` untouched).  **Never
+    /// blocks** — a missing deposit, or a sender currently holding the
+    /// slot lock, yields `Ok(false)`.  A poisoned slot (a peer panicked
+    /// mid-deposit) surfaces as
+    /// [`CommError::Poisoned`](super::CommError).  A successful drain is
+    /// remembered: [`Pending::complete`] skips the source and must still
+    /// be called exactly once to finish the exchange.
     fn try_complete_source(
         &mut self,
         src: usize,
         out: &mut Vec<SpikeMsg>,
-    ) -> bool;
+    ) -> Result<bool, CommError>;
 
     /// Rendezvous with all remaining deposits of this exchange: `recv`
     /// is resized to M slots and `recv[s]` is overwritten with the
@@ -234,8 +250,23 @@ pub trait Pending {
     /// recycled through the mailbox).  Sources already drained by
     /// [`Pending::try_complete_source`] are skipped — their `recv[s]`
     /// entry is left exactly as the early drain filled it.  Blocks only
-    /// for senders that have not deposited yet.
-    fn complete(self, recv: &mut Vec<Vec<SpikeMsg>>) -> CompletionTiming;
+    /// for senders that have not deposited yet; with a watchdog deadline
+    /// armed on the world, an expired wait returns
+    /// [`CommError::Timeout`](super::CommError) naming the exchange
+    /// epoch, ring slot and the missing source ranks.
+    fn complete(
+        self,
+        recv: &mut Vec<Vec<SpikeMsg>>,
+    ) -> Result<CompletionTiming, CommError>;
+
+    /// Consume the handle *without* completing the exchange — the
+    /// error-path teardown.  Once one collective has returned a typed
+    /// [`CommError`](super::CommError), the run is unwinding and the
+    /// peers' rendezvous is already lost; abandoning the remaining
+    /// in-flight handles keeps the drop-time debug assert (which exists
+    /// to catch *forgotten* completions on the happy path) from turning
+    /// the typed error into a panic.
+    fn abandon(self);
 }
 
 /// A transport with a split-phase global exchange in addition to the
@@ -250,7 +281,10 @@ pub trait SplitTransport: Transport {
     /// any other rank.  `send[d]` is drained into the mailbox for rank
     /// `d` (capacity recycled).  The returned handle must be completed
     /// before this rank posts its `depth`-th successor.
-    fn alltoall_start(&self, send: &mut [Vec<SpikeMsg>]) -> Self::Pending;
+    fn alltoall_start(
+        &self,
+        send: &mut [Vec<SpikeMsg>],
+    ) -> Result<Self::Pending, CommError>;
 }
 
 /// Handle to an in-flight exchange of the shared-memory world.
@@ -265,7 +299,8 @@ pub struct PendingExchange {
     /// feeds the hidden-latency accounting at completion.
     last_arrival: Instant,
     /// Per-source early-drain flags (the one small allocation a posted
-    /// exchange makes; every spike buffer is recycled).
+    /// exchange makes; every spike buffer is recycled).  Doubles as the
+    /// deposited/missing ledger of the watchdog diagnostic.
     drained: Vec<bool>,
     completed: bool,
 }
@@ -283,29 +318,88 @@ impl Drop for PendingExchange {
     }
 }
 
+impl PendingExchange {
+    /// Count and build the watchdog diagnostic of an expired completion
+    /// wait: which sources have deposited (or were drained early) and
+    /// which are still missing.
+    fn deposit_timeout(&self, waited: Duration) -> CommError {
+        let w = &*self.world;
+        let slot_idx = (self.seq % w.nb.ring()) as usize;
+        let mut missing = Vec::new();
+        let mut present = Vec::new();
+        for s in 0..w.m {
+            let deposited = self.drained[s]
+                || match w.nb.slots[self.rank][s][slot_idx].state.try_lock()
+                {
+                    Ok(st) => st.filled && st.seq == self.seq,
+                    // a sender mid-deposit or a poisoned slot: either
+                    // way the deposit has not been consumable yet
+                    Err(_) => false,
+                };
+            if deposited {
+                present.push(s);
+            } else {
+                missing.push(s);
+            }
+        }
+        w.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+        CommError::Timeout {
+            tier: w.tier,
+            op: "split-phase complete",
+            rank: self.rank,
+            epoch: Some(self.seq),
+            ring_slot: Some(slot_idx),
+            waited,
+            missing,
+            present,
+        }
+    }
+
+    fn slot_poisoned(&self, src: usize) -> CommError {
+        let w = &*self.world;
+        let slot_idx = (self.seq % w.nb.ring()) as usize;
+        w.poisoned(
+            self.rank,
+            format!(
+                "holding split-phase slot (dest={}, src={src}, \
+                 ring={slot_idx})",
+                self.rank
+            ),
+        )
+    }
+}
+
 impl Pending for PendingExchange {
     fn post_secs(&self) -> f64 {
         self.post_secs
+    }
+
+    fn abandon(mut self) {
+        self.completed = true;
     }
 
     fn try_complete_source(
         &mut self,
         src: usize,
         out: &mut Vec<SpikeMsg>,
-    ) -> bool {
+    ) -> Result<bool, CommError> {
         if self.drained[src] {
-            return true;
+            return Ok(true);
         }
         let w = &*self.world;
         let slot_idx = (self.seq % w.nb.ring()) as usize;
         let slot = &w.nb.slots[self.rank][src][slot_idx];
         // condvar-free fast path: never block, not even on the slot
         // mutex (a sender mid-deposit just means "not ready yet")
-        let Ok(mut st) = slot.state.try_lock() else {
-            return false;
+        let mut st = match slot.state.try_lock() {
+            Ok(st) => st,
+            Err(TryLockError::WouldBlock) => return Ok(false),
+            Err(TryLockError::Poisoned(_)) => {
+                return Err(self.slot_poisoned(src));
+            }
         };
         if !(st.filled && st.seq == self.seq) {
-            return false;
+            return Ok(false);
         }
         if let Some(at) = st.deposited_at {
             if at > self.last_arrival {
@@ -318,10 +412,15 @@ impl Pending for PendingExchange {
         drop(st);
         self.drained[src] = true;
         w.stats.early_drained_sources.fetch_add(1, Ordering::Relaxed);
-        true
+        Ok(true)
     }
 
-    fn complete(mut self, recv: &mut Vec<Vec<SpikeMsg>>) -> CompletionTiming {
+    fn complete(
+        mut self,
+        recv: &mut Vec<Vec<SpikeMsg>>,
+    ) -> Result<CompletionTiming, CommError> {
+        // mark completed up front: the Drop assert must not fire a
+        // second panic while an error from this method unwinds
         self.completed = true;
         let w = &*self.world;
         let seq = self.seq;
@@ -331,18 +430,45 @@ impl Pending for PendingExchange {
         let mut last_arrival = self.last_arrival;
 
         recv.resize_with(w.m, Vec::new);
-        for (src, out) in recv.iter_mut().enumerate() {
+        for src in 0..w.m {
             if self.drained[src] {
                 // consumed by the incremental fast path during the
                 // in-flight window; recv[src] already holds the payload
                 continue;
             }
             let slot = &w.nb.slots[self.rank][src][slot_idx];
-            let mut st = slot.state.lock().unwrap();
+            let mut st = slot
+                .state
+                .lock()
+                .map_err(|_| self.slot_poisoned(src))?;
             if !(st.filled && st.seq == seq) {
                 let w0 = Instant::now();
-                while !(st.filled && st.seq == seq) {
-                    st = slot.ready.wait(st).unwrap();
+                match w.timeout {
+                    None => {
+                        while !(st.filled && st.seq == seq) {
+                            st = slot
+                                .ready
+                                .wait(st)
+                                .map_err(|_| self.slot_poisoned(src))?;
+                        }
+                    }
+                    Some(limit) => {
+                        let deadline = w0 + limit;
+                        while !(st.filled && st.seq == seq) {
+                            let now = Instant::now();
+                            if now >= deadline {
+                                drop(st);
+                                return Err(
+                                    self.deposit_timeout(w0.elapsed())
+                                );
+                            }
+                            st = slot
+                                .ready
+                                .wait_timeout(st, deadline - now)
+                                .map_err(|_| self.slot_poisoned(src))?
+                                .0;
+                        }
+                    }
                 }
                 wait_secs += w0.elapsed().as_secs_f64();
             }
@@ -351,9 +477,12 @@ impl Pending for PendingExchange {
                     last_arrival = at;
                 }
             }
+            let out = &mut recv[src];
             out.clear();
             std::mem::swap(&mut st.payload, out);
             st.filled = false;
+            drop(st);
+            self.drained[src] = true;
         }
 
         // settle the split-phase resize round (see module docs): the
@@ -389,17 +518,20 @@ impl Pending for PendingExchange {
         );
 
         let total = t0.elapsed().as_secs_f64();
-        CompletionTiming {
+        Ok(CompletionTiming {
             wait_secs,
             drain_secs: (total - wait_secs).max(0.0),
-        }
+        })
     }
 }
 
 impl SplitTransport for Communicator {
     type Pending = PendingExchange;
 
-    fn alltoall_start(&self, send: &mut [Vec<SpikeMsg>]) -> PendingExchange {
+    fn alltoall_start(
+        &self,
+        send: &mut [Vec<SpikeMsg>],
+    ) -> Result<PendingExchange, CommError> {
         let w = &*self.world;
         assert_eq!(send.len(), w.m, "send buffer per rank required");
         let t0 = Instant::now();
@@ -430,7 +562,16 @@ impl SplitTransport for Communicator {
         let now = Instant::now();
         for (dest, buf) in send.iter_mut().enumerate() {
             let slot = &w.nb.slots[dest][self.rank][slot_idx];
-            let mut st = slot.state.lock().unwrap();
+            let mut st = slot.state.lock().map_err(|_| {
+                w.poisoned(
+                    self.rank,
+                    format!(
+                        "holding split-phase slot (dest={dest}, src={}, \
+                         ring={slot_idx})",
+                        self.rank
+                    ),
+                )
+            })?;
             debug_assert!(
                 !st.filled,
                 "mailbox slot overrun: deposit {} not yet consumed",
@@ -450,7 +591,7 @@ impl SplitTransport for Communicator {
         w.stats
             .post_nanos
             .fetch_add((post_secs * 1e9) as u64, Ordering::Relaxed);
-        PendingExchange {
+        Ok(PendingExchange {
             world: self.world.clone(),
             rank: self.rank,
             seq,
@@ -459,7 +600,7 @@ impl SplitTransport for Communicator {
             last_arrival: t0,
             drained: vec![false; w.m],
             completed: false,
-        }
+        })
     }
 }
 
@@ -523,10 +664,10 @@ mod tests {
             let mut send: Vec<Vec<SpikeMsg>> = (0..4)
                 .map(|d| vec![msg((100 * rank + d) as Gid, 7)])
                 .collect();
-            let pending = comm.alltoall_start(&mut send);
+            let pending = comm.alltoall_start(&mut send).unwrap();
             assert!(send.iter().all(|b| b.is_empty()), "send not drained");
             let mut recv = Vec::new();
-            pending.complete(&mut recv);
+            pending.complete(&mut recv).unwrap();
             recv
         });
         for (rank, recv) in results.iter().enumerate() {
@@ -545,9 +686,9 @@ mod tests {
             let mut send: Vec<Vec<SpikeMsg>> = (0..2)
                 .map(|_| (0..10).map(|i| msg(rank as Gid, i)).collect())
                 .collect();
-            let pending = comm.alltoall_start(&mut send);
+            let pending = comm.alltoall_start(&mut send).unwrap();
             let mut recv = Vec::new();
-            pending.complete(&mut recv);
+            pending.complete(&mut recv).unwrap();
             recv
         });
         for recv in &results {
@@ -576,8 +717,8 @@ mod tests {
                         buf.push(msg((1000 * rank + i) as Gid, round));
                     }
                 }
-                let pending = comm.alltoall_start(&mut send);
-                pending.complete(&mut recv);
+                let pending = comm.alltoall_start(&mut send).unwrap();
+                pending.complete(&mut recv).unwrap();
                 for (src, buf) in recv.iter().enumerate() {
                     assert_eq!(buf.len(), n, "round {round} from {src}");
                     assert!(
@@ -607,13 +748,13 @@ mod tests {
             let mut send: Vec<Vec<SpikeMsg>> = (0..2)
                 .map(|_| (0..n).map(|i| msg(rank as Gid, i)).collect())
                 .collect();
-            let pending = comm.alltoall_start(&mut send);
+            let pending = comm.alltoall_start(&mut send).unwrap();
             // simulated compute while the exchange is in flight
             std::hint::black_box(
                 (0..200_000u64).map(|x| x.wrapping_mul(7)).sum::<u64>(),
             );
             let mut recv = Vec::new();
-            pending.complete(&mut recv);
+            pending.complete(&mut recv).unwrap();
             recv.iter().map(|b| b.len()).sum::<usize>()
         });
         assert!(results.iter().all(|&t| t == 11));
@@ -633,9 +774,9 @@ mod tests {
                         (0..10).map(|i| msg(rank as Gid, i + round)).collect()
                     })
                     .collect();
-                let pending = comm.alltoall_start(&mut send);
+                let pending = comm.alltoall_start(&mut send).unwrap();
                 let mut recv = Vec::new();
-                pending.complete(&mut recv);
+                pending.complete(&mut recv).unwrap();
                 assert!(recv.iter().all(|b| b.len() == 10));
             }
         });
@@ -654,12 +795,12 @@ mod tests {
             }
             let mut send: Vec<Vec<SpikeMsg>> =
                 (0..2).map(|_| vec![msg(rank as Gid, 0)]).collect();
-            let pending = comm.alltoall_start(&mut send);
+            let pending = comm.alltoall_start(&mut send).unwrap();
             if rank == 0 {
                 thread::sleep(Duration::from_millis(60));
             }
             let mut recv = Vec::new();
-            let timing = pending.complete(&mut recv);
+            let timing = pending.complete(&mut recv).unwrap();
             assert!(timing.wait_secs >= 0.0 && timing.drain_secs >= 0.0);
         });
         let snap = world.stats().snapshot();
@@ -677,12 +818,12 @@ mod tests {
         let (_, results) = run_ranks(2, 64, |rank, comm| {
             let mut send: Vec<Vec<SpikeMsg>> =
                 (0..2).map(|_| vec![msg(rank as Gid, 1)]).collect();
-            let (recv_blocking, _) = comm.alltoall(&mut send);
+            let (recv_blocking, _) = comm.alltoall(&mut send).unwrap();
             let mut send: Vec<Vec<SpikeMsg>> =
                 (0..2).map(|_| vec![msg(rank as Gid, 2)]).collect();
-            let pending = comm.alltoall_start(&mut send);
+            let pending = comm.alltoall_start(&mut send).unwrap();
             let mut recv = Vec::new();
-            pending.complete(&mut recv);
+            pending.complete(&mut recv).unwrap();
             (recv_blocking, recv)
         });
         for (blocking, split) in &results {
@@ -700,7 +841,7 @@ mod tests {
         let world = WorldBuilder::new(1).quota(4).build();
         let comm = world.communicator(0);
         let mut send = vec![vec![msg(1, 0)]];
-        let pending = comm.alltoall_start(&mut send);
+        let pending = comm.alltoall_start(&mut send).unwrap();
         drop(pending);
     }
 
@@ -725,10 +866,10 @@ mod tests {
             for round in 0..30u32 {
                 let n = 1 + (round as usize % 3);
                 let mut send = fill_send(M, rank, round, n);
-                let pending = comm.alltoall_start(&mut send);
+                let pending = comm.alltoall_start(&mut send).unwrap();
                 if let Some(p) = older.take() {
                     let mut recv = Vec::new();
-                    p.complete(&mut recv);
+                    p.complete(&mut recv).unwrap();
                     for (src, buf) in recv.iter().enumerate() {
                         let exp = 1 + ((round - 1) as usize % 3);
                         assert_eq!(buf.len(), exp, "round {round} src {src}");
@@ -739,7 +880,7 @@ mod tests {
                 older = Some(pending);
             }
             let mut recv = Vec::new();
-            older.take().unwrap().complete(&mut recv);
+            older.take().unwrap().complete(&mut recv).unwrap();
             total += recv.iter().map(|b| b.len()).sum::<usize>();
             total
         });
@@ -760,22 +901,25 @@ mod tests {
         let (world, _) = run_ranks(M, 64, |rank, comm| {
             for round in 0..ROUNDS {
                 let mut send = fill_send(M, rank, round, 2);
-                let mut pending = comm.alltoall_start(&mut send);
+                let mut pending = comm.alltoall_start(&mut send).unwrap();
                 let mut recv: Vec<Vec<SpikeMsg>> =
                     (0..M).map(|_| Vec::new()).collect();
                 let mut drained = vec![false; M];
                 while drained.iter().any(|&d| !d) {
                     for (src, out) in recv.iter_mut().enumerate() {
                         if !drained[src] {
-                            drained[src] =
-                                pending.try_complete_source(src, out);
+                            drained[src] = pending
+                                .try_complete_source(src, out)
+                                .unwrap();
                         }
                     }
                     std::hint::spin_loop();
                 }
                 // repeat polls on a drained source are no-ops
-                assert!(pending.try_complete_source(0, &mut Vec::new()));
-                let timing = pending.complete(&mut recv);
+                assert!(pending
+                    .try_complete_source(0, &mut Vec::new())
+                    .unwrap());
+                let timing = pending.complete(&mut recv).unwrap();
                 assert_eq!(timing.wait_secs, 0.0, "all sources pre-drained");
                 for (src, buf) in recv.iter().enumerate() {
                     assert_eq!(buf.len(), 2, "round {round} src {src}");
@@ -803,11 +947,11 @@ mod tests {
         let world = WorldBuilder::new(1).quota(64).build();
         let comm = world.communicator(0);
         let mut send = vec![vec![msg(7, 0)]];
-        let mut pending = comm.alltoall_start(&mut send);
+        let mut pending = comm.alltoall_start(&mut send).unwrap();
         let mut recv = vec![Vec::new()];
-        assert!(pending.try_complete_source(0, &mut recv[0]));
+        assert!(pending.try_complete_source(0, &mut recv[0]).unwrap());
         assert_eq!(recv[0].len(), 1);
-        pending.complete(&mut recv);
+        pending.complete(&mut recv).unwrap();
         assert_eq!(recv[0].len(), 1, "early drain must survive complete");
         assert_eq!(recv[0][0].source, 7);
     }
@@ -837,7 +981,7 @@ mod tests {
                  total: &mut usize| {
                     let (round, p) = inflight.pop_front().unwrap();
                     let mut recv = Vec::new();
-                    p.complete(&mut recv);
+                    p.complete(&mut recv).unwrap();
                     let n = per_round(round);
                     for (src, buf) in recv.iter().enumerate() {
                         assert_eq!(buf.len(), n, "round {round} src {src}");
@@ -854,7 +998,10 @@ mod tests {
                 }
                 let mut send =
                     fill_send(M, rank, round, per_round(round));
-                inflight.push_back((round, comm.alltoall_start(&mut send)));
+                inflight.push_back((
+                    round,
+                    comm.alltoall_start(&mut send).unwrap(),
+                ));
             }
             while !inflight.is_empty() {
                 complete_one(&mut inflight, &mut total);
@@ -887,7 +1034,8 @@ mod tests {
                 let comm = world.communicator(rank);
                 s.spawn(move || {
                     let group = rank / 2;
-                    let local = comm.split(group as u64, rank as u64);
+                    let local =
+                        comm.split(group as u64, rank as u64).unwrap();
                     assert_eq!(local.m_ranks(), 2);
                     let check_local = |round: u32,
                                        recv: &Vec<Vec<SpikeMsg>>| {
@@ -921,19 +1069,19 @@ mod tests {
                         let mut lsend: Vec<Vec<SpikeMsg>> = (0..2)
                             .map(|_| vec![msg(rank as Gid, round)])
                             .collect();
-                        let lp = local.alltoall_start(&mut lsend);
+                        let lp = local.alltoall_start(&mut lsend).unwrap();
                         let mut gsend: Vec<Vec<SpikeMsg>> = (0..4)
                             .map(|_| vec![msg((100 + rank) as Gid, round)])
                             .collect();
-                        let gp = comm.alltoall_start(&mut gsend);
+                        let gp = comm.alltoall_start(&mut gsend).unwrap();
                         if let Some((r0, p)) = local_pipe.take() {
                             let mut recv = Vec::new();
-                            p.complete(&mut recv);
+                            p.complete(&mut recv).unwrap();
                             check_local(r0, &recv);
                         }
                         if let Some((r0, p)) = global_pipe.take() {
                             let mut recv = Vec::new();
-                            p.complete(&mut recv);
+                            p.complete(&mut recv).unwrap();
                             check_global(r0, &recv);
                         }
                         local_pipe = Some((round, lp));
@@ -941,10 +1089,10 @@ mod tests {
                     }
                     let mut recv = Vec::new();
                     let (r0, p) = local_pipe.take().unwrap();
-                    p.complete(&mut recv);
+                    p.complete(&mut recv).unwrap();
                     check_local(r0, &recv);
                     let (r0, p) = global_pipe.take().unwrap();
-                    p.complete(&mut recv);
+                    p.complete(&mut recv).unwrap();
                     check_global(r0, &recv);
                 });
             }
@@ -969,21 +1117,21 @@ mod tests {
                 thread::sleep(Duration::from_millis(15));
             }
             let mut send = fill_send(2, rank, 1, 1);
-            let pending = comm.alltoall_start(&mut send);
+            let pending = comm.alltoall_start(&mut send).unwrap();
             let mut recv = Vec::new();
-            let t = pending.complete(&mut recv);
+            let t = pending.complete(&mut recv).unwrap();
             assert!(t.wait_secs >= 0.0 && t.drain_secs >= 0.0);
             // round 2: receiver computes long enough to hide the skew
             if rank == 1 {
                 thread::sleep(Duration::from_millis(15));
             }
             let mut send = fill_send(2, rank, 2, 1);
-            let pending = comm.alltoall_start(&mut send);
+            let pending = comm.alltoall_start(&mut send).unwrap();
             if rank == 0 {
                 thread::sleep(Duration::from_millis(40));
             }
             let mut recv = Vec::new();
-            pending.complete(&mut recv);
+            pending.complete(&mut recv).unwrap();
         });
         let snap = world.stats().snapshot();
         assert_eq!(snap.overlapped_exchanges, 4);
@@ -994,5 +1142,75 @@ mod tests {
         // total in-flight time of all exchanges (loose bound — CI boxes
         // stretch sleeps, they do not shrink them)
         assert!(snap.hidden_secs < 2.0, "{snap:?}");
+    }
+
+    #[test]
+    fn completion_watchdog_names_missing_depositor() {
+        // rank 1 never posts: rank 0's completion wait must expire into
+        // a diagnostic carrying the exchange epoch, the ring slot and
+        // exactly which source deposited (itself) vs. is missing (1)
+        let world = WorldBuilder::new(2)
+            .quota(64)
+            .timeout(Some(Duration::from_millis(50)))
+            .build();
+        let comm = world.communicator(0);
+        let mut send: Vec<Vec<SpikeMsg>> =
+            (0..2).map(|_| vec![msg(0, 0)]).collect();
+        let pending = comm.alltoall_start(&mut send).unwrap();
+        let mut recv = Vec::new();
+        let err = pending
+            .complete(&mut recv)
+            .expect_err("watchdog did not fire");
+        match &err {
+            CommError::Timeout {
+                tier,
+                epoch,
+                ring_slot,
+                missing,
+                present,
+                ..
+            } => {
+                assert_eq!(*tier, "global");
+                assert_eq!(*epoch, Some(0));
+                assert_eq!(*ring_slot, Some(0));
+                assert_eq!(missing, &vec![1]);
+                assert_eq!(
+                    present,
+                    &vec![0],
+                    "own deposit must be visible"
+                );
+            }
+            other => panic!("unexpected error variant: {other}"),
+        }
+        let msg = err.to_string();
+        assert!(msg.contains("split-phase complete"), "{msg}");
+        assert!(msg.contains("missing ranks [1]"), "{msg}");
+        assert_eq!(world.stats().snapshot().timeouts, 1);
+    }
+
+    #[test]
+    fn armed_watchdog_tolerates_late_but_alive_peers() {
+        // a generous deadline with a merely-slow peer: the rendezvous
+        // completes normally and counts no timeouts
+        let world = WorldBuilder::new(2)
+            .quota(64)
+            .timeout(Some(Duration::from_secs(10)))
+            .build();
+        thread::scope(|s| {
+            for rank in 0..2usize {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    if rank == 1 {
+                        thread::sleep(Duration::from_millis(20));
+                    }
+                    let mut send = fill_send(2, rank, 0, 1);
+                    let pending = comm.alltoall_start(&mut send).unwrap();
+                    let mut recv = Vec::new();
+                    pending.complete(&mut recv).unwrap();
+                    assert!(recv.iter().all(|b| b.len() == 1));
+                });
+            }
+        });
+        assert_eq!(world.stats().snapshot().timeouts, 0);
     }
 }

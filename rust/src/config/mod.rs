@@ -144,6 +144,319 @@ impl UpdatePath {
     }
 }
 
+/// A deterministic compute straggler: rank `rank`'s update phase is
+/// inflated by `factor` in epochs `[from_epoch, to_epoch)` — the paper's
+/// slowest-node scenario made reproducible.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerFault {
+    pub rank: usize,
+    pub factor: f64,
+    pub from_epoch: u64,
+    pub to_epoch: u64,
+}
+
+/// A deterministic communication straggler: rank `rank` delays its
+/// epoch-boundary global deposit by `delay_ms` (wall-clock) in epochs
+/// `[from_epoch, to_epoch)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DepositDelayFault {
+    pub rank: usize,
+    pub delay_ms: f64,
+    pub from_epoch: u64,
+    pub to_epoch: u64,
+}
+
+/// A hard fault: rank `rank` dies at the start of epoch `epoch` (its
+/// thread unwinds cleanly; the survivors' watchdogs report it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KillFault {
+    pub rank: usize,
+    pub epoch: u64,
+}
+
+/// A deterministic fault-injection plan, honored by the engine and the
+/// shared-memory world: compute stragglers, delayed deposits and
+/// kill-at-epoch faults (see `EXPERIMENTS.md` for the validation
+/// protocol).  Empty by default — no faults, zero overhead.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub stragglers: Vec<StragglerFault>,
+    pub deposit_delays: Vec<DepositDelayFault>,
+    pub kills: Vec<KillFault>,
+}
+
+/// The [`FaultPlan`] projected onto one rank — what a rank thread
+/// actually consults on its hot path.
+#[derive(Clone, Debug, Default)]
+pub struct RankFaults {
+    pub stragglers: Vec<StragglerFault>,
+    pub deposit_delays: Vec<DepositDelayFault>,
+    /// Earliest epoch at which this rank is killed, if any.
+    pub kill_epoch: Option<u64>,
+}
+
+impl RankFaults {
+    pub fn is_empty(&self) -> bool {
+        self.stragglers.is_empty()
+            && self.deposit_delays.is_empty()
+            && self.kill_epoch.is_none()
+    }
+
+    /// Combined update-phase inflation factor in `epoch` (1.0 = none;
+    /// overlapping windows multiply).
+    pub fn straggle_factor(&self, epoch: u64) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|s| s.from_epoch <= epoch && epoch < s.to_epoch)
+            .map(|s| s.factor)
+            .product()
+    }
+
+    /// Total injected delay before the epoch's global deposit, in ms.
+    pub fn deposit_delay_ms(&self, epoch: u64) -> f64 {
+        self.deposit_delays
+            .iter()
+            .filter(|d| d.from_epoch <= epoch && epoch < d.to_epoch)
+            .map(|d| d.delay_ms)
+            .sum()
+    }
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.stragglers.is_empty()
+            && self.deposit_delays.is_empty()
+            && self.kills.is_empty()
+    }
+
+    /// Project the plan onto one rank.
+    pub fn for_rank(&self, rank: usize) -> RankFaults {
+        RankFaults {
+            stragglers: self
+                .stragglers
+                .iter()
+                .copied()
+                .filter(|s| s.rank == rank)
+                .collect(),
+            deposit_delays: self
+                .deposit_delays
+                .iter()
+                .copied()
+                .filter(|d| d.rank == rank)
+                .collect(),
+            kill_epoch: self
+                .kills
+                .iter()
+                .filter(|k| k.rank == rank)
+                .map(|k| k.epoch)
+                .min(),
+        }
+    }
+
+    /// Parse the CLI straggler spec `rank:factor:from:to[,...]`.
+    pub fn parse_stragglers(spec: &str) -> Result<Vec<StragglerFault>> {
+        spec.split(',')
+            .map(|item| {
+                let item = item.trim();
+                let p: Vec<&str> = item.split(':').collect();
+                if p.len() != 4 {
+                    bail!(
+                        "bad straggler spec {item:?}: expected \
+                         rank:factor:from_epoch:to_epoch"
+                    );
+                }
+                Ok(StragglerFault {
+                    rank: p[0]
+                        .parse()
+                        .with_context(|| format!("rank in {item:?}"))?,
+                    factor: p[1]
+                        .parse()
+                        .with_context(|| format!("factor in {item:?}"))?,
+                    from_epoch: p[2].parse().with_context(|| {
+                        format!("from_epoch in {item:?}")
+                    })?,
+                    to_epoch: p[3]
+                        .parse()
+                        .with_context(|| format!("to_epoch in {item:?}"))?,
+                })
+            })
+            .collect()
+    }
+
+    /// Parse the CLI deposit-delay spec `rank:delay_ms:from:to[,...]`.
+    pub fn parse_delays(spec: &str) -> Result<Vec<DepositDelayFault>> {
+        spec.split(',')
+            .map(|item| {
+                let item = item.trim();
+                let p: Vec<&str> = item.split(':').collect();
+                if p.len() != 4 {
+                    bail!(
+                        "bad delay-deposit spec {item:?}: expected \
+                         rank:delay_ms:from_epoch:to_epoch"
+                    );
+                }
+                Ok(DepositDelayFault {
+                    rank: p[0]
+                        .parse()
+                        .with_context(|| format!("rank in {item:?}"))?,
+                    delay_ms: p[1]
+                        .parse()
+                        .with_context(|| format!("delay_ms in {item:?}"))?,
+                    from_epoch: p[2].parse().with_context(|| {
+                        format!("from_epoch in {item:?}")
+                    })?,
+                    to_epoch: p[3]
+                        .parse()
+                        .with_context(|| format!("to_epoch in {item:?}"))?,
+                })
+            })
+            .collect()
+    }
+
+    /// Parse the CLI kill spec `rank:epoch[,...]`.
+    pub fn parse_kills(spec: &str) -> Result<Vec<KillFault>> {
+        spec.split(',')
+            .map(|item| {
+                let item = item.trim();
+                let p: Vec<&str> = item.split(':').collect();
+                if p.len() != 2 {
+                    bail!("bad kill-at spec {item:?}: expected rank:epoch");
+                }
+                Ok(KillFault {
+                    rank: p[0]
+                        .parse()
+                        .with_context(|| format!("rank in {item:?}"))?,
+                    epoch: p[1]
+                        .parse()
+                        .with_context(|| format!("epoch in {item:?}"))?,
+                })
+            })
+            .collect()
+    }
+
+    /// Load from a JSON object with optional `stragglers`,
+    /// `deposit_delays` and `kills` arrays.
+    pub fn from_json(v: &Json) -> Result<FaultPlan> {
+        fn usize_field(e: &Json, key: &str) -> Result<usize> {
+            e.get(key).and_then(Json::as_usize).with_context(|| {
+                format!("fault entry missing numeric {key:?}: {e}")
+            })
+        }
+        fn u64_field(e: &Json, key: &str) -> Result<u64> {
+            e.get(key).and_then(Json::as_u64).with_context(|| {
+                format!("fault entry missing numeric {key:?}: {e}")
+            })
+        }
+        fn f64_field(e: &Json, key: &str) -> Result<f64> {
+            e.get(key).and_then(Json::as_f64).with_context(|| {
+                format!("fault entry missing numeric {key:?}: {e}")
+            })
+        }
+        let mut plan = FaultPlan::default();
+        if let Some(arr) = v.get("stragglers").and_then(Json::as_arr) {
+            for e in arr {
+                plan.stragglers.push(StragglerFault {
+                    rank: usize_field(e, "rank")?,
+                    factor: f64_field(e, "factor")?,
+                    from_epoch: u64_field(e, "from_epoch")?,
+                    to_epoch: u64_field(e, "to_epoch")?,
+                });
+            }
+        }
+        if let Some(arr) = v.get("deposit_delays").and_then(Json::as_arr) {
+            for e in arr {
+                plan.deposit_delays.push(DepositDelayFault {
+                    rank: usize_field(e, "rank")?,
+                    delay_ms: f64_field(e, "delay_ms")?,
+                    from_epoch: u64_field(e, "from_epoch")?,
+                    to_epoch: u64_field(e, "to_epoch")?,
+                });
+            }
+        }
+        if let Some(arr) = v.get("kills").and_then(Json::as_arr) {
+            for e in arr {
+                plan.kills.push(KillFault {
+                    rank: usize_field(e, "rank")?,
+                    epoch: u64_field(e, "epoch")?,
+                });
+            }
+        }
+        Ok(plan)
+    }
+
+    pub fn from_json_file(path: &str) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {path}"))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing fault plan {path}"))?;
+        Self::from_json(&v)
+    }
+
+    /// Cross-field validation against the run shape.
+    pub fn validate(
+        &self,
+        m_ranks: usize,
+        comm_timeout: Option<f64>,
+    ) -> Result<()> {
+        for s in &self.stragglers {
+            if s.rank >= m_ranks {
+                bail!(
+                    "straggler rank {} out of range (ranks = {m_ranks})",
+                    s.rank
+                );
+            }
+            if !s.factor.is_finite() || s.factor < 1.0 {
+                bail!(
+                    "straggler factor must be >= 1 (got {}): a factor \
+                     below 1 would *speed up* the rank",
+                    s.factor
+                );
+            }
+            if s.from_epoch >= s.to_epoch {
+                bail!(
+                    "straggler epoch window [{}, {}) is empty",
+                    s.from_epoch,
+                    s.to_epoch
+                );
+            }
+        }
+        for d in &self.deposit_delays {
+            if d.rank >= m_ranks {
+                bail!(
+                    "delay-deposit rank {} out of range (ranks = {m_ranks})",
+                    d.rank
+                );
+            }
+            if !d.delay_ms.is_finite() || d.delay_ms < 0.0 {
+                bail!("deposit delay must be >= 0 ms (got {})", d.delay_ms);
+            }
+            if d.from_epoch >= d.to_epoch {
+                bail!(
+                    "delay-deposit epoch window [{}, {}) is empty",
+                    d.from_epoch,
+                    d.to_epoch
+                );
+            }
+        }
+        for k in &self.kills {
+            if k.rank >= m_ranks {
+                bail!(
+                    "kill-at rank {} out of range (ranks = {m_ranks})",
+                    k.rank
+                );
+            }
+        }
+        if !self.kills.is_empty() && comm_timeout.is_none() {
+            bail!(
+                "a kill-at-epoch fault requires --comm-timeout: without \
+                 a watchdog deadline the surviving ranks would wait \
+                 forever for the killed rank's deposits"
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Full run configuration for the functional engine.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -186,6 +499,27 @@ pub struct RunConfig {
     pub record_spikes: bool,
     /// Record per-rank per-cycle times for the distribution figures.
     pub record_cycle_times: bool,
+    /// Watchdog deadline in seconds applied to every communicator wait
+    /// (barrier-framed collective phases and split-phase completion
+    /// rendezvous).  `None` (the default) keeps today's unbounded waits;
+    /// with a deadline set, a dead or stalled peer turns the silent hang
+    /// into a structured `CommError::Timeout` naming the tier, epoch,
+    /// ring slot and missing ranks.
+    pub comm_timeout: Option<f64>,
+    /// Snapshot the full engine state every N epochs (0 = disabled).
+    /// Snapshots are taken at epoch boundaries with all split-phase
+    /// exchanges drained to depth 0, so the comm state is empty by
+    /// construction (see `engine::checkpoint`).
+    pub checkpoint_every: u64,
+    /// Path periodic snapshots are written to (atomic write + rename;
+    /// each snapshot replaces the previous one).
+    pub checkpoint_path: String,
+    /// Restore engine state from a snapshot file before running; the
+    /// resumed run produces bit-identical spike trains to the
+    /// uninterrupted run.
+    pub restore: Option<String>,
+    /// Deterministic fault-injection plan (empty = no faults).
+    pub faults: FaultPlan,
 }
 
 impl Default for RunConfig {
@@ -204,6 +538,11 @@ impl Default for RunConfig {
             ranks_per_area: 1,
             record_spikes: false,
             record_cycle_times: false,
+            comm_timeout: None,
+            checkpoint_every: 0,
+            checkpoint_path: "nsim.ckpt".to_string(),
+            restore: None,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -239,6 +578,33 @@ impl RunConfig {
         }
         if args.flag("record-cycle-times") {
             self.record_cycle_times = true;
+        }
+        if let Some(t) = args.f64_opt("comm-timeout")? {
+            self.comm_timeout = Some(t);
+        }
+        self.checkpoint_every =
+            args.u64_or("checkpoint-every", self.checkpoint_every)?;
+        if let Some(p) = args.str_opt("checkpoint-path") {
+            self.checkpoint_path = p;
+        }
+        if let Some(p) = args.str_opt("restore") {
+            self.restore = Some(p);
+        }
+        if let Some(p) = args.str_opt("fault-plan") {
+            self.faults = FaultPlan::from_json_file(&p)?;
+        }
+        if let Some(s) = args.str_opt("straggler") {
+            self.faults
+                .stragglers
+                .extend(FaultPlan::parse_stragglers(&s)?);
+        }
+        if let Some(s) = args.str_opt("delay-deposit") {
+            self.faults
+                .deposit_delays
+                .extend(FaultPlan::parse_delays(&s)?);
+        }
+        if let Some(s) = args.str_opt("kill-at") {
+            self.faults.kills.extend(FaultPlan::parse_kills(&s)?);
         }
         self.validate()?;
         Ok(self)
@@ -282,6 +648,21 @@ impl RunConfig {
         }
         if let Some(b) = v.get("record_spikes").and_then(Json::as_bool) {
             cfg.record_spikes = b;
+        }
+        if let Some(x) = v.get("comm_timeout").and_then(Json::as_f64) {
+            cfg.comm_timeout = Some(x);
+        }
+        if let Some(x) = v.get("checkpoint_every").and_then(Json::as_u64) {
+            cfg.checkpoint_every = x;
+        }
+        if let Some(s) = v.get("checkpoint_path").and_then(Json::as_str) {
+            cfg.checkpoint_path = s.to_string();
+        }
+        if let Some(s) = v.get("restore").and_then(Json::as_str) {
+            cfg.restore = Some(s.to_string());
+        }
+        if let Some(f) = v.get("faults") {
+            cfg.faults = FaultPlan::from_json(f)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -339,6 +720,18 @@ impl RunConfig {
                 self.ranks_per_area
             );
         }
+        if let Some(t) = self.comm_timeout {
+            if !t.is_finite() || t <= 0.0 {
+                bail!("comm_timeout must be a positive number of seconds");
+            }
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_path.is_empty() {
+            bail!(
+                "checkpoint_path must be non-empty when \
+                 checkpoint_every > 0"
+            );
+        }
+        self.faults.validate(self.m_ranks, self.comm_timeout)?;
         Ok(())
     }
 }
@@ -557,6 +950,161 @@ mod tests {
             format!("{err:#}").contains("multiple of ranks_per_area"),
             "unexpected error: {err:#}"
         );
+    }
+
+    #[test]
+    fn fault_plan_cli_specs() {
+        let args = Args::parse([
+            "run",
+            "--ranks",
+            "4",
+            "--straggler",
+            "1:3.0:0:4, 2:2:1:2",
+            "--kill-at",
+            "3:5",
+            "--delay-deposit",
+            "0:5:1:3",
+            "--comm-timeout",
+            "2.0",
+        ])
+        .unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert_eq!(cfg.comm_timeout, Some(2.0));
+        assert_eq!(cfg.faults.stragglers.len(), 2);
+        assert_eq!(
+            cfg.faults.stragglers[0],
+            StragglerFault {
+                rank: 1,
+                factor: 3.0,
+                from_epoch: 0,
+                to_epoch: 4
+            }
+        );
+        assert_eq!(cfg.faults.kills, vec![KillFault { rank: 3, epoch: 5 }]);
+        assert_eq!(cfg.faults.deposit_delays.len(), 1);
+
+        // per-rank projection: windows apply, absent ranks are inert
+        let rf = cfg.faults.for_rank(1);
+        assert_eq!(rf.straggle_factor(2), 3.0);
+        assert_eq!(rf.straggle_factor(4), 1.0, "window is half-open");
+        assert_eq!(cfg.faults.for_rank(3).kill_epoch, Some(5));
+        assert_eq!(cfg.faults.for_rank(0).kill_epoch, None);
+        assert!(cfg.faults.for_rank(0).deposit_delay_ms(1) == 5.0);
+        assert!(cfg.faults.for_rank(0).deposit_delay_ms(3) == 0.0);
+
+        // malformed specs are rejected at parse time
+        assert!(FaultPlan::parse_stragglers("1:2.0:0").is_err());
+        assert!(FaultPlan::parse_kills("1:2:3").is_err());
+        assert!(FaultPlan::parse_delays("x:1:0:1").is_err());
+    }
+
+    #[test]
+    fn fault_plan_json_and_validation() {
+        let v = json::parse(
+            r#"{"ranks": 2, "comm_timeout": 1.5,
+                "faults": {"stragglers": [{"rank": 1, "factor": 2.5,
+                    "from_epoch": 0, "to_epoch": 3}],
+                    "kills": [{"rank": 0, "epoch": 2}]}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.faults.stragglers[0].factor, 2.5);
+        assert_eq!(cfg.faults.kills[0], KillFault { rank: 0, epoch: 2 });
+
+        // a kill without a watchdog would hang the survivors: rejected
+        let v = json::parse(
+            r#"{"ranks": 2, "faults": {"kills": [{"rank": 0,
+                "epoch": 2}]}}"#,
+        )
+        .unwrap();
+        let err = RunConfig::from_json(&v).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("comm-timeout"),
+            "unexpected error: {err:#}"
+        );
+
+        // out-of-range rank
+        let plan = FaultPlan {
+            stragglers: vec![StragglerFault {
+                rank: 7,
+                factor: 2.0,
+                from_epoch: 0,
+                to_epoch: 1,
+            }],
+            ..FaultPlan::default()
+        };
+        assert!(plan.validate(2, None).is_err());
+
+        // a deflating factor and an empty window are both rejected
+        let plan = FaultPlan {
+            stragglers: vec![StragglerFault {
+                rank: 0,
+                factor: 0.5,
+                from_epoch: 0,
+                to_epoch: 1,
+            }],
+            ..FaultPlan::default()
+        };
+        assert!(plan.validate(2, None).is_err());
+        let plan = FaultPlan {
+            stragglers: vec![StragglerFault {
+                rank: 0,
+                factor: 2.0,
+                from_epoch: 3,
+                to_epoch: 3,
+            }],
+            ..FaultPlan::default()
+        };
+        assert!(plan.validate(2, None).is_err());
+    }
+
+    #[test]
+    fn checkpoint_and_timeout_knobs() {
+        // defaults: everything off
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.checkpoint_every, 0);
+        assert!(cfg.restore.is_none());
+        assert!(cfg.comm_timeout.is_none());
+        assert!(cfg.faults.is_empty());
+
+        let args = Args::parse([
+            "run",
+            "--checkpoint-every",
+            "2",
+            "--checkpoint-path",
+            "out.ckpt",
+            "--restore",
+            "in.ckpt",
+        ])
+        .unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert_eq!(cfg.checkpoint_every, 2);
+        assert_eq!(cfg.checkpoint_path, "out.ckpt");
+        assert_eq!(cfg.restore.as_deref(), Some("in.ckpt"));
+
+        let v = json::parse(
+            r#"{"checkpoint_every": 3, "checkpoint_path": "run.ckpt",
+                "restore": "prev.ckpt", "comm_timeout": 0.25}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.checkpoint_every, 3);
+        assert_eq!(cfg.checkpoint_path, "run.ckpt");
+        assert_eq!(cfg.restore.as_deref(), Some("prev.ckpt"));
+        assert_eq!(cfg.comm_timeout, Some(0.25));
+
+        // nonsense deadlines rejected
+        let cfg = RunConfig {
+            comm_timeout: Some(0.0),
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+        let cfg = RunConfig {
+            checkpoint_every: 1,
+            checkpoint_path: String::new(),
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,573 @@
+//! Versioned checkpoint/restore of the full engine state.
+//!
+//! A checkpoint is taken at an **epoch boundary** with the split-phase
+//! pipeline drained to depth 0 (the run driver in `engine::rank` forces
+//! every in-flight exchange to complete before snapshotting), so the
+//! only dynamic state left is per-virtual-thread neuron state, the
+//! ring-buffer contents, the received-but-undelivered runs, the spikes
+//! recorded so far and the grown communicator quota.  Everything else —
+//! connection tables, target tables, placements, neuron parameters —
+//! is rebuilt deterministically from `(spec, seed, config)`, which the
+//! snapshot pins through its [`Fingerprint`].
+//!
+//! # File format (version 1)
+//!
+//! ```text
+//! magic  "NSIMCKPT"                                  8 bytes
+//! version u32 LE                                     4 bytes
+//! payload_len u64 LE                                 8 bytes
+//! checksum u64 LE  (FNV-1a over the payload)         8 bytes
+//! payload:
+//!   fingerprint | cycle u64 | quota u64 | n_parts u32
+//!   n_parts × (part_len u64, part bytes)             one part per rank
+//! ```
+//!
+//! All integers are little-endian; the per-rank part bytes are produced
+//! by `RankState::serialize_part` and are themselves length-framed, so
+//! the container stays ignorant of engine internals.  Readers verify
+//! magic, version, payload length (truncation) and checksum
+//! (corruption) before any field is interpreted; writers go through a
+//! temporary file + `rename` so a crash mid-write never leaves a
+//! half-written file under the checkpoint path.
+//!
+//! The engine has no runtime RNG stream — spike-train stochasticity
+//! comes from GID-keyed hashes (`engine::neuron`) and the build-time
+//! network draw, both functions of the seed — so pinning `seed` in the
+//! fingerprint *is* the RNG-stream snapshot.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::Mutex;
+
+/// File magic of every engine checkpoint.
+pub const MAGIC: [u8; 8] = *b"NSIMCKPT";
+/// Current snapshot format version.
+pub const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit over `bytes` — the corruption check of the header.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Little-endian byte sink for snapshot serialization.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed raw byte block.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+}
+
+/// Little-endian cursor over snapshot bytes; every read is bounds
+/// checked so a truncated or lying length field surfaces as a clean
+/// error instead of a panic.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.buf.len() - self.pos,
+            "checkpoint truncated: wanted {n} bytes at offset {} but \
+             only {} remain",
+            self.pos,
+            self.buf.len() - self.pos,
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u64` length field that must fit the platform's `usize`.
+    pub fn read_len(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| {
+            anyhow::anyhow!("checkpoint length field {v} overflows usize")
+        })
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.read_len()?;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .context("checkpoint string field is not UTF-8")
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.read_len()?;
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+/// The run identity a snapshot was taken under.  Restore refuses to
+/// resume when any field differs — the serialized state is only
+/// meaningful against the identical deterministic rebuild.  Execution
+/// knobs that do *not* change the simulated state (exec mode, comm
+/// mode, pipeline depth, timeouts) are deliberately absent: restoring
+/// under a different runtime is exactly the cross-mode equivalence the
+/// tests pin.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fingerprint {
+    pub model: String,
+    pub n_neurons: u32,
+    pub m_ranks: u32,
+    pub threads_per_rank: u32,
+    pub ranks_per_area: u32,
+    pub strategy: String,
+    pub seed: u64,
+    pub epoch_cycles: u64,
+    pub steps_per_cycle: u64,
+    pub record_spikes: bool,
+}
+
+impl Fingerprint {
+    fn write(&self, w: &mut ByteWriter) {
+        w.str(&self.model);
+        w.u32(self.n_neurons);
+        w.u32(self.m_ranks);
+        w.u32(self.threads_per_rank);
+        w.u32(self.ranks_per_area);
+        w.str(&self.strategy);
+        w.u64(self.seed);
+        w.u64(self.epoch_cycles);
+        w.u64(self.steps_per_cycle);
+        w.u8(self.record_spikes as u8);
+    }
+
+    fn read(r: &mut ByteReader<'_>) -> Result<Fingerprint> {
+        Ok(Fingerprint {
+            model: r.str()?,
+            n_neurons: r.u32()?,
+            m_ranks: r.u32()?,
+            threads_per_rank: r.u32()?,
+            ranks_per_area: r.u32()?,
+            strategy: r.str()?,
+            seed: r.u64()?,
+            epoch_cycles: r.u64()?,
+            steps_per_cycle: r.u64()?,
+            record_spikes: r.u8()? != 0,
+        })
+    }
+
+    /// Field-by-field comparison against the fingerprint of the run
+    /// attempting the restore, with one named mismatch per error so the
+    /// operator knows exactly which knob diverged.
+    pub fn check_matches(&self, run: &Fingerprint) -> Result<()> {
+        macro_rules! field {
+            ($name:literal, $f:ident) => {
+                ensure!(
+                    self.$f == run.$f,
+                    "checkpoint does not match this run: {} is {:?} in \
+                     the snapshot but {:?} here",
+                    $name,
+                    self.$f,
+                    run.$f,
+                );
+            };
+        }
+        field!("model", model);
+        field!("total neuron count", n_neurons);
+        field!("--ranks", m_ranks);
+        field!("--threads (threads per rank)", threads_per_rank);
+        field!("--ranks-per-area", ranks_per_area);
+        field!("--strategy", strategy);
+        field!("--seed", seed);
+        field!("communication epoch (cycles)", epoch_cycles);
+        field!("steps per cycle", steps_per_cycle);
+        field!("--record-spikes", record_spikes);
+        Ok(())
+    }
+}
+
+/// One materialized checkpoint: the fingerprint, the epoch-boundary
+/// cycle it was taken at, the communicator quota grown so far, and one
+/// opaque state part per rank.
+pub struct Snapshot {
+    pub fingerprint: Fingerprint,
+    pub cycle: u64,
+    pub quota: u64,
+    pub parts: Vec<Vec<u8>>,
+}
+
+impl Snapshot {
+    /// Serialize to the on-disk container (header + checksummed
+    /// payload).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut pw = ByteWriter::new();
+        self.fingerprint.write(&mut pw);
+        pw.u64(self.cycle);
+        pw.u64(self.quota);
+        pw.u32(self.parts.len() as u32);
+        for part in &self.parts {
+            pw.bytes(part);
+        }
+        let payload = pw.into_bytes();
+        let mut out = Vec::with_capacity(28 + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Parse and verify the on-disk container: magic, version, length
+    /// (truncation) and checksum (corruption) are all checked before
+    /// any payload field is interpreted.
+    pub fn from_bytes(raw: &[u8]) -> Result<Snapshot> {
+        ensure!(
+            raw.len() >= 28,
+            "not a checkpoint: file is {} bytes, shorter than the \
+             28-byte header",
+            raw.len(),
+        );
+        ensure!(
+            raw[..8] == MAGIC,
+            "not a checkpoint: bad magic {:?} (expected {:?})",
+            &raw[..8],
+            std::str::from_utf8(&MAGIC).unwrap(),
+        );
+        let version = u32::from_le_bytes(raw[8..12].try_into().unwrap());
+        ensure!(
+            version == VERSION,
+            "unsupported checkpoint version {version} (this build reads \
+             version {VERSION})",
+        );
+        let payload_len =
+            u64::from_le_bytes(raw[12..20].try_into().unwrap());
+        let checksum = u64::from_le_bytes(raw[20..28].try_into().unwrap());
+        let payload = &raw[28..];
+        ensure!(
+            payload.len() as u64 == payload_len,
+            "checkpoint truncated or padded: header declares a {} byte \
+             payload but {} bytes follow it",
+            payload_len,
+            payload.len(),
+        );
+        let actual = fnv1a(payload);
+        ensure!(
+            actual == checksum,
+            "checkpoint corrupted: checksum mismatch (header {checksum:#018x}, \
+             payload hashes to {actual:#018x})",
+        );
+        let mut r = ByteReader::new(payload);
+        let fingerprint = Fingerprint::read(&mut r)?;
+        let cycle = r.u64()?;
+        let quota = r.u64()?;
+        let n_parts = r.u32()? as usize;
+        let mut parts = Vec::with_capacity(n_parts);
+        for _ in 0..n_parts {
+            parts.push(r.bytes()?);
+        }
+        ensure!(
+            r.is_done(),
+            "checkpoint payload has trailing garbage after the last \
+             rank part",
+        );
+        Ok(Snapshot { fingerprint, cycle, quota, parts })
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, fsync, then rename
+    /// over `path`, so readers only ever observe a complete snapshot.
+    pub fn write_atomic(&self, path: &str) -> Result<()> {
+        use std::io::Write as _;
+        let tmp = format!("{path}.tmp");
+        let bytes = self.to_bytes();
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating checkpoint {tmp:?}"))?;
+        f.write_all(&bytes)
+            .with_context(|| format!("writing checkpoint {tmp:?}"))?;
+        f.sync_all()
+            .with_context(|| format!("syncing checkpoint {tmp:?}"))?;
+        drop(f);
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("renaming checkpoint {tmp:?} into place at {path:?}")
+        })?;
+        Ok(())
+    }
+
+    /// Read a snapshot back, verifying the container end to end.
+    pub fn read_verified(path: &str) -> Result<Snapshot> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {path:?}"))?;
+        Snapshot::from_bytes(&raw)
+            .with_context(|| format!("parsing checkpoint {path:?}"))
+    }
+}
+
+/// The collective rendezvous of a checkpoint write: every rank deposits
+/// its serialized part, a barrier (an `allreduce_min` in the engine)
+/// guarantees all parts landed, rank 0 assembles and writes the file,
+/// a second barrier publishes the outcome, and every rank then checks
+/// for a write error so a full disk fails the whole run instead of
+/// only rank 0.
+pub struct CkptCtx {
+    path: String,
+    fingerprint: Fingerprint,
+    parts: Mutex<Vec<Option<Vec<u8>>>>,
+    error: Mutex<Option<String>>,
+}
+
+impl CkptCtx {
+    pub fn new(
+        m_ranks: usize,
+        fingerprint: Fingerprint,
+        path: String,
+    ) -> CkptCtx {
+        CkptCtx {
+            path,
+            fingerprint,
+            parts: Mutex::new(vec![None; m_ranks]),
+            error: Mutex::new(None),
+        }
+    }
+
+    /// Deposit `rank`'s serialized state for the checkpoint being
+    /// assembled.
+    pub fn deposit(&self, rank: usize, part: Vec<u8>) {
+        let mut parts = self.parts.lock().expect("checkpoint ctx poisoned");
+        debug_assert!(
+            parts[rank].is_none(),
+            "rank {rank} deposited two checkpoint parts in one round"
+        );
+        parts[rank] = Some(part);
+    }
+
+    /// Assemble all deposited parts into a [`Snapshot`] at `cycle` and
+    /// write it atomically (rank 0 only, after the post-deposit
+    /// barrier).  Failures are recorded for [`CkptCtx::check`] rather
+    /// than returned, because every rank — not just the writer — must
+    /// observe them after the publish barrier.
+    pub fn assemble_and_write(&self, cycle: u64, quota: u64) {
+        let parts: Vec<Vec<u8>> = {
+            let mut guard =
+                self.parts.lock().expect("checkpoint ctx poisoned");
+            guard
+                .iter_mut()
+                .map(|p| {
+                    p.take().expect(
+                        "checkpoint part missing after the deposit barrier",
+                    )
+                })
+                .collect()
+        };
+        let snap = Snapshot {
+            fingerprint: self.fingerprint.clone(),
+            cycle,
+            quota,
+            parts,
+        };
+        if let Err(e) = snap.write_atomic(&self.path) {
+            *self.error.lock().expect("checkpoint ctx poisoned") =
+                Some(format!("{e:#}"));
+        }
+    }
+
+    /// The outcome of the last write, observed by every rank after the
+    /// publish barrier.
+    pub fn check(&self) -> Result<()> {
+        if let Some(e) =
+            self.error.lock().expect("checkpoint ctx poisoned").clone()
+        {
+            bail!("checkpoint write failed: {e}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            model: "test-net".into(),
+            n_neurons: 240,
+            m_ranks: 4,
+            threads_per_rank: 2,
+            ranks_per_area: 1,
+            strategy: "structure-aware".into(),
+            seed: 12,
+            epoch_cycles: 5,
+            steps_per_cycle: 4,
+            record_spikes: true,
+        }
+    }
+
+    fn snap() -> Snapshot {
+        Snapshot {
+            fingerprint: fp(),
+            cycle: 40,
+            quota: 256,
+            parts: vec![vec![1, 2, 3], vec![], vec![255; 9], vec![7]],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let s = snap();
+        let back = Snapshot::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(back.fingerprint, s.fingerprint);
+        assert_eq!(back.cycle, 40);
+        assert_eq!(back.quota, 256);
+        assert_eq!(back.parts, s.parts);
+    }
+
+    #[test]
+    fn truncation_detected_not_panicked() {
+        let bytes = snap().to_bytes();
+        for cut in [0, 5, 27, 28, bytes.len() - 1] {
+            let err = Snapshot::from_bytes(&bytes[..cut])
+                .expect_err("truncated snapshot accepted");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated")
+                    || msg.contains("shorter than the 28-byte header"),
+                "unhelpful truncation error: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_detected_by_checksum() {
+        let mut bytes = snap().to_bytes();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        let err = Snapshot::from_bytes(&bytes)
+            .expect_err("corrupted snapshot accepted");
+        assert!(format!("{err:#}").contains("checksum"));
+    }
+
+    #[test]
+    fn wrong_magic_and_version_rejected() {
+        let mut bytes = snap().to_bytes();
+        bytes[0] = b'X';
+        let err = Snapshot::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("bad magic"));
+
+        let mut bytes = snap().to_bytes();
+        bytes[8] = 99;
+        let err = Snapshot::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("version 99"));
+    }
+
+    #[test]
+    fn fingerprint_mismatches_name_the_field() {
+        let a = fp();
+        let mut b = fp();
+        b.threads_per_rank = 4;
+        let err = a.check_matches(&b).unwrap_err();
+        assert!(format!("{err:#}").contains("--threads"));
+
+        let mut c = fp();
+        c.seed = 13;
+        let err = a.check_matches(&c).unwrap_err();
+        assert!(format!("{err:#}").contains("--seed"));
+        a.check_matches(&fp()).unwrap();
+    }
+
+    #[test]
+    fn atomic_write_then_read_back() {
+        let dir = std::env::temp_dir();
+        let path = dir
+            .join(format!("nsim_ckpt_test_{}.ckpt", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let s = snap();
+        s.write_atomic(&path).unwrap();
+        assert!(
+            !std::path::Path::new(&format!("{path}.tmp")).exists(),
+            "temporary file left behind"
+        );
+        let back = Snapshot::read_verified(&path).unwrap();
+        assert_eq!(back.parts, s.parts);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn ckpt_ctx_collects_parts_and_reports_write_errors() {
+        let ctx = CkptCtx::new(
+            2,
+            fp(),
+            "/nonexistent-dir-zzz/nsim.ckpt".into(),
+        );
+        ctx.deposit(0, vec![1]);
+        ctx.deposit(1, vec![2]);
+        ctx.assemble_and_write(10, 64);
+        let err = ctx.check().expect_err("write into missing dir succeeded");
+        assert!(format!("{err:#}").contains("checkpoint write failed"));
+    }
+}

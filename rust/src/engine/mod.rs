@@ -44,7 +44,19 @@
 //! the deadline schedule and `comm::nonblocking` for the ring protocol.
 //! All modes, depths and group sizes produce bit-identical spike trains
 //! in every exec mode.
+//!
+//! **Fault tolerance**: with `--checkpoint-every N` the engine snapshots
+//! the full dynamic state every N epochs through `engine::checkpoint`
+//! (collective assembly, atomic write) and `--restore <path>` resumes a
+//! run from such a snapshot bit-identically; `--comm-timeout` arms the
+//! transport watchdog so a dead or stalled rank surfaces as a
+//! structured [`crate::comm::CommError`] naming the tier, operation and
+//! missing peers instead of a hang; and the deterministic fault plan
+//! (`--straggler`, `--delay-deposit`, `--kill-at`) injects compute
+//! stragglers, held-back deposits and rank kills for the recovery
+//! tests and experiments.
 
+pub mod checkpoint;
 pub mod neuron;
 pub mod rank;
 pub mod receive;
@@ -59,7 +71,9 @@ use crate::network::{Gid, ModelSpec};
 use crate::placement::Placement;
 use crate::util::timers::PhaseTimes;
 use anyhow::{Context, Result};
-use rank::{RankResult, RankState};
+use checkpoint::{CkptCtx, Fingerprint, Snapshot};
+use rank::{CkptSched, RankResult, RankState, RunOpts};
+use std::time::Duration;
 use update::Updater;
 
 /// Outcome of a functional simulation.
@@ -191,9 +205,63 @@ pub fn simulate_with(
         );
     }
 
+    // identity of the simulated state: a snapshot only restores into a
+    // run that rebuilds the exact same deterministic structures
+    let epoch_cycles = if cfg.strategy.dual_pathways() {
+        (spec.delay_ratio() as u64).max(1)
+    } else {
+        1
+    };
+    let fingerprint = Fingerprint {
+        model: spec.name.clone(),
+        n_neurons: spec.total_neurons(),
+        m_ranks: cfg.m_ranks as u32,
+        threads_per_rank: cfg.threads_per_rank as u32,
+        ranks_per_area: cfg.ranks_per_area as u32,
+        strategy: cfg.strategy.name().to_string(),
+        seed: cfg.seed,
+        epoch_cycles,
+        steps_per_cycle,
+        record_spikes: cfg.record_spikes,
+    };
+    let snapshot = match &cfg.restore {
+        Some(path) => {
+            let snap = Snapshot::read_verified(path)?;
+            snap.fingerprint.check_matches(&fingerprint)?;
+            anyhow::ensure!(
+                snap.cycle < s_cycles,
+                "snapshot was taken at cycle {} but this run simulates \
+                 only {s_cycles} cycles — nothing left to resume",
+                snap.cycle,
+            );
+            anyhow::ensure!(
+                snap.parts.len() == cfg.m_ranks,
+                "snapshot holds {} rank parts but this run uses {} ranks",
+                snap.parts.len(),
+                cfg.m_ranks,
+            );
+            Some(snap)
+        }
+        None => None,
+    };
+    let start_cycle = snapshot.as_ref().map_or(0, |s| s.cycle);
+    // resume from the grown quota so the transport's mailbox capacity
+    // (and hence its growth trajectory) continues where it left off
+    let quota = snapshot
+        .as_ref()
+        .map_or(cfg.comm_quota, |s| s.quota as usize);
+    let ckpt_ctx = (cfg.checkpoint_every > 0).then(|| {
+        CkptCtx::new(
+            cfg.m_ranks,
+            fingerprint.clone(),
+            cfg.checkpoint_path.clone(),
+        )
+    });
+
     let world = WorldBuilder::new(cfg.m_ranks)
-        .quota(cfg.comm_quota)
+        .quota(quota)
         .depth(cfg.comm_depth)
+        .timeout(cfg.comm_timeout.map(Duration::from_secs_f64))
         .build();
     let results: Result<Vec<RankResult>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.m_ranks)
@@ -201,20 +269,25 @@ pub fn simulate_with(
                 let comm = world.communicator(r);
                 let placement = &placement;
                 let updater = &updater;
+                let snapshot = &snapshot;
+                let ckpt_ctx = &ckpt_ctx;
                 scope.spawn(move || -> Result<RankResult> {
                     // hierarchical communicators: dual-pathway runs
                     // split one local communicator per area group off
                     // the global world (collective: every rank calls
                     // split exactly once, colored by its group)
                     let local_comm = if cfg.strategy.dual_pathways() {
-                        Some(comm.split(
-                            placement.group_of_rank(r) as u64,
-                            r as u64,
-                        ))
+                        Some(
+                            comm.split(
+                                placement.group_of_rank(r) as u64,
+                                r as u64,
+                            )
+                            .context("splitting the local communicator")?,
+                        )
                     } else {
                         None
                     };
-                    let state = RankState::build(
+                    let mut state = RankState::build(
                         spec,
                         placement,
                         cfg.strategy,
@@ -223,7 +296,7 @@ pub fn simulate_with(
                         cfg.seed,
                         &comm,
                         cfg.record_spikes,
-                    );
+                    )?;
                     // a pipeline deeper than the *realized* delay slack
                     // would force completing an exchange in the very
                     // cycle that needs its spikes; reduce the rank-local
@@ -231,7 +304,8 @@ pub fn simulate_with(
                     // accept/reject branch (no rank left at a barrier)
                     if cfg.comm == CommMode::Overlap && cfg.comm_depth > 1 {
                         let sustainable = comm
-                            .allreduce_min_u64(state.max_sustainable_depth());
+                            .allreduce_min_u64(state.max_sustainable_depth())
+                            .context("depth-validation reduction")?;
                         anyhow::ensure!(
                             cfg.comm_depth as u64 <= sustainable,
                             "comm depth {} exceeds the realized delay \
@@ -246,14 +320,27 @@ pub fn simulate_with(
                             sustainable,
                         );
                     }
-                    Ok(state.run(
+                    if let Some(snap) = snapshot.as_ref() {
+                        state.restore_part(&snap.parts[r]).with_context(
+                            || format!("restoring rank {r} state"),
+                        )?;
+                    }
+                    state.run(
                         &comm,
                         local_comm.as_ref(),
-                        s_cycles,
                         updater,
-                        cfg.record_cycle_times,
-                        cfg.exec,
-                    ))
+                        RunOpts {
+                            s_cycles,
+                            start_cycle,
+                            record_cycle_times: cfg.record_cycle_times,
+                            exec: cfg.exec,
+                            faults: cfg.faults.for_rank(r),
+                            ckpt: ckpt_ctx.as_ref().map(|ctx| CkptSched {
+                                ctx,
+                                every_epochs: cfg.checkpoint_every,
+                            }),
+                        },
+                    )
                 })
             })
             .collect();

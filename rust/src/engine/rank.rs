@@ -73,10 +73,13 @@
 //!    collocate and runs the communicate step while workers park at the
 //!    next cycle's *runs ready* barrier.
 //!
-//! Workers know the cycle count up front, so termination needs no
-//! signalling: after the last cycle they return their recorded spikes,
-//! table statistics and residual ring-buffer mass through the
-//! scoped-thread join handles.
+//! The *runs ready* barrier doubles as the stop gate: the coordinator
+//! raises an [`AtomicBool`] before releasing it when the run segment
+//! ends (its natural end, a checkpoint boundary, an injected kill, or
+//! a comm error unwinding the run), and workers hand their
+//! [`ThreadState`] and recorded spikes back through the scoped-thread
+//! join handles — so the rank can checkpoint the state between
+//! segments and resume the same workers for the next one.
 //!
 //! # Overlapped communication ([`crate::config::CommMode::Overlap`])
 //!
@@ -139,8 +142,11 @@
 //! trains are bit-identical to the blocking mode in every exec mode at
 //! every depth.
 
-use crate::comm::{Pending, SpikeMsg, SplitTransport, Transport};
-use crate::config::{CommMode, ExecMode, Strategy};
+use crate::comm::{
+    CommError, Pending, SpikeMsg, SplitTransport, Transport,
+};
+use crate::config::{CommMode, ExecMode, RankFaults, Strategy};
+use crate::engine::checkpoint::{ByteReader, ByteWriter, CkptCtx};
 use crate::engine::neuron::NeuronBlock;
 use crate::engine::receive::{
     bucket_runs, merge_routed, sort_canonical, sort_run, RoutedSpike, RunSet,
@@ -154,10 +160,12 @@ use crate::tables::{
     TargetTable,
 };
 use crate::util::timers::{Phase, PhaseTimes, Stopwatch};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex, MutexGuard};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One virtual thread's worth of state.
 pub struct ThreadState {
@@ -385,6 +393,54 @@ pub struct RankResult {
     pub ring_pending: Vec<f64>,
 }
 
+/// The rank-side view of the engine's checkpoint schedule: the shared
+/// collection context and the epoch period.  `None` in
+/// [`RunOpts::ckpt`] disables checkpointing entirely.
+pub struct CkptSched<'a> {
+    pub ctx: &'a CkptCtx,
+    pub every_epochs: u64,
+}
+
+/// Everything [`RankState::run`] needs beyond the communicators: the
+/// cycle range, the exec mode, this rank's injected faults and the
+/// checkpoint schedule.  `start_cycle > 0` means the state was restored
+/// from a snapshot taken at that cycle.
+pub struct RunOpts<'a> {
+    pub s_cycles: u64,
+    pub start_cycle: u64,
+    pub record_cycle_times: bool,
+    pub exec: ExecMode,
+    pub faults: RankFaults,
+    pub ckpt: Option<CkptSched<'a>>,
+}
+
+/// Apply the injected compute-straggler factor for `epoch`: sleep so
+/// the cycle's update phase appears inflated by the configured factor.
+/// Purely a timing perturbation — neuron state is untouched, so spike
+/// trains are bit-identical with and without the injection (which the
+/// fault-tolerance tests assert).  Returns the extra seconds, charged
+/// to the update phase like real compute would be.
+fn straggle(
+    faults: &RankFaults,
+    epoch: u64,
+    update_secs: f64,
+    phase_times: &mut PhaseTimes,
+    sw: &mut Stopwatch,
+) -> f64 {
+    let factor = faults.straggle_factor(epoch);
+    if factor <= 1.0 || update_secs <= 0.0 {
+        return 0.0;
+    }
+    std::thread::sleep(Duration::from_secs_f64(
+        (factor - 1.0) * update_secs,
+    ));
+    // lap the caller's stopwatch over the sleep so the injected time
+    // lands in the update phase, not the next phase it would charge
+    let extra = sw.lap();
+    phase_times.add(Phase::Update, extra);
+    extra
+}
+
 /// Commands from the rank's coordinator to one pool worker.  Buffers
 /// travel with the command and come back with the reply, so the pool is
 /// allocation-free in steady state.
@@ -417,10 +473,10 @@ enum Reply {
     },
     Finished {
         spikes: Vec<(u64, Gid)>,
-        n_conns_short: usize,
-        n_conns_long: usize,
-        n_neurons: usize,
-        ring_pending: f64,
+        /// The worker's thread state, handed back so the rank can
+        /// checkpoint between segments and reuse the state for the
+        /// next one (boxed: the state dwarfs the other variants).
+        state: Box<ThreadState>,
     },
 }
 
@@ -467,10 +523,7 @@ fn worker_loop(
             Cmd::Finish => {
                 let _ = tx.send(Reply::Finished {
                     spikes,
-                    n_conns_short: th.conn.short.n_connections(),
-                    n_conns_long: th.conn.long.n_connections(),
-                    n_neurons: th.gids.len(),
-                    ring_pending: th.ring.pending_total(),
+                    state: Box::new(th),
                 });
                 return;
             }
@@ -582,11 +635,16 @@ impl Drop for AbortOnPanic {
 }
 
 /// Body of one persistent barrier-runtime worker (see the module docs
-/// for the phase protocol).  Owns [`ThreadState`] number `me` for the
-/// whole run; participates in the cooperative bucket/merge receive as
-/// producer `me` (grid row) and consumer `me` (grid column).  Returns
-/// its recorded spikes, table statistics and residual ring mass on
-/// join.
+/// for the phase protocol).  Owns [`ThreadState`] number `me` for one
+/// run segment; participates in the cooperative bucket/merge receive
+/// as producer `me` (grid row) and consumer `me` (grid column).  The
+/// worker does not count cycles itself: each iteration starts at the
+/// *runs ready* barrier, which doubles as the stop gate — the
+/// coordinator raises `stop` before releasing that barrier when the
+/// segment is over *or* a comm error is unwinding the run, so workers
+/// always exit cleanly instead of deadlocking the phase barrier.
+/// Returns the thread state (for checkpointing / the next segment)
+/// and the spikes recorded during the segment.
 #[allow(clippy::too_many_arguments)]
 fn barrier_worker(
     me: usize,
@@ -596,18 +654,25 @@ fn barrier_worker(
     grid: &[Vec<Mutex<BucketCell>>],
     shards: &Pathways<SourceShards>,
     barrier: &Barrier,
-    s_cycles: u64,
+    stop: &AtomicBool,
+    start: u64,
+    end: u64,
     steps: u64,
     dual: bool,
     group_start: u16,
     record_spikes: bool,
-) -> (Vec<(u64, Gid)>, usize, usize, usize, f64) {
+) -> (ThreadState, Vec<(u64, Gid)>) {
     let _abort_guard = AbortOnPanic;
     let mut spikes: Vec<(u64, Gid)> = Vec::new();
     let mut heads: Vec<usize> = Vec::new();
-    for s in 0..s_cycles {
+    let mut s = start;
+    loop {
+        barrier.wait(); // runs ready (doubles as the stop gate)
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        debug_assert!(s < end, "coordinator released a cycle past the end");
         let first_step = s * steps;
-        barrier.wait(); // runs ready
         let mut guard = slot.data.lock().unwrap();
         let d = &mut *guard;
         // ---- bucket phase: sort + merge own runs, scatter into grid
@@ -671,15 +736,9 @@ fn barrier_worker(
         );
         drop(guard);
         barrier.wait(); // collocate done
+        s += 1;
     }
-    let ring_pending = th.ring.pending_total();
-    (
-        spikes,
-        th.conn.short.n_connections(),
-        th.conn.long.n_connections(),
-        th.gids.len(),
-        ring_pending,
-    )
+    (th, spikes)
 }
 
 /// One in-flight split-phase exchange, the cycle before whose deliver
@@ -766,7 +825,7 @@ impl RankState {
         seed: u64,
         comm: &T,
         record_spikes: bool,
-    ) -> RankState {
+    ) -> Result<RankState> {
         let rank = comm.rank();
         let m = comm.m_ranks();
         let t_m = placement.threads_per_rank();
@@ -884,7 +943,9 @@ impl RankState {
                 v
             })
             .collect();
-        let (recv, _) = comm.alltoall(&mut send);
+        let (recv, _) = comm
+            .alltoall(&mut send)
+            .context("target-table construction exchange")?;
         for (src_rank, buf) in recv.iter().enumerate() {
             for msg in buf {
                 let (th, idx) = local_index[&msg.source];
@@ -916,7 +977,7 @@ impl RankState {
         let (group_start, group_size) = (group.start, group.len());
 
         let n_threads = threads.len();
-        RankState {
+        Ok(RankState {
             rank,
             strategy,
             comm_mode,
@@ -947,7 +1008,7 @@ impl RankState {
             merge_heads: Vec::new(),
             record_spikes,
             spikes: Vec::new(),
-        }
+        })
     }
 
     pub fn n_local_neurons(&self) -> usize {
@@ -1029,16 +1090,19 @@ impl RankState {
     /// exchanges whose spikes fall beyond the simulated horizon),
     /// absorbing their per-source buffers as runs into `recv.long`
     /// exactly as the blocking path does.  Completion-side wait is
-    /// charged to `Synchronize`, drains to `DataExchange`.
+    /// charged to `Synchronize`, drains to `DataExchange`.  A watchdog
+    /// timeout (or poisoned transport) surfaces as a [`CommError`]; the
+    /// caller must then tear the remaining pipeline down through
+    /// [`RankState::abandon_inflight`] before unwinding.
     fn service_exchanges<P: Pending>(
         &mut self,
         inflight: &mut VecDeque<InFlight<P>>,
         s: u64,
         force: bool,
         phase_times: &mut PhaseTimes,
-    ) {
+    ) -> Result<(), CommError> {
         if inflight.is_empty() {
-            return;
+            return Ok(());
         }
         // incremental per-source completion: a condvar-free try-drain
         // over every pending (exchange, source) pair, so the deadline
@@ -1047,7 +1111,7 @@ impl RankState {
         for f in inflight.iter_mut() {
             let InFlight { pending, recv, .. } = f;
             for (src, out) in recv.iter_mut().enumerate() {
-                pending.try_complete_source(src, out);
+                pending.try_complete_source(src, out)?;
             }
         }
         phase_times.add(Phase::DataExchange, t0.elapsed().as_secs_f64());
@@ -1058,7 +1122,7 @@ impl RankState {
         {
             let InFlight { pending, mut recv, .. } =
                 inflight.pop_front().unwrap();
-            let timing = pending.complete(&mut recv);
+            let timing = pending.complete(&mut recv)?;
             phase_times.add(Phase::Synchronize, timing.wait_secs);
             phase_times.add(Phase::DataExchange, timing.drain_secs);
             // absorb as runs (two pipelined exchanges may reach their
@@ -1069,6 +1133,22 @@ impl RankState {
                 self.recv.long.push_run(buf);
             }
             self.recv_pool.push(recv);
+        }
+        Ok(())
+    }
+
+    /// Error-path teardown of the split-phase pipeline: consume every
+    /// still-pending exchange without completing it (see
+    /// [`Pending::abandon`]) and reclaim the receive-buffer sets, so a
+    /// typed [`CommError`] can propagate as a clean `Err` instead of
+    /// tripping the leak check in the pending handle's `Drop`.
+    fn abandon_inflight<P: Pending>(
+        &mut self,
+        inflight: &mut VecDeque<InFlight<P>>,
+    ) {
+        for f in inflight.drain(..) {
+            f.pending.abandon();
+            self.recv_pool.push(f.recv);
         }
     }
 
@@ -1128,9 +1208,10 @@ impl RankState {
         local: Option<&T::Sub>,
         s: u64,
         dual: bool,
+        faults: &RankFaults,
         phase_times: &mut PhaseTimes,
         inflight: &mut VecDeque<InFlight<T::Pending>>,
-    ) {
+    ) -> Result<(), CommError> {
         if dual {
             let local = local.expect(
                 "dual-pathway strategies need a local communicator \
@@ -1143,7 +1224,7 @@ impl RankState {
                 let timing = local.alltoall_into(
                     &mut self.local_send_group,
                     &mut self.recv_local_group,
-                );
+                )?;
                 phase_times.add(Phase::Synchronize, timing.sync_secs);
                 phase_times.add(Phase::DataExchange, timing.data_secs);
                 // absorb each group member's buffer as one run — the
@@ -1162,12 +1243,19 @@ impl RankState {
             }
         }
         if (s + 1) % self.epoch_cycles == 0 {
+            // fault injection: hold this rank's deposits back from the
+            // epoch-boundary exchange (timing-only — spike trains are
+            // unchanged; peers beyond the watchdog budget time out)
+            let delay_ms = faults.deposit_delay_ms(s / self.epoch_cycles);
+            if delay_ms > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(delay_ms / 1e3));
+            }
             match self.comm_mode {
                 CommMode::Blocking => {
                     let timing = comm.alltoall_into(
                         &mut self.global_send,
                         &mut self.recv_global,
-                    );
+                    )?;
                     phase_times.add(Phase::Synchronize, timing.sync_secs);
                     phase_times.add(Phase::DataExchange, timing.data_secs);
                     for buf in &mut self.recv_global {
@@ -1181,7 +1269,7 @@ impl RankState {
                         inflight.len(),
                         self.comm_depth
                     );
-                    let pending = comm.alltoall_start(&mut self.global_send);
+                    let pending = comm.alltoall_start(&mut self.global_send)?;
                     phase_times.add(Phase::DataExchange, pending.post_secs());
                     let mut recv =
                         self.recv_pool.pop().unwrap_or_default();
@@ -1194,80 +1282,353 @@ impl RankState {
                 }
             }
         }
+        Ok(())
     }
 
-    /// Run the state-propagation loop for `s_cycles` cycles.  `local` is
-    /// the rank's area-group sub-communicator (required by dual-pathway
-    /// strategies, where it carries the local tier of the hybrid
-    /// schedule; `None` is fine otherwise).
+    /// Run the state-propagation loop from `opts.start_cycle` to
+    /// `opts.s_cycles`.  `local` is the rank's area-group
+    /// sub-communicator (required by dual-pathway strategies, where it
+    /// carries the local tier of the hybrid schedule; `None` is fine
+    /// otherwise).
+    ///
+    /// The run is cut into **segments** at every checkpoint boundary
+    /// and at this rank's injected kill cycle; inside a segment the
+    /// per-exec-mode loops run exactly as before.  Segment ends always
+    /// fall on epoch boundaries (checkpoint periods are whole epochs
+    /// and kills are specified per epoch), so the split-phase pipeline
+    /// can be force-drained at each cut without changing spike trains:
+    /// ring rows are keyed by absolute step and f64 accumulation of the
+    /// binary-fraction weights is exact, so *when* an exchange's spikes
+    /// land does not change what any later cycle reads — the same
+    /// argument the blocking/overlap equivalence rests on.
     pub fn run<T: SplitTransport>(
-        self,
-        comm: &T,
-        local: Option<&T::Sub>,
-        s_cycles: u64,
-        updater: &Updater,
-        record_cycle_times: bool,
-        exec: ExecMode,
-    ) -> RankResult {
-        match exec {
-            // a single virtual thread gains nothing from workers; run it
-            // in place so `threads_per_rank = 1` has zero overhead
-            ExecMode::Pooled if self.threads.len() > 1 => self.run_barrier(
-                comm,
-                local,
-                s_cycles,
-                updater,
-                record_cycle_times,
-            ),
-            ExecMode::PooledChannels if self.threads.len() > 1 => self
-                .run_pooled_channels(
-                    comm,
-                    local,
-                    s_cycles,
-                    updater,
-                    record_cycle_times,
-                ),
-            _ => self.run_sequential(
-                comm,
-                local,
-                s_cycles,
-                updater,
-                record_cycle_times,
-            ),
-        }
-    }
-
-    /// Virtual threads iterated in place on the rank's OS thread — the
-    /// reference schedule the pooled path must reproduce bit-exactly.
-    fn run_sequential<T: SplitTransport>(
         mut self,
         comm: &T,
         local: Option<&T::Sub>,
-        s_cycles: u64,
+        updater: &Updater,
+        opts: RunOpts<'_>,
+    ) -> Result<RankResult> {
+        let mut phase_times = PhaseTimes::new();
+        let mut cycle_times =
+            Vec::with_capacity(if opts.record_cycle_times {
+                (opts.s_cycles - opts.start_cycle) as usize
+            } else {
+                0
+            });
+        let period = opts
+            .ckpt
+            .as_ref()
+            .map(|c| c.every_epochs.max(1) * self.epoch_cycles);
+        let kill_cycle = opts
+            .faults
+            .kill_epoch
+            .map(|e| e.saturating_mul(self.epoch_cycles));
+
+        let mut start = opts.start_cycle;
+        loop {
+            let mut end = opts.s_cycles;
+            if let Some(p) = period {
+                end = end.min((start / p + 1) * p);
+            }
+            if let Some(k) = kill_cycle {
+                if k >= start {
+                    end = end.min(k);
+                }
+            }
+            match opts.exec {
+                // a single virtual thread gains nothing from workers;
+                // run in place so `threads_per_rank = 1` is zero-cost
+                ExecMode::Pooled if self.threads.len() > 1 => self
+                    .seg_barrier(
+                        comm,
+                        local,
+                        start,
+                        end,
+                        updater,
+                        opts.record_cycle_times,
+                        &opts.faults,
+                        &mut phase_times,
+                        &mut cycle_times,
+                    )?,
+                ExecMode::PooledChannels if self.threads.len() > 1 => self
+                    .seg_channels(
+                        comm,
+                        local,
+                        start,
+                        end,
+                        updater,
+                        opts.record_cycle_times,
+                        &opts.faults,
+                        &mut phase_times,
+                        &mut cycle_times,
+                    )?,
+                _ => self.seg_sequential(
+                    comm,
+                    local,
+                    start,
+                    end,
+                    updater,
+                    opts.record_cycle_times,
+                    &opts.faults,
+                    &mut phase_times,
+                    &mut cycle_times,
+                )?,
+            }
+            if let (Some(p), Some(sched)) = (period, opts.ckpt.as_ref()) {
+                // every rank passes every period boundary — the killed
+                // rank included: it snapshots first, dies after — so
+                // the checkpoint collectives always match up.  The
+                // `end > start_cycle` guard keeps a rank killed *at*
+                // the restore point from checkpointing stale state.
+                if end % p == 0 && end > opts.start_cycle {
+                    self.write_checkpoint(comm, sched.ctx, end)?;
+                }
+            }
+            if kill_cycle == Some(end) && end < opts.s_cycles {
+                bail!(
+                    "fault injection: rank {} killed at epoch {} (cycle \
+                     {end}); surviving ranks will trip the comm watchdog",
+                    self.rank,
+                    end / self.epoch_cycles,
+                );
+            }
+            if end >= opts.s_cycles {
+                break;
+            }
+            start = end;
+        }
+
+        let (mut n_short, mut n_long, mut n_neurons) = (0usize, 0usize, 0usize);
+        let mut ring_pending = Vec::with_capacity(self.threads.len());
+        for th in &self.threads {
+            n_short += th.conn.short.n_connections();
+            n_long += th.conn.long.n_connections();
+            n_neurons += th.gids.len();
+            ring_pending.push(th.ring.pending_total());
+        }
+        Ok(RankResult {
+            rank: self.rank,
+            phase_times,
+            cycle_times,
+            spikes: self.spikes,
+            n_conns_short: n_short,
+            n_conns_long: n_long,
+            n_neurons,
+            ring_pending,
+        })
+    }
+
+    /// Collective checkpoint at cycle `cycle` (a segment boundary, so
+    /// the split-phase pipeline is drained to depth 0 and the spike
+    /// registers are empty).  Every rank deposits its serialized part
+    /// into the shared [`CkptCtx`]; rank 0 assembles and atomically
+    /// writes the snapshot between two barrier collectives (allreduce
+    /// over a dummy value — the transport's one always-available
+    /// barrier), then all ranks check the published outcome so a write
+    /// failure surfaces on every rank, not just rank 0.
+    fn write_checkpoint<T: Transport>(
+        &mut self,
+        comm: &T,
+        ck: &CkptCtx,
+        cycle: u64,
+    ) -> Result<()> {
+        let part = self.serialize_part();
+        ck.deposit(self.rank, part);
+        comm.allreduce_min_u64(0)
+            .context("checkpoint deposit barrier")?;
+        if self.rank == 0 {
+            ck.assemble_and_write(cycle, comm.quota() as u64);
+        }
+        comm.allreduce_min_u64(0)
+            .context("checkpoint publish barrier")?;
+        ck.check()
+    }
+
+    /// Serialize this rank's dynamic state as one snapshot part: per
+    /// virtual thread the neuron state and the ring-buffer accumulators,
+    /// then the received-but-undelivered runs per pathway and the
+    /// recorded spikes.  Everything else (tables, target masks, GIDs)
+    /// is rebuilt deterministically from the model spec at restore.
+    fn serialize_part(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(self.threads.len() as u32);
+        for th in &self.threads {
+            match &th.block {
+                NeuronBlock::Lif { v, refr, .. } => {
+                    w.u8(0);
+                    w.u64(v.len() as u64);
+                    for &x in v {
+                        w.f32(x);
+                    }
+                    for &x in refr {
+                        w.f32(x);
+                    }
+                }
+                NeuronBlock::IgnoreAndFire { phase, .. } => {
+                    w.u8(1);
+                    w.u64(phase.len() as u64);
+                    for &x in phase {
+                        w.f32(x);
+                    }
+                }
+            }
+            w.u64(th.ring.n_neurons() as u64);
+            w.u64(th.ring.n_slots() as u64);
+            for &x in th.ring.slots() {
+                w.f64(x);
+            }
+            debug_assert!(
+                th.register.short.is_empty() && th.register.long.is_empty(),
+                "spike registers must be drained at a checkpoint boundary"
+            );
+        }
+        for set in [&self.recv.short, &self.recv.long] {
+            let runs = set.runs();
+            w.u32(runs.len() as u32);
+            for run in runs {
+                w.u64(run.len() as u64);
+                for msg in run {
+                    w.u32(msg.source);
+                    w.u32(msg.cycle);
+                }
+            }
+        }
+        debug_assert!(
+            self.global_send.iter().all(|b| b.is_empty()),
+            "global send buffers must be empty at a checkpoint boundary"
+        );
+        w.u64(self.spikes.len() as u64);
+        for &(step, gid) in &self.spikes {
+            w.u64(step);
+            w.u32(gid);
+        }
+        w.into_bytes()
+    }
+
+    /// Restore this rank's dynamic state from a snapshot part written
+    /// by [`RankState::serialize_part`] on a matching run (the engine
+    /// checks the snapshot fingerprint first; the shape checks here
+    /// catch corruption that survived the checksum-verified framing).
+    pub fn restore_part(&mut self, part: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(part);
+        let n_threads = r.u32()? as usize;
+        ensure!(
+            n_threads == self.threads.len(),
+            "snapshot rank part has {n_threads} virtual threads but \
+             this run builds {}",
+            self.threads.len(),
+        );
+        for th in &mut self.threads {
+            let tag = r.u8()?;
+            let n = r.u64()? as usize;
+            ensure!(
+                n == th.gids.len(),
+                "snapshot thread holds {n} neurons but this run's \
+                 thread holds {}",
+                th.gids.len(),
+            );
+            match (tag, &mut th.block) {
+                (0, NeuronBlock::Lif { v, refr, .. }) => {
+                    for x in v.iter_mut() {
+                        *x = r.f32()?;
+                    }
+                    for x in refr.iter_mut() {
+                        *x = r.f32()?;
+                    }
+                }
+                (1, NeuronBlock::IgnoreAndFire { phase, .. }) => {
+                    for x in phase.iter_mut() {
+                        *x = r.f32()?;
+                    }
+                }
+                (tag, _) => bail!(
+                    "snapshot neuron-block tag {tag} does not match \
+                     this run's neuron model"
+                ),
+            }
+            let ring_neurons = r.u64()? as usize;
+            let ring_slots = r.u64()? as usize;
+            ensure!(
+                ring_neurons == th.ring.n_neurons()
+                    && ring_slots == th.ring.n_slots(),
+                "snapshot ring buffer is {ring_neurons} neurons × \
+                 {ring_slots} slots but this run builds {} × {}",
+                th.ring.n_neurons(),
+                th.ring.n_slots(),
+            );
+            let mut slots = vec![0.0f64; ring_neurons * ring_slots];
+            for x in slots.iter_mut() {
+                *x = r.f64()?;
+            }
+            th.ring.load_slots(&slots).map_err(anyhow::Error::msg)?;
+        }
+        for long_slot in [false, true] {
+            let n_runs = r.u32()?;
+            for _ in 0..n_runs {
+                let len = r.u64()? as usize;
+                let mut run = Vec::with_capacity(len);
+                for _ in 0..len {
+                    let source = r.u32()?;
+                    let cycle = r.u32()?;
+                    run.push(SpikeMsg { source, cycle });
+                }
+                self.recv.get_mut(long_slot).push_run(&mut run);
+            }
+        }
+        let n_spikes = r.u64()? as usize;
+        self.spikes.reserve(n_spikes);
+        for _ in 0..n_spikes {
+            let step = r.u64()?;
+            let gid = r.u32()?;
+            self.spikes.push((step, gid));
+        }
+        ensure!(
+            r.is_done(),
+            "rank part has trailing bytes after the recorded spikes"
+        );
+        Ok(())
+    }
+
+    /// Virtual threads iterated in place on the rank's OS thread — the
+    /// reference schedule the pooled paths must reproduce bit-exactly —
+    /// over the segment of cycles `[start, end)`.
+    #[allow(clippy::too_many_arguments)]
+    fn seg_sequential<T: SplitTransport>(
+        &mut self,
+        comm: &T,
+        local: Option<&T::Sub>,
+        start: u64,
+        end: u64,
         updater: &Updater,
         record_cycle_times: bool,
-    ) -> RankResult {
-        let mut phase_times = PhaseTimes::new();
-        let mut cycle_times = Vec::with_capacity(if record_cycle_times {
-            s_cycles as usize
-        } else {
-            0
-        });
+        faults: &RankFaults,
+        phase_times: &mut PhaseTimes,
+        cycle_times: &mut Vec<f64>,
+    ) -> Result<()> {
         let dual = self.strategy.dual_pathways();
         let mut inflight: VecDeque<InFlight<T::Pending>> = VecDeque::new();
+        // on a comm error the remaining pipeline must be abandoned (not
+        // dropped) before unwinding, so errors break out to one exit
+        // instead of returning early
+        let mut outcome: Result<()> = Ok(());
 
-        for s in 0..s_cycles {
+        for s in start..end {
             let first_step = s * self.steps_per_cycle;
             // drain early deposits and complete due overlapped exchanges
             // before the deliver phase (charged to their own phases, not
             // this cycle's timer)
-            self.service_exchanges(&mut inflight, s, false, &mut phase_times);
+            if let Err(e) =
+                self.service_exchanges(&mut inflight, s, false, phase_times)
+            {
+                outcome = Err(e.into());
+                break;
+            }
             let mut sw = Stopwatch::start();
             let mut cycle_secs = 0.0;
 
             // ---- deliver -------------------------------------------------
             self.deliver_runs_sequential(dual, first_step);
-            cycle_secs += sw.charge(&mut phase_times, Phase::Deliver);
+            cycle_secs += sw.charge(phase_times, Phase::Deliver);
 
             // ---- update --------------------------------------------------
             for th in &mut self.threads {
@@ -1280,66 +1641,76 @@ impl RankState {
                     &mut self.spikes,
                 );
             }
-            cycle_secs += sw.charge(&mut phase_times, Phase::Update);
+            let upd = sw.charge(phase_times, Phase::Update);
+            cycle_secs += upd;
+            cycle_secs += straggle(
+                faults,
+                s / self.epoch_cycles,
+                upd,
+                phase_times,
+                &mut sw,
+            );
 
             // ---- collocate -----------------------------------------------
             self.collocate_all(dual);
-            cycle_secs += sw.charge(&mut phase_times, Phase::Collocate);
+            cycle_secs += sw.charge(phase_times, Phase::Collocate);
             if record_cycle_times {
                 cycle_times.push(cycle_secs);
             }
 
             // ---- communicate ---------------------------------------------
-            self.communicate(
+            if let Err(e) = self.communicate(
                 comm,
                 local,
                 s,
                 dual,
-                &mut phase_times,
+                faults,
+                phase_times,
                 &mut inflight,
-            );
+            ) {
+                outcome = Err(e.into());
+                break;
+            }
         }
-        // the final posted exchanges carry spikes beyond the simulated
-        // horizon; complete them for collective symmetry and drop the
-        // data (the blocking path likewise never delivers its last
-        // receive)
-        self.service_exchanges(&mut inflight, s_cycles, true, &mut phase_times);
-
-        let (mut n_short, mut n_long, mut n_neurons) = (0usize, 0usize, 0usize);
-        let mut ring_pending = Vec::with_capacity(self.threads.len());
-        for th in &self.threads {
-            n_short += th.conn.short.n_connections();
-            n_long += th.conn.long.n_connections();
-            n_neurons += th.gids.len();
-            ring_pending.push(th.ring.pending_total());
+        // drain the pipeline to depth 0 at the segment end: the final
+        // posted exchanges either carry spikes beyond the simulated
+        // horizon (run end — the blocking path likewise never delivers
+        // its last receive) or land in ring rows keyed by absolute
+        // step, unchanged by completing early (checkpoint boundary)
+        if outcome.is_ok() {
+            outcome = self
+                .service_exchanges(&mut inflight, end, true, phase_times)
+                .map_err(Into::into);
         }
-        RankResult {
-            rank: self.rank,
-            phase_times,
-            cycle_times,
-            spikes: self.spikes,
-            n_conns_short: n_short,
-            n_conns_long: n_long,
-            n_neurons,
-            ring_pending,
+        if outcome.is_err() {
+            self.abandon_inflight(&mut inflight);
         }
+        outcome
     }
 
     /// The persistent barrier-synced worker runtime (the default pooled
-    /// path; protocol in the module docs): workers spawned once, phases
+    /// path; protocol in the module docs) over the segment of cycles
+    /// `[start, end)`: workers spawned once per segment, phases
     /// separated by a reusable [`Barrier`], received runs distributed
     /// round-robin and bucketed/merged *cooperatively by the workers*
     /// through the T×T grid — the coordinator never sorts or scans a
     /// spike.  The per-thread merged delivery order equals the
-    /// sequential schedule's, so results match bit-exactly.
-    fn run_barrier<T: SplitTransport>(
-        mut self,
+    /// sequential schedule's, so results match bit-exactly.  Workers
+    /// hand their [`ThreadState`] back at the segment end (stop gate in
+    /// [`barrier_worker`]) so the rank can checkpoint between segments.
+    #[allow(clippy::too_many_arguments)]
+    fn seg_barrier<T: SplitTransport>(
+        &mut self,
         comm: &T,
         local: Option<&T::Sub>,
-        s_cycles: u64,
+        start: u64,
+        end: u64,
         updater: &Updater,
         record_cycle_times: bool,
-    ) -> RankResult {
+        faults: &RankFaults,
+        phase_times: &mut PhaseTimes,
+        cycle_times: &mut Vec<f64>,
+    ) -> Result<()> {
         let dual = self.strategy.dual_pathways();
         let m = comm.m_ranks();
         let worker_states = std::mem::take(&mut self.threads);
@@ -1348,12 +1719,6 @@ impl RankState {
         let record_spikes = self.record_spikes;
         let group_start = self.group_start as u16;
         let group_size = self.group_size;
-        let mut phase_times = PhaseTimes::new();
-        let mut cycle_times = Vec::with_capacity(if record_cycle_times {
-            s_cycles as usize
-        } else {
-            0
-        });
 
         let slots: Vec<WorkerSlot> = (0..n_workers)
             .map(|_| WorkerSlot {
@@ -1377,149 +1742,169 @@ impl RankState {
         // coordinator does not route, so it lends the field out
         let shards = std::mem::take(&mut self.shards);
         let barrier = Barrier::new(n_workers + 1);
+        // the stop gate: raised before releasing the *runs ready*
+        // barrier so workers exit cleanly at the segment end and on
+        // the comm-error unwind path alike
+        let stop = AtomicBool::new(false);
 
-        let (spikes, n_short, n_long, n_neurons, ring_pending) =
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = worker_states
-                    .into_iter()
-                    .enumerate()
-                    .map(|(i, th)| {
-                        let slot = &slots[i];
-                        let barrier = &barrier;
-                        let grid = &grid;
-                        let shards = &shards;
-                        scope.spawn(move || {
-                            barrier_worker(
-                                i,
-                                th,
-                                updater,
-                                slot,
-                                grid,
-                                shards,
-                                barrier,
-                                s_cycles,
-                                steps,
-                                dual,
-                                group_start,
-                                record_spikes,
-                            )
-                        })
+        let (threads_back, outcome) = std::thread::scope(|scope| {
+            let handles: Vec<_> = worker_states
+                .into_iter()
+                .enumerate()
+                .map(|(i, th)| {
+                    let slot = &slots[i];
+                    let barrier = &barrier;
+                    let grid = &grid;
+                    let shards = &shards;
+                    let stop = &stop;
+                    scope.spawn(move || {
+                        barrier_worker(
+                            i,
+                            th,
+                            updater,
+                            slot,
+                            grid,
+                            shards,
+                            barrier,
+                            stop,
+                            start,
+                            end,
+                            steps,
+                            dual,
+                            group_start,
+                            record_spikes,
+                        )
                     })
-                    .collect();
-                let mut inflight: VecDeque<InFlight<T::Pending>> =
-                    VecDeque::new();
+                })
+                .collect();
+            let mut inflight: VecDeque<InFlight<T::Pending>> =
+                VecDeque::new();
+            // errors break to the one exit so workers are always
+            // released through the stop gate and the pipeline is
+            // abandoned, never leaked (both error points below leave
+            // the workers parked at the *runs ready* barrier)
+            let mut outcome: Result<()> = Ok(());
 
-                for s in 0..s_cycles {
-                    // drain early deposits and complete due exchanges
-                    // before handing the runs out
-                    self.service_exchanges(
-                        &mut inflight,
-                        s,
-                        false,
-                        &mut phase_times,
-                    );
-                    let mut sw = Stopwatch::start();
-                    let mut cycle_secs = 0.0;
-
-                    // ---- deliver: distribute runs, workers bucket+merge --
-                    {
-                        let mut queues: Vec<MutexGuard<'_, SlotData>> =
-                            slots
-                                .iter()
-                                .map(|sl| sl.data.lock().unwrap())
-                                .collect();
-                        for (i, run) in
-                            self.recv.short.drain_runs().enumerate()
-                        {
-                            queues[i % n_workers].runs_short.push(run);
-                        }
-                        for (i, run) in
-                            self.recv.long.drain_runs().enumerate()
-                        {
-                            queues[i % n_workers].runs_long.push(run);
-                        }
-                    }
-                    barrier.wait(); // runs ready
-                    barrier.wait(); // buckets ready
-                    barrier.wait(); // deliver done
-                    cycle_secs += sw.charge(&mut phase_times, Phase::Deliver);
-
-                    // ---- update ------------------------------------------
-                    barrier.wait(); // update done
-                    cycle_secs += sw.charge(&mut phase_times, Phase::Update);
-
-                    // ---- collocate ---------------------------------------
-                    barrier.wait(); // collocate done
-                    // drain in virtual-thread order: this concatenation is
-                    // the ordering decision that matches the sequential
-                    // schedule.  Also reclaim the cleared run buffers the
-                    // workers consumed, so their capacity circulates back
-                    // through the RunSet pools.
-                    for sl in &slots {
-                        let mut guard = sl.data.lock().unwrap();
-                        let d = &mut *guard;
-                        for run in d.runs_short.drain(..) {
-                            self.recv.short.recycle(run);
-                        }
-                        for run in d.runs_long.drain(..) {
-                            self.recv.long.recycle(run);
-                        }
-                        self.merge_local_out(&mut d.local_out);
-                        for (dest, part) in
-                            d.global_out.iter_mut().enumerate()
-                        {
-                            self.global_send[dest].append(part);
-                        }
-                    }
-                    cycle_secs +=
-                        sw.charge(&mut phase_times, Phase::Collocate);
-                    if record_cycle_times {
-                        cycle_times.push(cycle_secs);
-                    }
-
-                    // ---- communicate -------------------------------------
-                    self.communicate(
-                        comm,
-                        local,
-                        s,
-                        dual,
-                        &mut phase_times,
-                        &mut inflight,
-                    );
-                }
-                self.service_exchanges(
+            for s in start..end {
+                // drain early deposits and complete due exchanges
+                // before handing the runs out
+                if let Err(e) = self.service_exchanges(
                     &mut inflight,
-                    s_cycles,
-                    true,
-                    &mut phase_times,
+                    s,
+                    false,
+                    phase_times,
+                ) {
+                    outcome = Err(e.into());
+                    break;
+                }
+                let mut sw = Stopwatch::start();
+                let mut cycle_secs = 0.0;
+
+                // ---- deliver: distribute runs, workers bucket+merge ------
+                {
+                    let mut queues: Vec<MutexGuard<'_, SlotData>> = slots
+                        .iter()
+                        .map(|sl| sl.data.lock().unwrap())
+                        .collect();
+                    for (i, run) in
+                        self.recv.short.drain_runs().enumerate()
+                    {
+                        queues[i % n_workers].runs_short.push(run);
+                    }
+                    for (i, run) in
+                        self.recv.long.drain_runs().enumerate()
+                    {
+                        queues[i % n_workers].runs_long.push(run);
+                    }
+                }
+                barrier.wait(); // runs ready
+                barrier.wait(); // buckets ready
+                barrier.wait(); // deliver done
+                cycle_secs += sw.charge(phase_times, Phase::Deliver);
+
+                // ---- update ----------------------------------------------
+                barrier.wait(); // update done
+                let upd = sw.charge(phase_times, Phase::Update);
+                cycle_secs += upd;
+                cycle_secs += straggle(
+                    faults,
+                    s / self.epoch_cycles,
+                    upd,
+                    phase_times,
+                    &mut sw,
                 );
 
-                let mut spikes = std::mem::take(&mut self.spikes);
-                let (mut n_short, mut n_long, mut n_neurons) =
-                    (0usize, 0usize, 0usize);
-                let mut ring_pending = Vec::with_capacity(handles.len());
-                for h in handles {
-                    let (worker_spikes, s_, l_, n_, pending) =
-                        h.join().expect("barrier worker panicked");
-                    spikes.extend(worker_spikes);
-                    n_short += s_;
-                    n_long += l_;
-                    n_neurons += n_;
-                    ring_pending.push(pending);
+                // ---- collocate -------------------------------------------
+                barrier.wait(); // collocate done
+                // drain in virtual-thread order: this concatenation is
+                // the ordering decision that matches the sequential
+                // schedule.  Also reclaim the cleared run buffers the
+                // workers consumed, so their capacity circulates back
+                // through the RunSet pools.
+                for sl in &slots {
+                    let mut guard = sl.data.lock().unwrap();
+                    let d = &mut *guard;
+                    for run in d.runs_short.drain(..) {
+                        self.recv.short.recycle(run);
+                    }
+                    for run in d.runs_long.drain(..) {
+                        self.recv.long.recycle(run);
+                    }
+                    self.merge_local_out(&mut d.local_out);
+                    for (dest, part) in d.global_out.iter_mut().enumerate()
+                    {
+                        self.global_send[dest].append(part);
+                    }
                 }
-                (spikes, n_short, n_long, n_neurons, ring_pending)
-            });
+                cycle_secs += sw.charge(phase_times, Phase::Collocate);
+                if record_cycle_times {
+                    cycle_times.push(cycle_secs);
+                }
 
-        RankResult {
-            rank: self.rank,
-            phase_times,
-            cycle_times,
-            spikes,
-            n_conns_short: n_short,
-            n_conns_long: n_long,
-            n_neurons,
-            ring_pending,
-        }
+                // ---- communicate -----------------------------------------
+                if let Err(e) = self.communicate(
+                    comm,
+                    local,
+                    s,
+                    dual,
+                    faults,
+                    phase_times,
+                    &mut inflight,
+                ) {
+                    outcome = Err(e.into());
+                    break;
+                }
+            }
+            // drain the pipeline to depth 0 at the segment end (see
+            // `seg_sequential` for why this preserves spike trains)
+            if outcome.is_ok() {
+                outcome = self
+                    .service_exchanges(&mut inflight, end, true, phase_times)
+                    .map_err(Into::into);
+            }
+            if outcome.is_err() {
+                self.abandon_inflight(&mut inflight);
+            }
+
+            // release the workers through the stop gate — they are
+            // parked at the *runs ready* barrier on every exit path,
+            // normal and error alike — and take their state back in
+            // virtual-thread order
+            stop.store(true, Ordering::Release);
+            barrier.wait();
+            let mut threads_back = Vec::with_capacity(handles.len());
+            for h in handles {
+                let (th, worker_spikes) =
+                    h.join().expect("barrier worker panicked");
+                self.spikes.extend(worker_spikes);
+                threads_back.push(th);
+            }
+            (threads_back, outcome)
+        });
+
+        self.threads = threads_back;
+        self.shards = shards;
+        outcome
     }
 
     /// Virtual threads on dedicated worker OS threads: one scoped worker
@@ -1530,14 +1915,19 @@ impl RankState {
     /// coordinator, and broadcast to every worker, each of which walks
     /// the whole batch with per-spike table lookups — the baseline the
     /// parallel bucket/merge path is benchmarked against.
-    fn run_pooled_channels<T: SplitTransport>(
-        mut self,
+    #[allow(clippy::too_many_arguments)]
+    fn seg_channels<T: SplitTransport>(
+        &mut self,
         comm: &T,
         local: Option<&T::Sub>,
-        s_cycles: u64,
+        start: u64,
+        end: u64,
         updater: &Updater,
         record_cycle_times: bool,
-    ) -> RankResult {
+        faults: &RankFaults,
+        phase_times: &mut PhaseTimes,
+        cycle_times: &mut Vec<f64>,
+    ) -> Result<()> {
         let dual = self.strategy.dual_pathways();
         let m = comm.m_ranks();
         let worker_states = std::mem::take(&mut self.threads);
@@ -1546,181 +1936,179 @@ impl RankState {
         let record_spikes = self.record_spikes;
         let group_start = self.group_start as u16;
         let group_size = self.group_size;
-        let mut phase_times = PhaseTimes::new();
-        let mut cycle_times = Vec::with_capacity(if record_cycle_times {
-            s_cycles as usize
-        } else {
-            0
-        });
 
-        let (spikes, n_short, n_long, n_neurons, ring_pending) =
-            std::thread::scope(|scope| {
-                let mut cmd_txs = Vec::with_capacity(n_workers);
-                let mut reply_rxs = Vec::with_capacity(n_workers);
-                for th in worker_states {
-                    let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
-                    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
-                    scope.spawn(move || {
-                        worker_loop(th, updater, group_start, cmd_rx, reply_tx)
-                    });
-                    cmd_txs.push(cmd_tx);
-                    reply_rxs.push(reply_rx);
-                }
-                // per-worker collocation buffers, recycled every cycle
-                #[allow(clippy::type_complexity)]
-                let mut coll_bufs: Vec<(
-                    Vec<Vec<SpikeMsg>>,
-                    Vec<Vec<SpikeMsg>>,
-                )> = (0..n_workers)
-                    .map(|_| {
-                        (
-                            (0..group_size).map(|_| Vec::new()).collect(),
-                            (0..m).map(|_| Vec::new()).collect(),
-                        )
-                    })
-                    .collect();
-                // flattened delivery batches of the legacy path,
-                // recycled across cycles
-                let mut flat: Pathways<Vec<SpikeMsg>> = Pathways::default();
-                let mut inflight: VecDeque<InFlight<T::Pending>> =
-                    VecDeque::new();
+        let (threads_back, outcome) = std::thread::scope(|scope| {
+            let mut cmd_txs = Vec::with_capacity(n_workers);
+            let mut reply_rxs = Vec::with_capacity(n_workers);
+            for th in worker_states {
+                let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+                let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+                scope.spawn(move || {
+                    worker_loop(th, updater, group_start, cmd_rx, reply_tx)
+                });
+                cmd_txs.push(cmd_tx);
+                reply_rxs.push(reply_rx);
+            }
+            // per-worker collocation buffers, recycled every cycle
+            #[allow(clippy::type_complexity)]
+            let mut coll_bufs: Vec<(
+                Vec<Vec<SpikeMsg>>,
+                Vec<Vec<SpikeMsg>>,
+            )> = (0..n_workers)
+                .map(|_| {
+                    (
+                        (0..group_size).map(|_| Vec::new()).collect(),
+                        (0..m).map(|_| Vec::new()).collect(),
+                    )
+                })
+                .collect();
+            // flattened delivery batches of the legacy path,
+            // recycled across cycles
+            let mut flat: Pathways<Vec<SpikeMsg>> = Pathways::default();
+            let mut inflight: VecDeque<InFlight<T::Pending>> =
+                VecDeque::new();
+            // errors break to the one exit so the workers always get
+            // their `Finish` command and the pipeline is abandoned,
+            // never leaked (both error points below leave every worker
+            // idle at its command receive)
+            let mut outcome: Result<()> = Ok(());
 
-                for s in 0..s_cycles {
-                    let first_step = s * steps;
-                    // drain early deposits and complete due exchanges
-                    // before delivery
-                    self.service_exchanges(
-                        &mut inflight,
-                        s,
-                        false,
-                        &mut phase_times,
-                    );
-                    let mut sw = Stopwatch::start();
-                    let mut cycle_secs = 0.0;
-
-                    // ---- deliver -----------------------------------------
-                    self.recv.short.flatten_into(&mut flat.short);
-                    pooled_deliver(
-                        &mut flat.short,
-                        false,
-                        first_step,
-                        &cmd_txs,
-                        &reply_rxs,
-                    );
-                    self.recv.long.flatten_into(&mut flat.long);
-                    pooled_deliver(
-                        &mut flat.long,
-                        dual,
-                        first_step,
-                        &cmd_txs,
-                        &reply_rxs,
-                    );
-                    cycle_secs += sw.charge(&mut phase_times, Phase::Deliver);
-
-                    // ---- update ------------------------------------------
-                    for tx in &cmd_txs {
-                        tx.send(Cmd::Update {
-                            first_step,
-                            steps,
-                            dual,
-                            record_spikes,
-                        })
-                        .expect("pool worker died");
-                    }
-                    for rx in &reply_rxs {
-                        expect_done(rx);
-                    }
-                    cycle_secs += sw.charge(&mut phase_times, Phase::Update);
-
-                    // ---- collocate ---------------------------------------
-                    for (tx, bufs) in cmd_txs.iter().zip(coll_bufs.iter_mut())
-                    {
-                        let (local, global) = std::mem::take(bufs);
-                        tx.send(Cmd::Collocate { dual, local, global })
-                            .expect("pool worker died");
-                    }
-                    // receive in virtual-thread order: the blocking recv
-                    // per worker is the ordering barrier that makes the
-                    // concatenation deterministic
-                    for (rx, bufs) in
-                        reply_rxs.iter().zip(coll_bufs.iter_mut())
-                    {
-                        match rx.recv().expect("pool worker died") {
-                            Reply::Collocated {
-                                local: mut loc,
-                                mut global,
-                            } => {
-                                self.merge_local_out(&mut loc);
-                                for (dest, part) in
-                                    global.iter_mut().enumerate()
-                                {
-                                    self.global_send[dest].append(part);
-                                }
-                                *bufs = (loc, global);
-                            }
-                            _ => unreachable!("unexpected collocate reply"),
-                        }
-                    }
-                    cycle_secs +=
-                        sw.charge(&mut phase_times, Phase::Collocate);
-                    if record_cycle_times {
-                        cycle_times.push(cycle_secs);
-                    }
-
-                    // ---- communicate -------------------------------------
-                    self.communicate(
-                        comm,
-                        local,
-                        s,
-                        dual,
-                        &mut phase_times,
-                        &mut inflight,
-                    );
-                }
-                self.service_exchanges(
+            for s in start..end {
+                let first_step = s * steps;
+                // drain early deposits and complete due exchanges
+                // before delivery
+                if let Err(e) = self.service_exchanges(
                     &mut inflight,
-                    s_cycles,
-                    true,
-                    &mut phase_times,
+                    s,
+                    false,
+                    phase_times,
+                ) {
+                    outcome = Err(e.into());
+                    break;
+                }
+                let mut sw = Stopwatch::start();
+                let mut cycle_secs = 0.0;
+
+                // ---- deliver ---------------------------------------------
+                self.recv.short.flatten_into(&mut flat.short);
+                pooled_deliver(
+                    &mut flat.short,
+                    false,
+                    first_step,
+                    &cmd_txs,
+                    &reply_rxs,
+                );
+                self.recv.long.flatten_into(&mut flat.long);
+                pooled_deliver(
+                    &mut flat.long,
+                    dual,
+                    first_step,
+                    &cmd_txs,
+                    &reply_rxs,
+                );
+                cycle_secs += sw.charge(phase_times, Phase::Deliver);
+
+                // ---- update ----------------------------------------------
+                for tx in &cmd_txs {
+                    tx.send(Cmd::Update {
+                        first_step,
+                        steps,
+                        dual,
+                        record_spikes,
+                    })
+                    .expect("pool worker died");
+                }
+                for rx in &reply_rxs {
+                    expect_done(rx);
+                }
+                let upd = sw.charge(phase_times, Phase::Update);
+                cycle_secs += upd;
+                cycle_secs += straggle(
+                    faults,
+                    s / self.epoch_cycles,
+                    upd,
+                    phase_times,
+                    &mut sw,
                 );
 
-                for tx in &cmd_txs {
-                    tx.send(Cmd::Finish).expect("pool worker died");
+                // ---- collocate -------------------------------------------
+                for (tx, bufs) in cmd_txs.iter().zip(coll_bufs.iter_mut()) {
+                    let (local, global) = std::mem::take(bufs);
+                    tx.send(Cmd::Collocate { dual, local, global })
+                        .expect("pool worker died");
                 }
-                let mut spikes = std::mem::take(&mut self.spikes);
-                let (mut n_short, mut n_long, mut n_neurons) =
-                    (0usize, 0usize, 0usize);
-                let mut ring_pending = Vec::with_capacity(n_workers);
-                for rx in &reply_rxs {
+                // receive in virtual-thread order: the blocking recv
+                // per worker is the ordering barrier that makes the
+                // concatenation deterministic
+                for (rx, bufs) in
+                    reply_rxs.iter().zip(coll_bufs.iter_mut())
+                {
                     match rx.recv().expect("pool worker died") {
-                        Reply::Finished {
-                            spikes: worker_spikes,
-                            n_conns_short,
-                            n_conns_long,
-                            n_neurons: n,
-                            ring_pending: pending,
+                        Reply::Collocated {
+                            local: mut loc,
+                            mut global,
                         } => {
-                            spikes.extend(worker_spikes);
-                            n_short += n_conns_short;
-                            n_long += n_conns_long;
-                            n_neurons += n;
-                            ring_pending.push(pending);
+                            self.merge_local_out(&mut loc);
+                            for (dest, part) in
+                                global.iter_mut().enumerate()
+                            {
+                                self.global_send[dest].append(part);
+                            }
+                            *bufs = (loc, global);
                         }
-                        _ => unreachable!("unexpected finish reply"),
+                        _ => unreachable!("unexpected collocate reply"),
                     }
                 }
-                (spikes, n_short, n_long, n_neurons, ring_pending)
-            });
+                cycle_secs += sw.charge(phase_times, Phase::Collocate);
+                if record_cycle_times {
+                    cycle_times.push(cycle_secs);
+                }
 
-        RankResult {
-            rank: self.rank,
-            phase_times,
-            cycle_times,
-            spikes,
-            n_conns_short: n_short,
-            n_conns_long: n_long,
-            n_neurons,
-            ring_pending,
-        }
+                // ---- communicate -----------------------------------------
+                if let Err(e) = self.communicate(
+                    comm,
+                    local,
+                    s,
+                    dual,
+                    faults,
+                    phase_times,
+                    &mut inflight,
+                ) {
+                    outcome = Err(e.into());
+                    break;
+                }
+            }
+            // drain the pipeline to depth 0 at the segment end (see
+            // `seg_sequential` for why this preserves spike trains)
+            if outcome.is_ok() {
+                outcome = self
+                    .service_exchanges(&mut inflight, end, true, phase_times)
+                    .map_err(Into::into);
+            }
+            if outcome.is_err() {
+                self.abandon_inflight(&mut inflight);
+            }
+
+            // shut the pool down on every exit path — the workers are
+            // idle at their command receive — and take their state
+            // back in virtual-thread order
+            for tx in &cmd_txs {
+                tx.send(Cmd::Finish).expect("pool worker died");
+            }
+            let mut threads_back = Vec::with_capacity(n_workers);
+            for rx in &reply_rxs {
+                match rx.recv().expect("pool worker died") {
+                    Reply::Finished { spikes: worker_spikes, state } => {
+                        self.spikes.extend(worker_spikes);
+                        threads_back.push(*state);
+                    }
+                    _ => unreachable!("unexpected finish reply"),
+                }
+            }
+            (threads_back, outcome)
+        });
+
+        self.threads = threads_back;
+        outcome
     }
 }

@@ -241,6 +241,11 @@ impl RunSet {
         self.runs.len()
     }
 
+    /// The pending runs, read-only (checkpoint serialization).
+    pub fn runs(&self) -> &[Vec<SpikeMsg>] {
+        &self.runs
+    }
+
     /// The pending runs, for in-place sorting/bucketing.
     pub fn runs_mut(&mut self) -> &mut [Vec<SpikeMsg>] {
         &mut self.runs

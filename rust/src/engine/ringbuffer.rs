@@ -61,6 +61,35 @@ impl RingBuffer {
         self.n_slots
     }
 
+    pub fn n_neurons(&self) -> usize {
+        self.n_neurons
+    }
+
+    /// The raw accumulator matrix (`n_slots × n_neurons`, row-major) —
+    /// the buffer's entire dynamic state.  Indexing is a pure
+    /// `step % n_slots` with no cursor, so checkpointing the slots and
+    /// resuming at the same absolute step reproduces delivery exactly.
+    pub fn slots(&self) -> &[f64] {
+        &self.slots
+    }
+
+    /// Overwrite the accumulator matrix from a checkpoint (shape must
+    /// match the deterministic rebuild that produced `self`).
+    pub fn load_slots(&mut self, data: &[f64]) -> Result<(), String> {
+        if data.len() != self.slots.len() {
+            return Err(format!(
+                "ring-buffer snapshot has {} accumulators but this \
+                 run's buffer holds {} ({} neurons × {} slots)",
+                data.len(),
+                self.slots.len(),
+                self.n_neurons,
+                self.n_slots,
+            ));
+        }
+        self.slots.copy_from_slice(data);
+        Ok(())
+    }
+
     /// Add `weight` to the input of `neuron` arriving at absolute `step`.
     #[inline]
     pub fn add(&mut self, step: u64, neuron: u32, weight: f32) {
@@ -179,6 +208,22 @@ mod tests {
     #[should_panic(expected = "ring buffer too small")]
     fn with_horizon_rejects_insufficient_slots() {
         let _ = RingBuffer::with_horizon(2, 4, 4);
+    }
+
+    #[test]
+    fn slots_roundtrip_through_checkpoint_accessors() {
+        let mut a = RingBuffer::new(3, 4);
+        a.add(5, 1, 0.25);
+        a.add(2, 0, -0.5);
+        let mut b = RingBuffer::new(3, 4);
+        b.load_slots(a.slots()).unwrap();
+        let (mut ra, mut rb) = (vec![0.0f32; 3], vec![0.0f32; 3]);
+        for step in [2u64, 5] {
+            a.take_row(step, &mut ra);
+            b.take_row(step, &mut rb);
+            assert_eq!(ra, rb);
+        }
+        assert!(b.load_slots(&[0.0; 2]).is_err());
     }
 
     #[test]

@@ -52,6 +52,13 @@ fn print_usage() {
                     [--comm blocking|overlap] [--comm-depth D]\n\
                     [--quota spikes] [--ranks-per-area R]\n\
                     [--record-spikes]\n\
+                    [--comm-timeout secs]            comm watchdog\n\
+                    [--checkpoint-every epochs] [--checkpoint-path p]\n\
+                    [--restore path]                 resume a snapshot\n\
+                    [--fault-plan plan.json]         fault injection\n\
+                    [--straggler r:factor:from:to[,..]]\n\
+                    [--delay-deposit r:ms:from:to[,..]]\n\
+                    [--kill-at r:epoch[,..]]\n\
            figure <name> [--t-model ms] [--seed n] [--out dir]\n\
            figures [--t-model ms] [--out dir]\n\
            theory [--d D] [--ranks M] [--threads T] [--ranks-per-area R]\n\

@@ -140,6 +140,22 @@ impl Args {
         }
     }
 
+    /// Optional f64 — `None` when the option is absent (unlike
+    /// [`Args::f64_or`] there is no default to fall back on, e.g. the
+    /// watchdog deadline where absence means "disabled").
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>, CliError> {
+        match self.raw(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(
+                |e: std::num::ParseFloatError| CliError::BadValue {
+                    key: key.into(),
+                    value: v.into(),
+                    why: e.to_string(),
+                },
+            ),
+        }
+    }
+
     /// Comma-separated usize list, e.g. `--ranks 16,32,64`.
     pub fn usize_list_or(
         &self,
@@ -215,6 +231,15 @@ mod tests {
         let a = args(&["run"]);
         assert_eq!(a.f64_or("t-model", 10.0).unwrap(), 10.0);
         assert_eq!(a.str_or("strategy", "conventional"), "conventional");
+    }
+
+    #[test]
+    fn optional_f64() {
+        let a = args(&["run", "--comm-timeout", "2.5"]);
+        assert_eq!(a.f64_opt("comm-timeout").unwrap(), Some(2.5));
+        assert_eq!(a.f64_opt("absent").unwrap(), None);
+        let a = args(&["run", "--comm-timeout", "soon"]);
+        assert!(a.f64_opt("comm-timeout").is_err());
     }
 
     #[test]

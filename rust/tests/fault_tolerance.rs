@@ -1,0 +1,476 @@
+//! Fault-tolerant runtime: checkpoint/restore round trips, the comm
+//! watchdog diagnostics and the deterministic fault-injection harness.
+//!
+//! The invariants under test mirror `equivalence.rs`: checkpointing,
+//! restoring, compute stragglers and deposit delays are *observationally
+//! invisible* — bit-identical spike trains across every strategy × exec
+//! × comm-mode × depth combination — while hard faults (a killed rank)
+//! turn into structured, actionable errors instead of silent hangs, and
+//! a `--restore` from the last snapshot reproduces the uninterrupted
+//! run's train exactly.
+
+use nsim::config::{
+    CommMode, DepositDelayFault, ExecMode, KillFault, RunConfig,
+    StragglerFault, Strategy,
+};
+use nsim::engine::checkpoint::Snapshot;
+use nsim::engine::simulate;
+use nsim::models;
+use nsim::network::ModelSpec;
+use nsim::theory::sync;
+use nsim::util::timers::Phase;
+
+/// Base config of the suite (pooled execution, blocking comm).
+fn base(
+    strategy: Strategy,
+    m: usize,
+    t: usize,
+    t_model_ms: f64,
+) -> RunConfig {
+    RunConfig {
+        strategy,
+        m_ranks: m,
+        threads_per_rank: t,
+        t_model_ms,
+        seed: 12,
+        record_spikes: true,
+        ..RunConfig::default()
+    }
+}
+
+fn spikes(spec: &ModelSpec, cfg: &RunConfig) -> Vec<(u64, u32)> {
+    simulate(spec, cfg).expect("simulation failed").spikes
+}
+
+fn err_of(spec: &ModelSpec, cfg: &RunConfig) -> String {
+    match simulate(spec, cfg) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected the run to fail"),
+    }
+}
+
+/// Unique-per-process snapshot path so parallel test binaries (and
+/// parallel tests within one) never clobber each other's files.
+fn ckpt_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("nsim-ft-{}-{tag}.ckpt", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn periodic_checkpointing_is_bit_identical_and_writes_a_snapshot() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    // 60 ms at a 0.1 ms cycle = 600 cycles; snapshots at 250 and 500
+    // (600 is not a multiple of 250, so the final state is never the
+    // last snapshot and the file stays resumable)
+    let reference =
+        spikes(&spec, &base(Strategy::Conventional, 2, 2, 60.0));
+    let path = ckpt_path("periodic");
+    let ck = RunConfig {
+        checkpoint_every: 250,
+        checkpoint_path: path.clone(),
+        ..base(Strategy::Conventional, 2, 2, 60.0)
+    };
+    let with_ckpt = spikes(&spec, &ck);
+    assert!(reference.len() > 100, "network too quiet");
+    assert_eq!(
+        reference, with_ckpt,
+        "periodic checkpointing changed the dynamics"
+    );
+    let snap = Snapshot::read_verified(&path).expect("snapshot unreadable");
+    assert_eq!(snap.cycle, 500, "last periodic snapshot cycle");
+    assert_eq!(snap.parts.len(), 2, "one part per rank");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn restore_resumes_bit_identically_across_exec_and_comm_modes() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    let reference =
+        spikes(&spec, &base(Strategy::Conventional, 2, 2, 60.0));
+    let path = ckpt_path("resume-conv");
+    spikes(
+        &spec,
+        &RunConfig {
+            checkpoint_every: 250,
+            checkpoint_path: path.clone(),
+            ..base(Strategy::Conventional, 2, 2, 60.0)
+        },
+    );
+    // the snapshot at cycle 500 was taken by a pooled/blocking run;
+    // resuming it must be exact under *every* runtime combination —
+    // the fingerprint deliberately excludes exec/comm knobs
+    for exec in [
+        ExecMode::Sequential,
+        ExecMode::Pooled,
+        ExecMode::PooledChannels,
+    ] {
+        for comm in [CommMode::Blocking, CommMode::Overlap] {
+            let resumed = spikes(
+                &spec,
+                &RunConfig {
+                    restore: Some(path.clone()),
+                    exec,
+                    comm,
+                    ..base(Strategy::Conventional, 2, 2, 60.0)
+                },
+            );
+            assert_eq!(
+                resumed,
+                reference,
+                "restore diverged under {} / {}",
+                exec.name(),
+                comm.name()
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn restore_matches_under_structure_aware_hierarchy() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    // structure-aware epoch = D=10 cycles = 1 ms; 60 epochs total,
+    // snapshots every 25 epochs -> cycles 250 and 500
+    let mk = || RunConfig {
+        ranks_per_area: 2,
+        ..base(Strategy::StructureAware, 4, 2, 60.0)
+    };
+    let reference = spikes(&spec, &mk());
+    let path = ckpt_path("resume-hier");
+    spikes(
+        &spec,
+        &RunConfig {
+            checkpoint_every: 25,
+            checkpoint_path: path.clone(),
+            ..mk()
+        },
+    );
+    for (exec, comm) in [
+        (ExecMode::Sequential, CommMode::Blocking),
+        (ExecMode::Pooled, CommMode::Blocking),
+        (ExecMode::Pooled, CommMode::Overlap),
+    ] {
+        let resumed = spikes(
+            &spec,
+            &RunConfig { restore: Some(path.clone()), exec, comm, ..mk() },
+        );
+        assert_eq!(
+            resumed,
+            reference,
+            "hierarchical restore diverged under {} / {}",
+            exec.name(),
+            comm.name()
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn restore_matches_at_pipeline_depth_4() {
+    // the deep-pipeline net realizes ~5 cycles of delay slack, so a
+    // depth-4 split-phase pipeline is sustainable; a snapshot taken
+    // *by* a depth-4 run (pipeline force-drained at the boundary) must
+    // resume exactly under both blocking and depth-4 overlap
+    let spec = models::deep_pipeline_net(240, 4).unwrap();
+    let mk = |comm, depth| RunConfig {
+        comm,
+        comm_depth: depth,
+        ..base(Strategy::Conventional, 2, 2, 50.0)
+    };
+    let reference = spikes(&spec, &mk(CommMode::Blocking, 1));
+    let path = ckpt_path("resume-depth4");
+    spikes(
+        &spec,
+        &RunConfig {
+            checkpoint_every: 20,
+            checkpoint_path: path.clone(),
+            ..mk(CommMode::Overlap, 4)
+        },
+    );
+    let snap = Snapshot::read_verified(&path).expect("snapshot unreadable");
+    assert_eq!(snap.cycle, 40, "depth-4 snapshot cycle");
+    for (comm, depth) in
+        [(CommMode::Blocking, 1), (CommMode::Overlap, 4)]
+    {
+        let resumed = spikes(
+            &spec,
+            &RunConfig {
+                restore: Some(path.clone()),
+                ..mk(comm, depth)
+            },
+        );
+        assert_eq!(
+            resumed,
+            reference,
+            "depth-4 restore diverged under {} depth {depth}",
+            comm.name()
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_and_corrupted_snapshots_are_rejected() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    let path = ckpt_path("corrupt");
+    spikes(
+        &spec,
+        &RunConfig {
+            checkpoint_every: 150,
+            checkpoint_path: path.clone(),
+            ..base(Strategy::Conventional, 2, 2, 20.0)
+        },
+    );
+    let good = std::fs::read(&path).expect("snapshot missing");
+    assert!(good.len() > 64, "snapshot implausibly small");
+
+    // payload truncation: header survives, byte count does not
+    let err = Snapshot::from_bytes(&good[..good.len() - 9])
+        .expect_err("truncated snapshot accepted");
+    assert!(
+        format!("{err:#}").contains("truncated"),
+        "unexpected truncation error: {err:#}"
+    );
+
+    // shorter than the fixed header
+    let err = Snapshot::from_bytes(&good[..10])
+        .expect_err("header stub accepted");
+    assert!(
+        format!("{err:#}").contains("shorter"),
+        "unexpected header error: {err:#}"
+    );
+
+    // bad magic
+    let mut bad = good.clone();
+    bad[0] ^= 0xff;
+    let err =
+        Snapshot::from_bytes(&bad).expect_err("bad magic accepted");
+    assert!(
+        format!("{err:#}").contains("bad magic"),
+        "unexpected magic error: {err:#}"
+    );
+
+    // a flipped payload byte must fail the checksum, end to end
+    // through the engine's --restore path
+    let mut bad = good.clone();
+    bad[40] ^= 0xff;
+    let bad_path = ckpt_path("corrupt-flipped");
+    std::fs::write(&bad_path, &bad).unwrap();
+    let msg = err_of(
+        &spec,
+        &RunConfig {
+            restore: Some(bad_path.clone()),
+            ..base(Strategy::Conventional, 2, 2, 20.0)
+        },
+    );
+    assert!(
+        msg.contains("checksum"),
+        "corruption not reported as a checksum mismatch: {msg}"
+    );
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&bad_path).ok();
+}
+
+#[test]
+fn restore_under_a_different_shape_names_the_offending_flag() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    let path = ckpt_path("shape");
+    spikes(
+        &spec,
+        &RunConfig {
+            checkpoint_every: 150,
+            checkpoint_path: path.clone(),
+            ..base(Strategy::Conventional, 2, 2, 20.0)
+        },
+    );
+    // different --threads: rejected explicitly, not garbled state
+    let msg = err_of(
+        &spec,
+        &RunConfig {
+            restore: Some(path.clone()),
+            ..base(Strategy::Conventional, 2, 4, 20.0)
+        },
+    );
+    assert!(
+        msg.contains("--threads"),
+        "thread-count mismatch not named: {msg}"
+    );
+    // different --seed: the snapshot encodes the RNG state implicitly
+    // (all jitter is seed-keyed), so a seed mismatch is a hard error
+    let msg = err_of(
+        &spec,
+        &RunConfig {
+            restore: Some(path.clone()),
+            seed: 13,
+            ..base(Strategy::Conventional, 2, 2, 20.0)
+        },
+    );
+    assert!(msg.contains("--seed"), "seed mismatch not named: {msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn kill_then_restore_reproduces_the_reference_train() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    let reference =
+        spikes(&spec, &base(Strategy::Conventional, 2, 2, 60.0));
+    let path = ckpt_path("kill-restore");
+
+    // rank 1 dies at epoch 400, right after the cycle-400 snapshot
+    // (the killed rank checkpoints first, dies after); rank 0 then
+    // hits the watchdog on the next exchange
+    let mut failing = RunConfig {
+        checkpoint_every: 200,
+        checkpoint_path: path.clone(),
+        comm_timeout: Some(0.5),
+        ..base(Strategy::Conventional, 2, 2, 60.0)
+    };
+    failing.faults.kills.push(KillFault { rank: 1, epoch: 400 });
+    let msg = err_of(&spec, &failing);
+    assert!(
+        msg.contains("comm watchdog") || msg.contains("fault injection"),
+        "dead rank produced an unstructured error: {msg}"
+    );
+
+    // the crash left a valid snapshot at the kill cycle
+    let snap = Snapshot::read_verified(&path)
+        .expect("no snapshot survived the crash");
+    assert_eq!(snap.cycle, 400, "snapshot cycle at the kill point");
+
+    // resuming it reproduces the uninterrupted train bit-exactly
+    let resumed = spikes(
+        &spec,
+        &RunConfig {
+            restore: Some(path.clone()),
+            ..base(Strategy::Conventional, 2, 2, 60.0)
+        },
+    );
+    assert_eq!(
+        resumed, reference,
+        "restore after the kill diverged from the reference train"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn dead_rank_trips_the_watchdog_with_a_structured_diagnostic() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    // rank 1 dies at epoch 1; rank 0's next exchange must expire into
+    // the watchdog diagnostic naming the tier and the missing rank
+    let mut cfg = RunConfig {
+        comm_timeout: Some(0.5),
+        ..base(Strategy::Conventional, 2, 2, 10.0)
+    };
+    cfg.faults.kills.push(KillFault { rank: 1, epoch: 1 });
+    let msg = err_of(&spec, &cfg);
+    assert!(
+        msg.contains("comm watchdog"),
+        "watchdog did not fire: {msg}"
+    );
+    assert!(
+        msg.contains("global tier"),
+        "stalled tier not named: {msg}"
+    );
+    assert!(
+        msg.contains("missing ranks [1]"),
+        "missing rank not named: {msg}"
+    );
+}
+
+#[test]
+fn killed_rank_itself_reports_the_injected_fault() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    // killing rank 0 makes *its* error the first in rank order: the
+    // injection bail, not a peer's watchdog report
+    let mut cfg = RunConfig {
+        comm_timeout: Some(0.5),
+        ..base(Strategy::Conventional, 2, 2, 10.0)
+    };
+    cfg.faults.kills.push(KillFault { rank: 0, epoch: 1 });
+    let msg = err_of(&spec, &cfg);
+    assert!(
+        msg.contains("fault injection") && msg.contains("killed at epoch 1"),
+        "kill fault not reported by the dying rank: {msg}"
+    );
+}
+
+#[test]
+fn stragglers_and_deposit_delays_do_not_change_dynamics() {
+    // the depth-4 pipeline on the deep net is the paper's absorption
+    // scenario: a compute straggler inflates one rank's update phase,
+    // the in-flight window hides (part of) the skew, and the spike
+    // train is untouched — the prediction `predicted_depth_gain` makes
+    let spec = models::deep_pipeline_net(240, 4).unwrap();
+    let mk = || RunConfig {
+        comm: CommMode::Overlap,
+        comm_depth: 4,
+        comm_timeout: Some(5.0),
+        ..base(Strategy::Conventional, 2, 2, 50.0)
+    };
+    let baseline = simulate(&spec, &mk()).expect("baseline failed");
+
+    let mut cfg = mk();
+    cfg.faults.stragglers.push(StragglerFault {
+        rank: 0,
+        factor: 5.0,
+        from_epoch: 0,
+        to_epoch: 25,
+    });
+    cfg.faults.deposit_delays.push(DepositDelayFault {
+        rank: 1,
+        delay_ms: 1.0,
+        from_epoch: 0,
+        to_epoch: 25,
+    });
+    let faulty = simulate(&spec, &cfg).expect("fault-injected run failed");
+
+    assert!(!baseline.spikes.is_empty(), "network too quiet");
+    assert_eq!(
+        baseline.spikes, faulty.spikes,
+        "timing-only faults changed the spike train"
+    );
+    assert_eq!(
+        faulty.comm_stats.timeouts, 0,
+        "faults within the watchdog budget must not time out"
+    );
+    // the injected inflation is visible where it should be: in the
+    // straggling rank's update phase, not in anyone's spike train
+    let upd = |r: usize| faulty.rank_times[r].get(Phase::Update);
+    assert!(
+        upd(0) > upd(1),
+        "straggler's update time ({}) not above its peer's ({})",
+        upd(0),
+        upd(1)
+    );
+    // and the paper's model predicts a depth-D pipeline absorbs a
+    // strictly positive amount of the induced skew, growing with depth
+    let model = sync::CycleTimeModel::paper_default();
+    let g2 = sync::predicted_depth_gain(model, 2, 50, 1, 2, 4);
+    let g4 = sync::predicted_depth_gain(model, 2, 50, 1, 4, 4);
+    assert!(
+        g2 > 0.0 && g4 >= g2,
+        "depth gain not positive/monotone: depth2 {g2}, depth4 {g4}"
+    );
+}
+
+#[test]
+fn checkpoint_write_failure_surfaces_on_every_rank() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("nsim-ft-{}-missing-dir", std::process::id()));
+    let path = dir.join("x.ckpt").to_string_lossy().into_owned();
+    let msg = err_of(
+        &spec,
+        &RunConfig {
+            checkpoint_every: 100,
+            checkpoint_path: path,
+            ..base(Strategy::Conventional, 2, 2, 20.0)
+        },
+    );
+    assert!(
+        msg.contains("checkpoint write failed"),
+        "unwritable checkpoint path not reported: {msg}"
+    );
+}
