@@ -1,0 +1,168 @@
+"""Unit tests for the observability trace validator
+(tools/trace_summary.py).
+
+The validator must accept exactly the documents ``obs::trace`` and
+``obs::report`` emit — properly nested spans, paired split-phase
+posts, the ``nsim-stats-v1`` schema — and reject structural breakage:
+partial overlaps, non-monotonic timelines, unmatched posts, a top
+straggler that contradicts its own ledgers.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(
+    0,
+    os.path.join(os.path.dirname(__file__), "..", "..", "tools"),
+)
+
+import trace_summary as ts
+
+
+def _ev(name, pid, t, dur, **args):
+    e = {"ph": "X", "name": name, "pid": pid, "tid": 0,
+         "ts": t, "dur": dur, "cat": "none"}
+    if args:
+        e["args"] = args
+    return e
+
+
+def _trace(events):
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def _valid_events():
+    # rank 0: an update, then a traced alltoall with nested barrier
+    # frames (exporter order: by start, longest first on ties); rank 1:
+    # a post closed by a complete, plus an abandoned tail post
+    return [
+        _ev("update", 0, 0.0, 10.0, cycle=3),
+        _ev("alltoall", 0, 10.0, 30.0, epoch=1),
+        _ev("alltoall (sync barrier)", 0, 11.0, 5.0, src=1),
+        _ev("alltoall (deposit)", 0, 20.0, 8.0),
+        _ev("post", 1, 0.0, 2.0, epoch=0, ring_slot=0),
+        _ev("complete", 1, 30.0, 4.0, epoch=0, src=0),
+        _ev("post", 1, 40.0, 2.0, epoch=1, ring_slot=1),
+        _ev("abandon", 1, 50.0, 1.0, epoch=1),
+    ]
+
+
+def _stats(top_rank=2, waits=(0, 0, 7, 0), late=(0.0, 0.0, 0.5, 0.0)):
+    ledger = {"waits": list(waits), "lateness_secs": list(late)}
+    empty = {"waits": [0] * 4, "lateness_secs": [0.0] * 4}
+    return {
+        "schema": "nsim-stats-v1",
+        "config": {"model": "sanity", "m_ranks": 4},
+        "result": {"s_cycles": 100},
+        "phase_times": {},
+        "comm": {},
+        "intervals": [],
+        "stragglers": {
+            "global": [ledger, empty, empty, empty],
+            "local": [],
+            "top": {"rank": top_rank, "waits": sum(waits),
+                    "lateness_secs": sum(late)},
+        },
+        "sync_model": {
+            "fitted": {"mu_secs": 1e-3, "sigma_secs": 1e-4, "cv": 0.1},
+            "tiers": {
+                "global": {"predicted_secs": 0.1, "measured_secs": 0.12},
+                "local": {"predicted_secs": 0.0, "measured_secs": 0.01},
+            },
+        },
+    }
+
+
+def test_valid_trace_passes():
+    assert ts.validate_events(_valid_events()) == []
+
+
+def test_empty_trace_rejected():
+    assert ts.validate_events([])
+    assert ts.span_events({"no": "events"}) is None
+
+
+def test_negative_duration_rejected():
+    events = _valid_events()
+    events[0]["dur"] = -1.0
+    assert any("bad dur" in p for p in ts.validate_events(events))
+
+
+def test_partial_overlap_rejected():
+    # a span stretching over its enclosing span's end is not a tree
+    events = [
+        _ev("alltoall", 0, 0.0, 10.0),
+        _ev("alltoall (deposit)", 0, 5.0, 20.0),
+    ]
+    assert any("partially overlaps" in p
+               for p in ts.validate_events(events))
+
+
+def test_non_monotonic_order_rejected():
+    events = [
+        _ev("update", 0, 10.0, 1.0),
+        _ev("update", 0, 0.0, 1.0),
+    ]
+    assert any("monotonic" in p for p in ts.validate_events(events))
+
+
+def test_unmatched_post_rejected():
+    events = _valid_events()
+    events = [e for e in events if e["name"] != "complete"]
+    assert any("post" in p for p in ts.validate_events(events))
+
+
+def test_post_epoch_mismatch_rejected():
+    events = _valid_events()
+    for e in events:
+        if e["name"] == "complete":
+            e["args"]["epoch"] = 99
+    assert any("pair up" in p for p in ts.validate_events(events))
+
+
+def test_disjoint_ranks_validated_independently():
+    # identical timestamps on different ranks never interact
+    events = [
+        _ev("update", 0, 0.0, 10.0),
+        _ev("update", 1, 0.0, 10.0),
+        _ev("update", 2, 0.0, 10.0),
+    ]
+    assert ts.validate_events(events) == []
+
+
+def test_stats_schema_accepted(capsys):
+    assert ts.check_stats(_stats()) == []
+    out = capsys.readouterr().out
+    assert "top straggler rank 2" in out
+    assert "T_sync[global]" in out
+
+
+def test_stats_wrong_schema_rejected():
+    doc = _stats()
+    doc["schema"] = "nsim-stats-v0"
+    assert any("schema" in p for p in ts.check_stats(doc))
+
+
+def test_stats_missing_section_rejected():
+    doc = _stats()
+    del doc["intervals"]
+    assert any("intervals" in p for p in ts.check_stats(doc))
+
+
+def test_stats_top_contradicting_ledgers_rejected():
+    doc = _stats(top_rank=1)  # ledgers blame rank 2
+    assert any("argmax" in p for p in ts.check_stats(doc))
+
+
+def test_cli_end_to_end(tmp_path):
+    trace = tmp_path / "trace.json"
+    stats = tmp_path / "stats.json"
+    trace.write_text(json.dumps(_trace(_valid_events())))
+    stats.write_text(json.dumps(_stats()))
+    assert ts.main([str(trace), "--stats", str(stats)]) == 0
+    # a broken trace fails the run even when the stats are fine
+    bad = _valid_events()
+    bad[0]["ts"] = 100.0  # out of order
+    trace.write_text(json.dumps(_trace(bad)))
+    assert ts.main([str(trace), "--stats", str(stats)]) == 1

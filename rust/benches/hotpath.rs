@@ -44,6 +44,9 @@ struct Harness {
     micro: Vec<(String, f64, f64)>,
     /// One JSON object per engine end-to-end run.
     engine: Vec<Json>,
+    /// Record obs spans in subsequent engine runs (the tracing-overhead
+    /// A/B flips this on for its traced arm only).
+    trace: bool,
 }
 
 impl Harness {
@@ -82,7 +85,7 @@ impl Harness {
         m: usize,
         threads: usize,
         t_model_ms: f64,
-    ) {
+    ) -> f64 {
         let cfg = RunConfig {
             strategy,
             m_ranks: m,
@@ -93,6 +96,7 @@ impl Harness {
             comm,
             comm_depth,
             ranks_per_area,
+            trace: self.trace,
             ..RunConfig::default()
         };
         let t0 = Instant::now();
@@ -190,6 +194,7 @@ impl Harness {
                     .into(),
             ),
         ]));
+        secs
     }
 }
 
@@ -247,6 +252,7 @@ fn main() {
         window: if smoke { 0.05 } else { 0.25 },
         micro: Vec::new(),
         engine: Vec::new(),
+        trace: false,
     };
 
     println!("== L3 hot-path micro-benchmarks ==\n");
@@ -527,12 +533,13 @@ fn main() {
     let heavy_n = if smoke { 500 } else { 2000 };
     let heavy_t_model = if smoke { 20.0 } else { 100.0 };
     let heavy = models::sanity_net(heavy_n, 4).unwrap();
+    let mut heavy_pooled_wall = 0.0;
     for (exec, threads) in [
         (ExecMode::Sequential, 4),
         (ExecMode::PooledChannels, 4),
         (ExecMode::Pooled, 4),
     ] {
-        h.engine_run(
+        let wall = h.engine_run(
             "deliver-heavy",
             &heavy,
             Strategy::Conventional,
@@ -544,6 +551,9 @@ fn main() {
             threads,
             heavy_t_model,
         );
+        if matches!(exec, ExecMode::Pooled) {
+            heavy_pooled_wall = wall;
+        }
     }
 
     // --- hierarchical two-tier: areas spanning rank groups ------------
@@ -632,6 +642,35 @@ fn main() {
             dp_t_model,
         );
     }
+
+    // --- observability overhead A/B: span tracing off vs on -----------
+    // same config as the Pooled deliver-heavy arm above, with full span
+    // recording enabled.  The traced run is keyed under its own model
+    // name so the untraced "deliver-heavy" keys keep gating against the
+    // existing baselines, while this key tracks the tracing overhead on
+    // its own trajectory.  The wall-clock ratio against the untraced
+    // Pooled arm is the overhead guard: spans are ~100 ns of clock reads
+    // and a buffered push each, so the ratio should stay near 1.
+    println!();
+    h.trace = true;
+    let traced_wall = h.engine_run(
+        "deliver-heavy-traced",
+        &heavy,
+        Strategy::Conventional,
+        ExecMode::Pooled,
+        CommMode::Blocking,
+        1,
+        1,
+        2,
+        4,
+        heavy_t_model,
+    );
+    h.trace = false;
+    println!(
+        "obs overhead: traced/untraced wall ratio {:.3} (traced \
+         {traced_wall:.3} s vs {heavy_pooled_wall:.3} s)",
+        traced_wall / heavy_pooled_wall.max(1e-12),
+    );
 
     if let Some(path) = json_path {
         let micro = Json::Arr(

@@ -105,6 +105,8 @@ pub use nonblocking::{
 };
 
 use crate::network::Gid;
+use crate::obs::blame::{Blame, TieredBlame};
+use crate::obs::{SpanCtx, Tier, TraceBuf, Tracer};
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -348,6 +350,12 @@ struct BarrierGen {
     arrived: Vec<bool>,
     n_arrived: usize,
     generation: u64,
+    /// The rank whose arrival released the previous generation — by
+    /// definition the straggler every other rank waited for.  Read by
+    /// waiters right after their generation advances; safe because no
+    /// further generation can complete until *this* waiter re-enters
+    /// the barrier (its own `arrived` flag gates the count).
+    last_arriver: usize,
 }
 
 impl WaitBarrier {
@@ -357,19 +365,22 @@ impl WaitBarrier {
                 arrived: vec![false; m],
                 n_arrived: 0,
                 generation: 0,
+                last_arriver: 0,
             }),
             cv: Condvar::new(),
             m,
         }
     }
 
-    /// Collective wait.  Returns `Err(missing)` if `timeout` expires
-    /// first, with the ranks that never arrived in this generation.
+    /// Collective wait.  Returns `Ok(last_arriver)` — the rank whose
+    /// arrival completed the generation (the releaser names itself) —
+    /// or `Err(missing)` if `timeout` expires first, with the ranks
+    /// that never arrived in this generation.
     fn wait(
         &self,
         rank: usize,
         timeout: Option<Duration>,
-    ) -> Result<(), Vec<usize>> {
+    ) -> Result<usize, Vec<usize>> {
         // the barrier holds only bookkeeping flags: recover from a
         // poisoned lock instead of cascading the peer's panic
         let mut st =
@@ -384,8 +395,9 @@ impl WaitBarrier {
             st.n_arrived = 0;
             st.arrived.iter_mut().for_each(|a| *a = false);
             st.generation = st.generation.wrapping_add(1);
+            st.last_arriver = rank;
             self.cv.notify_all();
-            return Ok(());
+            return Ok(rank);
         }
         let generation = st.generation;
         match timeout {
@@ -396,7 +408,7 @@ impl WaitBarrier {
                         .wait(st)
                         .unwrap_or_else(|e| e.into_inner());
                 }
-                Ok(())
+                Ok(st.last_arriver)
             }
             Some(limit) => {
                 let deadline = Instant::now() + limit;
@@ -417,7 +429,7 @@ impl WaitBarrier {
                         .unwrap_or_else(|e| e.into_inner())
                         .0;
                 }
-                Ok(())
+                Ok(st.last_arriver)
             }
         }
     }
@@ -453,6 +465,22 @@ pub(crate) struct WorldInner {
     /// Split-phase mailbox state (epoch-stamped ring buffers).
     pub(crate) nb: nonblocking::NbWorld,
     pub(crate) stats: CommStats,
+    /// Local → absolute rank mapping: a root world is the identity,
+    /// a sub-world maps its members through the parent's mapping, so
+    /// attribution (blame, trace pids) is in root-world rank numbers.
+    pub(crate) world_ranks: Vec<usize>,
+    /// Root-world rank count — the index space of `world_ranks` and of
+    /// every blame ledger.
+    pub(crate) root_m: usize,
+    /// Straggler ledgers, one per *waiting* local rank (each rank only
+    /// locks its own — uncontended until run-end collection), indexed
+    /// inside by *blamed absolute* rank.
+    pub(crate) blame: Vec<Mutex<Blame>>,
+    /// Per-rank span recorders ([`Tracer::off`] when tracing is not
+    /// requested) plus the shared buffer, kept so `split` can hand the
+    /// same trace to sub-worlds.
+    pub(crate) tracers: Vec<Tracer>,
+    trace: Option<Arc<TraceBuf>>,
 }
 
 impl WorldInner {
@@ -487,6 +515,25 @@ impl WorldInner {
     ) -> CommError {
         CommError::Poisoned { tier: self.tier, rank, context }
     }
+
+    /// The observability tier of this world's events.
+    pub(crate) fn obs_tier(&self) -> Tier {
+        Tier::from_tier_str(self.tier)
+    }
+
+    /// Record one wait verdict into `waiter`'s ledger: local rank
+    /// `blamed_local` arrived last, costing `lateness_secs` of wait.
+    pub(crate) fn record_blame(
+        &self,
+        waiter: usize,
+        blamed_local: usize,
+        lateness_secs: f64,
+    ) {
+        self.blame[waiter]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .record(self.world_ranks[blamed_local], lateness_secs);
+    }
 }
 
 /// Shared communication world; build once via [`WorldBuilder`], then
@@ -511,14 +558,17 @@ pub struct World {
 ///   = wait forever, the historical behavior.
 ///
 /// Sub-worlds created by [`Transport::split`] inherit the parent's
-/// depth, timeout and its *current* quota.
-#[derive(Clone, Copy, Debug)]
+/// depth, timeout, trace buffer and its *current* quota.
+#[derive(Clone)]
 pub struct WorldBuilder {
     m: usize,
     quota: usize,
     depth: usize,
     timeout: Option<Duration>,
     tier: &'static str,
+    trace: Option<Arc<TraceBuf>>,
+    world_ranks: Option<Vec<usize>>,
+    root_m: Option<usize>,
 }
 
 impl WorldBuilder {
@@ -529,6 +579,9 @@ impl WorldBuilder {
             depth: 1,
             timeout: None,
             tier: "global",
+            trace: None,
+            world_ranks: None,
+            root_m: None,
         }
     }
 
@@ -554,13 +607,54 @@ impl WorldBuilder {
         self
     }
 
+    /// Attach a shared span recorder: every comm operation of the world
+    /// (and of sub-worlds split off it) records trace spans into `buf`.
+    /// `None` (the default) leaves tracing compiled-out-cheap.
+    pub fn trace(mut self, buf: Option<Arc<TraceBuf>>) -> WorldBuilder {
+        self.trace = buf;
+        self
+    }
+
+    /// Local → absolute rank mapping of a sub-world ([`Transport::split`]
+    /// composes the members through the parent's mapping).
+    fn world_ranks(
+        mut self,
+        ranks: Vec<usize>,
+        root_m: usize,
+    ) -> WorldBuilder {
+        assert_eq!(ranks.len(), self.m);
+        self.world_ranks = Some(ranks);
+        self.root_m = Some(root_m);
+        self
+    }
+
     pub fn build(self) -> World {
-        let WorldBuilder { m, quota, depth, timeout, tier } = self;
+        let WorldBuilder {
+            m,
+            quota,
+            depth,
+            timeout,
+            tier,
+            trace,
+            world_ranks,
+            root_m,
+        } = self;
         assert!(m >= 1);
         assert!(depth >= 1, "pipeline depth must be >= 1");
         let mailboxes = (0..m)
             .map(|_| (0..m).map(|_| Mutex::new(Vec::new())).collect())
             .collect();
+        let world_ranks =
+            world_ranks.unwrap_or_else(|| (0..m).collect());
+        let root_m = root_m.unwrap_or(m);
+        let tracers = match &trace {
+            Some(buf) => (0..m)
+                .map(|r| Tracer::new(buf, world_ranks[r]))
+                .collect(),
+            None => vec![Tracer::off(); m],
+        };
+        let blame =
+            (0..m).map(|_| Mutex::new(Blame::sized(root_m))).collect();
         World {
             inner: Arc::new(WorldInner {
                 m,
@@ -577,6 +671,11 @@ impl WorldBuilder {
                 children: Mutex::new(Vec::new()),
                 nb: nonblocking::NbWorld::new(m, depth),
                 stats: CommStats::default(),
+                world_ranks,
+                root_m,
+                blame,
+                tracers,
+                trace,
             }),
         }
     }
@@ -617,6 +716,51 @@ impl World {
 
     pub fn current_quota(&self) -> usize {
         self.inner.quota.load(Ordering::Relaxed)
+    }
+
+    /// Fold this world's blame ledgers — and recursively every
+    /// sub-world's — into `out`, indexed by the *waiting* absolute
+    /// rank (ledgers inside are already in absolute blamed ranks).
+    fn fold_blame(&self, out: &mut [Blame]) {
+        for (local, ledger) in self.inner.blame.iter().enumerate() {
+            let abs = self.inner.world_ranks[local];
+            out[abs].merge(
+                &ledger.lock().unwrap_or_else(|e| e.into_inner()),
+            );
+        }
+        for c in self
+            .inner
+            .children
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+        {
+            c.fold_blame(out);
+        }
+    }
+
+    /// Per-tier straggler attribution of the run: this world's own
+    /// barrier waits as the *global* tier, every sub-communicator's
+    /// (recursively, in absolute ranks) as the *local* tier.
+    pub fn blame_report(&self) -> TieredBlame {
+        let m = self.inner.root_m;
+        let mut global = vec![Blame::sized(m); m];
+        for (local, ledger) in self.inner.blame.iter().enumerate() {
+            global[self.inner.world_ranks[local]].merge(
+                &ledger.lock().unwrap_or_else(|e| e.into_inner()),
+            );
+        }
+        let mut local_tier = vec![Blame::sized(m); m];
+        for c in self
+            .inner
+            .children
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+        {
+            c.fold_blame(&mut local_tier);
+        }
+        TieredBlame { global, local: local_tier }
     }
 }
 
@@ -731,11 +875,36 @@ pub struct ExchangeTiming {
 impl Communicator {
     /// Watchdogged barrier frame: waits like `Barrier::wait`, expires
     /// into a [`CommError::Timeout`] naming the missing ranks.
+    ///
+    /// Every barrier frame is an attribution point: the rank whose
+    /// arrival released the generation is the straggler everyone else
+    /// waited for, so each waiting rank charges the wait to it in its
+    /// blame ledger (the releaser does not blame itself), and with
+    /// tracing on the wait becomes a span named after `op` carrying
+    /// the blamed peer.
     fn barrier_wait(&self, op: &'static str) -> Result<(), CommError> {
         let w = &*self.world;
-        w.barrier
+        let tracer = &w.tracers[self.rank];
+        let span_start = tracer.start();
+        let t0 = Instant::now();
+        let last = w
+            .barrier
             .wait(self.rank, w.timeout)
-            .map_err(|missing| w.barrier_timeout(self.rank, op, missing))
+            .map_err(|missing| {
+                w.barrier_timeout(self.rank, op, missing)
+            })?;
+        let mut src = -1;
+        if last != self.rank {
+            let waited = t0.elapsed().as_secs_f64();
+            w.record_blame(self.rank, last, waited);
+            src = w.world_ranks[last] as i32;
+        }
+        tracer.span(
+            op,
+            span_start,
+            SpanCtx { tier: w.obs_tier(), src, ..SpanCtx::NONE },
+        );
+        Ok(())
     }
 }
 
@@ -806,11 +975,17 @@ impl Transport for Communicator {
             })?;
             for mut members in groups.into_values() {
                 members.sort_by_key(|&r| (slots[r].1, r));
+                // sub-worlds attribute against absolute (root-world)
+                // ranks and record into the same shared trace buffer
+                let abs_ranks: Vec<usize> =
+                    members.iter().map(|&r| w.world_ranks[r]).collect();
                 let sub = WorldBuilder::new(members.len())
                     .quota(w.quota.load(Ordering::Relaxed))
                     .depth(w.depth)
                     .timeout(w.timeout)
                     .tier("local")
+                    .trace(w.trace.clone())
+                    .world_ranks(abs_ranks, w.root_m)
                     .build();
                 children.push(sub.clone());
                 for (sub_rank, &r) in members.iter().enumerate() {
@@ -843,6 +1018,8 @@ impl Transport for Communicator {
     ) -> Result<ExchangeTiming, CommError> {
         assert_eq!(send.len(), self.world.m, "send buffer per rank required");
         let w = &*self.world;
+        let tracer = &w.tracers[self.rank];
+        let span_start = tracer.start();
 
         // --- synchronization: explicit barrier in front of the collective
         let t0 = Instant::now();
@@ -927,6 +1104,11 @@ impl Transport for Communicator {
         // final barrier so nobody races ahead into the next call's writes
         self.barrier_wait("alltoall (drain)")?;
         let data_secs = t1.elapsed().as_secs_f64();
+        tracer.span(
+            "alltoall",
+            span_start,
+            SpanCtx::tier(w.obs_tier()),
+        );
         Ok(ExchangeTiming { sync_secs, data_secs })
     }
 
@@ -942,6 +1124,8 @@ impl Transport for Communicator {
 
     fn allreduce_min_u64(&self, v: u64) -> Result<u64, CommError> {
         let w = &*self.world;
+        let tracer = &w.tracers[self.rank];
+        let span_start = tracer.start();
         // barrier-framed register protocol: no rank can still be reading
         // the previous reduction when rank 0 resets (it could not have
         // reached this call's first barrier otherwise), and no rank can
@@ -953,7 +1137,13 @@ impl Transport for Communicator {
         self.barrier_wait("allreduce_min")?;
         w.reduce_slot.fetch_min(v, Ordering::Relaxed);
         self.barrier_wait("allreduce_min")?;
-        Ok(w.reduce_slot.load(Ordering::Relaxed))
+        let out = w.reduce_slot.load(Ordering::Relaxed);
+        tracer.span(
+            "allreduce_min",
+            span_start,
+            SpanCtx::tier(w.obs_tier()),
+        );
+        Ok(out)
     }
 }
 
@@ -1558,5 +1748,165 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("split"), "{msg}");
         assert!(msg.contains("missing ranks [1]"), "{msg}");
+    }
+
+    #[test]
+    fn barrier_blames_the_last_arriver() {
+        // rank 2 computes longest before every exchange: the other
+        // ranks' ledgers must name it, and it must blame nobody
+        let world = WorldBuilder::new(3).quota(64).build();
+        thread::scope(|s| {
+            for rank in 0..3 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    for _ in 0..5 {
+                        if rank == 2 {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        let mut send: Vec<Vec<SpikeMsg>> =
+                            (0..3).map(|_| Vec::new()).collect();
+                        comm.alltoall(&mut send).unwrap();
+                    }
+                });
+            }
+        });
+        let blame = world.blame_report();
+        for waiter in [0usize, 1] {
+            let (top, waits, late) = blame.global[waiter].top().unwrap();
+            assert_eq!(top, 2, "rank {waiter} should blame rank 2");
+            assert!(waits >= 5, "expected >=5 blamed waits, got {waits}");
+            assert!(late > 0.0);
+        }
+        // the straggler itself never waits for anyone consistently;
+        // in particular it must not blame itself
+        assert_eq!(blame.global[2].waits[2], 0);
+        // local tier untouched (no split happened)
+        assert!(blame.local.iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn sub_world_blame_lands_in_local_tier_with_absolute_ranks() {
+        let world = WorldBuilder::new(4).quota(64).build();
+        thread::scope(|s| {
+            for rank in 0..4 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    // groups {0,1} and {2,3}; rank 3 straggles in its
+                    // group's local collectives
+                    let local =
+                        comm.split((rank / 2) as u64, rank as u64).unwrap();
+                    for _ in 0..4 {
+                        if rank == 3 {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        let mut send: Vec<Vec<SpikeMsg>> =
+                            (0..2).map(|_| Vec::new()).collect();
+                        local.alltoall(&mut send).unwrap();
+                    }
+                });
+            }
+        });
+        let blame = world.blame_report();
+        // rank 2 waited for rank 3 on the local tier, in absolute ranks
+        let (top, waits, _) = blame.local[2].top().unwrap();
+        assert_eq!(top, 3);
+        assert!(waits >= 4);
+        // the {0,1} group has no injected straggler; whatever noise it
+        // recorded must stay within the group (ranks 0/1 never blame 2/3)
+        for waiter in [0usize, 1] {
+            assert_eq!(blame.local[waiter].waits[2], 0);
+            assert_eq!(blame.local[waiter].waits[3], 0);
+        }
+    }
+
+    #[test]
+    fn traced_alltoall_records_nested_spans() {
+        use crate::obs::TraceBuf;
+        let buf = TraceBuf::new(2);
+        let world =
+            WorldBuilder::new(2).quota(64).trace(Some(buf.clone())).build();
+        thread::scope(|s| {
+            for rank in 0..2 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    let mut send: Vec<Vec<SpikeMsg>> =
+                        (0..2).map(|_| vec![msg(rank as Gid, 1)]).collect();
+                    comm.alltoall(&mut send).unwrap();
+                });
+            }
+        });
+        let spans = buf.drain();
+        for pid in 0..2u32 {
+            let mine: Vec<_> =
+                spans.iter().filter(|s| s.pid == pid).collect();
+            let parent = mine
+                .iter()
+                .find(|s| s.name == "alltoall")
+                .expect("missing alltoall span");
+            assert_eq!(parent.ctx.tier, Tier::Global);
+            // barrier frames nest inside the collective span
+            let barriers: Vec<_> = mine
+                .iter()
+                .filter(|s| s.name.starts_with("alltoall ("))
+                .collect();
+            assert!(barriers.len() >= 3, "got {}", barriers.len());
+            for b in barriers {
+                assert!(b.ts_us >= parent.ts_us - 1e-3);
+                assert!(
+                    b.ts_us + b.dur_us
+                        <= parent.ts_us + parent.dur_us + 1e-3,
+                    "barrier span leaks out of the collective span"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn split_propagates_trace_to_sub_worlds() {
+        use crate::obs::TraceBuf;
+        let buf = TraceBuf::new(4);
+        let world =
+            WorldBuilder::new(4).quota(64).trace(Some(buf.clone())).build();
+        thread::scope(|s| {
+            for rank in 0..4 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    let local =
+                        comm.split((rank / 2) as u64, rank as u64).unwrap();
+                    let mut send: Vec<Vec<SpikeMsg>> =
+                        (0..2).map(|_| Vec::new()).collect();
+                    local.alltoall(&mut send).unwrap();
+                });
+            }
+        });
+        let spans = buf.drain();
+        let local_alltoalls: Vec<_> = spans
+            .iter()
+            .filter(|s| s.name == "alltoall" && s.ctx.tier == Tier::Local)
+            .collect();
+        assert_eq!(local_alltoalls.len(), 4);
+        // pids are absolute root-world ranks, not sub-world ranks
+        let mut pids: Vec<u32> =
+            local_alltoalls.iter().map(|s| s.pid).collect();
+        pids.sort_unstable();
+        assert_eq!(pids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn untraced_world_records_no_spans_but_still_blames() {
+        let world = WorldBuilder::new(2).quota(64).build();
+        thread::scope(|s| {
+            for rank in 0..2 {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    if rank == 1 {
+                        thread::sleep(Duration::from_millis(5));
+                    }
+                    comm.allreduce_min_u64(rank as u64).unwrap();
+                });
+            }
+        });
+        let blame = world.blame_report();
+        assert!(blame.global[0].waits[1] >= 1);
     }
 }

@@ -129,6 +129,7 @@ use super::{
     CommError, Communicator, SpikeMsg, Transport, WorldInner,
     SPIKE_WIRE_BYTES,
 };
+use crate::obs::SpanCtx;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, TryLockError};
 use std::time::{Duration, Instant};
@@ -376,6 +377,19 @@ impl Pending for PendingExchange {
 
     fn abandon(mut self) {
         self.completed = true;
+        let w = &*self.world;
+        let tracer = &w.tracers[self.rank];
+        let span_start = tracer.start();
+        tracer.span(
+            "abandon",
+            span_start,
+            SpanCtx {
+                tier: w.obs_tier(),
+                epoch: self.seq as i64,
+                slot: (self.seq % w.nb.ring()) as i32,
+                ..SpanCtx::NONE
+            },
+        );
     }
 
     fn try_complete_source(
@@ -387,6 +401,8 @@ impl Pending for PendingExchange {
             return Ok(true);
         }
         let w = &*self.world;
+        let tracer = &w.tracers[self.rank];
+        let span_start = tracer.start();
         let slot_idx = (self.seq % w.nb.ring()) as usize;
         let slot = &w.nb.slots[self.rank][src][slot_idx];
         // condvar-free fast path: never block, not even on the slot
@@ -412,6 +428,17 @@ impl Pending for PendingExchange {
         drop(st);
         self.drained[src] = true;
         w.stats.early_drained_sources.fetch_add(1, Ordering::Relaxed);
+        tracer.span(
+            "drain",
+            span_start,
+            SpanCtx {
+                tier: w.obs_tier(),
+                epoch: self.seq as i64,
+                slot: slot_idx as i32,
+                src: w.world_ranks[src] as i32,
+                ..SpanCtx::NONE
+            },
+        );
         Ok(true)
     }
 
@@ -425,9 +452,15 @@ impl Pending for PendingExchange {
         let w = &*self.world;
         let seq = self.seq;
         let slot_idx = (seq % w.nb.ring()) as usize;
+        let tracer = &w.tracers[self.rank];
+        let span_start = tracer.start();
         let t0 = Instant::now();
         let mut wait_secs = 0.0;
         let mut last_arrival = self.last_arrival;
+        // straggler attribution: among the sources this completion
+        // actually blocked on, the one whose deposit landed last is
+        // the peer the whole wait is charged to
+        let mut blamed: Option<(Instant, usize)> = None;
 
         recv.resize_with(w.m, Vec::new);
         for src in 0..w.m {
@@ -471,6 +504,11 @@ impl Pending for PendingExchange {
                     }
                 }
                 wait_secs += w0.elapsed().as_secs_f64();
+                if let Some(at) = st.deposited_at {
+                    if blamed.is_none_or(|(b_at, _)| at > b_at) {
+                        blamed = Some((at, src));
+                    }
+                }
             }
             if let Some(at) = st.deposited_at {
                 if at > last_arrival {
@@ -517,6 +555,23 @@ impl Pending for PendingExchange {
             Ordering::Relaxed,
         );
 
+        let mut blamed_abs = -1;
+        if let Some((_, src)) = blamed {
+            w.record_blame(self.rank, src, wait_secs);
+            blamed_abs = w.world_ranks[src] as i32;
+        }
+        tracer.span(
+            "complete",
+            span_start,
+            SpanCtx {
+                tier: w.obs_tier(),
+                epoch: seq as i64,
+                slot: slot_idx as i32,
+                src: blamed_abs,
+                ..SpanCtx::NONE
+            },
+        );
+
         let total = t0.elapsed().as_secs_f64();
         Ok(CompletionTiming {
             wait_secs,
@@ -534,6 +589,8 @@ impl SplitTransport for Communicator {
     ) -> Result<PendingExchange, CommError> {
         let w = &*self.world;
         assert_eq!(send.len(), w.m, "send buffer per rank required");
+        let tracer = &w.tracers[self.rank];
+        let span_start = tracer.start();
         let t0 = Instant::now();
         let seq = w.nb.next_seq[self.rank].fetch_add(1, Ordering::Relaxed);
         debug_assert!(
@@ -591,6 +648,16 @@ impl SplitTransport for Communicator {
         w.stats
             .post_nanos
             .fetch_add((post_secs * 1e9) as u64, Ordering::Relaxed);
+        tracer.span(
+            "post",
+            span_start,
+            SpanCtx {
+                tier: w.obs_tier(),
+                epoch: seq as i64,
+                slot: slot_idx as i32,
+                ..SpanCtx::NONE
+            },
+        );
         Ok(PendingExchange {
             world: self.world.clone(),
             rank: self.rank,
@@ -1212,5 +1279,151 @@ mod tests {
             }
         });
         assert_eq!(world.stats().snapshot().timeouts, 0);
+    }
+
+    #[test]
+    fn completion_blames_the_late_depositor() {
+        // rank 1 posts late every round: ranks 0 and 2 block in
+        // complete() and must charge the wait to rank 1
+        let world = WorldBuilder::new(3).quota(64).build();
+        thread::scope(|s| {
+            for rank in 0..3usize {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    for round in 0..4u32 {
+                        if rank == 1 {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        let mut send = fill_send(3, rank, round, 1);
+                        let pending =
+                            comm.alltoall_start(&mut send).unwrap();
+                        let mut recv = Vec::new();
+                        pending.complete(&mut recv).unwrap();
+                    }
+                });
+            }
+        });
+        let blame = world.blame_report();
+        for waiter in [0usize, 2] {
+            let (top, waits, late) = blame.global[waiter].top().unwrap();
+            assert_eq!(top, 1, "rank {waiter} should blame rank 1");
+            assert!(waits >= 3);
+            assert!(late > 0.0);
+        }
+        assert_eq!(blame.global[1].waits[1], 0, "no self-blame");
+    }
+
+    #[test]
+    fn traced_split_phase_pairs_posts_with_completions() {
+        use crate::obs::{Tier, TraceBuf};
+        let buf = TraceBuf::new(2);
+        let world =
+            WorldBuilder::new(2).quota(64).trace(Some(buf.clone())).build();
+        thread::scope(|s| {
+            for rank in 0..2usize {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    for round in 0..3u32 {
+                        let mut send = fill_send(2, rank, round, 1);
+                        let pending =
+                            comm.alltoall_start(&mut send).unwrap();
+                        let mut recv = Vec::new();
+                        pending.complete(&mut recv).unwrap();
+                    }
+                });
+            }
+        });
+        let spans = buf.drain();
+        for pid in 0..2u32 {
+            let posts: Vec<_> = spans
+                .iter()
+                .filter(|s| s.pid == pid && s.name == "post")
+                .collect();
+            let completes: Vec<_> = spans
+                .iter()
+                .filter(|s| s.pid == pid && s.name == "complete")
+                .collect();
+            assert_eq!(posts.len(), 3);
+            assert_eq!(completes.len(), 3);
+            for (i, p) in posts.iter().enumerate() {
+                assert_eq!(p.ctx.epoch, i as i64);
+                assert_eq!(p.ctx.tier, Tier::Global);
+                assert_eq!(p.ctx.slot, (i % 2) as i32);
+                let c = completes
+                    .iter()
+                    .find(|c| c.ctx.epoch == p.ctx.epoch)
+                    .expect("unmatched post");
+                assert!(c.ts_us >= p.ts_us);
+            }
+        }
+    }
+
+    #[test]
+    fn traced_abandon_closes_the_post() {
+        use crate::obs::TraceBuf;
+        let buf = TraceBuf::new(2);
+        let world =
+            WorldBuilder::new(2).quota(64).trace(Some(buf.clone())).build();
+        thread::scope(|s| {
+            for rank in 0..2usize {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    let mut send = fill_send(2, rank, 0, 1);
+                    let pending = comm.alltoall_start(&mut send).unwrap();
+                    pending.abandon();
+                });
+            }
+        });
+        let spans = buf.drain();
+        for pid in 0..2u32 {
+            let mine: Vec<_> =
+                spans.iter().filter(|s| s.pid == pid).collect();
+            assert!(mine.iter().any(|s| s.name == "post"));
+            let ab = mine
+                .iter()
+                .find(|s| s.name == "abandon")
+                .expect("missing abandon span");
+            assert_eq!(ab.ctx.epoch, 0);
+        }
+    }
+
+    #[test]
+    fn traced_early_drain_records_drain_spans() {
+        use crate::obs::TraceBuf;
+        let buf = TraceBuf::new(2);
+        let world =
+            WorldBuilder::new(2).quota(64).trace(Some(buf.clone())).build();
+        thread::scope(|s| {
+            for rank in 0..2usize {
+                let comm = world.communicator(rank);
+                s.spawn(move || {
+                    let mut send = fill_send(2, rank, 0, 1);
+                    let mut pending =
+                        comm.alltoall_start(&mut send).unwrap();
+                    // poll until both sources drain early, then complete
+                    let mut outs = vec![Vec::new(); 2];
+                    let mut done = [false; 2];
+                    while !done.iter().all(|&d| d) {
+                        for src in 0..2 {
+                            if !done[src] {
+                                done[src] = pending
+                                    .try_complete_source(
+                                        src,
+                                        &mut outs[src],
+                                    )
+                                    .unwrap();
+                            }
+                        }
+                    }
+                    let mut recv = Vec::new();
+                    pending.complete(&mut recv).unwrap();
+                });
+            }
+        });
+        let spans = buf.drain();
+        let drains: Vec<_> =
+            spans.iter().filter(|s| s.name == "drain").collect();
+        assert_eq!(drains.len(), 4, "2 ranks x 2 sources drained early");
+        assert!(drains.iter().all(|s| s.ctx.src >= 0));
     }
 }

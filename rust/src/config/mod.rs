@@ -497,8 +497,13 @@ pub struct RunConfig {
     pub ranks_per_area: usize,
     /// Record (cycle, gid) spike events for verification.
     pub record_spikes: bool,
-    /// Record per-rank per-cycle times for the distribution figures.
+    /// Record raw per-rank per-cycle time vectors (unbounded memory —
+    /// opt-in via `--record-cycle-times`; the streaming interval
+    /// histograms of `obs::intervals` are always on and bounded).
     pub record_cycle_times: bool,
+    /// Record trace spans for every phase step and communication
+    /// operation (`--trace <path>`; off = one branch per site).
+    pub trace: bool,
     /// Watchdog deadline in seconds applied to every communicator wait
     /// (barrier-framed collective phases and split-phase completion
     /// rendezvous).  `None` (the default) keeps today's unbounded waits;
@@ -538,6 +543,7 @@ impl Default for RunConfig {
             ranks_per_area: 1,
             record_spikes: false,
             record_cycle_times: false,
+            trace: false,
             comm_timeout: None,
             checkpoint_every: 0,
             checkpoint_path: "nsim.ckpt".to_string(),
@@ -578,6 +584,12 @@ impl RunConfig {
         }
         if args.flag("record-cycle-times") {
             self.record_cycle_times = true;
+        }
+        // --trace takes the output path as its value; its presence
+        // switches span recording on (the path itself is consumed by
+        // the launcher, which writes the trace after the run)
+        if args.str_opt("trace").is_some() {
+            self.trace = true;
         }
         if let Some(t) = args.f64_opt("comm-timeout")? {
             self.comm_timeout = Some(t);
@@ -648,6 +660,12 @@ impl RunConfig {
         }
         if let Some(b) = v.get("record_spikes").and_then(Json::as_bool) {
             cfg.record_spikes = b;
+        }
+        if let Some(b) = v.get("record_cycle_times").and_then(Json::as_bool) {
+            cfg.record_cycle_times = b;
+        }
+        if let Some(b) = v.get("trace").and_then(Json::as_bool) {
+            cfg.trace = b;
         }
         if let Some(x) = v.get("comm_timeout").and_then(Json::as_f64) {
             cfg.comm_timeout = Some(x);
@@ -1105,6 +1123,34 @@ mod tests {
             ..RunConfig::default()
         };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn trace_and_cycle_time_knobs() {
+        // defaults: no span recording, no raw per-cycle vectors
+        let cfg = RunConfig::default();
+        assert!(!cfg.trace);
+        assert!(!cfg.record_cycle_times);
+
+        // --trace carries the output path; its presence enables spans
+        let args =
+            Args::parse(["simulate", "--trace", "t.json"]).unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert!(cfg.trace);
+
+        let args =
+            Args::parse(["simulate", "--record-cycle-times"]).unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert!(cfg.record_cycle_times);
+        assert!(!cfg.trace);
+
+        let v = json::parse(
+            r#"{"trace": true, "record_cycle_times": true}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert!(cfg.trace);
+        assert!(cfg.record_cycle_times);
     }
 
     #[test]

@@ -68,6 +68,9 @@ use crate::comm::{
 };
 use crate::config::{CommMode, RunConfig, Strategy, UpdatePath};
 use crate::network::{Gid, ModelSpec};
+use crate::obs::blame::TieredBlame;
+use crate::obs::intervals::TierIntervalSummary;
+use crate::obs::{SpanEvent, TraceBuf, Tracer};
 use crate::placement::Placement;
 use crate::util::timers::PhaseTimes;
 use anyhow::{Context, Result};
@@ -119,6 +122,17 @@ pub struct SimResult {
     /// (which the conservation test arranges); bit-identical across
     /// exec/comm modes regardless.
     pub ring_pending: Vec<Vec<f64>>,
+    /// Cycles per communication epoch of this run (1 unless the
+    /// strategy uses dual pathways).
+    pub epoch_cycles: u64,
+    /// Per-rank streaming compute-interval statistics per tier — the
+    /// bounded always-on replacement for `cycle_times`.
+    pub intervals: Vec<TierIntervalSummary>,
+    /// Straggler-attribution ledgers: who each rank waited for, per
+    /// tier, in absolute (root-world) rank numbers.
+    pub blame: TieredBlame,
+    /// Recorded trace spans — empty unless `cfg.trace`.
+    pub spans: Vec<SpanEvent>,
 }
 
 impl SimResult {
@@ -258,10 +272,12 @@ pub fn simulate_with(
         )
     });
 
+    let trace_buf = cfg.trace.then(|| TraceBuf::new(cfg.m_ranks));
     let world = WorldBuilder::new(cfg.m_ranks)
         .quota(quota)
         .depth(cfg.comm_depth)
         .timeout(cfg.comm_timeout.map(Duration::from_secs_f64))
+        .trace(trace_buf.clone())
         .build();
     let results: Result<Vec<RankResult>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.m_ranks)
@@ -271,6 +287,7 @@ pub fn simulate_with(
                 let updater = &updater;
                 let snapshot = &snapshot;
                 let ckpt_ctx = &ckpt_ctx;
+                let trace_buf = &trace_buf;
                 scope.spawn(move || -> Result<RankResult> {
                     // hierarchical communicators: dual-pathway runs
                     // split one local communicator per area group off
@@ -339,6 +356,11 @@ pub fn simulate_with(
                                 ctx,
                                 every_epochs: cfg.checkpoint_every,
                             }),
+                            tracer: trace_buf
+                                .as_ref()
+                                .map_or_else(Tracer::off, |b| {
+                                    Tracer::new(b, r)
+                                }),
                         },
                     )
                 })
@@ -356,6 +378,8 @@ pub fn simulate_with(
     let mut rank_neurons = vec![0usize; cfg.m_ranks];
     let mut rank_conns = vec![(0usize, 0usize); cfg.m_ranks];
     let mut ring_pending = vec![Vec::new(); cfg.m_ranks];
+    let mut intervals =
+        vec![TierIntervalSummary::default(); cfg.m_ranks];
     let mut spikes = Vec::new();
     for r in results {
         rank_times[r.rank] = r.phase_times;
@@ -363,12 +387,15 @@ pub fn simulate_with(
         rank_neurons[r.rank] = r.n_neurons;
         rank_conns[r.rank] = (r.n_conns_short, r.n_conns_long);
         ring_pending[r.rank] = r.ring_pending;
+        intervals[r.rank] = r.intervals;
         spikes.extend(r.spikes);
     }
     spikes.sort_unstable();
     let mean_times = PhaseTimes::mean_of(&rank_times);
     let max_times = PhaseTimes::max_of(&rank_times);
     let comm_tiers = world.tiered_stats();
+    let blame = world.blame_report();
+    let spans = trace_buf.as_ref().map_or_else(Vec::new, |b| b.drain());
 
     Ok(SimResult {
         strategy: cfg.strategy,
@@ -389,5 +416,9 @@ pub fn simulate_with(
             CommMode::Overlap => cfg.comm_depth as u64,
         },
         ring_pending,
+        epoch_cycles,
+        intervals,
+        blame,
+        spans,
     })
 }

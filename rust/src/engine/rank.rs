@@ -154,6 +154,8 @@ use crate::engine::receive::{
 use crate::engine::ringbuffer::RingBuffer;
 use crate::engine::update::Updater;
 use crate::network::{incoming_connections, Gid, ModelSpec};
+use crate::obs::intervals::{TierIntervalSummary, TierIntervals};
+use crate::obs::{SpanCtx, Tracer};
 use crate::placement::Placement;
 use crate::tables::{
     mask_test, ConnSlice, ConnTable, LocalConn, Pathways, SourceShards,
@@ -391,6 +393,19 @@ pub struct RankResult {
     /// equivalence tests assert the vector is bit-identical across exec
     /// and comm modes either way.
     pub ring_pending: Vec<f64>,
+    /// Streaming compute-interval statistics per communication tier
+    /// (always on — the bounded replacement for `cycle_times`).
+    pub intervals: TierIntervalSummary,
+}
+
+/// Per-rank observability state threaded through the run: the span
+/// tracer (a no-op when tracing is off) and the streaming
+/// compute-interval recorders (always on — fixed size, no steady-state
+/// allocation).  Lives on the rank's coordinator OS thread only, so no
+/// synchronization beyond the tracer's own per-rank sink.
+struct RankObs {
+    tracer: Tracer,
+    intervals: TierIntervals,
 }
 
 /// The rank-side view of the engine's checkpoint schedule: the shared
@@ -412,6 +427,9 @@ pub struct RunOpts<'a> {
     pub exec: ExecMode,
     pub faults: RankFaults,
     pub ckpt: Option<CkptSched<'a>>,
+    /// Span tracer for this rank ([`Tracer::off`] when `--trace` is
+    /// absent — one branch per span site, no clock reads).
+    pub tracer: Tracer,
 }
 
 /// Apply the injected compute-straggler factor for `epoch`: sleep so
@@ -1315,6 +1333,10 @@ impl RankState {
             } else {
                 0
             });
+        let mut obs = RankObs {
+            tracer: opts.tracer.clone(),
+            intervals: TierIntervals::default(),
+        };
         let period = opts
             .ckpt
             .as_ref()
@@ -1349,6 +1371,7 @@ impl RankState {
                         &opts.faults,
                         &mut phase_times,
                         &mut cycle_times,
+                        &mut obs,
                     )?,
                 ExecMode::PooledChannels if self.threads.len() > 1 => self
                     .seg_channels(
@@ -1361,6 +1384,7 @@ impl RankState {
                         &opts.faults,
                         &mut phase_times,
                         &mut cycle_times,
+                        &mut obs,
                     )?,
                 _ => self.seg_sequential(
                     comm,
@@ -1372,6 +1396,7 @@ impl RankState {
                     &opts.faults,
                     &mut phase_times,
                     &mut cycle_times,
+                    &mut obs,
                 )?,
             }
             if let (Some(p), Some(sched)) = (period, opts.ckpt.as_ref()) {
@@ -1381,7 +1406,7 @@ impl RankState {
                 // `end > start_cycle` guard keeps a rank killed *at*
                 // the restore point from checkpointing stale state.
                 if end % p == 0 && end > opts.start_cycle {
-                    self.write_checkpoint(comm, sched.ctx, end)?;
+                    self.write_checkpoint(comm, sched.ctx, end, &obs.tracer)?;
                 }
             }
             if kill_cycle == Some(end) && end < opts.s_cycles {
@@ -1415,6 +1440,7 @@ impl RankState {
             n_conns_long: n_long,
             n_neurons,
             ring_pending,
+            intervals: obs.intervals.summary(),
         })
     }
 
@@ -1431,7 +1457,9 @@ impl RankState {
         comm: &T,
         ck: &CkptCtx,
         cycle: u64,
+        tracer: &Tracer,
     ) -> Result<()> {
+        let span_start = tracer.start();
         let part = self.serialize_part();
         ck.deposit(self.rank, part);
         comm.allreduce_min_u64(0)
@@ -1441,6 +1469,7 @@ impl RankState {
         }
         comm.allreduce_min_u64(0)
             .context("checkpoint publish barrier")?;
+        tracer.span("checkpoint", span_start, SpanCtx::cycle(cycle));
         ck.check()
     }
 
@@ -1604,6 +1633,7 @@ impl RankState {
         faults: &RankFaults,
         phase_times: &mut PhaseTimes,
         cycle_times: &mut Vec<f64>,
+        obs: &mut RankObs,
     ) -> Result<()> {
         let dual = self.strategy.dual_pathways();
         let mut inflight: VecDeque<InFlight<T::Pending>> = VecDeque::new();
@@ -1627,10 +1657,13 @@ impl RankState {
             let mut cycle_secs = 0.0;
 
             // ---- deliver -------------------------------------------------
+            let p0 = obs.tracer.start();
             self.deliver_runs_sequential(dual, first_step);
             cycle_secs += sw.charge(phase_times, Phase::Deliver);
+            obs.tracer.span("deliver", p0, SpanCtx::cycle(s));
 
             // ---- update --------------------------------------------------
+            let p0 = obs.tracer.start();
             for th in &mut self.threads {
                 th.update_cycle(
                     updater,
@@ -1642,21 +1675,31 @@ impl RankState {
                 );
             }
             let upd = sw.charge(phase_times, Phase::Update);
+            obs.tracer.span("update", p0, SpanCtx::cycle(s));
             cycle_secs += upd;
-            cycle_secs += straggle(
+            let p0 = obs.tracer.start();
+            let extra = straggle(
                 faults,
                 s / self.epoch_cycles,
                 upd,
                 phase_times,
                 &mut sw,
             );
+            if extra > 0.0 {
+                obs.tracer.span("straggle", p0, SpanCtx::cycle(s));
+            }
+            cycle_secs += extra;
 
             // ---- collocate -----------------------------------------------
+            let p0 = obs.tracer.start();
             self.collocate_all(dual);
             cycle_secs += sw.charge(phase_times, Phase::Collocate);
+            obs.tracer.span("collocate", p0, SpanCtx::cycle(s));
             if record_cycle_times {
                 cycle_times.push(cycle_secs);
             }
+            obs.intervals
+                .record_cycle(cycle_secs, (s + 1) % self.epoch_cycles == 0);
 
             // ---- communicate ---------------------------------------------
             if let Err(e) = self.communicate(
@@ -1710,6 +1753,7 @@ impl RankState {
         faults: &RankFaults,
         phase_times: &mut PhaseTimes,
         cycle_times: &mut Vec<f64>,
+        obs: &mut RankObs,
     ) -> Result<()> {
         let dual = self.strategy.dual_pathways();
         let m = comm.m_ranks();
@@ -1801,6 +1845,7 @@ impl RankState {
                 let mut cycle_secs = 0.0;
 
                 // ---- deliver: distribute runs, workers bucket+merge ------
+                let p0 = obs.tracer.start();
                 {
                     let mut queues: Vec<MutexGuard<'_, SlotData>> = slots
                         .iter()
@@ -1821,20 +1866,29 @@ impl RankState {
                 barrier.wait(); // buckets ready
                 barrier.wait(); // deliver done
                 cycle_secs += sw.charge(phase_times, Phase::Deliver);
+                obs.tracer.span("deliver", p0, SpanCtx::cycle(s));
 
                 // ---- update ----------------------------------------------
+                let p0 = obs.tracer.start();
                 barrier.wait(); // update done
                 let upd = sw.charge(phase_times, Phase::Update);
+                obs.tracer.span("update", p0, SpanCtx::cycle(s));
                 cycle_secs += upd;
-                cycle_secs += straggle(
+                let p0 = obs.tracer.start();
+                let extra = straggle(
                     faults,
                     s / self.epoch_cycles,
                     upd,
                     phase_times,
                     &mut sw,
                 );
+                if extra > 0.0 {
+                    obs.tracer.span("straggle", p0, SpanCtx::cycle(s));
+                }
+                cycle_secs += extra;
 
                 // ---- collocate -------------------------------------------
+                let p0 = obs.tracer.start();
                 barrier.wait(); // collocate done
                 // drain in virtual-thread order: this concatenation is
                 // the ordering decision that matches the sequential
@@ -1857,9 +1911,14 @@ impl RankState {
                     }
                 }
                 cycle_secs += sw.charge(phase_times, Phase::Collocate);
+                obs.tracer.span("collocate", p0, SpanCtx::cycle(s));
                 if record_cycle_times {
                     cycle_times.push(cycle_secs);
                 }
+                obs.intervals.record_cycle(
+                    cycle_secs,
+                    (s + 1) % self.epoch_cycles == 0,
+                );
 
                 // ---- communicate -----------------------------------------
                 if let Err(e) = self.communicate(
@@ -1927,6 +1986,7 @@ impl RankState {
         faults: &RankFaults,
         phase_times: &mut PhaseTimes,
         cycle_times: &mut Vec<f64>,
+        obs: &mut RankObs,
     ) -> Result<()> {
         let dual = self.strategy.dual_pathways();
         let m = comm.m_ranks();
@@ -1990,6 +2050,7 @@ impl RankState {
                 let mut cycle_secs = 0.0;
 
                 // ---- deliver ---------------------------------------------
+                let p0 = obs.tracer.start();
                 self.recv.short.flatten_into(&mut flat.short);
                 pooled_deliver(
                     &mut flat.short,
@@ -2007,8 +2068,10 @@ impl RankState {
                     &reply_rxs,
                 );
                 cycle_secs += sw.charge(phase_times, Phase::Deliver);
+                obs.tracer.span("deliver", p0, SpanCtx::cycle(s));
 
                 // ---- update ----------------------------------------------
+                let p0 = obs.tracer.start();
                 for tx in &cmd_txs {
                     tx.send(Cmd::Update {
                         first_step,
@@ -2022,16 +2085,23 @@ impl RankState {
                     expect_done(rx);
                 }
                 let upd = sw.charge(phase_times, Phase::Update);
+                obs.tracer.span("update", p0, SpanCtx::cycle(s));
                 cycle_secs += upd;
-                cycle_secs += straggle(
+                let p0 = obs.tracer.start();
+                let extra = straggle(
                     faults,
                     s / self.epoch_cycles,
                     upd,
                     phase_times,
                     &mut sw,
                 );
+                if extra > 0.0 {
+                    obs.tracer.span("straggle", p0, SpanCtx::cycle(s));
+                }
+                cycle_secs += extra;
 
                 // ---- collocate -------------------------------------------
+                let p0 = obs.tracer.start();
                 for (tx, bufs) in cmd_txs.iter().zip(coll_bufs.iter_mut()) {
                     let (local, global) = std::mem::take(bufs);
                     tx.send(Cmd::Collocate { dual, local, global })
@@ -2060,9 +2130,14 @@ impl RankState {
                     }
                 }
                 cycle_secs += sw.charge(phase_times, Phase::Collocate);
+                obs.tracer.span("collocate", p0, SpanCtx::cycle(s));
                 if record_cycle_times {
                     cycle_times.push(cycle_secs);
                 }
+                obs.intervals.record_cycle(
+                    cycle_secs,
+                    (s + 1) % self.epoch_cycles == 0,
+                );
 
                 // ---- communicate -----------------------------------------
                 if let Err(e) = self.communicate(

@@ -37,6 +37,7 @@ pub mod models;
 pub mod placement;
 pub mod tables;
 pub mod comm;
+pub mod obs;
 pub mod engine;
 pub mod runtime;
 pub mod vcluster;

@@ -52,6 +52,9 @@ fn print_usage() {
                     [--comm blocking|overlap] [--comm-depth D]\n\
                     [--quota spikes] [--ranks-per-area R]\n\
                     [--record-spikes]\n\
+                    [--record-cycle-times]           raw per-cycle vectors\n\
+                    [--trace out.json]               Perfetto span trace\n\
+                    [--stats-json out.json]          machine-readable report\n\
                     [--comm-timeout secs]            comm watchdog\n\
                     [--checkpoint-every epochs] [--checkpoint-path p]\n\
                     [--restore path]                 resume a snapshot\n\
@@ -92,9 +95,21 @@ fn build_model(
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    let trace_path = args.str_opt("trace");
+    let stats_path = args.str_opt("stats-json");
+    if trace_path.as_deref() == Some("true") {
+        bail!("--trace needs an output path, e.g. --trace trace.json");
+    }
+    if stats_path.as_deref() == Some("true") {
+        bail!(
+            "--stats-json needs an output path, e.g. --stats-json \
+             stats.json"
+        );
+    }
+    // raw per-cycle time vectors are opt-in (--record-cycle-times):
+    // the streaming interval histograms below are always on and bounded
     let cfg = RunConfig {
         record_spikes: true,
-        record_cycle_times: true,
         ..RunConfig::default()
     }
     .override_from_args(args)?;
@@ -174,6 +189,64 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             fnum(ts.complete_wait_secs),
             fnum(ts.hidden_secs),
         );
+    }
+
+    // observability summary: pooled compute-interval distribution,
+    // straggler attribution and the sync-model closure
+    let (n, mu, sigma) =
+        nsim::obs::intervals::pooled(res.intervals.iter().map(|t| &t.local));
+    if n > 0 {
+        println!(
+            "intervals: n {n} | mean {:.4} ms | sd {:.4} ms | cv {:.3}",
+            mu * 1e3,
+            sigma * 1e3,
+            if mu > 0.0 { sigma / mu } else { 0.0 },
+        );
+    }
+    if let Some((rank, waits, late)) = res.blame.merged_all().top() {
+        println!(
+            "stragglers: most-blamed rank {rank} (last arriver in \
+             {waits} waits, {} s total lateness)",
+            fnum(late),
+        );
+    }
+    if let Some(model) = nsim::obs::report::fitted_model(&res) {
+        let (pred_local, pred_global) =
+            nsim::obs::report::predicted_sync(model, &cfg, &res);
+        let m = res.m_ranks.max(1) as f64;
+        let meas_global = (res.comm_tiers.global.sync_secs
+            + res.comm_tiers.global.complete_wait_secs)
+            / m;
+        let meas_local = (res.comm_tiers.local.sync_secs
+            + res.comm_tiers.local.complete_wait_secs)
+            / m;
+        println!(
+            "T_sync[global]: predicted {} s | measured {} s",
+            fnum(pred_global),
+            fnum(meas_global),
+        );
+        println!(
+            "T_sync[local]:  predicted {} s | measured {} s",
+            fnum(pred_local),
+            fnum(meas_local),
+        );
+    }
+    if let Some(p) = trace_path {
+        nsim::obs::trace::write_chrome_trace(
+            std::path::Path::new(&p),
+            &res.spans,
+            res.m_ranks,
+        )?;
+        println!("trace: {} spans -> {p}", res.spans.len());
+    }
+    if let Some(p) = stats_path {
+        nsim::obs::report::write_report(
+            std::path::Path::new(&p),
+            &spec.name,
+            &cfg,
+            &res,
+        )?;
+        println!("stats: -> {p}");
     }
     Ok(())
 }

@@ -1,0 +1,187 @@
+//! Straggler attribution: per-wait last-arriver ledgers.
+//!
+//! Every rendezvous primitive in `comm` already knows who arrived
+//! last — the generation barrier's releaser is by definition the
+//! straggler, and a split-phase completion knows which source it
+//! blocked on longest.  Each waiting rank accumulates those verdicts
+//! into a [`Blame`] ledger indexed by the *blamed* (absolute) rank:
+//! how many times it was waited for, and for how long in total.
+//! Attribution is always on — it costs two clock reads per wait that
+//! the comm layer already pays for its `sync_nanos` counters — and is
+//! timing-only, so it cannot perturb the deterministic spike trains.
+
+use crate::util::json::Json;
+
+/// One waiting rank's ledger: `waits[b]` counts the rendezvous in
+/// which rank `b` arrived last while this rank was already waiting,
+/// and `lateness_secs[b]` sums the wait time attributed to it.
+#[derive(Clone, Debug, Default)]
+pub struct Blame {
+    pub waits: Vec<u64>,
+    pub lateness_secs: Vec<f64>,
+}
+
+impl Blame {
+    /// An empty ledger over `m` blameable ranks.
+    pub fn sized(m: usize) -> Blame {
+        Blame { waits: vec![0; m], lateness_secs: vec![0.0; m] }
+    }
+
+    /// Record one wait: `blamed` arrived last, costing this rank
+    /// `lateness_secs` of wall-clock wait.
+    #[inline]
+    pub fn record(&mut self, blamed: usize, lateness_secs: f64) {
+        self.waits[blamed] += 1;
+        self.lateness_secs[blamed] += lateness_secs.max(0.0);
+    }
+
+    /// Fold `other` into `self` (ledgers from sub-communicators use
+    /// absolute rank indices, so folding is element-wise).
+    pub fn merge(&mut self, other: &Blame) {
+        if self.waits.len() < other.waits.len() {
+            self.waits.resize(other.waits.len(), 0);
+            self.lateness_secs.resize(other.lateness_secs.len(), 0.0);
+        }
+        for (b, &w) in other.waits.iter().enumerate() {
+            self.waits[b] += w;
+        }
+        for (b, &l) in other.lateness_secs.iter().enumerate() {
+            self.lateness_secs[b] += l;
+        }
+    }
+
+    pub fn total_waits(&self) -> u64 {
+        self.waits.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_waits() == 0
+    }
+
+    /// The most-blamed rank: `(rank, waits, lateness_secs)`, by wait
+    /// count with lateness as tie-break.  `None` on an empty ledger.
+    pub fn top(&self) -> Option<(usize, u64, f64)> {
+        (0..self.waits.len())
+            .filter(|&b| self.waits[b] > 0)
+            .max_by(|&a, &b| {
+                self.waits[a].cmp(&self.waits[b]).then(
+                    self.lateness_secs[a].total_cmp(&self.lateness_secs[b]),
+                )
+            })
+            .map(|b| (b, self.waits[b], self.lateness_secs[b]))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "waits",
+                Json::Arr(
+                    self.waits.iter().map(|&w| Json::Num(w as f64)).collect(),
+                ),
+            ),
+            ("lateness_secs", Json::nums(&self.lateness_secs)),
+        ])
+    }
+}
+
+/// Run-level attribution, per tier: `global[r]` / `local[r]` is the
+/// ledger of waits *observed by* (absolute) rank `r` on that tier.
+#[derive(Clone, Debug, Default)]
+pub struct TieredBlame {
+    pub global: Vec<Blame>,
+    pub local: Vec<Blame>,
+}
+
+impl TieredBlame {
+    pub fn sized(m: usize) -> TieredBlame {
+        TieredBlame {
+            global: vec![Blame::sized(m); m],
+            local: vec![Blame::sized(m); m],
+        }
+    }
+
+    /// Every wait of the run folded into one ledger — the summary's
+    /// "who did the run wait for" view.
+    pub fn merged_all(&self) -> Blame {
+        let m = self.global.len().max(self.local.len());
+        let mut all = Blame::sized(m);
+        for b in self.global.iter().chain(self.local.iter()) {
+            all.merge(b);
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_top() {
+        let mut b = Blame::sized(4);
+        assert!(b.is_empty());
+        assert_eq!(b.top(), None);
+        b.record(2, 0.5);
+        b.record(2, 0.25);
+        b.record(1, 3.0);
+        assert_eq!(b.total_waits(), 3);
+        let (rank, waits, late) = b.top().unwrap();
+        assert_eq!((rank, waits), (2, 2));
+        assert!((late - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_breaks_ties_by_lateness() {
+        let mut b = Blame::sized(3);
+        b.record(0, 1.0);
+        b.record(2, 2.0);
+        assert_eq!(b.top().unwrap().0, 2);
+    }
+
+    #[test]
+    fn merge_is_elementwise_and_resizes() {
+        let mut a = Blame::sized(2);
+        a.record(1, 1.0);
+        let mut b = Blame::sized(4);
+        b.record(1, 2.0);
+        b.record(3, 0.5);
+        a.merge(&b);
+        assert_eq!(a.waits, vec![0, 2, 0, 1]);
+        assert!((a.lateness_secs[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_lateness_clamps_to_zero() {
+        let mut b = Blame::sized(1);
+        b.record(0, -1.0);
+        assert_eq!(b.lateness_secs[0], 0.0);
+        assert_eq!(b.waits[0], 1);
+    }
+
+    #[test]
+    fn tiered_merge_all_spans_both_tiers() {
+        let mut t = TieredBlame::sized(3);
+        t.global[0].record(2, 1.0);
+        t.local[1].record(2, 0.5);
+        t.local[2].record(0, 0.1);
+        let all = t.merged_all();
+        assert_eq!(all.waits[2], 2);
+        assert_eq!(all.waits[0], 1);
+        assert_eq!(all.top().unwrap().0, 2);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut b = Blame::sized(2);
+        b.record(0, 0.5);
+        let j = b.to_json();
+        assert_eq!(
+            j.get("waits").unwrap().as_arr().unwrap()[0].as_u64(),
+            Some(1)
+        );
+        assert_eq!(
+            j.get("lateness_secs").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+}

@@ -1,0 +1,290 @@
+//! Streaming interval distributions.
+//!
+//! The paper characterizes a run by the *distribution* of compute
+//! intervals between communication calls — mean, CV and tail shape —
+//! because the expected synchronization cost is an order statistic of
+//! that distribution (`theory::sync`).  [`IntervalRecorder`] captures
+//! it per rank in constant memory: a Welford moment accumulator
+//! ([`crate::util::stats::Moments`]) next to a fixed 64-bin log₂
+//! histogram, so a billion-cycle run costs the same few hundred bytes
+//! as a ten-cycle one.  This replaces the unbounded
+//! `record_cycle_times` vectors as the default (the raw vectors stay
+//! available behind `--record-cycle-times` for exact lumping).
+//!
+//! [`TierIntervals`] tracks both tiers of the hierarchical schedule:
+//! the **local** interval is one cycle of compute (the local-tier
+//! alltoall rendezvous every cycle), the **global** interval is the
+//! epoch accumulation between global exchanges (`d` lumped cycles
+//! under the structure-aware strategy — the paper's CLT lumping made
+//! measurable).
+
+use crate::util::json::Json;
+use crate::util::stats::{
+    log2_bin, log2_bin_lo, log2_hist_quantile, Moments, LOG2_HIST_BINS,
+};
+
+/// Constant-memory distribution sketch of one interval stream.
+#[derive(Clone, Debug)]
+pub struct IntervalRecorder {
+    moments: Moments,
+    hist: [u64; LOG2_HIST_BINS],
+}
+
+impl Default for IntervalRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IntervalRecorder {
+    pub fn new() -> IntervalRecorder {
+        IntervalRecorder { moments: Moments::new(), hist: [0; LOG2_HIST_BINS] }
+    }
+
+    /// Record one interval (seconds).
+    #[inline]
+    pub fn push(&mut self, secs: f64) {
+        self.moments.push(secs);
+        self.hist[log2_bin(secs)] += 1;
+    }
+
+    pub fn n(&self) -> u64 {
+        self.moments.n()
+    }
+
+    pub fn summary(&self) -> IntervalSummary {
+        IntervalSummary {
+            n: self.moments.n(),
+            mean: self.moments.mean(),
+            std_dev: self.moments.std_dev(),
+            cv: self.moments.cv(),
+            min: self.moments.min(),
+            max: self.moments.max(),
+            p50: log2_hist_quantile(&self.hist, 0.50),
+            p90: log2_hist_quantile(&self.hist, 0.90),
+            p99: log2_hist_quantile(&self.hist, 0.99),
+            hist: (0..LOG2_HIST_BINS)
+                .filter(|&i| self.hist[i] > 0)
+                .map(|i| (log2_bin_lo(i), self.hist[i]))
+                .collect(),
+        }
+    }
+}
+
+/// Plain-data summary of one interval stream: exact moments plus
+/// histogram-derived quantiles (each within a ×√2 bin of truth) and
+/// the non-empty histogram bins as `(lower_edge_secs, count)`.
+#[derive(Clone, Debug, Default)]
+pub struct IntervalSummary {
+    pub n: u64,
+    pub mean: f64,
+    pub std_dev: f64,
+    pub cv: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub hist: Vec<(f64, u64)>,
+}
+
+impl IntervalSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mean_secs", Json::Num(self.mean)),
+            ("std_dev_secs", Json::Num(self.std_dev)),
+            ("cv", Json::Num(self.cv)),
+            ("min_secs", Json::Num(self.min)),
+            ("max_secs", Json::Num(self.max)),
+            ("p50_secs", Json::Num(self.p50)),
+            ("p90_secs", Json::Num(self.p90)),
+            ("p99_secs", Json::Num(self.p99)),
+            (
+                "hist",
+                Json::Arr(
+                    self.hist
+                        .iter()
+                        .map(|&(lo, c)| {
+                            Json::Arr(vec![
+                                Json::Num(lo),
+                                Json::Num(c as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Pool per-rank summaries into run-level `(n, mean, std_dev)` via the
+/// parallel moment-merge identity (Chan et al.) — the population the
+/// statistical sync model is fitted on.
+pub fn pooled<'a, I>(summaries: I) -> (u64, f64, f64)
+where
+    I: IntoIterator<Item = &'a IntervalSummary>,
+{
+    let (mut n, mut mean, mut m2) = (0u64, 0.0f64, 0.0f64);
+    for s in summaries {
+        if s.n == 0 {
+            continue;
+        }
+        let (nb, mb) = (s.n as f64, s.mean);
+        let m2b = s.std_dev * s.std_dev * nb;
+        let na = n as f64;
+        let delta = mb - mean;
+        let nt = na + nb;
+        mean += delta * nb / nt;
+        m2 += m2b + delta * delta * na * nb / nt;
+        n += s.n;
+    }
+    if n == 0 {
+        (0, 0.0, 0.0)
+    } else {
+        (n, mean, (m2 / n as f64).max(0.0).sqrt())
+    }
+}
+
+/// Both tiers' interval streams for one rank.
+#[derive(Clone, Debug, Default)]
+pub struct TierIntervals {
+    local: IntervalRecorder,
+    global: IntervalRecorder,
+    epoch_accum: f64,
+}
+
+impl TierIntervals {
+    pub fn new() -> TierIntervals {
+        TierIntervals::default()
+    }
+
+    /// Record one cycle's compute time; at an epoch boundary the
+    /// accumulated epoch flushes into the global-tier stream.
+    #[inline]
+    pub fn record_cycle(&mut self, secs: f64, epoch_boundary: bool) {
+        self.local.push(secs);
+        self.epoch_accum += secs;
+        if epoch_boundary {
+            self.global.push(self.epoch_accum);
+            self.epoch_accum = 0.0;
+        }
+    }
+
+    pub fn summary(&self) -> TierIntervalSummary {
+        TierIntervalSummary {
+            local: self.local.summary(),
+            global: self.global.summary(),
+        }
+    }
+}
+
+/// Per-rank summary of both tiers.
+#[derive(Clone, Debug, Default)]
+pub struct TierIntervalSummary {
+    /// Per-cycle compute intervals (the local-tier rendezvous grain).
+    pub local: IntervalSummary,
+    /// Per-epoch accumulated intervals (the global-exchange grain).
+    pub global: IntervalSummary,
+}
+
+impl TierIntervalSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("local", self.local.to_json()),
+            ("global", self.global.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::util::stats;
+
+    #[test]
+    fn summary_matches_batch_statistics() {
+        let mut r = Pcg64::seed_from_u64(11);
+        let xs: Vec<f64> =
+            (0..4000).map(|_| r.normal_ms(1.6e-3, 0.09e-3).max(1e-6)).collect();
+        let mut rec = IntervalRecorder::new();
+        for &x in &xs {
+            rec.push(x);
+        }
+        let s = rec.summary();
+        assert_eq!(s.n, xs.len() as u64);
+        assert!((s.mean - stats::mean(&xs)).abs() < 1e-12);
+        assert!((s.std_dev - stats::std_dev(&xs)).abs() < 1e-9);
+        assert!((s.cv - stats::cv(&xs)).abs() < 1e-6);
+        // histogram quantiles land within a sqrt(2) bin of the truth
+        let p50 = stats::quantile(&xs, 0.5);
+        assert!(s.p50 >= p50 / 2.0_f64.sqrt() && s.p50 <= p50 * 2.0_f64.sqrt());
+        let total: u64 = s.hist.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, s.n);
+    }
+
+    #[test]
+    fn tier_split_respects_epoch_boundaries() {
+        let mut t = TierIntervals::new();
+        let d = 4usize;
+        for cycle in 0..20usize {
+            t.record_cycle(1.0, (cycle + 1) % d == 0);
+        }
+        let s = t.summary();
+        assert_eq!(s.local.n, 20);
+        assert_eq!(s.global.n, 5);
+        assert!((s.local.mean - 1.0).abs() < 1e-12);
+        assert!((s.global.mean - 4.0).abs() < 1e-12);
+        assert_eq!(s.global.std_dev, 0.0);
+    }
+
+    #[test]
+    fn partial_trailing_epoch_is_not_flushed() {
+        let mut t = TierIntervals::new();
+        t.record_cycle(1.0, false);
+        t.record_cycle(1.0, true);
+        t.record_cycle(1.0, false); // trailing partial epoch
+        let s = t.summary();
+        assert_eq!(s.local.n, 3);
+        assert_eq!(s.global.n, 1);
+    }
+
+    #[test]
+    fn pooled_equals_single_population() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let xs: Vec<f64> =
+            (0..3000).map(|_| r.normal_ms(2.0, 0.5).abs() + 1e-9).collect();
+        // split across 3 "ranks"
+        let mut recs = vec![IntervalRecorder::new(); 3];
+        for (i, &x) in xs.iter().enumerate() {
+            recs[i % 3].push(x);
+        }
+        let summaries: Vec<IntervalSummary> =
+            recs.iter().map(|r| r.summary()).collect();
+        let (n, mean, sd) = pooled(summaries.iter());
+        assert_eq!(n, xs.len() as u64);
+        assert!((mean - stats::mean(&xs)).abs() < 1e-9);
+        assert!((sd - stats::std_dev(&xs)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pooled_of_empty_is_zero() {
+        let (n, mean, sd) = pooled(std::iter::empty());
+        assert_eq!((n, mean, sd), (0, 0.0, 0.0));
+        let empty = IntervalSummary::default();
+        let (n2, ..) = pooled(std::iter::once(&empty));
+        assert_eq!(n2, 0);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut rec = IntervalRecorder::new();
+        rec.push(1e-3);
+        rec.push(2e-3);
+        let j = rec.summary().to_json();
+        assert_eq!(j.get("n").unwrap().as_u64(), Some(2));
+        assert!(j.get("mean_secs").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!j.get("hist").unwrap().as_arr().unwrap().is_empty());
+    }
+}

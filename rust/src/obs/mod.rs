@@ -1,0 +1,316 @@
+//! Observability: event tracing, interval distributions, straggler
+//! attribution and machine-readable run reports.
+//!
+//! The paper's core result was produced by *profiling*: measuring the
+//! distribution of compute times between communication calls shows that
+//! the bottleneck is the wait for the slowest rank, not the collective
+//! itself.  This module gives the functional engine the same
+//! methodology, in four layers:
+//!
+//! 1. **event tracing** — a per-rank span recorder ([`Tracer`] writing
+//!    into a shared [`TraceBuf`]) instruments the phase steps of
+//!    `engine::rank` and every communication operation of `comm`
+//!    (barrier waits, split-phase post/drain/complete/abandon,
+//!    local-tier alltoalls, checkpoint writes).  Each span carries a
+//!    [`SpanCtx`] attributing it to rank / tier / epoch / cycle /
+//!    ring-slot / peer, and [`trace`] exports the whole run as a
+//!    Chrome-trace-event JSON timeline loadable in Perfetto;
+//! 2. **interval distributions** — [`intervals`] streams per-rank
+//!    histograms, CV and quantiles of the compute intervals between
+//!    communication calls, per tier, in constant memory (replacing the
+//!    unbounded `record_cycle_times` vectors as the default);
+//! 3. **straggler attribution** — the rendezvous primitives already
+//!    know who arrived last; [`blame`] accumulates per-wait
+//!    last-arriver and lateness into a per-rank ledger;
+//! 4. **run report** — [`report`] emits the machine-readable
+//!    `--stats-json` document and closes the loop on the paper's
+//!    statistical model by fitting the measured interval mean/σ into
+//!    [`crate::theory::sync::CycleTimeModel`] and comparing predicted
+//!    against measured `T_sync` per tier.
+//!
+//! **Determinism.**  Tracing and attribution are timing-only: they
+//! read clocks and append to pre-sized buffers but never touch spike
+//! payloads, RNG state or the communication schedule, so spike trains
+//! are bit-identical with observability on or off (enforced by
+//! `tests/equivalence.rs`).  When tracing is off ([`Tracer::off`]) the
+//! record sites reduce to one branch on an `Option` — no clock reads,
+//! no locks — which is what the hot-path bench's A/B pair gates.
+
+pub mod blame;
+pub mod intervals;
+pub mod report;
+pub mod trace;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Communicator tier an event belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Not a communicator event (compute phases, checkpoint writes).
+    None,
+    /// Intra-area-group communicator (`Transport::split` child).
+    Local,
+    /// The root inter-area communicator.
+    Global,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::None => "none",
+            Tier::Local => "local",
+            Tier::Global => "global",
+        }
+    }
+
+    /// Map the comm layer's `&'static str` tier tag.
+    pub fn from_tier_str(s: &str) -> Tier {
+        match s {
+            "local" => Tier::Local,
+            "global" => Tier::Global,
+            _ => Tier::None,
+        }
+    }
+}
+
+/// Attribution attached to a span: where in the simulation schedule the
+/// event happened.  Negative values mean "not applicable" and are
+/// omitted from the exported trace.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanCtx {
+    pub tier: Tier,
+    /// Exchange epoch (the split-phase sequence number).
+    pub epoch: i64,
+    /// Simulation cycle.
+    pub cycle: i64,
+    /// Ring slot of a split-phase exchange (`epoch % 2·depth`).
+    pub slot: i32,
+    /// Peer rank the event is attributed to (last arriver of a wait,
+    /// the source a completion blocked on).
+    pub src: i32,
+}
+
+impl SpanCtx {
+    pub const NONE: SpanCtx =
+        SpanCtx { tier: Tier::None, epoch: -1, cycle: -1, slot: -1, src: -1 };
+
+    /// A span attributed only to a tier.
+    pub fn tier(tier: Tier) -> SpanCtx {
+        SpanCtx { tier, ..SpanCtx::NONE }
+    }
+
+    /// A compute-phase span attributed to a cycle.
+    pub fn cycle(cycle: u64) -> SpanCtx {
+        SpanCtx { cycle: cycle as i64, ..SpanCtx::NONE }
+    }
+}
+
+/// One completed span, in the Chrome trace-event model: a named
+/// interval `[ts_us, ts_us + dur_us)` on timeline `(pid, tid)` where
+/// `pid` is the (absolute) rank and `tid` the lane within the rank.
+/// Timestamps are µs since the run's shared origin; fractional values
+/// carry sub-µs precision.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    pub pid: u32,
+    pub tid: u32,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub ctx: SpanCtx,
+}
+
+/// The shared per-run trace buffer: one pre-allocated sink per rank,
+/// all stamped against a single [`Instant`] origin so cross-rank spans
+/// align on one timeline.  A rank only ever pushes into its own sink
+/// (every instrumented operation runs on the rank's coordinator
+/// thread), so the per-sink mutex is uncontended; it exists so
+/// [`TraceBuf::drain`] at run end is safe without `unsafe`.
+pub struct TraceBuf {
+    origin: Instant,
+    sinks: Vec<Mutex<Vec<SpanEvent>>>,
+}
+
+impl TraceBuf {
+    /// Pre-allocated spans per sink — growth beyond this doubles the
+    /// `Vec` (rare, amortized O(1); steady state allocates nothing).
+    pub const SINK_CAPACITY: usize = 1 << 14;
+
+    pub fn new(m_ranks: usize) -> Arc<TraceBuf> {
+        Arc::new(TraceBuf {
+            origin: Instant::now(),
+            sinks: (0..m_ranks)
+                .map(|_| Mutex::new(Vec::with_capacity(Self::SINK_CAPACITY)))
+                .collect(),
+        })
+    }
+
+    pub fn m_ranks(&self) -> usize {
+        self.sinks.len()
+    }
+
+    /// µs since the run origin.
+    #[inline]
+    pub fn now_us(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64() * 1e6
+    }
+
+    #[inline]
+    pub fn push(&self, sink: usize, ev: SpanEvent) {
+        self.sinks[sink].lock().unwrap().push(ev);
+    }
+
+    /// Drain every sink into one list ordered by
+    /// `(pid, tid, start, -duration)` so enclosing spans precede the
+    /// spans they contain.
+    pub fn drain(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::new();
+        for s in &self.sinks {
+            out.append(&mut s.lock().unwrap());
+        }
+        out.sort_by(|a, b| {
+            (a.pid, a.tid)
+                .cmp(&(b.pid, b.tid))
+                .then(a.ts_us.total_cmp(&b.ts_us))
+                .then(b.dur_us.total_cmp(&a.dur_us))
+        });
+        out
+    }
+}
+
+/// A rank's recording handle.  [`Tracer::off`] is the disabled state:
+/// [`Tracer::start`] skips the clock read and [`Tracer::span`] is a
+/// no-op, so an instrumented site costs one `Option` branch when
+/// tracing is not requested.
+#[derive(Clone)]
+pub struct Tracer {
+    buf: Option<Arc<TraceBuf>>,
+    pid: u32,
+    sink: usize,
+}
+
+impl Tracer {
+    pub fn off() -> Tracer {
+        Tracer { buf: None, pid: 0, sink: 0 }
+    }
+
+    /// Recording handle for (absolute) `rank`.
+    pub fn new(buf: &Arc<TraceBuf>, rank: usize) -> Tracer {
+        assert!(rank < buf.m_ranks());
+        Tracer { buf: Some(Arc::clone(buf)), pid: rank as u32, sink: rank }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    /// Start timestamp for a span-to-be; `0.0` (never observed) when
+    /// disabled.
+    #[inline]
+    pub fn start(&self) -> f64 {
+        match &self.buf {
+            Some(b) => b.now_us(),
+            None => 0.0,
+        }
+    }
+
+    /// Close a span opened at `start_us` (from [`Tracer::start`]).
+    #[inline]
+    pub fn span(&self, name: &'static str, start_us: f64, ctx: SpanCtx) {
+        if let Some(b) = &self.buf {
+            let now = b.now_us();
+            b.push(
+                self.sink,
+                SpanEvent {
+                    name,
+                    pid: self.pid,
+                    tid: 0,
+                    ts_us: start_us,
+                    dur_us: (now - start_us).max(0.0),
+                    ctx,
+                },
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        assert_eq!(t.start(), 0.0);
+        t.span("noop", 0.0, SpanCtx::NONE); // must not panic
+    }
+
+    #[test]
+    fn spans_drain_sorted_with_parents_first() {
+        let buf = TraceBuf::new(2);
+        let t0 = Tracer::new(&buf, 0);
+        let t1 = Tracer::new(&buf, 1);
+        assert!(t0.enabled());
+        // child pushed before parent, parent starts earlier & lasts
+        // longer — drain must order parent before child on rank 0
+        buf.push(
+            0,
+            SpanEvent {
+                name: "child",
+                pid: 0,
+                tid: 0,
+                ts_us: 5.0,
+                dur_us: 2.0,
+                ctx: SpanCtx::NONE,
+            },
+        );
+        buf.push(
+            0,
+            SpanEvent {
+                name: "parent",
+                pid: 0,
+                tid: 0,
+                ts_us: 5.0,
+                dur_us: 10.0,
+                ctx: SpanCtx::NONE,
+            },
+        );
+        let s1 = t1.start();
+        t1.span("real", s1, SpanCtx::tier(Tier::Global));
+        let spans = buf.drain();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].name, "parent");
+        assert_eq!(spans[1].name, "child");
+        assert_eq!(spans[2].name, "real");
+        assert_eq!(spans[2].pid, 1);
+        assert!(spans[2].dur_us >= 0.0);
+        // drained: second drain is empty
+        assert!(buf.drain().is_empty());
+    }
+
+    #[test]
+    fn tracer_span_measures_monotonic_time() {
+        let buf = TraceBuf::new(1);
+        let t = Tracer::new(&buf, 0);
+        let s = t.start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.span("sleep", s, SpanCtx::cycle(7));
+        let spans = buf.drain();
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].dur_us >= 1000.0, "dur {}", spans[0].dur_us);
+        assert_eq!(spans[0].ctx.cycle, 7);
+    }
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for t in [Tier::None, Tier::Local, Tier::Global] {
+            if t != Tier::None {
+                assert_eq!(Tier::from_tier_str(t.name()), t);
+            }
+        }
+        assert_eq!(Tier::from_tier_str("anything"), Tier::None);
+    }
+}

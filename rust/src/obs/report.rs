@@ -1,0 +1,398 @@
+//! The machine-readable run report (`--stats-json`).
+//!
+//! One JSON document per run, schema-tagged `nsim-stats-v1`, holding
+//! everything the paper's evaluation pipeline needs: the effective
+//! configuration, per-rank phase breakdowns, tiered communication
+//! statistics, per-rank interval distributions, the straggler ledger,
+//! and the **model-vs-measurement closure**: the measured interval
+//! mean/σ fitted into [`CycleTimeModel`] and the resulting predicted
+//! `T_sync` per tier next to the measured synchronization wait —
+//! the comparison that validates (or falsifies) the paper's
+//! statistical sync model on every instrumented run.  When raw
+//! per-cycle vectors were recorded (`--record-cycle-times`) the exact
+//! lumped empirical sync time ([`empirical_sync_time`]) is included
+//! too.
+//!
+//! Schema stability is tested by `tests/observability.rs`; bump the
+//! `schema` tag when making breaking changes.
+
+use super::intervals;
+use crate::comm::CommStatsSnapshot;
+use crate::config::RunConfig;
+use crate::engine::SimResult;
+use crate::theory::sync::{
+    empirical_sync_time, expected_hybrid_sync_times, expected_sync_times,
+    CycleTimeModel,
+};
+use crate::util::json::Json;
+use crate::util::timers::{Phase, PhaseTimes};
+
+/// Schema tag of the stats document.
+pub const SCHEMA: &str = "nsim-stats-v1";
+
+fn phase_times_json(t: &PhaseTimes) -> Json {
+    Json::Obj(
+        Phase::ALL
+            .iter()
+            .map(|&p| (p.name().to_string(), Json::Num(t.get(p))))
+            .collect(),
+    )
+}
+
+fn comm_snapshot_json(s: &CommStatsSnapshot) -> Json {
+    Json::obj(vec![
+        ("alltoall_calls", Json::Num(s.alltoall_calls as f64)),
+        ("local_swaps", Json::Num(s.local_swaps as f64)),
+        ("bytes_sent", Json::Num(s.bytes_sent as f64)),
+        ("resize_rounds", Json::Num(s.resize_rounds as f64)),
+        ("max_send_per_pair", Json::Num(s.max_send_per_pair as f64)),
+        (
+            "overlapped_exchanges",
+            Json::Num(s.overlapped_exchanges as f64),
+        ),
+        (
+            "early_drained_sources",
+            Json::Num(s.early_drained_sources as f64),
+        ),
+        ("timeouts", Json::Num(s.timeouts as f64)),
+        ("sync_secs", Json::Num(s.sync_secs)),
+        ("post_secs", Json::Num(s.post_secs)),
+        ("complete_wait_secs", Json::Num(s.complete_wait_secs)),
+        ("hidden_secs", Json::Num(s.hidden_secs)),
+    ])
+}
+
+/// Fit the measured per-cycle interval distribution (pooled across
+/// ranks) into the paper's cycle-time model.  Returns `None` when no
+/// intervals were recorded.
+pub fn fitted_model(res: &SimResult) -> Option<CycleTimeModel> {
+    let (n, mu, sigma) =
+        intervals::pooled(res.intervals.iter().map(|t| &t.local));
+    CycleTimeModel::from_measured(n, mu, sigma)
+}
+
+/// Predicted `(local, global)` sync time per rank over the whole run,
+/// from the fitted model and the run's schedule shape.
+pub fn predicted_sync(
+    model: CycleTimeModel,
+    cfg: &RunConfig,
+    res: &SimResult,
+) -> (f64, f64) {
+    let d = res.epoch_cycles.max(1) as u32;
+    if cfg.strategy.dual_pathways() && cfg.ranks_per_area > 1 {
+        // hybrid two-tier schedule: the local tier rendezvous every
+        // cycle (d rounds per epoch), the global tier once per epoch
+        expected_hybrid_sync_times(
+            model,
+            res.m_ranks,
+            cfg.ranks_per_area,
+            res.s_cycles,
+            d,
+            d,
+        )
+    } else {
+        let (conv, struc) =
+            expected_sync_times(model, res.m_ranks, res.s_cycles, d);
+        let global = if cfg.strategy.dual_pathways() { struc } else { conv };
+        (0.0, global)
+    }
+}
+
+/// The model-vs-measurement section: fitted cycle-time model,
+/// predicted vs measured `T_sync` per tier, and (when raw cycle
+/// vectors were recorded) the exact lumped empirical sync time.
+fn sync_model_json(cfg: &RunConfig, res: &SimResult) -> Json {
+    let d = res.epoch_cycles.max(1) as usize;
+    let m = res.m_ranks.max(1) as f64;
+    // measured per-rank average synchronization wait per tier: barrier
+    // waits plus split-phase completion blocking (the stats atomics
+    // accumulate across ranks, so divide by m)
+    let meas_global = (res.comm_tiers.global.sync_secs
+        + res.comm_tiers.global.complete_wait_secs)
+        / m;
+    let meas_local = (res.comm_tiers.local.sync_secs
+        + res.comm_tiers.local.complete_wait_secs)
+        / m;
+    let empirical = {
+        let rows = &res.cycle_times;
+        let usable = !rows.is_empty()
+            && rows.iter().all(|r| !r.is_empty())
+            && rows.iter().all(|r| r.len() == rows[0].len());
+        if usable {
+            Json::Num(empirical_sync_time(rows, d))
+        } else {
+            Json::Null
+        }
+    };
+    match fitted_model(res) {
+        None => Json::obj(vec![
+            ("fitted", Json::Null),
+            ("empirical_lumped_secs", empirical),
+        ]),
+        Some(model) => {
+            let (pred_local, pred_global) = predicted_sync(model, cfg, res);
+            Json::obj(vec![
+                (
+                    "fitted",
+                    Json::obj(vec![
+                        ("mu_secs", Json::Num(model.mu)),
+                        ("sigma_secs", Json::Num(model.sigma)),
+                        ("cv", Json::Num(model.cv())),
+                    ]),
+                ),
+                ("epoch_cycles", Json::Num(d as f64)),
+                (
+                    "tiers",
+                    Json::obj(vec![
+                        (
+                            "global",
+                            Json::obj(vec![
+                                ("predicted_secs", Json::Num(pred_global)),
+                                ("measured_secs", Json::Num(meas_global)),
+                            ]),
+                        ),
+                        (
+                            "local",
+                            Json::obj(vec![
+                                ("predicted_secs", Json::Num(pred_local)),
+                                ("measured_secs", Json::Num(meas_local)),
+                            ]),
+                        ),
+                    ]),
+                ),
+                ("empirical_lumped_secs", empirical),
+            ])
+        }
+    }
+}
+
+fn stragglers_json(res: &SimResult) -> Json {
+    let all = res.blame.merged_all();
+    let top = match all.top() {
+        Some((rank, waits, late)) => Json::obj(vec![
+            ("rank", Json::Num(rank as f64)),
+            ("waits", Json::Num(waits as f64)),
+            ("lateness_secs", Json::Num(late)),
+        ]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        (
+            "global",
+            Json::Arr(res.blame.global.iter().map(|b| b.to_json()).collect()),
+        ),
+        (
+            "local",
+            Json::Arr(res.blame.local.iter().map(|b| b.to_json()).collect()),
+        ),
+        ("top", top),
+    ])
+}
+
+/// Build the full stats document for one finished run.
+pub fn run_report(model_name: &str, cfg: &RunConfig, res: &SimResult) -> Json {
+    Json::obj(vec![
+        ("schema", SCHEMA.into()),
+        (
+            "config",
+            Json::obj(vec![
+                ("model", model_name.into()),
+                ("strategy", cfg.strategy.name().into()),
+                ("exec", cfg.exec.name().into()),
+                ("comm", cfg.comm.name().into()),
+                ("comm_depth", cfg.comm_depth.into()),
+                ("ranks_per_area", cfg.ranks_per_area.into()),
+                ("m_ranks", cfg.m_ranks.into()),
+                ("threads_per_rank", cfg.threads_per_rank.into()),
+                ("t_model_ms", Json::Num(cfg.t_model_ms)),
+                ("seed", Json::Num(cfg.seed as f64)),
+                ("trace", cfg.trace.into()),
+                ("record_cycle_times", cfg.record_cycle_times.into()),
+            ]),
+        ),
+        (
+            "result",
+            Json::obj(vec![
+                ("s_cycles", Json::Num(res.s_cycles as f64)),
+                ("epoch_cycles", Json::Num(res.epoch_cycles as f64)),
+                ("rtf", Json::Num(res.rtf())),
+                ("n_spikes", res.n_spikes().into()),
+                (
+                    "effective_comm_depth",
+                    Json::Num(res.effective_comm_depth as f64),
+                ),
+            ]),
+        ),
+        (
+            "phase_times",
+            Json::obj(vec![
+                (
+                    "per_rank",
+                    Json::Arr(
+                        res.rank_times.iter().map(phase_times_json).collect(),
+                    ),
+                ),
+                ("mean", phase_times_json(&res.mean_times)),
+                ("max", phase_times_json(&res.max_times)),
+            ]),
+        ),
+        (
+            "comm",
+            Json::obj(vec![
+                ("global", comm_snapshot_json(&res.comm_tiers.global)),
+                ("local", comm_snapshot_json(&res.comm_tiers.local)),
+            ]),
+        ),
+        (
+            "intervals",
+            Json::Arr(res.intervals.iter().map(|t| t.to_json()).collect()),
+        ),
+        ("stragglers", stragglers_json(res)),
+        ("sync_model", sync_model_json(cfg, res)),
+    ])
+}
+
+/// Write the report to `path` (pretty-printed — reports are small and
+/// meant to be read).
+pub fn write_report(
+    path: &std::path::Path,
+    model_name: &str,
+    cfg: &RunConfig,
+    res: &SimResult,
+) -> std::io::Result<()> {
+    use std::io::Write;
+    let doc = run_report(model_name, cfg, res);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(crate::util::json::to_string_pretty(&doc).as_bytes())?;
+    f.write_all(b"\n")?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::blame::TieredBlame;
+    use crate::obs::intervals::TierIntervals;
+
+    fn tiny_result(m: usize) -> SimResult {
+        let mut intervals = Vec::new();
+        for _ in 0..m {
+            let mut t = TierIntervals::new();
+            for c in 0..8u64 {
+                t.record_cycle(1.0e-3 + c as f64 * 1e-5, (c + 1) % 2 == 0);
+            }
+            intervals.push(t.summary());
+        }
+        let mut blame = TieredBlame::sized(m);
+        blame.global[0].record(1, 0.5);
+        SimResult {
+            strategy: crate::config::Strategy::Conventional,
+            m_ranks: m,
+            rank_times: vec![PhaseTimes::new(); m],
+            mean_times: PhaseTimes::new(),
+            max_times: PhaseTimes::new(),
+            spikes: Vec::new(),
+            cycle_times: vec![Vec::new(); m],
+            s_cycles: 8,
+            t_model_ms: 1.0,
+            rank_neurons: vec![1; m],
+            rank_conns: vec![(0, 0); m],
+            comm_stats: CommStatsSnapshot::default(),
+            comm_tiers: Default::default(),
+            effective_comm_depth: 1,
+            ring_pending: vec![Vec::new(); m],
+            epoch_cycles: 2,
+            intervals,
+            blame,
+            spans: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn report_has_all_sections_and_roundtrips() {
+        let cfg = RunConfig { m_ranks: 2, ..Default::default() };
+        let res = tiny_result(2);
+        let doc = run_report("sanity", &cfg, &res);
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(SCHEMA));
+        for key in [
+            "config",
+            "result",
+            "phase_times",
+            "comm",
+            "intervals",
+            "stragglers",
+            "sync_model",
+        ] {
+            assert!(doc.get(key).is_some(), "missing section {key}");
+        }
+        let text = crate::util::json::to_string_pretty(&doc);
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn sync_model_fits_measured_intervals() {
+        let cfg = RunConfig { m_ranks: 2, ..Default::default() };
+        let res = tiny_result(2);
+        let model = fitted_model(&res).unwrap();
+        assert!(model.mu > 1.0e-3 && model.mu < 1.2e-3);
+        let doc = run_report("sanity", &cfg, &res);
+        let fitted = doc.get("sync_model").unwrap().get("fitted").unwrap();
+        assert!(fitted.get("mu_secs").unwrap().as_f64().unwrap() > 0.0);
+        let tiers = doc.get("sync_model").unwrap().get("tiers").unwrap();
+        for tier in ["global", "local"] {
+            let t = tiers.get(tier).unwrap();
+            assert!(t.get("predicted_secs").unwrap().as_f64().is_some());
+            assert!(t.get("measured_secs").unwrap().as_f64().is_some());
+        }
+        // no raw cycle vectors recorded -> exact empirical is null
+        assert_eq!(
+            doc.get("sync_model").unwrap().get("empirical_lumped_secs"),
+            Some(&Json::Null)
+        );
+    }
+
+    #[test]
+    fn empirical_section_present_with_recorded_cycles() {
+        let cfg = RunConfig { m_ranks: 2, ..Default::default() };
+        let mut res = tiny_result(2);
+        res.cycle_times =
+            vec![vec![1.0e-3; 8], vec![1.1e-3; 8]];
+        let doc = run_report("sanity", &cfg, &res);
+        let emp = doc
+            .get("sync_model")
+            .unwrap()
+            .get("empirical_lumped_secs")
+            .unwrap();
+        assert!(emp.as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn straggler_top_names_blamed_rank() {
+        let cfg = RunConfig { m_ranks: 2, ..Default::default() };
+        let res = tiny_result(2);
+        let doc = run_report("sanity", &cfg, &res);
+        let top = doc.get("stragglers").unwrap().get("top").unwrap();
+        assert_eq!(top.get("rank").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn predicted_sync_hybrid_vs_flat() {
+        let model = CycleTimeModel::paper_default();
+        let mut cfg = RunConfig {
+            m_ranks: 4,
+            strategy: crate::config::Strategy::StructureAware,
+            ranks_per_area: 2,
+            ..Default::default()
+        };
+        let mut res = tiny_result(4);
+        res.m_ranks = 4;
+        res.epoch_cycles = 2;
+        let (local, global) = predicted_sync(model, &cfg, &res);
+        assert!(local > 0.0 && global > 0.0);
+        cfg.ranks_per_area = 1;
+        let (l2, g2) = predicted_sync(model, &cfg, &res);
+        assert_eq!(l2, 0.0);
+        assert!(g2 > 0.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Chrome-trace-event export.
+//!
+//! Spans are emitted as complete events (`"ph": "X"`) in the [Trace
+//! Event Format] consumed by Perfetto (`ui.perfetto.dev`) and
+//! `chrome://tracing`: `pid` is the rank, `tid` the lane within the
+//! rank (the instrumented operations all run on the rank coordinator,
+//! lane 0), `ts`/`dur` are µs since the run origin (fractional values
+//! carry sub-µs precision), `cat` is the communicator tier, and the
+//! schedule attribution (epoch / cycle / ring slot / blamed peer)
+//! rides in `args`.  Metadata events name each rank's process row so
+//! the timeline reads "rank 0, rank 1, …" instead of bare pids.
+//!
+//! [Trace Event Format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use super::SpanEvent;
+use crate::util::json::{self, Json};
+use std::io::Write;
+use std::path::Path;
+
+/// Build the trace document: `{"traceEvents": [...], ...}`.
+pub fn trace_json(spans: &[SpanEvent], m_ranks: usize) -> Json {
+    let mut events = Vec::with_capacity(spans.len() + m_ranks);
+    for pid in 0..m_ranks {
+        events.push(Json::obj(vec![
+            ("ph", "M".into()),
+            ("name", "process_name".into()),
+            ("pid", pid.into()),
+            ("tid", 0usize.into()),
+            (
+                "args",
+                Json::obj(vec![("name", Json::Str(format!("rank {pid}")))]),
+            ),
+        ]));
+    }
+    for s in spans {
+        let mut args = Vec::new();
+        if s.ctx.epoch >= 0 {
+            args.push(("epoch", Json::Num(s.ctx.epoch as f64)));
+        }
+        if s.ctx.cycle >= 0 {
+            args.push(("cycle", Json::Num(s.ctx.cycle as f64)));
+        }
+        if s.ctx.slot >= 0 {
+            args.push(("ring_slot", Json::Num(s.ctx.slot as f64)));
+        }
+        if s.ctx.src >= 0 {
+            args.push(("src", Json::Num(s.ctx.src as f64)));
+        }
+        let mut ev = vec![
+            ("ph", "X".into()),
+            ("name", s.name.into()),
+            ("cat", s.ctx.tier.name().into()),
+            ("pid", Json::Num(s.pid as f64)),
+            ("tid", Json::Num(s.tid as f64)),
+            ("ts", Json::Num(s.ts_us)),
+            ("dur", Json::Num(s.dur_us)),
+        ];
+        if !args.is_empty() {
+            ev.push(("args", Json::obj(args)));
+        }
+        events.push(Json::obj(ev));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", "ms".into()),
+    ])
+}
+
+/// Write the trace document to `path` (compact JSON — traces are big).
+pub fn write_chrome_trace(
+    path: &Path,
+    spans: &[SpanEvent],
+    m_ranks: usize,
+) -> std::io::Result<()> {
+    let doc = trace_json(spans, m_ranks);
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(json::to_string(&doc).as_bytes())?;
+    f.write_all(b"\n")?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{SpanCtx, Tier};
+
+    fn span(
+        name: &'static str,
+        pid: u32,
+        ts: f64,
+        dur: f64,
+        ctx: SpanCtx,
+    ) -> SpanEvent {
+        SpanEvent { name, pid, tid: 0, ts_us: ts, dur_us: dur, ctx }
+    }
+
+    #[test]
+    fn document_shape_and_metadata() {
+        let spans = vec![
+            span("update", 0, 10.0, 5.0, SpanCtx::cycle(3)),
+            span(
+                "post",
+                1,
+                12.5,
+                0.25,
+                SpanCtx {
+                    tier: Tier::Global,
+                    epoch: 2,
+                    slot: 1,
+                    ..SpanCtx::NONE
+                },
+            ),
+        ];
+        let doc = trace_json(&spans, 2);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata + 2 spans
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("M"));
+        assert_eq!(
+            evs[0].get("args").unwrap().get("name").unwrap().as_str(),
+            Some("rank 0")
+        );
+        let upd = &evs[2];
+        assert_eq!(upd.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(upd.get("name").unwrap().as_str(), Some("update"));
+        assert_eq!(
+            upd.get("args").unwrap().get("cycle").unwrap().as_u64(),
+            Some(3)
+        );
+        assert!(upd.get("args").unwrap().get("epoch").is_none());
+        let post = &evs[3];
+        assert_eq!(post.get("cat").unwrap().as_str(), Some("global"));
+        assert_eq!(
+            post.get("args").unwrap().get("ring_slot").unwrap().as_u64(),
+            Some(1)
+        );
+        assert_eq!(post.get("ts").unwrap().as_f64(), Some(12.5));
+    }
+
+    #[test]
+    fn roundtrips_through_parser() {
+        let spans =
+            vec![span("barrier", 3, 0.125, 1.5, SpanCtx::tier(Tier::Local))];
+        let doc = trace_json(&spans, 4);
+        let text = json::to_string(&doc);
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn write_and_reload_file() {
+        let dir = std::env::temp_dir().join("nsim_obs_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        let spans = vec![span("deliver", 0, 1.0, 2.0, SpanCtx::cycle(0))];
+        write_chrome_trace(&path, &spans, 1).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = json::parse(text.trim()).unwrap();
+        assert_eq!(
+            doc.get("traceEvents").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -23,6 +23,19 @@ impl CycleTimeModel {
         CycleTimeModel { mu: 1.6e-3, sigma: 0.09e-3 }
     }
 
+    /// Fit the model from measured interval moments (e.g. the pooled
+    /// per-rank compute-interval statistics collected by `obs`).
+    /// Returns `None` when there is nothing to fit (`n == 0` or a
+    /// non-positive mean, which the normal model cannot represent).
+    pub fn from_measured(
+        n: u64,
+        mean: f64,
+        std_dev: f64,
+    ) -> Option<CycleTimeModel> {
+        (n > 0 && mean > 0.0 && std_dev >= 0.0)
+            .then_some(CycleTimeModel { mu: mean, sigma: std_dev })
+    }
+
     /// Lumped model over D cycles (eq 6): `N(D mu, D sigma²)`.
     pub fn lumped(&self, d: u32) -> CycleTimeModel {
         CycleTimeModel {
@@ -262,6 +275,16 @@ mod tests {
     use crate::util::stats;
 
     const MODEL: CycleTimeModel = CycleTimeModel::paper_default();
+
+    #[test]
+    fn from_measured_fits_positive_moments_only() {
+        let m = CycleTimeModel::from_measured(100, 1.6e-3, 0.09e-3).unwrap();
+        assert_eq!(m.mu, 1.6e-3);
+        assert_eq!(m.sigma, 0.09e-3);
+        assert!(CycleTimeModel::from_measured(0, 1.6e-3, 0.09e-3).is_none());
+        assert!(CycleTimeModel::from_measured(10, 0.0, 0.09e-3).is_none());
+        assert!(CycleTimeModel::from_measured(10, 1.0e-3, -1.0).is_none());
+    }
 
     #[test]
     fn lumping_scales_mean_by_d_and_sigma_by_sqrt_d() {

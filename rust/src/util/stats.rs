@@ -225,6 +225,176 @@ pub fn lump_sums(xs: &[f64], chunk: usize) -> Vec<f64> {
     xs.chunks_exact(chunk).map(|c| c.iter().sum()).collect()
 }
 
+/// Streaming (Welford) accumulator of count / mean / variance / extrema —
+/// the bounded-memory form of [`mean`] / [`variance`] for sample streams
+/// too long to store (the observability layer's per-cycle compute
+/// intervals, which previously accumulated as unbounded `Vec<f64>`s).
+///
+/// Merging two accumulators (Chan et al.'s parallel update) gives the
+/// same moments as one pass over the concatenated stream, so per-rank
+/// recorders can be pooled into a run-wide fit.
+#[derive(Clone, Copy, Debug)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Moments {
+    fn default() -> Moments {
+        Moments {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Moments {
+    pub fn new() -> Moments {
+        Moments::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Combine with another accumulator; equivalent to having pushed
+    /// both streams into one.
+    pub fn merge(&mut self, other: &Moments) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2
+            + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Arithmetic mean; 0 before the first sample (like [`mean`]).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance; 0 for fewer than two samples (like
+    /// [`variance`]).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation `sigma / mu` (0 if the mean is 0, like
+    /// [`cv`]).
+    pub fn cv(&self) -> f64 {
+        if self.mean() == 0.0 {
+            0.0
+        } else {
+            self.std_dev() / self.mean()
+        }
+    }
+
+    /// Smallest sample; 0 before the first sample.
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample; 0 before the first sample.
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Number of bins of the fixed log₂ histogram used for streaming
+/// duration distributions.
+pub const LOG2_HIST_BINS: usize = 64;
+
+/// Lower edge of the first log₂ histogram bin, in the sample's own unit
+/// (seconds throughout this repo): bin `i` covers
+/// `[LOG2_HIST_LO·2^i, LOG2_HIST_LO·2^(i+1))`, so 64 bins span 1 ns to
+/// ~18 × 10⁹ s — every duration a run can produce, in constant memory.
+pub const LOG2_HIST_LO: f64 = 1e-9;
+
+/// Bin index of `x` in the fixed log₂ histogram; values at or below the
+/// first edge land in bin 0, values beyond the last edge in the last bin.
+#[inline]
+pub fn log2_bin(x: f64) -> usize {
+    if !(x > LOG2_HIST_LO) {
+        return 0;
+    }
+    let i = (x / LOG2_HIST_LO).log2().floor() as usize;
+    i.min(LOG2_HIST_BINS - 1)
+}
+
+/// Lower edge of log₂ histogram bin `i`, in the sample unit.
+#[inline]
+pub fn log2_bin_lo(i: usize) -> f64 {
+    LOG2_HIST_LO * (i as f64).exp2()
+}
+
+/// Quantile estimate from log₂ histogram `counts`, `q` in `[0, 1]`:
+/// the geometric midpoint of the bin holding the q-th sample.  0 for an
+/// empty histogram.  Resolution is one octave — adequate for the "is
+/// the tail two bins or ten bins out" questions the interval
+/// distributions answer; exact quantiles need the raw samples
+/// (`--record-cycle-times`).
+pub fn log2_hist_quantile(counts: &[u64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "q={q} out of range");
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= rank {
+            return log2_bin_lo(i) * std::f64::consts::SQRT_2;
+        }
+    }
+    log2_bin_lo(counts.len() - 1) * std::f64::consts::SQRT_2
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,5 +522,97 @@ mod tests {
     #[test]
     fn lump_sums_drops_partial_chunk() {
         assert_eq!(lump_sums(&[1.0, 2.0, 3.0, 4.0, 5.0], 2), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn moments_match_batch_statistics() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let xs: Vec<f64> = (0..5000).map(|_| r.normal_ms(3.0, 0.5)).collect();
+        let mut m = Moments::new();
+        for &x in &xs {
+            m.push(x);
+        }
+        assert_eq!(m.n(), xs.len() as u64);
+        assert!((m.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((m.variance() - variance(&xs)).abs() < 1e-9);
+        assert!((m.cv() - cv(&xs)).abs() < 1e-9);
+        assert_eq!(m.min(), min(&xs));
+        assert_eq!(m.max(), max(&xs));
+    }
+
+    #[test]
+    fn moments_merge_equals_single_pass() {
+        let mut r = Pcg64::seed_from_u64(6);
+        let xs: Vec<f64> = (0..999).map(|_| r.normal_ms(1.0, 2.0)).collect();
+        let mut whole = Moments::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let (a, b) = xs.split_at(137);
+        let mut left = Moments::new();
+        let mut right = Moments::new();
+        a.iter().for_each(|&x| left.push(x));
+        b.iter().for_each(|&x| right.push(x));
+        left.merge(&right);
+        assert_eq!(left.n(), whole.n());
+        assert!((left.mean() - whole.mean()).abs() < 1e-9);
+        assert!((left.variance() - whole.variance()).abs() < 1e-9);
+        // merging an empty accumulator is the identity, both ways
+        let mut empty = Moments::new();
+        empty.merge(&whole);
+        assert!((empty.mean() - whole.mean()).abs() < 1e-12);
+        whole.merge(&Moments::new());
+        assert!((left.mean() - whole.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moments_empty_defaults_are_finite() {
+        let m = Moments::new();
+        assert_eq!(m.n(), 0);
+        assert_eq!(m.mean(), 0.0);
+        assert_eq!(m.variance(), 0.0);
+        assert_eq!(m.cv(), 0.0);
+        assert_eq!(m.min(), 0.0);
+        assert_eq!(m.max(), 0.0);
+    }
+
+    #[test]
+    fn log2_bins_cover_and_order() {
+        // edges are octaves from 1 ns; indices are monotone in x and
+        // saturate at the ends instead of panicking
+        assert_eq!(log2_bin(0.0), 0);
+        assert_eq!(log2_bin(-1.0), 0);
+        assert_eq!(log2_bin(1e-9), 0);
+        assert_eq!(log2_bin(3e-9), 1);
+        assert_eq!(log2_bin(f64::MAX), LOG2_HIST_BINS - 1);
+        let samples = [1e-8, 1e-6, 1e-4, 1e-2, 1.0, 100.0];
+        let bins: Vec<usize> = samples.iter().map(|&x| log2_bin(x)).collect();
+        assert!(bins.windows(2).all(|w| w[0] < w[1]), "{bins:?}");
+        for &x in &samples {
+            let b = log2_bin(x);
+            assert!(log2_bin_lo(b) <= x && x < log2_bin_lo(b + 1));
+        }
+    }
+
+    #[test]
+    fn log2_hist_quantile_brackets_true_quantile() {
+        // the estimate is the geometric midpoint of the right bin, so it
+        // is within one octave of the exact sample quantile
+        let mut r = Pcg64::seed_from_u64(7);
+        let xs: Vec<f64> =
+            (0..4000).map(|_| 1.6e-3 * (1.0 + 0.06 * r.normal())).collect();
+        let mut counts = vec![0u64; LOG2_HIST_BINS];
+        for &x in &xs {
+            counts[log2_bin(x)] += 1;
+        }
+        for &q in &[0.5, 0.9, 0.99] {
+            let est = log2_hist_quantile(&counts, q);
+            let exact = quantile(&xs, q);
+            assert!(
+                est > exact / 2.0 && est < exact * 2.0,
+                "q={q} est={est} exact={exact}"
+            );
+        }
+        assert_eq!(log2_hist_quantile(&vec![0u64; LOG2_HIST_BINS], 0.5), 0.0);
     }
 }

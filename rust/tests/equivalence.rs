@@ -809,6 +809,69 @@ fn randomized_configurations_property() {
 }
 
 #[test]
+fn observability_does_not_perturb_dynamics() {
+    // span tracing, interval histograms and straggler blame are
+    // timing-only observers: turning all of them on (plus the raw
+    // per-cycle vectors) must not move a single spike — across
+    // exec x comm x depth x hierarchy
+    let spec = models::deep_pipeline_net(240, 4).unwrap();
+    let run_obs = |m: usize,
+                   rpa: usize,
+                   t: usize,
+                   exec: ExecMode,
+                   comm: CommMode,
+                   depth: usize,
+                   obs: bool| {
+        let cfg = RunConfig {
+            strategy: Strategy::StructureAware,
+            m_ranks: m,
+            threads_per_rank: t,
+            t_model_ms: 100.0,
+            seed: 12,
+            exec,
+            comm,
+            comm_depth: depth,
+            ranks_per_area: rpa,
+            record_spikes: true,
+            trace: obs,
+            record_cycle_times: obs,
+            ..RunConfig::default()
+        };
+        simulate(&spec, &cfg).expect("simulation failed")
+    };
+    for (m, rpa, exec, comm, depth, t) in [
+        (4usize, 1usize, ExecMode::Sequential, CommMode::Blocking, 1usize, 1usize),
+        (4, 1, ExecMode::Pooled, CommMode::Overlap, 2, 3),
+        (4, 1, ExecMode::PooledChannels, CommMode::Blocking, 1, 2),
+        (8, 2, ExecMode::Pooled, CommMode::Overlap, 2, 2),
+        (8, 2, ExecMode::Sequential, CommMode::Blocking, 1, 1),
+    ] {
+        let off = run_obs(m, rpa, t, exec, comm, depth, false);
+        let on = run_obs(m, rpa, t, exec, comm, depth, true);
+        assert!(
+            off.spikes.len() > 100,
+            "too quiet for a meaningful test ({} spikes)",
+            off.spikes.len()
+        );
+        assert_eq!(
+            off.spikes,
+            on.spikes,
+            "observability changed dynamics: m={m} rpa={rpa} exec={} \
+             comm={} depth={depth} T={t}",
+            exec.name(),
+            comm.name()
+        );
+        // the traced run actually observed something; the untraced run
+        // recorded no spans at all
+        assert!(off.spans.is_empty());
+        assert!(!on.spans.is_empty());
+        // the streaming interval stats are always on and span the run
+        assert_eq!(off.intervals.len(), m);
+        assert_eq!(off.intervals[0].local.n, off.s_cycles);
+    }
+}
+
+#[test]
 fn ianf_rate_matches_target() {
     let spec = models::mam_benchmark(2, 0.01, 1.0).unwrap();
     let spikes = run(&spec, Strategy::Conventional, 2, 2, 1000.0);

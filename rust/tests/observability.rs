@@ -1,0 +1,311 @@
+//! The observability subsystem end to end: trace well-formedness
+//! (spans nest, attribution is coherent, the exported document is valid
+//! Chrome trace-event JSON), straggler attribution under injected
+//! faults (the blamed rank is the inflated one), and the stability of
+//! the `--stats-json` schema.
+//!
+//! The *non-perturbation* invariant — spike trains bit-identical with
+//! observability on vs off — lives in `tests/equivalence.rs` next to
+//! the other equivalence properties.
+
+use nsim::config::{
+    CommMode, ExecMode, RunConfig, StragglerFault, Strategy,
+};
+use nsim::engine::{simulate, SimResult};
+use nsim::models;
+use nsim::obs::{SpanEvent, Tier};
+use nsim::util::json::{self, Json};
+
+fn traced_run(
+    strategy: Strategy,
+    m: usize,
+    rpa: usize,
+    t: usize,
+    comm: CommMode,
+) -> SimResult {
+    let spec = models::sanity_net(240, 4).unwrap();
+    let cfg = RunConfig {
+        strategy,
+        m_ranks: m,
+        threads_per_rank: t,
+        t_model_ms: 50.0,
+        seed: 12,
+        comm,
+        ranks_per_area: rpa,
+        record_spikes: true,
+        trace: true,
+        ..RunConfig::default()
+    };
+    simulate(&spec, &cfg).expect("simulation failed")
+}
+
+/// Every span name the engine and comm layers may emit.
+const KNOWN_SPANS: &[&str] = &[
+    "deliver",
+    "update",
+    "collocate",
+    "straggle",
+    "checkpoint",
+    "split",
+    "alltoall",
+    "alltoall (sync barrier)",
+    "alltoall (overflow vote)",
+    "alltoall (resize round)",
+    "alltoall (deposit)",
+    "alltoall (drain)",
+    "allreduce_min",
+    "post",
+    "drain",
+    "complete",
+    "abandon",
+];
+
+/// Stack-nesting check for one rank's timeline: spans (already in
+/// drain order — by start, longest first) must be properly nested or
+/// disjoint, never partially overlapping.
+fn assert_nested(rank: &[&SpanEvent]) {
+    let mut stack: Vec<(f64, &str)> = Vec::new();
+    for s in rank {
+        let end = s.ts_us + s.dur_us;
+        while let Some(&(top_end, _)) = stack.last() {
+            if top_end <= s.ts_us {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(&(top_end, top_name)) = stack.last() {
+            assert!(
+                end <= top_end,
+                "span {:?} [{}, {end}] partially overlaps enclosing \
+                 {top_name:?} ending at {top_end}",
+                s.name,
+                s.ts_us
+            );
+        }
+        stack.push((end, s.name));
+    }
+}
+
+#[test]
+fn trace_spans_are_well_formed() {
+    for (strategy, m, rpa, comm) in [
+        (Strategy::Conventional, 4, 1, CommMode::Blocking),
+        (Strategy::StructureAware, 4, 1, CommMode::Overlap),
+        (Strategy::StructureAware, 8, 2, CommMode::Blocking),
+    ] {
+        let res = traced_run(strategy, m, rpa, 2, comm);
+        assert!(!res.spans.is_empty(), "trace recorded nothing");
+        for s in &res.spans {
+            assert!((s.pid as usize) < m, "pid {} out of range", s.pid);
+            assert_eq!(s.tid, 0);
+            assert!(s.ts_us >= 0.0 && s.dur_us >= 0.0, "{s:?}");
+            assert!(
+                KNOWN_SPANS.contains(&s.name),
+                "unknown span name {:?}",
+                s.name
+            );
+            if s.ctx.src >= 0 {
+                assert!((s.ctx.src as usize) < m, "{s:?}");
+                assert_ne!(s.ctx.src as u32, s.pid, "self-blame: {s:?}");
+            }
+        }
+        // drain order: grouped by rank, sorted by start (ties: longest
+        // first, so parents precede children)
+        for w in res.spans.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            assert!(
+                a.pid < b.pid
+                    || (a.pid == b.pid
+                        && (a.ts_us < b.ts_us
+                            || (a.ts_us == b.ts_us
+                                && a.dur_us >= b.dur_us))),
+                "drain order violated: {a:?} then {b:?}"
+            );
+        }
+        for r in 0..m {
+            let rank: Vec<&SpanEvent> = res
+                .spans
+                .iter()
+                .filter(|s| s.pid as usize == r)
+                .collect();
+            assert_nested(&rank);
+            // the engine phases are all there, attributed to cycles
+            for phase in ["deliver", "update", "collocate"] {
+                let n = rank.iter().filter(|s| s.name == phase).count();
+                assert_eq!(
+                    n as u64, res.s_cycles,
+                    "rank {r}: {phase} spans != cycles"
+                );
+            }
+            assert!(
+                rank.iter()
+                    .filter(|s| s.name == phase_of(comm))
+                    .all(|s| s.ctx.tier != Tier::None),
+                "rank {r}: comm span missing tier attribution"
+            );
+        }
+        // hierarchical runs exercise the local tier every cycle
+        if rpa > 1 {
+            assert!(
+                res.spans.iter().any(|s| s.name == "alltoall"
+                    && s.ctx.tier == Tier::Local),
+                "no local-tier alltoall spans in hierarchical run"
+            );
+        }
+    }
+}
+
+/// The comm span characteristic of the mode: the framed collective
+/// under blocking, the split-phase completion under overlap.
+fn phase_of(comm: CommMode) -> &'static str {
+    match comm {
+        CommMode::Blocking => "alltoall",
+        CommMode::Overlap => "complete",
+    }
+}
+
+#[test]
+fn exported_trace_is_valid_chrome_json() {
+    let res = traced_run(Strategy::StructureAware, 4, 1, 2, CommMode::Blocking);
+    let path = std::env::temp_dir().join(format!(
+        "nsim-obs-{}-trace.json",
+        std::process::id()
+    ));
+    nsim::obs::trace::write_chrome_trace(&path, &res.spans, res.m_ranks)
+        .expect("trace write failed");
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let doc = json::parse(&text).expect("trace is not valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("no traceEvents array");
+    // metadata names every rank's process, then one X event per span
+    let meta = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+        .count();
+    assert_eq!(meta, res.m_ranks);
+    let xs: Vec<_> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .collect();
+    assert_eq!(xs.len(), res.spans.len());
+    for e in &xs {
+        assert!(e.get("name").and_then(|v| v.as_str()).is_some());
+        assert!(e.get("ts").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert!(e.get("dur").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert!(e.get("pid").and_then(Json::as_usize).unwrap() < 4);
+    }
+}
+
+#[test]
+fn straggler_attribution_blames_the_injected_rank() {
+    // inflate rank 2's update phase hard; every other rank's blame
+    // ledger must name rank 2 as its dominant last arriver, and the
+    // inflation must show in rank 2's interval distribution
+    let spec = models::sanity_net(240, 4).unwrap();
+    let mut cfg = RunConfig {
+        strategy: Strategy::Conventional,
+        m_ranks: 4,
+        threads_per_rank: 1,
+        t_model_ms: 50.0,
+        seed: 12,
+        exec: ExecMode::Sequential,
+        record_spikes: true,
+        ..RunConfig::default()
+    };
+    cfg.faults.stragglers.push(StragglerFault {
+        rank: 2,
+        factor: 50.0,
+        from_epoch: 0,
+        to_epoch: u64::MAX,
+    });
+    let res = simulate(&spec, &cfg).expect("simulation failed");
+
+    let all = res.blame.merged_all();
+    let (top_rank, waits, late) =
+        all.top().expect("no blame recorded at all");
+    assert_eq!(top_rank, 2, "blamed {top_rank}, injected 2");
+    assert!(waits > 0 && late > 0.0, "empty top entry: {waits} {late}");
+    // per-rank ledgers: every other rank's own top culprit is rank 2,
+    // and nobody ever blames themselves
+    for r in 0..4usize {
+        let b = &res.blame.global[r];
+        assert_eq!(b.waits.get(r).copied().unwrap_or(0), 0, "self-blame");
+        if r != 2 {
+            let (culprit, w, _) =
+                b.top().unwrap_or_else(|| panic!("rank {r}: empty ledger"));
+            assert_eq!(culprit, 2, "rank {r} blames {culprit}");
+            assert!(w > 0);
+        }
+    }
+    // the straggler's compute intervals are visibly inflated
+    let mean = |r: usize| res.intervals[r].local.mean;
+    assert!(
+        mean(2) > 2.0 * mean(0),
+        "straggler interval mean {} not inflated vs peer {}",
+        mean(2),
+        mean(0)
+    );
+}
+
+#[test]
+fn stats_json_schema_is_stable() {
+    // the machine-readable contract of --stats-json: schema tag and the
+    // section layout downstream tooling (tools/trace_summary.py) keys on
+    let res = traced_run(Strategy::StructureAware, 4, 1, 2, CommMode::Blocking);
+    let cfg = RunConfig {
+        strategy: Strategy::StructureAware,
+        m_ranks: 4,
+        trace: true,
+        ..RunConfig::default()
+    };
+    let doc = nsim::obs::report::run_report("sanity-240", &cfg, &res);
+    assert_eq!(
+        doc.get("schema").and_then(|v| v.as_str()),
+        Some("nsim-stats-v1")
+    );
+    for section in [
+        "config",
+        "result",
+        "phase_times",
+        "comm",
+        "intervals",
+        "stragglers",
+        "sync_model",
+    ] {
+        assert!(doc.get(section).is_some(), "missing section {section}");
+    }
+    let config = doc.get("config").unwrap();
+    assert_eq!(
+        config.get("model").and_then(|v| v.as_str()),
+        Some("sanity-240")
+    );
+    assert_eq!(config.get("m_ranks").and_then(|v| v.as_usize()), Some(4));
+    // one interval summary per rank, each with the histogram keys
+    let ints = doc.get("intervals").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(ints.len(), 4);
+    for t in ints {
+        let local = t.get("local").expect("no local tier");
+        for key in
+            ["n", "mean_secs", "std_dev_secs", "cv", "p50_secs", "p99_secs"]
+        {
+            assert!(local.get(key).is_some(), "missing interval key {key}");
+        }
+        assert!(local.get("n").and_then(|v| v.as_u64()).unwrap() > 0);
+    }
+    // the sync model fitted from the measured intervals, with predicted
+    // and measured T_sync for both tiers
+    let sm = doc.get("sync_model").unwrap();
+    assert!(sm.get("fitted").unwrap().get("mu_secs").is_some());
+    for tier in ["global", "local"] {
+        let t = sm.get("tiers").unwrap().get(tier).unwrap();
+        assert!(t.get("predicted_secs").is_some());
+        assert!(t.get("measured_secs").is_some());
+    }
+    // straggler section mirrors the in-memory ledgers
+    let st = doc.get("stragglers").unwrap();
+    assert_eq!(st.get("global").and_then(|v| v.as_arr()).unwrap().len(), 4);
+}

@@ -1,0 +1,228 @@
+#!/usr/bin/env python3
+"""Validate and summarize an nsim ``--trace`` / ``--stats-json`` pair.
+
+Used by the CI ``observability-smoke`` job and by hand after a profiled
+run::
+
+    nsim simulate --model sanity --ranks 4 --trace trace.json \
+        --stats-json stats.json
+    python3 tools/trace_summary.py trace.json --stats stats.json
+
+The trace is the Chrome-trace-event document ``obs::trace`` exports
+(one ``X`` complete event per span, ``pid`` = rank).  The tool checks
+the structural invariants the recorder promises, then prints a compact
+per-phase/per-rank summary:
+
+* every event has a name, non-negative ``ts``/``dur`` and a known
+  ``pid``;
+* per rank, span timestamps are monotonic in the file order the
+  exporter wrote (sorted by start, longest-first on ties);
+* per rank, spans are properly nested or disjoint — a span never
+  partially overlaps an enclosing one;
+* every split-phase ``post`` is closed by exactly one ``complete`` or
+  ``abandon`` with the same exchange epoch on the same rank;
+* with ``--stats``, the report parses, carries the expected schema tag,
+  and its straggler ledger is consistent (the printed top straggler is
+  the argmax of the per-rank ledgers).
+
+Exit status: 0 = valid (summary printed), 1 = validation failure,
+2 = usage/IO error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+SCHEMA = "nsim-stats-v1"
+
+
+def load_json(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def span_events(doc):
+    """The complete ('X') events of a Chrome trace document."""
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return None
+    return [e for e in events if e.get("ph") == "X"]
+
+
+def validate_events(events):
+    """Return a list of violated invariants (empty = well formed)."""
+    problems = []
+    if not events:
+        problems.append("trace contains no complete ('X') span events")
+        return problems
+    for i, e in enumerate(events):
+        if not e.get("name"):
+            problems.append(f"event {i} has no name")
+        if not isinstance(e.get("pid"), int) or e["pid"] < 0:
+            problems.append(f"event {i} ({e.get('name')!r}) has bad pid")
+        ts, dur = e.get("ts"), e.get("dur")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"event {i} ({e.get('name')!r}) has bad ts")
+        if not isinstance(dur, (int, float)) or dur < 0:
+            problems.append(f"event {i} ({e.get('name')!r}) has bad dur")
+    if problems:
+        return problems
+
+    by_rank = defaultdict(list)
+    for e in events:
+        by_rank[(e["pid"], e.get("tid", 0))].append(e)
+    for (pid, tid), rank in by_rank.items():
+        # exporter order: by start, longest-first on equal starts — so
+        # timestamps are monotonic and parents precede children
+        for a, b in zip(rank, rank[1:]):
+            if b["ts"] < a["ts"]:
+                problems.append(
+                    f"rank {pid}/{tid}: timestamps not monotonic "
+                    f"({b['name']!r} at {b['ts']} after {a['name']!r} "
+                    f"at {a['ts']})")
+                break
+        # stack nesting: spans nest or are disjoint, never partial
+        stack = []
+        for e in rank:
+            end = e["ts"] + e["dur"]
+            while stack and stack[-1][0] <= e["ts"]:
+                stack.pop()
+            if stack and end > stack[-1][0]:
+                problems.append(
+                    f"rank {pid}/{tid}: span {e['name']!r} "
+                    f"[{e['ts']}, {end}] partially overlaps enclosing "
+                    f"{stack[-1][1]!r} ending at {stack[-1][0]}")
+            stack.append((end, e["name"]))
+        # split-phase pairing: post epochs == complete/abandon epochs
+        opens = sorted(e.get("args", {}).get("epoch", -1)
+                       for e in rank if e["name"] == "post")
+        closes = sorted(e.get("args", {}).get("epoch", -1)
+                        for e in rank
+                        if e["name"] in ("complete", "abandon"))
+        if opens != closes:
+            problems.append(
+                f"rank {pid}/{tid}: {len(opens)} post(s) vs "
+                f"{len(closes)} complete/abandon(s) and the exchange "
+                f"epochs do not pair up")
+    return problems
+
+
+def summarize(events, top=3):
+    """Per-name aggregates and the wait-attribution ranking."""
+    agg = defaultdict(lambda: [0, 0.0])  # name -> [count, total µs]
+    blame = defaultdict(lambda: [0, 0.0])  # src rank -> [waits, µs]
+    ranks = set()
+    for e in events:
+        ranks.add(e["pid"])
+        a = agg[e["name"]]
+        a[0] += 1
+        a[1] += e["dur"]
+        src = e.get("args", {}).get("src", -1)
+        if isinstance(src, int) and src >= 0:
+            b = blame[src]
+            b[0] += 1
+            b[1] += e["dur"]
+    print(f"{len(events)} spans over {len(ranks)} rank(s)")
+    width = max(len(n) for n in agg)
+    for name, (count, total) in sorted(
+            agg.items(), key=lambda kv: -kv[1][1]):
+        print(f"  {name:<{width}}  {count:>7} spans  "
+              f"{total / 1e3:>10.3f} ms total")
+    if blame:
+        print("top stragglers (by attributed wait time):")
+        culprits = sorted(blame.items(), key=lambda kv: -kv[1][1])
+        for src, (waits, total) in culprits[:top]:
+            print(f"  rank {src}: last arriver in {waits} wait(s), "
+                  f"{total / 1e3:.3f} ms waited on it")
+    return blame
+
+
+def check_stats(doc):
+    """Validate the --stats-json report; return problem list."""
+    problems = []
+    if doc.get("schema") != SCHEMA:
+        problems.append(
+            f"stats schema is {doc.get('schema')!r}, expected {SCHEMA!r}")
+        return problems
+    for section in ("config", "result", "phase_times", "comm",
+                    "intervals", "stragglers", "sync_model"):
+        if section not in doc:
+            problems.append(f"stats report is missing {section!r}")
+    if problems:
+        return problems
+    stragglers = doc["stragglers"]
+    # each ledger is {"waits": [per blamed rank], "lateness_secs": [..]};
+    # fold them and check the report's own top entry is their argmax
+    # (wait count, lateness as tie-break — mirroring obs::blame)
+    totals = defaultdict(lambda: [0, 0.0])
+    for ledger in stragglers.get("global", []) + stragglers.get("local", []):
+        waits = ledger.get("waits", [])
+        late = ledger.get("lateness_secs", [])
+        for rank, (w, l) in enumerate(zip(waits, late)):
+            t = totals[rank]
+            t[0] += w
+            t[1] += l
+    blamed = {r: t for r, t in totals.items() if t[0] > 0}
+    top = stragglers.get("top")
+    if blamed:
+        best = max(blamed, key=lambda r: (blamed[r][0], blamed[r][1]))
+        if top is None:
+            problems.append("stragglers.top missing despite ledger entries")
+        elif top["rank"] != best:
+            problems.append(
+                f"stragglers.top names rank {top['rank']} but the "
+                f"ledgers' argmax is rank {best}")
+        else:
+            print(f"stats: top straggler rank {top['rank']} "
+                  f"({top['waits']} waits, "
+                  f"{top['lateness_secs'] * 1e3:.3f} ms lateness)")
+    sm = doc["sync_model"]
+    tiers = sm.get("tiers") or {}
+    for tier in ("global", "local"):
+        t = tiers.get(tier)
+        if t is not None:
+            print(f"stats: T_sync[{tier}] predicted "
+                  f"{t['predicted_secs']:.6f} s, measured "
+                  f"{t['measured_secs']:.6f} s")
+    return problems
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace JSON written by --trace")
+    ap.add_argument("--stats", default=None,
+                    help="stats report written by --stats-json")
+    ap.add_argument("--top", type=int, default=3,
+                    help="stragglers to list (default 3)")
+    args = ap.parse_args(argv)
+
+    events = span_events(load_json(args.trace))
+    if events is None:
+        print(f"error: {args.trace} has no traceEvents array",
+              file=sys.stderr)
+        return 2
+    problems = validate_events(events)
+    if problems:
+        for p in problems:
+            print(f"INVALID: {p}", file=sys.stderr)
+        return 1
+    summarize(events, top=args.top)
+    if args.stats:
+        problems = check_stats(load_json(args.stats))
+        if problems:
+            for p in problems:
+                print(f"INVALID: {p}", file=sys.stderr)
+            return 1
+    print("trace OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
