@@ -130,6 +130,62 @@ def test_engine_keyed_by_ranks_per_area():
     assert "/R2/" in flagged[0][1]
 
 
+def _transport_entry(transport, rtf, with_key=True):
+    e = {
+        "model": "m",
+        "strategy": "conventional",
+        "exec": "pooled",
+        "comm": "blocking",
+        "comm_depth": 1,
+        "ranks_per_area": 1,
+        "ranks": 4,
+        "threads": 1,
+        "rtf": rtf,
+    }
+    if with_key:
+        e["transport"] = transport
+    return e
+
+
+def test_engine_keyed_by_transport():
+    # a socket (multi-process) run pays IPC costs the shared-memory run
+    # does not; the two must never be cross-compared
+    base = _doc(engine_raw=[
+        _transport_entry("shmem", 10.0),
+        _transport_entry("socket", 40.0),
+    ])
+    cur = _doc(engine_raw=[
+        _transport_entry("shmem", 10.5),
+        _transport_entry("socket", 42.0),
+    ])
+    rows, fails, _ = bc.compare(base, cur, 0.15)
+    assert len(rows) == 2
+    assert not fails
+    # a regression only on the socket variant is attributed to it
+    worse = _doc(engine_raw=[
+        _transport_entry("shmem", 10.0),
+        _transport_entry("socket", 400.0),
+    ])
+    _, fails, warns = bc.compare(base, worse, 0.15, smoke_fail_factor=6.0)
+    flagged = fails + warns
+    assert len(flagged) == 1
+    assert "/socket/" in flagged[0][1]
+
+
+def test_transport_defaults_to_shmem_for_old_baselines():
+    # baselines recorded before the transport axis existed carry no
+    # transport field; they must keep comparing against current shmem
+    # runs but never against socket runs
+    base = _doc(engine_raw=[_transport_entry("shmem", 10.0, with_key=False)])
+    cur = _doc(engine_raw=[_transport_entry("shmem", 11.0)])
+    rows, fails, _ = bc.compare(base, cur, 0.15)
+    assert len(rows) == 1
+    assert not fails
+    sock = _doc(engine_raw=[_transport_entry("socket", 11.0)])
+    rows, _, _ = bc.compare(base, sock, 0.15)
+    assert rows == []
+
+
 def test_ranks_per_area_defaults_to_one_for_old_baselines():
     # baselines recorded before the hierarchical key existed carry no
     # ranks_per_area field; they must keep comparing against current
@@ -156,7 +212,7 @@ def test_missing_configs_reported():
     gone = bc.missing_configs(base, cur)
     assert gone == [
         "micro: b",
-        "engine: m/conventional/pooled/overlap/d4/R1/M4/T2",
+        "engine: m/conventional/pooled/overlap/d4/shmem/R1/M4/T2",
     ]
     assert bc.missing_configs(base, base) == []
 

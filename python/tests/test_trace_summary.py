@@ -138,6 +138,24 @@ def test_stats_schema_accepted(capsys):
     assert "T_sync[global]" in out
 
 
+def test_stats_transport_printed_and_defaulted(capsys):
+    # reports written by current binaries carry config.transport ...
+    doc = _stats()
+    doc["config"]["transport"] = "socket"
+    assert ts.check_stats(doc) == []
+    assert "transport socket" in capsys.readouterr().out
+    # ... and reports from older binaries lack it: still valid
+    # (schema-stable), reported as the in-process default
+    assert ts.check_stats(_stats()) == []
+    assert "transport shmem" in capsys.readouterr().out
+
+
+def test_stats_malformed_transport_rejected():
+    doc = _stats()
+    doc["config"]["transport"] = 7
+    assert any("transport" in p for p in ts.check_stats(doc))
+
+
 def test_stats_wrong_schema_rejected():
     doc = _stats()
     doc["schema"] = "nsim-stats-v0"

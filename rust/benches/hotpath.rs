@@ -132,6 +132,10 @@ impl Harness {
             ("exec", exec.name().into()),
             ("delivery", delivery.into()),
             ("comm", comm.name().into()),
+            // the bench harness always runs the in-process backend;
+            // the axis exists so socket runs recorded by other tools
+            // never silently compare against shmem baselines
+            ("transport", "shmem".into()),
             ("comm_depth", comm_depth.into()),
             ("ranks_per_area", ranks_per_area.into()),
             ("ranks", m.into()),

@@ -99,6 +99,8 @@
 //! hardware substitution of DESIGN.md §2).
 
 pub mod nonblocking;
+#[cfg(unix)]
+pub mod socket;
 
 pub use nonblocking::{
     CompletionTiming, Pending, PendingExchange, SplitTransport,

@@ -1,0 +1,1357 @@
+//! Multi-process transport: one OS process per rank over Unix-domain
+//! sockets — the pure-Rust stand-in for an MPI backend (no MPI
+//! toolchain required).
+//!
+//! [`SocketComm`] implements the full [`Transport`] + [`SplitTransport`]
+//! surface of the shared-memory [`super::World`]:
+//!
+//! * the blocking [`Transport::alltoall_into`] with an explicit barrier
+//!   frame separating synchronization from the data exchange, exactly
+//!   like the shared-memory protocol;
+//! * the split-phase [`SplitTransport::alltoall_start`] /
+//!   [`Pending::complete`] pipeline with epoch-stamped rounds and the
+//!   incremental [`Pending::try_complete_source`] fast path;
+//! * collective [`Transport::split`] sub-communicators and
+//!   [`Transport::allreduce_min_u64`];
+//! * the quota-resize protocol (advisory over sockets — no shared
+//!   buffers to grow — but tracked deterministically so `quota()` and
+//!   the resize statistics agree with the shared-memory world);
+//! * typed [`CommError::Timeout`] / [`CommError::Poisoned`] so the
+//!   engine's comm watchdogs and fault injection keep working: a dead
+//!   peer process closes its sockets, the reader thread observes the
+//!   EOF, and every wait still needing that peer fails *immediately*
+//!   with a watchdog diagnostic naming it — no need to sit out the
+//!   full deadline.
+//!
+//! # Wire format
+//!
+//! Every frame is a little-endian header followed by a raw payload:
+//!
+//! ```text
+//! comm: u64 | kind: u8 | seq: u64 | arg: u64 | len: u32 | payload
+//! ```
+//!
+//! `comm` routes the frame to a communicator (sub-communicators from
+//! `split` share the socket mesh under ids derived deterministically on
+//! every member — see [`child_comm_id`]); `seq` is the per-communicator
+//! per-kind sequence number (barrier generation, reduce round, exchange
+//! epoch); `arg` carries the kind-specific scalar (reduce value, the
+//! sender's per-destination maximum for data frames — the input of the
+//! deterministic quota settle — or the split color).  Spike payloads
+//! are [`SPIKE_WIRE_BYTES`] bytes per spike: `source: u32 | cycle: u32`.
+//!
+//! # Rendezvous
+//!
+//! Rank `r` binds `<dir>/rank<r>.sock`, dials every lower rank
+//! (retrying until the peer's listener appears) and accepts every
+//! higher rank; an 8-byte hello carrying the absolute rank identifies
+//! each accepted connection.  One detached reader thread per peer
+//! demultiplexes incoming frames into per-communicator inboxes keyed by
+//! `(kind, seq)`; a frame for a communicator this process has not
+//! created yet simply creates the inbox — `split` needs no extra
+//! synchronization for early-arriving sub-communicator traffic.
+//!
+//! # Slot-ring safety over sockets
+//!
+//! The shared-memory world recycles `2·depth` preallocated ring slots
+//! per (dest, src) pair; posting exchange `k` is safe because the slot
+//! occupant `k − 2·depth` is provably history.  Over sockets the ring
+//! becomes seq-keyed inbox entries, and the same flight bound does the
+//! work: a rank posts at most `depth` exchanges ahead of its oldest
+//! incomplete round, so at most `2·depth` rounds per source can be
+//! resident before the receiver drains them — the memory bound carries
+//! over even though no slot is ever literally reused.  Stream order
+//! (per-connection FIFO) preserves the per-source spike order the
+//! deterministic merge relies on.
+
+use super::{
+    CommError, CommStats, CompletionTiming, ExchangeTiming, Pending,
+    SpikeMsg, SplitTransport, TieredCommStats, Transport,
+    SPIKE_WIRE_BYTES,
+};
+use crate::obs::blame::{Blame, TieredBlame};
+use anyhow::{bail, Context as _, Result as AnyResult};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+const KIND_BARRIER: u8 = 1;
+const KIND_REDUCE: u8 = 2;
+const KIND_DATA: u8 = 3;
+const KIND_NB_DATA: u8 = 4;
+const KIND_SPLIT: u8 = 5;
+
+/// `comm u64 | kind u8 | seq u64 | arg u64 | len u32`.
+const HEADER_BYTES: usize = 29;
+
+/// Communicator id of the root world ("nsimroot" in ASCII); children
+/// derive theirs via [`child_comm_id`].
+const ROOT_COMM_ID: u64 = 0x6e73_696d_726f_6f74;
+
+/// Deterministic sub-communicator id: FNV-1a over (parent id, split
+/// sequence number, color).  Every member of the group computes the
+/// same id from the same collective inputs, so frames route without a
+/// registration round-trip.
+fn child_comm_id(parent: u64, seq: u64, color: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in parent
+        .to_le_bytes()
+        .into_iter()
+        .chain(seq.to_le_bytes())
+        .chain(color.to_le_bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One received data frame, parked until the owning collective drains
+/// it.  `arrived` feeds the hidden-latency accounting (the socket
+/// analogue of the mailbox deposit timestamp).
+struct DataFrame {
+    /// Absolute (mesh) rank of the sender.
+    src: usize,
+    /// The sender's per-destination maximum this round (quota input).
+    max_per_pair: u64,
+    spikes: Vec<SpikeMsg>,
+    arrived: Instant,
+}
+
+/// Per-communicator inbox: frames keyed by `(kind, seq)`, each entry in
+/// arrival order (the last element of a completed gather is the
+/// straggler the blame ledger charges).
+#[derive(Default)]
+struct Inbox {
+    barrier: HashMap<u64, Vec<usize>>,
+    reduce: HashMap<u64, Vec<(usize, u64)>>,
+    data: HashMap<u64, Vec<DataFrame>>,
+    nb: HashMap<u64, Vec<DataFrame>>,
+    /// `(abs rank, color, key)` registrations of a split round.
+    split: HashMap<u64, Vec<(usize, u64, u64)>>,
+}
+
+struct DemuxState {
+    /// Peers whose connection hit EOF or an I/O error — a dead process.
+    dead: Vec<bool>,
+    comms: HashMap<u64, Inbox>,
+}
+
+/// The piece the reader threads share: deliberately *not* the whole
+/// [`Mesh`], so dropping the mesh (which shuts the sockets down) is
+/// what terminates the readers rather than the other way around.
+struct DemuxShared {
+    state: Mutex<DemuxState>,
+    cv: Condvar,
+}
+
+fn decode_spikes(payload: &[u8]) -> Vec<SpikeMsg> {
+    let mut v = Vec::with_capacity(payload.len() / SPIKE_WIRE_BYTES);
+    for c in payload.chunks_exact(SPIKE_WIRE_BYTES) {
+        v.push(SpikeMsg {
+            source: u32::from_le_bytes(c[0..4].try_into().unwrap()),
+            cycle: u32::from_le_bytes(c[4..8].try_into().unwrap()),
+        });
+    }
+    v
+}
+
+/// Per-peer reader: demultiplex frames into the inboxes until the
+/// connection dies, then mark the peer dead and wake every waiter so
+/// pending gathers can fail with a diagnostic naming it.
+fn reader_loop(
+    shared: Arc<DemuxShared>,
+    mut stream: UnixStream,
+    peer: usize,
+) {
+    loop {
+        let mut hdr = [0u8; HEADER_BYTES];
+        if stream.read_exact(&mut hdr).is_err() {
+            break;
+        }
+        let comm = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+        let kind = hdr[8];
+        let seq = u64::from_le_bytes(hdr[9..17].try_into().unwrap());
+        let arg = u64::from_le_bytes(hdr[17..25].try_into().unwrap());
+        let len = u32::from_le_bytes(hdr[25..29].try_into().unwrap());
+        let mut payload = vec![0u8; len as usize];
+        if len > 0 && stream.read_exact(&mut payload).is_err() {
+            break;
+        }
+        let mut st = shared
+            .state
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let inbox = st.comms.entry(comm).or_default();
+        match kind {
+            KIND_BARRIER => {
+                inbox.barrier.entry(seq).or_default().push(peer)
+            }
+            KIND_REDUCE => {
+                inbox.reduce.entry(seq).or_default().push((peer, arg))
+            }
+            KIND_DATA | KIND_NB_DATA => {
+                let frame = DataFrame {
+                    src: peer,
+                    max_per_pair: arg,
+                    spikes: decode_spikes(&payload),
+                    arrived: Instant::now(),
+                };
+                let map = if kind == KIND_DATA {
+                    &mut inbox.data
+                } else {
+                    &mut inbox.nb
+                };
+                map.entry(seq).or_default().push(frame);
+            }
+            KIND_SPLIT if payload.len() >= 8 => {
+                let key =
+                    u64::from_le_bytes(payload[0..8].try_into().unwrap());
+                inbox.split.entry(seq).or_default().push((peer, arg, key));
+            }
+            // unknown kinds are skipped (forward compatibility)
+            _ => {}
+        }
+        drop(st);
+        shared.cv.notify_all();
+    }
+    let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+    st.dead[peer] = true;
+    drop(st);
+    shared.cv.notify_all();
+}
+
+/// The process-wide socket fabric: one connection per peer plus the
+/// frame demultiplexer, shared by the root communicator and every
+/// sub-communicator split off it.  Per-tier statistics and blame
+/// ledgers live here so the engine can collect them after the run.
+struct Mesh {
+    m: usize,
+    rank: usize,
+    /// Write side of each peer connection (`None` at our own index).
+    links: Vec<Option<Mutex<UnixStream>>>,
+    shared: Arc<DemuxShared>,
+    timeout: Option<Duration>,
+    depth: usize,
+    stats_global: CommStats,
+    stats_local: CommStats,
+    blame_global: Mutex<Blame>,
+    blame_local: Mutex<Blame>,
+    sock_path: PathBuf,
+}
+
+impl Drop for Mesh {
+    fn drop(&mut self) {
+        // closing both directions is what terminates our reader threads
+        // (they hold only the DemuxShared, never the mesh) and tells
+        // the peers we are gone
+        for link in self.links.iter().flatten() {
+            let s = match link.lock() {
+                Ok(g) => g,
+                Err(e) => e.into_inner(),
+            };
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        let _ = std::fs::remove_file(&self.sock_path);
+    }
+}
+
+impl Mesh {
+    fn stats(&self, tier: &str) -> &CommStats {
+        if tier == "global" {
+            &self.stats_global
+        } else {
+            &self.stats_local
+        }
+    }
+
+    fn blame(&self, tier: &str) -> &Mutex<Blame> {
+        if tier == "global" {
+            &self.blame_global
+        } else {
+            &self.blame_local
+        }
+    }
+
+    /// Write one frame to `dest`.  A write error means the peer died;
+    /// record it and let the next gather that needs the peer surface
+    /// the typed watchdog error (a send itself never fails a run).
+    fn send_frame(
+        &self,
+        dest: usize,
+        comm: u64,
+        kind: u8,
+        seq: u64,
+        arg: u64,
+        payload: &[u8],
+    ) {
+        let link = self.links[dest]
+            .as_ref()
+            .expect("send_frame to self has no link");
+        let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+        buf.extend_from_slice(&comm.to_le_bytes());
+        buf.push(kind);
+        buf.extend_from_slice(&seq.to_le_bytes());
+        buf.extend_from_slice(&arg.to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(payload);
+        let failed = {
+            let mut s = link.lock().unwrap_or_else(|e| e.into_inner());
+            s.write_all(&buf).is_err()
+        };
+        if failed {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            st.dead[dest] = true;
+            drop(st);
+            self.shared.cv.notify_all();
+        }
+    }
+
+    fn send_spikes(
+        &self,
+        dest: usize,
+        comm: u64,
+        kind: u8,
+        seq: u64,
+        arg: u64,
+        spikes: &[SpikeMsg],
+    ) {
+        let mut payload =
+            Vec::with_capacity(spikes.len() * SPIKE_WIRE_BYTES);
+        for sp in spikes {
+            payload.extend_from_slice(&sp.source.to_le_bytes());
+            payload.extend_from_slice(&sp.cycle.to_le_bytes());
+        }
+        self.send_frame(dest, comm, kind, seq, arg, &payload);
+    }
+}
+
+/// Shared state of one communicator (the root or a `split` child): the
+/// member list in sub-rank order, the deterministic quota mirror and
+/// the per-kind sequence counters.  [`SocketComm`] and every
+/// [`SocketPending`] it posts hold this behind an `Arc`.
+struct CommInner {
+    mesh: Arc<Mesh>,
+    id: u64,
+    tier: &'static str,
+    /// Absolute (mesh) rank of each member, in sub-rank order.
+    members: Vec<usize>,
+    /// This process's rank within `members`.
+    rank: usize,
+    quota: AtomicUsize,
+    barrier_seq: AtomicU64,
+    reduce_seq: AtomicU64,
+    data_seq: AtomicU64,
+    nb_seq: AtomicU64,
+    split_seq: AtomicU64,
+    /// Split-phase rounds posted but not completed (flight-bound check).
+    outstanding: AtomicUsize,
+}
+
+/// Outcome of a frame gather: the taken value, how long the wait took
+/// and whether it ever actually blocked (only a blocked wait blames a
+/// straggler — the releaser of an already-complete gather waited for
+/// nobody).
+struct Gathered<R> {
+    value: R,
+    waited: f64,
+    blocked: bool,
+}
+
+impl CommInner {
+    fn my_abs(&self) -> usize {
+        self.members[self.rank]
+    }
+
+    fn local_of(&self, abs: usize) -> usize {
+        self.members
+            .iter()
+            .position(|&a| a == abs)
+            .expect("frame from a rank outside this communicator")
+    }
+
+    fn stats(&self) -> &CommStats {
+        self.mesh.stats(self.tier)
+    }
+
+    fn poisoned(&self) -> CommError {
+        CommError::Poisoned {
+            tier: self.tier,
+            rank: self.rank,
+            context: "holding the socket frame demultiplexer".to_string(),
+        }
+    }
+
+    fn record_blame(&self, blamed_abs: usize, waited: f64) {
+        let mut b = self
+            .mesh
+            .blame(self.tier)
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        b.record(blamed_abs, waited);
+    }
+
+    /// Block until `take` yields a value from this communicator's
+    /// inbox.  `arrived` reports which peers (absolute ranks) have
+    /// already contributed, for the watchdog diagnostic; a needed peer
+    /// marked dead fails the wait immediately — EOF is definitive, no
+    /// point sitting out the deadline.
+    fn gather<R>(
+        &self,
+        op: &'static str,
+        epoch: Option<u64>,
+        ring_slot: Option<usize>,
+        mut take: impl FnMut(&mut Inbox) -> Option<R>,
+        mut arrived: impl FnMut(&Inbox) -> Vec<usize>,
+    ) -> Result<Gathered<R>, CommError> {
+        let t0 = Instant::now();
+        let mesh = &*self.mesh;
+        let mut blocked = false;
+        let mut st = mesh
+            .shared
+            .state
+            .lock()
+            .map_err(|_| self.poisoned())?;
+        loop {
+            {
+                let inbox = st.comms.entry(self.id).or_default();
+                if let Some(value) = take(inbox) {
+                    return Ok(Gathered {
+                        value,
+                        waited: t0.elapsed().as_secs_f64(),
+                        blocked,
+                    });
+                }
+            }
+            let present_abs = {
+                let inbox = st.comms.entry(self.id).or_default();
+                arrived(inbox)
+            };
+            let missing: Vec<usize> = self
+                .members
+                .iter()
+                .copied()
+                .filter(|&a| {
+                    a != self.my_abs() && !present_abs.contains(&a)
+                })
+                .collect();
+            let dead_hit = missing.iter().any(|&a| st.dead[a]);
+            let expired = mesh
+                .timeout
+                .map(|t| t0.elapsed() >= t)
+                .unwrap_or(false);
+            if dead_hit || expired {
+                self.stats().timeouts.fetch_add(1, Ordering::Relaxed);
+                return Err(CommError::Timeout {
+                    tier: self.tier,
+                    op,
+                    rank: self.rank,
+                    epoch,
+                    ring_slot,
+                    waited: t0.elapsed(),
+                    missing: missing
+                        .iter()
+                        .map(|&a| self.local_of(a))
+                        .collect(),
+                    present: present_abs
+                        .iter()
+                        .map(|&a| self.local_of(a))
+                        .collect(),
+                });
+            }
+            blocked = true;
+            st = match mesh.timeout {
+                Some(t) => {
+                    let left = t.saturating_sub(t0.elapsed());
+                    mesh.shared
+                        .cv
+                        .wait_timeout(st, left)
+                        .map_err(|_| self.poisoned())?
+                        .0
+                }
+                None => mesh
+                    .shared
+                    .cv
+                    .wait(st)
+                    .map_err(|_| self.poisoned())?,
+            };
+        }
+    }
+
+    /// Barrier frame: send a token to every member, wait for all of
+    /// theirs.  Returns the wait time; the last arriver is charged in
+    /// the blame ledger like the shared-memory barrier's releaser.
+    fn barrier(&self, op: &'static str) -> Result<f64, CommError> {
+        let need = self.members.len() - 1;
+        if need == 0 {
+            return Ok(0.0);
+        }
+        let seq = self.barrier_seq.fetch_add(1, Ordering::Relaxed);
+        for &peer in &self.members {
+            if peer != self.my_abs() {
+                self.mesh
+                    .send_frame(peer, self.id, KIND_BARRIER, seq, 0, &[]);
+            }
+        }
+        let g = self.gather(
+            op,
+            None,
+            None,
+            |inbox| {
+                if inbox.barrier.get(&seq).is_some_and(|v| v.len() == need)
+                {
+                    inbox.barrier.remove(&seq)
+                } else {
+                    None
+                }
+            },
+            |inbox| inbox.barrier.get(&seq).cloned().unwrap_or_default(),
+        )?;
+        if g.blocked {
+            if let Some(&last) = g.value.last() {
+                self.record_blame(last, g.waited);
+            }
+        }
+        Ok(g.waited)
+    }
+
+    fn allreduce_min(&self, v: u64) -> Result<u64, CommError> {
+        let need = self.members.len() - 1;
+        if need == 0 {
+            return Ok(v);
+        }
+        let seq = self.reduce_seq.fetch_add(1, Ordering::Relaxed);
+        for &peer in &self.members {
+            if peer != self.my_abs() {
+                self.mesh
+                    .send_frame(peer, self.id, KIND_REDUCE, seq, v, &[]);
+            }
+        }
+        let g = self.gather(
+            "allreduce-min",
+            None,
+            None,
+            |inbox| {
+                if inbox.reduce.get(&seq).is_some_and(|e| e.len() == need)
+                {
+                    inbox.reduce.remove(&seq)
+                } else {
+                    None
+                }
+            },
+            |inbox| {
+                inbox
+                    .reduce
+                    .get(&seq)
+                    .map(|e| e.iter().map(|&(r, _)| r).collect())
+                    .unwrap_or_default()
+            },
+        )?;
+        Ok(g.value.iter().map(|&(_, x)| x).fold(v, u64::min))
+    }
+
+    /// Deterministic quota settle: every member gathered the same
+    /// per-round maxima, so every member doubles to the same value —
+    /// keeping `quota()` (and a future checkpoint of it) consistent
+    /// across processes without a second protocol round.
+    fn settle_quota(&self, round_max: usize) {
+        let q = self.quota.load(Ordering::Relaxed);
+        if round_max > q {
+            let mut grown = q.max(1);
+            while grown < round_max {
+                grown *= 2;
+            }
+            self.quota.store(grown, Ordering::Relaxed);
+            self.stats().resize_rounds.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn alltoall_into(
+        &self,
+        send: &mut [Vec<SpikeMsg>],
+        recv: &mut Vec<Vec<SpikeMsg>>,
+    ) -> Result<ExchangeTiming, CommError> {
+        let m = self.members.len();
+        assert_eq!(
+            send.len(),
+            m,
+            "alltoall send must carry one buffer per rank"
+        );
+        let stats = self.stats();
+        // barrier frame in front of the collective: separates the
+        // synchronization share (waiting for the slowest member) from
+        // the data exchange proper, like the shared-memory protocol
+        let sync_secs = self.barrier("alltoall (sync barrier)")?;
+        stats
+            .sync_nanos
+            .fetch_add((sync_secs * 1e9) as u64, Ordering::Relaxed);
+        let t_data = Instant::now();
+        let my_max = send.iter().map(Vec::len).max().unwrap_or(0);
+        let seq = self.data_seq.fetch_add(1, Ordering::Relaxed);
+        let mut bytes = 0u64;
+        for (d, buf) in send.iter_mut().enumerate() {
+            if d == self.rank {
+                continue;
+            }
+            bytes += (buf.len() * SPIKE_WIRE_BYTES) as u64;
+            self.mesh.send_spikes(
+                self.members[d],
+                self.id,
+                KIND_DATA,
+                seq,
+                my_max as u64,
+                buf,
+            );
+            buf.clear();
+        }
+        recv.resize_with(m, Vec::new);
+        // self-delivery: swap, conserving both buffers' capacity
+        recv[self.rank].clear();
+        std::mem::swap(&mut send[self.rank], &mut recv[self.rank]);
+        let mut round_max = my_max as u64;
+        if m > 1 {
+            let need = m - 1;
+            let g = self.gather(
+                "alltoall (data)",
+                Some(seq),
+                None,
+                |inbox| {
+                    if inbox
+                        .data
+                        .get(&seq)
+                        .is_some_and(|f| f.len() == need)
+                    {
+                        inbox.data.remove(&seq)
+                    } else {
+                        None
+                    }
+                },
+                |inbox| {
+                    inbox
+                        .data
+                        .get(&seq)
+                        .map(|f| f.iter().map(|fr| fr.src).collect())
+                        .unwrap_or_default()
+                },
+            )?;
+            for frame in g.value {
+                round_max = round_max.max(frame.max_per_pair);
+                recv[self.local_of(frame.src)] = frame.spikes;
+            }
+        }
+        self.settle_quota(round_max as usize);
+        stats.alltoall_calls.fetch_add(1, Ordering::Relaxed);
+        stats.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+        stats
+            .max_send_per_pair
+            .fetch_max(my_max, Ordering::Relaxed);
+        Ok(ExchangeTiming {
+            sync_secs,
+            data_secs: t_data.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Builds the socket mesh for one rank and hands back the root
+/// communicator.  The socket analogue of
+/// [`super::WorldBuilder`] — except every process builds only its own
+/// rank's endpoint and the constructor blocks until the full mesh is
+/// connected (the rendezvous).
+pub struct SocketWorldBuilder {
+    m: usize,
+    rank: usize,
+    dir: PathBuf,
+    quota: usize,
+    depth: usize,
+    timeout: Option<Duration>,
+    rendezvous_timeout: Duration,
+}
+
+impl SocketWorldBuilder {
+    pub fn new(m: usize, rank: usize, dir: &Path) -> SocketWorldBuilder {
+        SocketWorldBuilder {
+            m,
+            rank,
+            dir: dir.to_path_buf(),
+            quota: 1024,
+            depth: 1,
+            timeout: None,
+            rendezvous_timeout: Duration::from_secs(30),
+        }
+    }
+
+    /// Initial spike-buffer quota per rank pair (advisory over
+    /// sockets, but tracked so statistics match the shared world).
+    pub fn quota(mut self, quota: usize) -> SocketWorldBuilder {
+        self.quota = quota.max(1);
+        self
+    }
+
+    /// Split-phase pipeline depth (ring of `2·depth` rounds in flight).
+    pub fn depth(mut self, depth: usize) -> SocketWorldBuilder {
+        self.depth = depth.max(1);
+        self
+    }
+
+    /// Watchdog deadline for every blocking rendezvous; `None` waits
+    /// forever (EOF from a dead peer still fails fast).
+    pub fn timeout(
+        mut self,
+        timeout: Option<Duration>,
+    ) -> SocketWorldBuilder {
+        self.timeout = timeout;
+        self
+    }
+
+    /// How long to keep dialing peers whose listener has not appeared
+    /// yet before giving up on the mesh (default 30 s).
+    pub fn rendezvous_timeout(
+        mut self,
+        timeout: Duration,
+    ) -> SocketWorldBuilder {
+        self.rendezvous_timeout = timeout;
+        self
+    }
+
+    /// Bind, dial, accept: block until all `m - 1` peer connections
+    /// exist, then return the root communicator.
+    pub fn connect(self) -> AnyResult<SocketComm> {
+        anyhow::ensure!(self.m >= 1, "socket mesh needs at least 1 rank");
+        anyhow::ensure!(
+            self.rank < self.m,
+            "socket rank {} out of range for {} ranks",
+            self.rank,
+            self.m
+        );
+        std::fs::create_dir_all(&self.dir).with_context(|| {
+            format!("creating socket dir {}", self.dir.display())
+        })?;
+        let sock_path = self.dir.join(format!("rank{}.sock", self.rank));
+        let _ = std::fs::remove_file(&sock_path);
+        let listener = UnixListener::bind(&sock_path).with_context(|| {
+            format!("binding {}", sock_path.display())
+        })?;
+        let shared = Arc::new(DemuxShared {
+            state: Mutex::new(DemuxState {
+                dead: vec![false; self.m],
+                comms: HashMap::new(),
+            }),
+            cv: Condvar::new(),
+        });
+        let mut links: Vec<Option<Mutex<UnixStream>>> =
+            (0..self.m).map(|_| None).collect();
+        let deadline = Instant::now() + self.rendezvous_timeout;
+        // dial every lower rank, retrying until its listener appears
+        for peer in 0..self.rank {
+            let path = self.dir.join(format!("rank{peer}.sock"));
+            let mut stream = loop {
+                match UnixStream::connect(&path) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        if Instant::now() >= deadline {
+                            bail!(
+                                "socket rendezvous: rank {} could not \
+                                 reach rank {peer} at {} within {:?} \
+                                 ({e})",
+                                self.rank,
+                                path.display(),
+                                self.rendezvous_timeout
+                            );
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            };
+            stream
+                .write_all(&(self.rank as u64).to_le_bytes())
+                .with_context(|| format!("hello to rank {peer}"))?;
+            let reader = stream.try_clone().context("cloning stream")?;
+            let sh = shared.clone();
+            std::thread::spawn(move || reader_loop(sh, reader, peer));
+            links[peer] = Some(Mutex::new(stream));
+        }
+        // accept every higher rank; the 8-byte hello says who it is
+        listener.set_nonblocking(true)?;
+        let mut pending = self.m - 1 - self.rank;
+        while pending > 0 {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    let mut hello = [0u8; 8];
+                    (&stream)
+                        .read_exact(&mut hello)
+                        .context("reading peer hello")?;
+                    let peer = u64::from_le_bytes(hello) as usize;
+                    anyhow::ensure!(
+                        peer > self.rank
+                            && peer < self.m
+                            && links[peer].is_none(),
+                        "socket rendezvous: unexpected hello from rank \
+                         {peer}"
+                    );
+                    let reader =
+                        stream.try_clone().context("cloning stream")?;
+                    let sh = shared.clone();
+                    std::thread::spawn(move || {
+                        reader_loop(sh, reader, peer)
+                    });
+                    links[peer] = Some(Mutex::new(stream));
+                    pending -= 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "socket rendezvous: rank {} still waiting \
+                             for {pending} peer connection(s) after \
+                             {:?}",
+                            self.rank,
+                            self.rendezvous_timeout
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    return Err(e)
+                        .context("accepting a peer connection")
+                }
+            }
+        }
+        let mesh = Arc::new(Mesh {
+            m: self.m,
+            rank: self.rank,
+            links,
+            shared,
+            timeout: self.timeout,
+            depth: self.depth,
+            stats_global: CommStats::default(),
+            stats_local: CommStats::default(),
+            blame_global: Mutex::new(Blame::sized(self.m)),
+            blame_local: Mutex::new(Blame::sized(self.m)),
+            sock_path,
+        });
+        Ok(SocketComm {
+            inner: Arc::new(CommInner {
+                mesh,
+                id: ROOT_COMM_ID,
+                tier: "global",
+                members: (0..self.m).collect(),
+                rank: self.rank,
+                quota: AtomicUsize::new(self.quota),
+                barrier_seq: AtomicU64::new(0),
+                reduce_seq: AtomicU64::new(0),
+                data_seq: AtomicU64::new(0),
+                nb_seq: AtomicU64::new(0),
+                split_seq: AtomicU64::new(0),
+                outstanding: AtomicUsize::new(0),
+            }),
+        })
+    }
+}
+
+/// This process's handle into one socket communicator — the root world
+/// of the mesh or a sub-communicator from [`Transport::split`].
+pub struct SocketComm {
+    inner: Arc<CommInner>,
+}
+
+impl SocketComm {
+    /// Per-tier statistics of this *process* (the shared-memory world
+    /// aggregates over all ranks; over sockets each process reports its
+    /// own share and the launcher's consumers sum if they need a
+    /// cluster view).
+    pub fn tiered_stats(&self) -> TieredCommStats {
+        let mesh = &*self.inner.mesh;
+        TieredCommStats {
+            global: mesh.stats_global.snapshot(),
+            local: mesh.stats_local.snapshot(),
+        }
+    }
+
+    /// This process's straggler ledgers in root-mesh absolute ranks,
+    /// shaped like [`super::World::blame_report`] with only our own
+    /// rank's row filled.
+    pub fn blame_report(&self) -> TieredBlame {
+        let mesh = &*self.inner.mesh;
+        let mut t = TieredBlame::sized(mesh.m);
+        t.global[mesh.rank] = mesh
+            .blame_global
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone();
+        t.local[mesh.rank] = mesh
+            .blame_local
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone();
+        t
+    }
+}
+
+impl Transport for SocketComm {
+    type Sub = SocketComm;
+
+    fn rank(&self) -> usize {
+        self.inner.rank
+    }
+
+    fn m_ranks(&self) -> usize {
+        self.inner.members.len()
+    }
+
+    fn quota(&self) -> usize {
+        self.inner.quota.load(Ordering::Relaxed)
+    }
+
+    fn split(
+        &self,
+        color: u64,
+        key: u64,
+    ) -> Result<SocketComm, CommError> {
+        let inner = &*self.inner;
+        let m = inner.members.len();
+        let seq = inner.split_seq.fetch_add(1, Ordering::Relaxed);
+        for &peer in &inner.members {
+            if peer != inner.my_abs() {
+                inner.mesh.send_frame(
+                    peer,
+                    inner.id,
+                    KIND_SPLIT,
+                    seq,
+                    color,
+                    &key.to_le_bytes(),
+                );
+            }
+        }
+        let mut all: Vec<(usize, u64, u64)> = if m > 1 {
+            let need = m - 1;
+            inner
+                .gather(
+                    "split",
+                    None,
+                    None,
+                    |inbox| {
+                        if inbox
+                            .split
+                            .get(&seq)
+                            .is_some_and(|e| e.len() == need)
+                        {
+                            inbox.split.remove(&seq)
+                        } else {
+                            None
+                        }
+                    },
+                    |inbox| {
+                        inbox
+                            .split
+                            .get(&seq)
+                            .map(|e| {
+                                e.iter().map(|&(r, _, _)| r).collect()
+                            })
+                            .unwrap_or_default()
+                    },
+                )?
+                .value
+        } else {
+            Vec::new()
+        };
+        all.push((inner.my_abs(), color, key));
+        // deterministic grouping, the MPI_Comm_split shape: members of
+        // our color ordered by (key, parent-local rank) — every member
+        // of the group computes the identical list
+        let mut group: Vec<(u64, usize, usize)> = all
+            .iter()
+            .filter(|&&(_, c, _)| c == color)
+            .map(|&(abs, _, k)| (k, inner.local_of(abs), abs))
+            .collect();
+        group.sort_unstable();
+        let members: Vec<usize> =
+            group.iter().map(|&(_, _, abs)| abs).collect();
+        let rank = members
+            .iter()
+            .position(|&a| a == inner.my_abs())
+            .expect("split group must contain the caller");
+        Ok(SocketComm {
+            inner: Arc::new(CommInner {
+                mesh: inner.mesh.clone(),
+                id: child_comm_id(inner.id, seq, color),
+                tier: "local",
+                members,
+                rank,
+                quota: AtomicUsize::new(
+                    inner.quota.load(Ordering::Relaxed),
+                ),
+                barrier_seq: AtomicU64::new(0),
+                reduce_seq: AtomicU64::new(0),
+                data_seq: AtomicU64::new(0),
+                nb_seq: AtomicU64::new(0),
+                split_seq: AtomicU64::new(0),
+                outstanding: AtomicUsize::new(0),
+            }),
+        })
+    }
+
+    fn alltoall_into(
+        &self,
+        send: &mut [Vec<SpikeMsg>],
+        recv: &mut Vec<Vec<SpikeMsg>>,
+    ) -> Result<ExchangeTiming, CommError> {
+        self.inner.alltoall_into(send, recv)
+    }
+
+    fn local_swap_into(
+        &self,
+        send: &mut Vec<SpikeMsg>,
+        recv: &mut Vec<SpikeMsg>,
+    ) {
+        recv.clear();
+        std::mem::swap(send, recv);
+        self.inner
+            .stats()
+            .local_swaps
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn allreduce_min_u64(&self, v: u64) -> Result<u64, CommError> {
+        self.inner.allreduce_min(v)
+    }
+}
+
+impl SplitTransport for SocketComm {
+    type Pending = SocketPending;
+
+    fn alltoall_start(
+        &self,
+        send: &mut [Vec<SpikeMsg>],
+    ) -> Result<SocketPending, CommError> {
+        let inner = &self.inner;
+        let m = inner.members.len();
+        assert_eq!(
+            send.len(),
+            m,
+            "alltoall send must carry one buffer per rank"
+        );
+        let ring = 2 * inner.mesh.depth;
+        debug_assert!(
+            inner.outstanding.load(Ordering::Relaxed) < ring,
+            "posting past the {ring}-round flight bound"
+        );
+        inner.outstanding.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let my_max = send.iter().map(Vec::len).max().unwrap_or(0) as u64;
+        let seq = inner.nb_seq.fetch_add(1, Ordering::Relaxed);
+        let stats = inner.stats();
+        let mut bytes = 0u64;
+        for (d, buf) in send.iter_mut().enumerate() {
+            if d == inner.rank {
+                // self-deposit straight into our own inbox
+                let spikes = std::mem::take(buf);
+                let mut st = inner
+                    .mesh
+                    .shared
+                    .state
+                    .lock()
+                    .map_err(|_| inner.poisoned())?;
+                st.comms
+                    .entry(inner.id)
+                    .or_default()
+                    .nb
+                    .entry(seq)
+                    .or_default()
+                    .push(DataFrame {
+                        src: inner.my_abs(),
+                        max_per_pair: my_max,
+                        spikes,
+                        arrived: Instant::now(),
+                    });
+                continue;
+            }
+            bytes += (buf.len() * SPIKE_WIRE_BYTES) as u64;
+            inner.mesh.send_spikes(
+                inner.members[d],
+                inner.id,
+                KIND_NB_DATA,
+                seq,
+                my_max,
+                buf,
+            );
+            buf.clear();
+        }
+        let post_secs = t0.elapsed().as_secs_f64();
+        stats
+            .post_nanos
+            .fetch_add((post_secs * 1e9) as u64, Ordering::Relaxed);
+        stats.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+        stats
+            .max_send_per_pair
+            .fetch_max(my_max as usize, Ordering::Relaxed);
+        Ok(SocketPending {
+            inner: self.inner.clone(),
+            seq,
+            posted_at: t0,
+            post_secs,
+            last_arrival: t0,
+            drained: vec![false; m],
+            round_max: my_max,
+            completed: false,
+        })
+    }
+}
+
+/// Handle to an in-flight socket exchange — the [`Pending`] of the
+/// socket backend.  Same contract as the shared-memory
+/// [`super::PendingExchange`]: complete exactly once, abandon on the
+/// error path.
+#[must_use = "an unfinished exchange deadlocks its peers; call complete()"]
+pub struct SocketPending {
+    inner: Arc<CommInner>,
+    seq: u64,
+    posted_at: Instant,
+    post_secs: f64,
+    /// Latest deposit arrival observed (early drains included) — the
+    /// hidden-latency accounting input.
+    last_arrival: Instant,
+    drained: Vec<bool>,
+    round_max: u64,
+    completed: bool,
+}
+
+impl Drop for SocketPending {
+    fn drop(&mut self) {
+        if !self.completed && !std::thread::panicking() {
+            debug_assert!(
+                false,
+                "SocketPending (rank {}, seq {}) dropped without \
+                 complete(); peers would deadlock at their rendezvous",
+                self.inner.rank, self.seq
+            );
+        }
+    }
+}
+
+impl SocketPending {
+    fn ring_slot(&self) -> usize {
+        (self.seq % (2 * self.inner.mesh.depth) as u64) as usize
+    }
+
+    /// Drain every frame of this round currently parked in the inbox
+    /// into `recv`; returns the absolute rank of the latest-arriving
+    /// frame drained, if any.
+    fn drain_available(
+        &mut self,
+        recv: &mut [Vec<SpikeMsg>],
+    ) -> Result<Option<usize>, CommError> {
+        let inner = self.inner.clone();
+        let mut st = inner
+            .mesh
+            .shared
+            .state
+            .lock()
+            .map_err(|_| inner.poisoned())?;
+        let inbox = st.comms.entry(inner.id).or_default();
+        let mut latest: Option<(Instant, usize)> = None;
+        if let Some(frames) = inbox.nb.get_mut(&self.seq) {
+            while let Some(frame) = frames.pop() {
+                let local = inner.local_of(frame.src);
+                debug_assert!(!self.drained[local]);
+                recv[local] = frame.spikes;
+                self.drained[local] = true;
+                self.round_max = self.round_max.max(frame.max_per_pair);
+                if frame.arrived > self.last_arrival {
+                    self.last_arrival = frame.arrived;
+                }
+                if latest.is_none_or(|(t, _)| frame.arrived > t) {
+                    latest = Some((frame.arrived, frame.src));
+                }
+            }
+            inbox.nb.remove(&self.seq);
+        }
+        Ok(latest.map(|(_, src)| src))
+    }
+}
+
+impl Pending for SocketPending {
+    fn post_secs(&self) -> f64 {
+        self.post_secs
+    }
+
+    fn try_complete_source(
+        &mut self,
+        src: usize,
+        out: &mut Vec<SpikeMsg>,
+    ) -> Result<bool, CommError> {
+        if self.drained[src] {
+            return Ok(true);
+        }
+        let inner = self.inner.clone();
+        let abs = inner.members[src];
+        let mut st = inner
+            .mesh
+            .shared
+            .state
+            .lock()
+            .map_err(|_| inner.poisoned())?;
+        let inbox = st.comms.entry(inner.id).or_default();
+        let Some(frames) = inbox.nb.get_mut(&self.seq) else {
+            return Ok(false);
+        };
+        let Some(i) = frames.iter().position(|f| f.src == abs) else {
+            return Ok(false);
+        };
+        let frame = frames.swap_remove(i);
+        if frames.is_empty() {
+            inbox.nb.remove(&self.seq);
+        }
+        drop(st);
+        *out = frame.spikes;
+        self.drained[src] = true;
+        self.round_max = self.round_max.max(frame.max_per_pair);
+        if frame.arrived > self.last_arrival {
+            self.last_arrival = frame.arrived;
+        }
+        inner
+            .stats()
+            .early_drained_sources
+            .fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    fn complete(
+        mut self,
+        recv: &mut Vec<Vec<SpikeMsg>>,
+    ) -> Result<CompletionTiming, CommError> {
+        let inner = self.inner.clone();
+        let mesh = &*inner.mesh;
+        let m = inner.members.len();
+        let t_enter = Instant::now();
+        recv.resize_with(m, Vec::new);
+        let mut wait_secs = 0.0;
+        let mut drain_secs = 0.0;
+        let mut last_blamed: Option<usize> = None;
+        loop {
+            let td = Instant::now();
+            let drained_src = self.drain_available(recv).map_err(|e| {
+                self.completed = true;
+                e
+            })?;
+            drain_secs += td.elapsed().as_secs_f64();
+            if let Some(src) = drained_src {
+                if wait_secs > 0.0 && src != inner.my_abs() {
+                    last_blamed = Some(src);
+                }
+            }
+            if self.drained.iter().all(|&d| d) {
+                break;
+            }
+            // blocked: wait watchdogged for more deposits; a dead peer
+            // whose deposit is missing fails immediately
+            let tw = Instant::now();
+            let mut st = mesh.shared.state.lock().map_err(|_| {
+                self.completed = true;
+                inner.poisoned()
+            })?;
+            let has_new = st
+                .comms
+                .entry(inner.id)
+                .or_default()
+                .nb
+                .get(&self.seq)
+                .is_some_and(|f| !f.is_empty());
+            if !has_new {
+                let missing: Vec<usize> = (0..m)
+                    .filter(|&s| !self.drained[s])
+                    .collect();
+                let dead_hit = missing
+                    .iter()
+                    .any(|&s| st.dead[inner.members[s]]);
+                let expired = mesh
+                    .timeout
+                    .map(|t| t_enter.elapsed() >= t)
+                    .unwrap_or(false);
+                if dead_hit || expired {
+                    drop(st);
+                    self.completed = true;
+                    inner
+                        .stats()
+                        .timeouts
+                        .fetch_add(1, Ordering::Relaxed);
+                    let present: Vec<usize> = (0..m)
+                        .filter(|&s| self.drained[s])
+                        .collect();
+                    return Err(CommError::Timeout {
+                        tier: inner.tier,
+                        op: "split-phase complete",
+                        rank: inner.rank,
+                        epoch: Some(self.seq),
+                        ring_slot: Some(self.ring_slot()),
+                        waited: t_enter.elapsed(),
+                        missing,
+                        present,
+                    });
+                }
+                let _unused = match mesh.timeout {
+                    Some(t) => {
+                        let left = t.saturating_sub(t_enter.elapsed());
+                        mesh.shared
+                            .cv
+                            .wait_timeout(st, left)
+                            .map_err(|_| {
+                                self.completed = true;
+                                inner.poisoned()
+                            })?
+                            .0
+                    }
+                    None => {
+                        mesh.shared.cv.wait(st).map_err(|_| {
+                            self.completed = true;
+                            inner.poisoned()
+                        })?
+                    }
+                };
+            }
+            wait_secs += tw.elapsed().as_secs_f64();
+        }
+        let stats = inner.stats();
+        stats.alltoall_calls.fetch_add(1, Ordering::Relaxed);
+        stats
+            .overlapped_exchanges
+            .fetch_add(1, Ordering::Relaxed);
+        stats
+            .complete_wait_nanos
+            .fetch_add((wait_secs * 1e9) as u64, Ordering::Relaxed);
+        // hidden latency: peer skew that elapsed between post and the
+        // completion entry while this rank was computing
+        let hidden_end = if self.last_arrival < t_enter {
+            self.last_arrival
+        } else {
+            t_enter
+        };
+        let hidden = hidden_end
+            .saturating_duration_since(self.posted_at)
+            .as_secs_f64();
+        stats
+            .hidden_nanos
+            .fetch_add((hidden * 1e9) as u64, Ordering::Relaxed);
+        inner.settle_quota(self.round_max as usize);
+        inner.outstanding.fetch_sub(1, Ordering::Relaxed);
+        if let Some(src) = last_blamed {
+            if wait_secs > 0.0 {
+                inner.record_blame(src, wait_secs);
+            }
+        }
+        self.completed = true;
+        Ok(CompletionTiming { wait_secs, drain_secs })
+    }
+
+    fn abandon(mut self) {
+        self.completed = true;
+        self.inner.outstanding.fetch_sub(1, Ordering::Relaxed);
+    }
+}

@@ -123,6 +123,36 @@ impl CommMode {
     }
 }
 
+/// Which communication fabric carries the collectives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Ranks as OS threads in one process over the shared-memory
+    /// `comm::World` — the historical (and default) backend.
+    Shmem,
+    /// One OS process per rank over Unix-domain sockets
+    /// (`comm::socket`) — the multi-process backend behind
+    /// `nsim launch`.  A socket-mode `simulate` invocation runs *one*
+    /// rank and rendezvouses with its peers through `--socket-dir`.
+    Socket,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "shmem" | "shared-memory" | "threads" => TransportKind::Shmem,
+            "socket" | "uds" | "multiprocess" => TransportKind::Socket,
+            other => bail!("unknown transport {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Shmem => "shmem",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
 /// How the update phase executes the neuron model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum UpdatePath {
@@ -474,6 +504,12 @@ pub struct RunConfig {
     pub exec: ExecMode,
     /// Blocking vs split-phase (overlapped) global exchange.
     pub comm: CommMode,
+    /// Which fabric carries the collectives: shared-memory threads in
+    /// one process (the default) or one process per rank over
+    /// Unix-domain sockets (`--transport socket`, driven by
+    /// `nsim launch`).  The spike trains are bit-identical either way;
+    /// only the substrate underneath the `Transport` trait changes.
+    pub transport: TransportKind,
     /// Split-phase pipeline depth: how many exchange rounds may be in
     /// flight per rank under `CommMode::Overlap` (1 = post one round and
     /// complete it before the next boundary, today's overlap; >1 keeps D
@@ -538,6 +574,7 @@ impl Default for RunConfig {
             update_path: UpdatePath::Native,
             exec: ExecMode::Pooled,
             comm: CommMode::Blocking,
+            transport: TransportKind::Shmem,
             comm_depth: 1,
             comm_quota: 1024,
             ranks_per_area: 1,
@@ -574,6 +611,9 @@ impl RunConfig {
         }
         if let Some(s) = args.str_opt("comm") {
             self.comm = CommMode::parse(&s)?;
+        }
+        if let Some(s) = args.str_opt("transport") {
+            self.transport = TransportKind::parse(&s)?;
         }
         self.comm_depth = args.usize_or("comm-depth", self.comm_depth)?;
         self.comm_quota = args.usize_or("quota", self.comm_quota)?;
@@ -648,6 +688,9 @@ impl RunConfig {
         }
         if let Some(s) = v.get("comm").and_then(Json::as_str) {
             cfg.comm = CommMode::parse(s)?;
+        }
+        if let Some(s) = v.get("transport").and_then(Json::as_str) {
+            cfg.transport = TransportKind::parse(s)?;
         }
         if let Some(x) = v.get("comm_depth").and_then(Json::as_usize) {
             cfg.comm_depth = x;
@@ -747,6 +790,16 @@ impl RunConfig {
             bail!(
                 "checkpoint_path must be non-empty when \
                  checkpoint_every > 0"
+            );
+        }
+        if self.transport == TransportKind::Socket
+            && (self.checkpoint_every > 0 || self.restore.is_some())
+        {
+            bail!(
+                "checkpoint/restore is not supported over the socket \
+                 transport yet: snapshots are written through the \
+                 shared-memory checkpoint context.  Run with \
+                 --transport shmem, or drop --checkpoint-every/--restore"
             );
         }
         self.faults.validate(self.m_ranks, self.comm_timeout)?;
@@ -1151,6 +1204,64 @@ mod tests {
         let cfg = RunConfig::from_json(&v).unwrap();
         assert!(cfg.trace);
         assert!(cfg.record_cycle_times);
+    }
+
+    #[test]
+    fn transport_parse_roundtrip_and_overrides() {
+        for t in [TransportKind::Shmem, TransportKind::Socket] {
+            assert_eq!(TransportKind::parse(t.name()).unwrap(), t);
+        }
+        assert_eq!(
+            TransportKind::parse("uds").unwrap(),
+            TransportKind::Socket
+        );
+        assert_eq!(
+            TransportKind::parse("multiprocess").unwrap(),
+            TransportKind::Socket
+        );
+        assert_eq!(
+            TransportKind::parse("threads").unwrap(),
+            TransportKind::Shmem
+        );
+        assert!(TransportKind::parse("bogus").is_err());
+
+        // conservative default: the in-process shared-memory world
+        assert_eq!(RunConfig::default().transport, TransportKind::Shmem);
+
+        let args =
+            Args::parse(["run", "--transport", "socket"]).unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Socket);
+
+        let v = json::parse(r#"{"transport": "socket"}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Socket);
+    }
+
+    #[test]
+    fn socket_transport_rejects_checkpointing() {
+        let cfg = RunConfig {
+            transport: TransportKind::Socket,
+            checkpoint_every: 2,
+            ..RunConfig::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("socket"),
+            "unexpected error: {err:#}"
+        );
+        let cfg = RunConfig {
+            transport: TransportKind::Socket,
+            restore: Some("prev.ckpt".to_string()),
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+        // plain socket runs validate fine
+        let cfg = RunConfig {
+            transport: TransportKind::Socket,
+            ..RunConfig::default()
+        };
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

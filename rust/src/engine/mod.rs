@@ -64,9 +64,12 @@ pub mod ringbuffer;
 pub mod update;
 
 use crate::comm::{
-    CommStatsSnapshot, TieredCommStats, Transport, WorldBuilder,
+    CommStatsSnapshot, SplitTransport, TieredCommStats, Transport,
+    WorldBuilder,
 };
-use crate::config::{CommMode, RunConfig, Strategy, UpdatePath};
+use crate::config::{
+    CommMode, RunConfig, Strategy, TransportKind, UpdatePath,
+};
 use crate::network::{Gid, ModelSpec};
 use crate::obs::blame::TieredBlame;
 use crate::obs::intervals::TierIntervalSummary;
@@ -174,6 +177,129 @@ pub fn placement_for(
     }
 }
 
+/// The cycle shape a run derives from model and config:
+/// `(s_cycles, epoch_cycles, steps_per_cycle)`, with the
+/// partial-tail-epoch guard applied.  Every backend — in-process and
+/// multi-process — derives the shape through this one function, so all
+/// processes of a socket run agree on it by construction.
+pub fn run_shape(
+    spec: &ModelSpec,
+    cfg: &RunConfig,
+) -> Result<(u64, u64, u64)> {
+    let steps_per_cycle = spec.d_min_steps() as u64;
+    let total_steps =
+        (cfg.t_model_ms / spec.h_ms).round().max(1.0) as u64;
+    let s_cycles = total_steps / steps_per_cycle;
+    anyhow::ensure!(
+        s_cycles >= 1,
+        "t_model shorter than one simulation cycle"
+    );
+    let epoch_cycles = if cfg.strategy.dual_pathways() {
+        (spec.delay_ratio() as u64).max(1)
+    } else {
+        1
+    };
+    // Guard the partial tail epoch: under the structure-aware strategy
+    // the global exchange only runs at epoch boundaries, so spikes
+    // collocated into the send buffers during a trailing partial epoch
+    // would silently never be exchanged.  Reject such runs instead.
+    if cfg.strategy.dual_pathways() {
+        anyhow::ensure!(
+            s_cycles % epoch_cycles == 0,
+            "run length of {s_cycles} cycles is not a multiple of the \
+             structure-aware communication epoch ({epoch_cycles} cycles): \
+             long-range spikes of the trailing partial epoch would never \
+             be exchanged; pick t_model as a multiple of {} ms",
+            epoch_cycles as f64 * steps_per_cycle as f64 * spec.h_ms,
+        );
+    }
+    Ok((s_cycles, epoch_cycles, steps_per_cycle))
+}
+
+/// One rank's share of a run, generic over the transport: split the
+/// local communicator (dual pathways), build the rank state
+/// collectively, validate the pipeline depth against the realized delay
+/// slack, restore from a snapshot part if resuming, and run the cycle
+/// loop.  The in-process engine calls this once per rank thread; the
+/// socket backend calls it once per *process*.
+#[allow(clippy::too_many_arguments)]
+fn run_rank<T: SplitTransport>(
+    spec: &ModelSpec,
+    cfg: &RunConfig,
+    placement: &Placement,
+    r: usize,
+    comm: &T,
+    updater: &Updater,
+    snapshot: Option<&Snapshot>,
+    ckpt: Option<CkptSched<'_>>,
+    tracer: Tracer,
+    s_cycles: u64,
+    start_cycle: u64,
+) -> Result<RankResult> {
+    // hierarchical communicators: dual-pathway runs split one local
+    // communicator per area group off the global world (collective:
+    // every rank calls split exactly once, colored by its group)
+    let local_comm = if cfg.strategy.dual_pathways() {
+        Some(
+            comm.split(placement.group_of_rank(r) as u64, r as u64)
+                .context("splitting the local communicator")?,
+        )
+    } else {
+        None
+    };
+    let mut state = RankState::build(
+        spec,
+        placement,
+        cfg.strategy,
+        cfg.comm,
+        cfg.comm_depth,
+        cfg.seed,
+        comm,
+        cfg.record_spikes,
+    )?;
+    // a pipeline deeper than the *realized* delay slack would force
+    // completing an exchange in the very cycle that needs its spikes;
+    // reduce the rank-local bound collectively so every rank takes the
+    // same accept/reject branch (no rank left at a barrier)
+    if cfg.comm == CommMode::Overlap && cfg.comm_depth > 1 {
+        let sustainable = comm
+            .allreduce_min_u64(state.max_sustainable_depth())
+            .context("depth-validation reduction")?;
+        anyhow::ensure!(
+            cfg.comm_depth as u64 <= sustainable,
+            "comm depth {} exceeds the realized delay \
+             slack: the most constrained rank can keep at \
+             most {} exchange(s) in flight before the \
+             causality deadline forces completion; lower \
+             --comm-depth to {} or pick a model whose \
+             remote delays exceed the min-delay cutoff by \
+             more cycles",
+            cfg.comm_depth,
+            sustainable,
+            sustainable,
+        );
+    }
+    if let Some(snap) = snapshot {
+        state
+            .restore_part(&snap.parts[r])
+            .with_context(|| format!("restoring rank {r} state"))?;
+    }
+    state.run(
+        comm,
+        local_comm.as_ref(),
+        updater,
+        RunOpts {
+            s_cycles,
+            start_cycle,
+            record_cycle_times: cfg.record_cycle_times,
+            exec: cfg.exec,
+            faults: cfg.faults.for_rank(r),
+            ckpt,
+            tracer,
+        },
+    )
+}
+
 /// Run the functional engine on `spec` with `cfg`.
 ///
 /// `updater_factory` builds the update executor once; `None` selects it
@@ -194,38 +320,18 @@ pub fn simulate_with(
     updater: &Updater,
 ) -> Result<SimResult> {
     cfg.validate()?;
-    let placement = placement_for(spec, cfg)?;
-    let steps_per_cycle = spec.d_min_steps() as u64;
-    let total_steps =
-        (cfg.t_model_ms / spec.h_ms).round().max(1.0) as u64;
-    let s_cycles = total_steps / steps_per_cycle;
     anyhow::ensure!(
-        s_cycles >= 1,
-        "t_model shorter than one simulation cycle"
+        cfg.transport == TransportKind::Shmem,
+        "simulate() runs the in-process shared-memory backend; a \
+         socket-transport config must go through simulate_socket (one \
+         process per rank, usually via `nsim launch`)"
     );
-    // Guard the partial tail epoch: under the structure-aware strategy
-    // the global exchange only runs at epoch boundaries, so spikes
-    // collocated into the send buffers during a trailing partial epoch
-    // would silently never be exchanged.  Reject such runs instead.
-    if cfg.strategy.dual_pathways() {
-        let epoch_cycles = (spec.delay_ratio() as u64).max(1);
-        anyhow::ensure!(
-            s_cycles % epoch_cycles == 0,
-            "run length of {s_cycles} cycles is not a multiple of the \
-             structure-aware communication epoch ({epoch_cycles} cycles): \
-             long-range spikes of the trailing partial epoch would never \
-             be exchanged; pick t_model as a multiple of {} ms",
-            epoch_cycles as f64 * steps_per_cycle as f64 * spec.h_ms,
-        );
-    }
+    let placement = placement_for(spec, cfg)?;
+    let (s_cycles, epoch_cycles, steps_per_cycle) =
+        run_shape(spec, cfg)?;
 
     // identity of the simulated state: a snapshot only restores into a
     // run that rebuilds the exact same deterministic structures
-    let epoch_cycles = if cfg.strategy.dual_pathways() {
-        (spec.delay_ratio() as u64).max(1)
-    } else {
-        1
-    };
     let fingerprint = Fingerprint {
         model: spec.name.clone(),
         n_neurons: spec.total_neurons(),
@@ -289,79 +395,23 @@ pub fn simulate_with(
                 let ckpt_ctx = &ckpt_ctx;
                 let trace_buf = &trace_buf;
                 scope.spawn(move || -> Result<RankResult> {
-                    // hierarchical communicators: dual-pathway runs
-                    // split one local communicator per area group off
-                    // the global world (collective: every rank calls
-                    // split exactly once, colored by its group)
-                    let local_comm = if cfg.strategy.dual_pathways() {
-                        Some(
-                            comm.split(
-                                placement.group_of_rank(r) as u64,
-                                r as u64,
-                            )
-                            .context("splitting the local communicator")?,
-                        )
-                    } else {
-                        None
-                    };
-                    let mut state = RankState::build(
+                    run_rank(
                         spec,
+                        cfg,
                         placement,
-                        cfg.strategy,
-                        cfg.comm,
-                        cfg.comm_depth,
-                        cfg.seed,
+                        r,
                         &comm,
-                        cfg.record_spikes,
-                    )?;
-                    // a pipeline deeper than the *realized* delay slack
-                    // would force completing an exchange in the very
-                    // cycle that needs its spikes; reduce the rank-local
-                    // bound collectively so every rank takes the same
-                    // accept/reject branch (no rank left at a barrier)
-                    if cfg.comm == CommMode::Overlap && cfg.comm_depth > 1 {
-                        let sustainable = comm
-                            .allreduce_min_u64(state.max_sustainable_depth())
-                            .context("depth-validation reduction")?;
-                        anyhow::ensure!(
-                            cfg.comm_depth as u64 <= sustainable,
-                            "comm depth {} exceeds the realized delay \
-                             slack: the most constrained rank can keep at \
-                             most {} exchange(s) in flight before the \
-                             causality deadline forces completion; lower \
-                             --comm-depth to {} or pick a model whose \
-                             remote delays exceed the min-delay cutoff by \
-                             more cycles",
-                            cfg.comm_depth,
-                            sustainable,
-                            sustainable,
-                        );
-                    }
-                    if let Some(snap) = snapshot.as_ref() {
-                        state.restore_part(&snap.parts[r]).with_context(
-                            || format!("restoring rank {r} state"),
-                        )?;
-                    }
-                    state.run(
-                        &comm,
-                        local_comm.as_ref(),
                         updater,
-                        RunOpts {
-                            s_cycles,
-                            start_cycle,
-                            record_cycle_times: cfg.record_cycle_times,
-                            exec: cfg.exec,
-                            faults: cfg.faults.for_rank(r),
-                            ckpt: ckpt_ctx.as_ref().map(|ctx| CkptSched {
-                                ctx,
-                                every_epochs: cfg.checkpoint_every,
-                            }),
-                            tracer: trace_buf
-                                .as_ref()
-                                .map_or_else(Tracer::off, |b| {
-                                    Tracer::new(b, r)
-                                }),
-                        },
+                        snapshot.as_ref(),
+                        ckpt_ctx.as_ref().map(|ctx| CkptSched {
+                            ctx,
+                            every_epochs: cfg.checkpoint_every,
+                        }),
+                        trace_buf
+                            .as_ref()
+                            .map_or_else(Tracer::off, |b| Tracer::new(b, r)),
+                        s_cycles,
+                        start_cycle,
                     )
                 })
             })
@@ -403,6 +453,114 @@ pub fn simulate_with(
         rank_times,
         mean_times,
         max_times,
+        spikes,
+        cycle_times,
+        s_cycles,
+        t_model_ms: cfg.t_model_ms,
+        rank_neurons,
+        rank_conns,
+        comm_stats: comm_tiers.combined(),
+        comm_tiers,
+        effective_comm_depth: match cfg.comm {
+            CommMode::Blocking => 1,
+            CommMode::Overlap => cfg.comm_depth as u64,
+        },
+        ring_pending,
+        epoch_cycles,
+        intervals,
+        blame,
+        spans,
+    })
+}
+
+/// Run **one rank** of a multi-process simulation over the socket
+/// transport: rendezvous with the peer processes through `dir`, run the
+/// same collective protocol as the in-process engine, and return this
+/// process's view of the result.
+///
+/// Every process derives the run shape from the same `(spec, cfg)`
+/// through [`run_shape`] and runs the identical [`run_rank`] body the
+/// in-process backend uses, so the merged spike trains are bit-identical
+/// to [`simulate`] by construction (asserted by the cross-process
+/// equivalence tests).  Per-rank vectors of the returned [`SimResult`]
+/// are filled only at `rank` — aggregation across processes is the
+/// launcher's job (`nsim launch` merges the per-rank spike files);
+/// `mean_times`/`max_times` are this process's own phase profile.
+#[cfg(unix)]
+pub fn simulate_socket(
+    spec: &ModelSpec,
+    cfg: &RunConfig,
+    rank: usize,
+    dir: &std::path::Path,
+) -> Result<SimResult> {
+    use crate::comm::socket::SocketWorldBuilder;
+
+    cfg.validate()?;
+    anyhow::ensure!(
+        cfg.transport == TransportKind::Socket,
+        "simulate_socket requires --transport socket"
+    );
+    anyhow::ensure!(
+        rank < cfg.m_ranks,
+        "socket rank {rank} out of range for {} ranks",
+        cfg.m_ranks
+    );
+    let updater = match cfg.update_path {
+        UpdatePath::Native => Updater::Native,
+        UpdatePath::Xla => crate::runtime::updater::xla_updater(spec)
+            .context("building XLA updater (run `make artifacts`?)")?,
+    };
+    let placement = placement_for(spec, cfg)?;
+    let (s_cycles, epoch_cycles, _steps_per_cycle) =
+        run_shape(spec, cfg)?;
+    let trace_buf = cfg.trace.then(|| TraceBuf::new(cfg.m_ranks));
+    let comm = SocketWorldBuilder::new(cfg.m_ranks, rank, dir)
+        .quota(cfg.comm_quota)
+        .depth(cfg.comm_depth)
+        .timeout(cfg.comm_timeout.map(Duration::from_secs_f64))
+        .connect()
+        .context("connecting the socket mesh")?;
+    let res = run_rank(
+        spec,
+        cfg,
+        &placement,
+        rank,
+        &comm,
+        &updater,
+        None,
+        None,
+        trace_buf
+            .as_ref()
+            .map_or_else(Tracer::off, |b| Tracer::new(b, rank)),
+        s_cycles,
+        0,
+    )?;
+
+    let mut rank_times = vec![PhaseTimes::new(); cfg.m_ranks];
+    let mut cycle_times = vec![Vec::new(); cfg.m_ranks];
+    let mut rank_neurons = vec![0usize; cfg.m_ranks];
+    let mut rank_conns = vec![(0usize, 0usize); cfg.m_ranks];
+    let mut ring_pending = vec![Vec::new(); cfg.m_ranks];
+    let mut intervals =
+        vec![TierIntervalSummary::default(); cfg.m_ranks];
+    rank_times[rank] = res.phase_times.clone();
+    cycle_times[rank] = res.cycle_times;
+    rank_neurons[rank] = res.n_neurons;
+    rank_conns[rank] = (res.n_conns_short, res.n_conns_long);
+    ring_pending[rank] = res.ring_pending;
+    intervals[rank] = res.intervals;
+    let mut spikes = res.spikes;
+    spikes.sort_unstable();
+    let comm_tiers = comm.tiered_stats();
+    let blame = comm.blame_report();
+    let spans = trace_buf.as_ref().map_or_else(Vec::new, |b| b.drain());
+
+    Ok(SimResult {
+        strategy: cfg.strategy,
+        m_ranks: cfg.m_ranks,
+        mean_times: res.phase_times.clone(),
+        max_times: res.phase_times,
+        rank_times,
         spikes,
         cycle_times,
         s_cycles,

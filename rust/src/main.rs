@@ -3,13 +3,14 @@
 //!
 //! Subcommands:
 //!   simulate   run the functional engine on a bundled model
+//!   launch     run one OS process per rank over the socket transport
 //!   figure     regenerate one figure of the paper (see --list)
 //!   figures    regenerate every figure
 //!   theory     print the analytical predictions (eqs 7/11/12/13-17)
 //!   info       print artifact/registry and model-zoo information
 
-use anyhow::{bail, Result};
-use nsim::config::{RunConfig, Strategy};
+use anyhow::{bail, Context, Result};
+use nsim::config::{RunConfig, Strategy, TransportKind};
 use nsim::figures::{run_figure, FigOptions, ALL_FIGURES};
 use nsim::models;
 use nsim::util::cli::Args;
@@ -27,6 +28,7 @@ fn run() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand() {
         Some("simulate") => cmd_simulate(&args),
+        Some("launch") => cmd_launch(&args),
         Some("figure") => cmd_figure(&args),
         Some("figures") => cmd_figures(&args),
         Some("theory") => cmd_theory(&args),
@@ -45,13 +47,18 @@ fn print_usage() {
          usage: nsim <command> [options]\n\
          \n\
          commands:\n\
-           simulate --model <sanity|mam-benchmark|mam> [--strategy s]\n\
+           simulate --model <sanity|deep-pipeline|mam-benchmark|mam>\n\
+                    [--strategy s]\n\
                     [--ranks M] [--threads T] [--t-model ms] [--seed n]\n\
                     [--scale f] [--areas n] [--update-path native|xla]\n\
                     [--exec sequential|pooled|pooled-channels]\n\
                     [--comm blocking|overlap] [--comm-depth D]\n\
                     [--quota spikes] [--ranks-per-area R]\n\
+                    [--transport shmem|socket]       comm fabric\n\
+                    [--socket-rank r] [--socket-dir d]  (socket mode:\n\
+                    this process runs rank r; usually set by launch)\n\
                     [--record-spikes]\n\
+                    [--spikes-out path]              spike train as text\n\
                     [--record-cycle-times]           raw per-cycle vectors\n\
                     [--trace out.json]               Perfetto span trace\n\
                     [--stats-json out.json]          machine-readable report\n\
@@ -62,6 +69,11 @@ fn print_usage() {
                     [--straggler r:factor:from:to[,..]]\n\
                     [--delay-deposit r:ms:from:to[,..]]\n\
                     [--kill-at r:epoch[,..]]\n\
+           launch   --ranks M [simulate options]\n\
+                    spawn M `simulate` processes over the socket\n\
+                    transport, merge their --spikes-out files, and\n\
+                    propagate any child failure (per-process --trace /\n\
+                    --stats-json outputs get a .rank<r> suffix)\n\
            figure <name> [--t-model ms] [--seed n] [--out dir]\n\
            figures [--t-model ms] [--out dir]\n\
            theory [--d D] [--ranks M] [--threads T] [--ranks-per-area R]\n\
@@ -85,6 +97,11 @@ fn build_model(
             let areas = args.usize_or("areas", m_ranks.max(2))?;
             models::sanity_net(n, areas)
         }
+        "deep-pipeline" => {
+            let n = args.usize_or("n-per-area", 240)? as u32;
+            let areas = args.usize_or("areas", m_ranks.max(2))?;
+            models::deep_pipeline_net(n, areas)
+        }
         "mam-benchmark" | "mamb" => {
             let areas = args.usize_or("areas", m_ranks.max(2))?;
             models::mam_benchmark(areas, scale, d_min_inter)
@@ -97,6 +114,7 @@ fn build_model(
 fn cmd_simulate(args: &Args) -> Result<()> {
     let trace_path = args.str_opt("trace");
     let stats_path = args.str_opt("stats-json");
+    let spikes_path = args.str_opt("spikes-out");
     if trace_path.as_deref() == Some("true") {
         bail!("--trace needs an output path, e.g. --trace trace.json");
     }
@@ -106,6 +124,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
              stats.json"
         );
     }
+    if spikes_path.as_deref() == Some("true") {
+        bail!(
+            "--spikes-out needs an output path, e.g. --spikes-out \
+             spikes.txt"
+        );
+    }
     // raw per-cycle time vectors are opt-in (--record-cycle-times):
     // the streaming interval histograms below are always on and bounded
     let cfg = RunConfig {
@@ -113,12 +137,29 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         ..RunConfig::default()
     }
     .override_from_args(args)?;
+    let socket_rank = args.str_opt("socket-rank");
+    let socket_dir = args.str_opt("socket-dir");
+    if cfg.transport == TransportKind::Socket {
+        if socket_rank.is_none() || socket_dir.is_none() {
+            bail!(
+                "--transport socket runs one rank per process and needs \
+                 --socket-rank and --socket-dir (usually supplied by \
+                 `nsim launch`)"
+            );
+        }
+    } else if socket_rank.is_some() || socket_dir.is_some() {
+        bail!(
+            "--socket-rank/--socket-dir only apply with \
+             --transport socket"
+        );
+    }
     let spec = build_model(args, cfg.m_ranks)?;
     args.finish()?;
 
     println!(
         "model {} | {} areas | {} neurons | strategy {} | M={} T={} \
-         R/area={} | exec {} | comm {} (depth {}) | T_model {} ms | D={}",
+         R/area={} | exec {} | comm {} (depth {}) | transport {}{} | \
+         T_model {} ms | D={}",
         spec.name,
         spec.n_areas(),
         spec.total_neurons(),
@@ -129,11 +170,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cfg.exec.name(),
         cfg.comm.name(),
         cfg.comm_depth,
+        cfg.transport.name(),
+        socket_rank
+            .as_deref()
+            .map(|r| format!(" [rank {r}]"))
+            .unwrap_or_default(),
         cfg.t_model_ms,
         spec.delay_ratio(),
     );
     let t0 = std::time::Instant::now();
-    let res = nsim::engine::simulate(&spec, &cfg)?;
+    let res = if cfg.transport == TransportKind::Socket {
+        run_socket_rank(
+            &spec,
+            &cfg,
+            socket_rank.as_deref().unwrap_or_default(),
+            socket_dir.as_deref().unwrap_or_default(),
+        )?
+    } else {
+        nsim::engine::simulate(&spec, &cfg)?
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     let mut table = Table::new(&["phase", "mean s", "share", "slowest s"]);
@@ -248,6 +303,223 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         )?;
         println!("stats: -> {p}");
     }
+    if let Some(p) = spikes_path {
+        write_spike_file(&p, &res.spikes)?;
+        println!("spikes: {} -> {p}", res.spikes.len());
+    }
+    Ok(())
+}
+
+/// Dispatch one socket-transport rank (Unix only — the transport is
+/// built on Unix-domain sockets).
+#[cfg(unix)]
+fn run_socket_rank(
+    spec: &nsim::network::ModelSpec,
+    cfg: &RunConfig,
+    rank: &str,
+    dir: &str,
+) -> Result<nsim::engine::SimResult> {
+    let rank: usize = rank
+        .parse()
+        .with_context(|| format!("bad --socket-rank {rank:?}"))?;
+    nsim::engine::simulate_socket(
+        spec,
+        cfg,
+        rank,
+        std::path::Path::new(dir),
+    )
+}
+
+#[cfg(not(unix))]
+fn run_socket_rank(
+    _spec: &nsim::network::ModelSpec,
+    _cfg: &RunConfig,
+    _rank: &str,
+    _dir: &str,
+) -> Result<nsim::engine::SimResult> {
+    bail!("--transport socket requires a Unix platform")
+}
+
+/// One spike per line, `step gid`, already in the canonical
+/// `(step, gid)` order — the textual form the launcher merges and the
+/// equivalence checks diff.
+fn write_spike_file(path: &str, spikes: &[(u64, u32)]) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(spikes.len() * 12);
+    for &(step, gid) in spikes {
+        let _ = writeln!(out, "{step} {gid}");
+    }
+    std::fs::write(path, out)
+        .with_context(|| format!("writing spike file {path}"))
+}
+
+/// `nsim launch`: spawn `--ranks` copies of `simulate` over the socket
+/// transport, one OS process per rank, and fail if any child fails.
+///
+/// All simulate options are forwarded verbatim to every child, with
+/// three exceptions: per-process output paths (`--trace`,
+/// `--stats-json`) get a `.rank<r>` suffix so the processes do not
+/// clobber each other; `--spikes-out` becomes per-rank files the
+/// launcher merges (and deletes) after all children exit; and the
+/// launcher owns `--ranks`/`--transport`/`--socket-*` itself.
+fn cmd_launch(args: &Args) -> Result<()> {
+    let ranks = args.usize_or("ranks", 2)?;
+    anyhow::ensure!(ranks >= 1, "launch needs --ranks >= 1");
+    let spikes_out = args.str_opt("spikes-out");
+    if spikes_out.as_deref() == Some("true") {
+        bail!(
+            "--spikes-out needs an output path, e.g. --spikes-out \
+             spikes.txt"
+        );
+    }
+    // everything else forwards verbatim — deliberately no
+    // args.finish() here: the children validate their own options
+
+    enum Fwd {
+        /// Forwarded to every child unchanged.
+        Plain(String),
+        /// A per-process output path: child r gets `<base>.rank<r>`.
+        RankPath { key: String, base: String },
+    }
+
+    // re-derive the forwarded argument list from the raw argv (Args
+    // normalizes --key=value and --key value identically, but we must
+    // preserve *which* tokens belong to which option to rewrite them)
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    anyhow::ensure!(
+        raw.first().map(String::as_str) == Some("launch"),
+        "launch must be the first argument"
+    );
+    let mut fwd: Vec<Fwd> = Vec::new();
+    let mut i = 1;
+    while i < raw.len() {
+        let Some(body) = raw[i].strip_prefix("--") else {
+            fwd.push(Fwd::Plain(raw[i].clone()));
+            i += 1;
+            continue;
+        };
+        let (key, inline_val) = match body.split_once('=') {
+            Some((k, v)) => (k.to_string(), Some(v.to_string())),
+            None => (body.to_string(), None),
+        };
+        // same value-detection rule as Args::parse: the next token is
+        // this option's value iff it does not start with "--"
+        let sep_val = if inline_val.is_none() {
+            raw.get(i + 1)
+                .filter(|n| !n.starts_with("--"))
+                .cloned()
+        } else {
+            None
+        };
+        i += 1 + sep_val.is_some() as usize;
+        let val = inline_val.or(sep_val);
+        match key.as_str() {
+            // launcher-owned: never forwarded (the launcher re-issues
+            // --ranks and the socket wiring itself)
+            "ranks" | "spikes-out" | "transport" | "socket-rank"
+            | "socket-dir" => {}
+            // per-process outputs: suffixed per rank
+            "trace" | "stats-json" => {
+                let base = val.ok_or_else(|| {
+                    anyhow::anyhow!("--{key} needs an output path")
+                })?;
+                fwd.push(Fwd::RankPath { key, base });
+            }
+            _ => {
+                fwd.push(Fwd::Plain(format!("--{key}")));
+                if let Some(v) = val {
+                    fwd.push(Fwd::Plain(v));
+                }
+            }
+        }
+    }
+
+    let dir = std::env::temp_dir()
+        .join(format!("nsim-launch-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let exe = std::env::current_exe().context("locating nsim binary")?;
+    println!(
+        "launch: {ranks} ranks over the socket transport in {}",
+        dir.display()
+    );
+    let mut children = Vec::with_capacity(ranks);
+    for r in 0..ranks {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("simulate");
+        for f in &fwd {
+            match f {
+                Fwd::Plain(s) => {
+                    cmd.arg(s);
+                }
+                Fwd::RankPath { key, base } => {
+                    cmd.arg(format!("--{key}"));
+                    cmd.arg(format!("{base}.rank{r}"));
+                }
+            }
+        }
+        cmd.arg("--ranks").arg(ranks.to_string());
+        cmd.arg("--transport").arg("socket");
+        cmd.arg("--socket-rank").arg(r.to_string());
+        cmd.arg("--socket-dir").arg(&dir);
+        if let Some(base) = &spikes_out {
+            cmd.arg("--spikes-out").arg(format!("{base}.rank{r}"));
+        }
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning rank {r}"))?;
+        children.push((r, child));
+    }
+    let mut failures = Vec::new();
+    for (r, mut child) in children {
+        let status = child
+            .wait()
+            .with_context(|| format!("waiting for rank {r}"))?;
+        if !status.success() {
+            failures.push((r, status));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    if !failures.is_empty() {
+        for (r, status) in &failures {
+            eprintln!("launch: rank {r} failed ({status})");
+        }
+        bail!("{} of {ranks} rank process(es) failed", failures.len());
+    }
+    if let Some(base) = &spikes_out {
+        let mut all: Vec<(u64, u64)> = Vec::new();
+        for r in 0..ranks {
+            let part = format!("{base}.rank{r}");
+            let text = std::fs::read_to_string(&part)
+                .with_context(|| format!("reading {part}"))?;
+            for line in text.lines() {
+                let mut it = line.split_whitespace();
+                let step: u64 = it
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .with_context(|| format!("bad spike line {line:?}"))?;
+                let gid: u64 = it
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .with_context(|| format!("bad spike line {line:?}"))?;
+                all.push((step, gid));
+            }
+            let _ = std::fs::remove_file(&part);
+        }
+        // per-rank trains are already (step, gid)-sorted; the global
+        // sort merges them into the canonical order of the in-process
+        // engine, which is what the equivalence checks diff against
+        all.sort_unstable();
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(all.len() * 12);
+        for (step, gid) in &all {
+            let _ = writeln!(out, "{step} {gid}");
+        }
+        std::fs::write(base, out)
+            .with_context(|| format!("writing merged {base}"))?;
+        println!("launch: merged {} spikes -> {base}", all.len());
+    }
+    println!("launch: all {ranks} ranks completed");
     Ok(())
 }
 

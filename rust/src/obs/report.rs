@@ -201,6 +201,7 @@ pub fn run_report(model_name: &str, cfg: &RunConfig, res: &SimResult) -> Json {
                 ("exec", cfg.exec.name().into()),
                 ("comm", cfg.comm.name().into()),
                 ("comm_depth", cfg.comm_depth.into()),
+                ("transport", cfg.transport.name().into()),
                 ("ranks_per_area", cfg.ranks_per_area.into()),
                 ("m_ranks", cfg.m_ranks.into()),
                 ("threads_per_rank", cfg.threads_per_rank.into()),
@@ -325,6 +326,9 @@ mod tests {
         ] {
             assert!(doc.get(key).is_some(), "missing section {key}");
         }
+        let transport =
+            doc.get("config").unwrap().get("transport").unwrap();
+        assert_eq!(transport.as_str(), Some("shmem"));
         let text = crate::util::json::to_string_pretty(&doc);
         let back = crate::util::json::parse(&text).unwrap();
         assert_eq!(back, doc);

@@ -1,0 +1,198 @@
+//! Cross-process equivalence: `nsim launch` (one OS process per rank
+//! over the Unix-domain-socket transport) must reproduce the in-process
+//! shared-memory engine bit-identically — same model, same seed, same
+//! `(step, gid)` spike train — across comm mode × depth × hierarchical
+//! splitting.  Plus the failure side: a killed rank process turns into a
+//! nonzero launcher exit with the watchdog naming the dead rank, never a
+//! hang.
+//!
+//! These tests spawn the real `nsim` binary (`CARGO_BIN_EXE_nsim`), so
+//! they exercise the whole stack: CLI parsing, the socket rendezvous,
+//! the wire protocol, per-rank spike files and the launcher's merge.
+
+#![cfg(unix)]
+
+use std::process::Command;
+
+use nsim::config::{CommMode, RunConfig, Strategy};
+use nsim::engine::simulate;
+use nsim::models;
+
+fn nsim_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_nsim")
+}
+
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("nsim-mp-{}-{tag}.spikes", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn read_spikes(path: &str) -> Vec<(u64, u32)> {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {path}: {e}"));
+    text.lines()
+        .map(|line| {
+            let mut it = line.split_whitespace();
+            let step = it.next().unwrap().parse().unwrap();
+            let gid = it.next().unwrap().parse().unwrap();
+            (step, gid)
+        })
+        .collect()
+}
+
+/// Run `nsim launch --ranks M <extra>` and return the merged spike
+/// train.  The launcher inherits its children's stdio, so any rank's
+/// diagnostics surface in the captured output on failure.
+fn launch_spikes(ranks: usize, tag: &str, extra: &[&str]) -> Vec<(u64, u32)> {
+    let out_path = tmp_path(tag);
+    let output = Command::new(nsim_bin())
+        .arg("launch")
+        .args(["--ranks", &ranks.to_string()])
+        .args(extra)
+        .args(["--spikes-out", &out_path])
+        .output()
+        .expect("running nsim launch");
+    assert!(
+        output.status.success(),
+        "launch failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        output.status,
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr),
+    );
+    let spikes = read_spikes(&out_path);
+    let _ = std::fs::remove_file(&out_path);
+    spikes
+}
+
+#[test]
+fn socket_matches_inprocess_blocking_conventional() {
+    let spec = models::sanity_net(240, 4).unwrap();
+    let cfg = RunConfig {
+        strategy: Strategy::Conventional,
+        m_ranks: 4,
+        threads_per_rank: 2,
+        t_model_ms: 100.0,
+        seed: 12,
+        record_spikes: true,
+        ..RunConfig::default()
+    };
+    let want = simulate(&spec, &cfg).expect("in-process run").spikes;
+    assert!(
+        want.len() > 100,
+        "network too quiet for a meaningful test: {} spikes",
+        want.len()
+    );
+    let got = launch_spikes(4, "conv", &[
+        "--model", "sanity", "--n-per-area", "240", "--areas", "4",
+        "--strategy", "conventional", "--threads", "2",
+        "--t-model", "100", "--seed", "12",
+    ]);
+    assert_eq!(want, got, "socket run diverged from in-process run");
+}
+
+#[test]
+fn socket_matches_inprocess_overlap_depth2() {
+    let spec = models::deep_pipeline_net(240, 4).unwrap();
+    let cfg = RunConfig {
+        strategy: Strategy::StructureAware,
+        m_ranks: 4,
+        threads_per_rank: 1,
+        t_model_ms: 100.0,
+        seed: 12,
+        comm: CommMode::Overlap,
+        comm_depth: 2,
+        record_spikes: true,
+        ..RunConfig::default()
+    };
+    let want = simulate(&spec, &cfg).expect("in-process run").spikes;
+    assert!(
+        want.len() > 100,
+        "network too quiet for a meaningful test: {} spikes",
+        want.len()
+    );
+    let got = launch_spikes(4, "overlap", &[
+        "--model", "deep-pipeline", "--n-per-area", "240", "--areas",
+        "4", "--strategy", "structure-aware", "--threads", "1",
+        "--comm", "overlap", "--comm-depth", "2",
+        "--t-model", "100", "--seed", "12",
+    ]);
+    assert_eq!(want, got, "socket run diverged from in-process run");
+}
+
+#[test]
+fn socket_matches_inprocess_hierarchical_split() {
+    // 4 areas x 2-rank groups on 8 ranks: the dual-pathway split gives
+    // every process a global and a local socket sub-communicator
+    let spec = models::deep_pipeline_net(240, 4).unwrap();
+    let cfg = RunConfig {
+        strategy: Strategy::StructureAware,
+        m_ranks: 8,
+        threads_per_rank: 1,
+        ranks_per_area: 2,
+        t_model_ms: 100.0,
+        seed: 12,
+        record_spikes: true,
+        ..RunConfig::default()
+    };
+    let want = simulate(&spec, &cfg).expect("in-process run").spikes;
+    assert!(
+        want.len() > 100,
+        "network too quiet for a meaningful test: {} spikes",
+        want.len()
+    );
+    let got = launch_spikes(8, "hier", &[
+        "--model", "deep-pipeline", "--n-per-area", "240", "--areas",
+        "4", "--strategy", "structure-aware", "--threads", "1",
+        "--ranks-per-area", "2", "--t-model", "100", "--seed", "12",
+    ]);
+    assert_eq!(want, got, "socket run diverged from in-process run");
+}
+
+#[test]
+fn launch_kill_at_fails_with_watchdog_naming_dead_rank() {
+    let out_path = tmp_path("kill");
+    let output = Command::new(nsim_bin())
+        .arg("launch")
+        .args(["--ranks", "2"])
+        .args([
+            "--model", "sanity", "--n-per-area", "120", "--areas", "2",
+            "--threads", "1", "--t-model", "100", "--seed", "12",
+            "--kill-at", "1:1", "--comm-timeout", "2",
+        ])
+        .args(["--spikes-out", &out_path])
+        .output()
+        .expect("running nsim launch");
+    let _ = std::fs::remove_file(&out_path);
+    assert!(
+        !output.status.success(),
+        "a killed rank must fail the launch"
+    );
+    let all = format!(
+        "{}{}",
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr),
+    );
+    // the killed rank reports its own injected fault...
+    assert!(
+        all.contains("fault injection: rank 1 killed"),
+        "missing the killed rank's diagnostic:\n{all}"
+    );
+    // ...and the survivor's watchdog names the dead rank instead of
+    // hanging on it
+    assert!(
+        all.contains("comm watchdog: rank 0 timed out"),
+        "missing the survivor's watchdog diagnostic:\n{all}"
+    );
+    assert!(
+        all.contains("missing ranks [1]"),
+        "watchdog does not name the dead rank:\n{all}"
+    );
+    // the launcher itself points at the failing rank processes
+    assert!(
+        all.contains("launch: rank 1 failed")
+            && all.contains("launch: rank 0 failed"),
+        "launcher did not attribute the failures:\n{all}"
+    );
+}

@@ -1,0 +1,420 @@
+//! Transport conformance: the behavioral contract every
+//! [`SplitTransport`] backend must honor, written once and instantiated
+//! for both backends — the in-process shared-memory `World` and the
+//! Unix-domain-socket mesh (exercised here as one mesh of in-process
+//! threads; the wire path, framing and demultiplexer are exactly the
+//! ones the multi-process launcher uses).
+//!
+//! Covered invariants: per-pair payload routing and order across
+//! repeated rounds (barrier/sequence framing), quota growth mid-flight,
+//! `allreduce_min_u64` round isolation, split sub-world isolation and
+//! `(key, rank)` sub-rank ordering, the depth-D split-phase ring with
+//! early per-source drains and slot recycling, and watchdog timeouts
+//! that name the missing rank.
+
+use std::time::{Duration, Instant};
+
+use nsim::comm::{
+    CommError, Communicator, Pending, SpikeMsg, SplitTransport,
+    Transport, World, WorldBuilder,
+};
+
+/// Per-rank transport factory.  The shared-memory fabric hands out
+/// communicators of one pre-built `World`; the socket fabric performs a
+/// real rendezvous per rank over a private socket directory.
+trait Fabric: Sync {
+    type T: SplitTransport + Send;
+    fn connect(&self, rank: usize) -> Self::T;
+}
+
+struct ShmemFabric {
+    world: World,
+}
+
+fn shmem(m: usize, quota: usize, depth: usize, ms: u64) -> ShmemFabric {
+    ShmemFabric {
+        world: WorldBuilder::new(m)
+            .quota(quota)
+            .depth(depth)
+            .timeout(Some(Duration::from_millis(ms)))
+            .build(),
+    }
+}
+
+impl Fabric for ShmemFabric {
+    type T = Communicator;
+    fn connect(&self, rank: usize) -> Communicator {
+        self.world.communicator(rank)
+    }
+}
+
+#[cfg(unix)]
+struct SocketFabric {
+    m: usize,
+    quota: usize,
+    depth: usize,
+    timeout: Duration,
+    dir: std::path::PathBuf,
+}
+
+#[cfg(unix)]
+fn socket(
+    m: usize,
+    quota: usize,
+    depth: usize,
+    ms: u64,
+    tag: &str,
+) -> SocketFabric {
+    let dir = std::env::temp_dir()
+        .join(format!("nsim-conf-{}-{tag}", std::process::id()));
+    SocketFabric {
+        m,
+        quota,
+        depth,
+        timeout: Duration::from_millis(ms),
+        dir,
+    }
+}
+
+#[cfg(unix)]
+impl Fabric for SocketFabric {
+    type T = nsim::comm::socket::SocketComm;
+    fn connect(&self, rank: usize) -> Self::T {
+        nsim::comm::socket::SocketWorldBuilder::new(
+            self.m, rank, &self.dir,
+        )
+        .quota(self.quota)
+        .depth(self.depth)
+        .timeout(Some(self.timeout))
+        .connect()
+        .expect("socket rendezvous failed")
+    }
+}
+
+#[cfg(unix)]
+impl Drop for SocketFabric {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Run `body(rank, transport)` on one thread per rank.  A panicking
+/// rank propagates out of the scope and fails the test; the watchdog
+/// deadline armed on every fabric keeps the surviving ranks from
+/// hanging on the dead one.
+fn run_ranks<F: Fabric>(
+    fab: &F,
+    m: usize,
+    body: impl Fn(usize, F::T) + Sync,
+) {
+    std::thread::scope(|s| {
+        for r in 0..m {
+            let body = &body;
+            s.spawn(move || body(r, fab.connect(r)));
+        }
+    });
+}
+
+fn msg(source: u32, cycle: u32) -> SpikeMsg {
+    SpikeMsg { source, cycle }
+}
+
+// ---------------------------------------------------------------- //
+// generic contract checks                                          //
+// ---------------------------------------------------------------- //
+
+/// Every (src, dst) pair carries a distinct payload across repeated
+/// rounds: nothing leaks across pairs or rounds, per-pair order is
+/// preserved, and unequal per-pair counts are routed exactly.
+fn check_alltoall_routing<F: Fabric>(fab: &F, m: usize) {
+    run_ranks(fab, m, |r, comm| {
+        assert_eq!(comm.rank(), r);
+        assert_eq!(comm.m_ranks(), m);
+        for round in 0..3u32 {
+            let mut send: Vec<Vec<SpikeMsg>> = (0..m)
+                .map(|d| {
+                    (0..(r + d + 1) as u32)
+                        .map(|i| msg((100 * r + 10 * d) as u32 + i, round))
+                        .collect()
+                })
+                .collect();
+            let mut recv = Vec::new();
+            comm.alltoall_into(&mut send, &mut recv).expect("alltoall");
+            assert_eq!(recv.len(), m);
+            for (src, got) in recv.iter().enumerate() {
+                let want: Vec<SpikeMsg> = (0..(src + r + 1) as u32)
+                    .map(|i| msg((100 * src + 10 * r) as u32 + i, round))
+                    .collect();
+                assert_eq!(
+                    got, &want,
+                    "rank {r} from {src} in round {round}"
+                );
+            }
+        }
+    });
+}
+
+/// Starting from a quota of 1, bursts far beyond it must still arrive
+/// complete and in order (the resize protocol settles mid-flight), and
+/// the settled quota covers the observed maximum.
+fn check_quota_resize<F: Fabric>(fab: &F, m: usize) {
+    run_ranks(fab, m, |r, comm| {
+        assert_eq!(comm.quota(), 1);
+        for &burst in &[64usize, 3, 128] {
+            let mut send: Vec<Vec<SpikeMsg>> = (0..m)
+                .map(|d| {
+                    (0..burst)
+                        .map(|i| msg((4096 * r + 512 * d + i) as u32, 9))
+                        .collect()
+                })
+                .collect();
+            let mut recv = Vec::new();
+            comm.alltoall_into(&mut send, &mut recv).expect("alltoall");
+            for (src, got) in recv.iter().enumerate() {
+                assert_eq!(got.len(), burst, "rank {r} from {src}");
+                for (i, s) in got.iter().enumerate() {
+                    assert_eq!(
+                        s.source,
+                        (4096 * src + 512 * r + i) as u32
+                    );
+                }
+            }
+        }
+        assert!(comm.quota() >= 128, "quota never settled");
+    });
+}
+
+/// `allreduce_min_u64` rounds never mix: ten back-to-back reductions
+/// with distinct per-round values each return their own global minimum.
+fn check_allreduce_rounds<F: Fabric>(fab: &F, m: usize) {
+    run_ranks(fab, m, |r, comm| {
+        for round in 0..10u64 {
+            let mine = round * 100 + (r as u64 * 7 + round) % 50;
+            let got = comm.allreduce_min_u64(mine).expect("allreduce");
+            let want = (0..m as u64)
+                .map(|q| round * 100 + (q * 7 + round) % 50)
+                .min()
+                .unwrap();
+            assert_eq!(got, want, "rank {r} in round {round}");
+        }
+    });
+}
+
+/// `split(color, key)` groups by color, orders sub-ranks by `(key,
+/// parent rank)`, and fully isolates the sub-worlds' traffic.
+fn check_split_isolation<F: Fabric>(fab: &F) {
+    let m = 4;
+    run_ranks(fab, m, |r, comm| {
+        let color = (r % 2) as u64;
+        // inverted keys: the higher parent rank of each color pair
+        // must become sub-rank 0
+        let key = (m - r) as u64;
+        let sub = comm.split(color, key).expect("split");
+        assert_eq!(sub.m_ranks(), 2);
+        let my_sub = if r < 2 { 1 } else { 0 };
+        assert_eq!(sub.rank(), my_sub, "parent rank {r}");
+        let peer = (r + 2) % m; // same color, other member
+        let mut send: Vec<Vec<SpikeMsg>> = (0..2)
+            .map(|d| vec![msg((10 * r + d) as u32, 7)])
+            .collect();
+        let mut recv = Vec::new();
+        sub.alltoall_into(&mut send, &mut recv).expect("sub alltoall");
+        assert_eq!(recv.len(), 2);
+        // from the peer: the message it addressed to my sub-rank;
+        // from myself: my own self-addressed message
+        assert_eq!(recv[1 - my_sub], vec![msg(
+            (10 * peer + my_sub) as u32,
+            7,
+        )]);
+        assert_eq!(recv[my_sub], vec![msg((10 * r + my_sub) as u32, 7)]);
+        // the sub-world's reduction only sees its own color
+        let got = sub.allreduce_min_u64(100 + r as u64).expect("reduce");
+        assert_eq!(got, 100 + r.min(peer) as u64);
+    });
+}
+
+/// Depth-2 split-phase pipeline: two exchanges in flight, epochs never
+/// mix, and six more epochs recycle every one of the `2·depth` ring
+/// slots with correct payloads.
+fn check_depth_ring<F: Fabric>(fab: &F, m: usize) {
+    run_ranks(fab, m, |r, comm| {
+        let payload = |e: u32, src: usize, dst: usize| {
+            vec![msg((1000 * e as usize + 10 * src + dst) as u32, e)]
+        };
+        let sends = |e: u32| -> Vec<Vec<SpikeMsg>> {
+            (0..m).map(|d| payload(e, r, d)).collect()
+        };
+        let check = |e: u32, recv: &[Vec<SpikeMsg>]| {
+            assert_eq!(recv.len(), m);
+            for (src, got) in recv.iter().enumerate() {
+                assert_eq!(
+                    got,
+                    &payload(e, src, r),
+                    "rank {r} from {src} in epoch {e}"
+                );
+            }
+        };
+        let mut pending = std::collections::VecDeque::new();
+        for e in 0..8u32 {
+            let mut s = sends(e);
+            pending.push_back((e, comm.alltoall_start(&mut s).unwrap()));
+            assert!(s.iter().all(Vec::is_empty), "send bufs not drained");
+            if pending.len() == 2 {
+                let (done, p) = pending.pop_front().unwrap();
+                let mut recv = Vec::new();
+                p.complete(&mut recv).expect("complete");
+                check(done, &recv);
+            }
+        }
+        while let Some((done, p)) = pending.pop_front() {
+            let mut recv = Vec::new();
+            p.complete(&mut recv).expect("complete");
+            check(done, &recv);
+        }
+    });
+}
+
+/// `try_complete_source` drains one source early without blocking; the
+/// final `complete` skips it and still delivers everyone else.
+fn check_early_drain<F: Fabric>(fab: &F, m: usize) {
+    run_ranks(fab, m, |r, comm| {
+        let mut send: Vec<Vec<SpikeMsg>> = (0..m)
+            .map(|d| vec![msg((10 * r + d) as u32, 3)])
+            .collect();
+        let mut p = comm.alltoall_start(&mut send).expect("start");
+        let src = (r + 1) % m;
+        let mut early = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !p.try_complete_source(src, &mut early).expect("try") {
+            assert!(
+                Instant::now() < deadline,
+                "rank {r}: source {src} never arrived"
+            );
+            std::thread::yield_now();
+        }
+        assert_eq!(early, vec![msg((10 * src + r) as u32, 3)]);
+        // a second call reports the drain without touching `out`
+        let mut untouched = vec![msg(u32::MAX, 0)];
+        assert!(p.try_complete_source(src, &mut untouched).unwrap());
+        assert_eq!(untouched, vec![msg(u32::MAX, 0)]);
+        let mut recv = Vec::new();
+        p.complete(&mut recv).expect("complete");
+        for (s, got) in recv.iter().enumerate() {
+            if s == src {
+                continue; // early-drained: complete() skipped it
+            }
+            assert_eq!(
+                got,
+                &vec![msg((10 * s + r) as u32, 3)],
+                "rank {r} from {s}"
+            );
+        }
+    });
+}
+
+/// A rank that never shows up trips the watchdog on its peer, and the
+/// typed timeout names exactly the missing rank.
+fn check_timeout_names_missing<F: Fabric>(fab: &F) {
+    run_ranks(fab, 2, |r, comm| {
+        if r == 1 {
+            // never participates — outlive the peer's watchdog so the
+            // deadline (not our teardown) is what fires first
+            std::thread::sleep(Duration::from_millis(600));
+            drop(comm);
+            return;
+        }
+        let mut send: Vec<Vec<SpikeMsg>> =
+            (0..2).map(|_| Vec::new()).collect();
+        let mut recv = Vec::new();
+        match comm.alltoall_into(&mut send, &mut recv) {
+            Err(CommError::Timeout { missing, present, rank, .. }) => {
+                assert_eq!(rank, 0);
+                assert_eq!(missing, vec![1]);
+                assert!(!present.contains(&1));
+            }
+            Err(e) => panic!("expected a timeout, got: {e}"),
+            Ok(_) => panic!("the exchange cannot have completed"),
+        }
+    });
+}
+
+// ---------------------------------------------------------------- //
+// instantiations                                                   //
+// ---------------------------------------------------------------- //
+
+#[test]
+fn shmem_alltoall_routing() {
+    check_alltoall_routing(&shmem(4, 64, 1, 10_000), 4);
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_alltoall_routing() {
+    check_alltoall_routing(&socket(4, 64, 1, 10_000, "routing"), 4);
+}
+
+#[test]
+fn shmem_quota_resize() {
+    check_quota_resize(&shmem(3, 1, 1, 10_000), 3);
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_quota_resize() {
+    check_quota_resize(&socket(3, 1, 1, 10_000, "quota"), 3);
+}
+
+#[test]
+fn shmem_allreduce_rounds() {
+    check_allreduce_rounds(&shmem(4, 16, 1, 10_000), 4);
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_allreduce_rounds() {
+    check_allreduce_rounds(&socket(4, 16, 1, 10_000, "reduce"), 4);
+}
+
+#[test]
+fn shmem_split_isolation() {
+    check_split_isolation(&shmem(4, 16, 1, 10_000));
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_split_isolation() {
+    check_split_isolation(&socket(4, 16, 1, 10_000, "split"));
+}
+
+#[test]
+fn shmem_depth_ring() {
+    check_depth_ring(&shmem(3, 16, 2, 10_000), 3);
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_depth_ring() {
+    check_depth_ring(&socket(3, 16, 2, 10_000, "ring"), 3);
+}
+
+#[test]
+fn shmem_early_drain() {
+    check_early_drain(&shmem(3, 16, 1, 10_000), 3);
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_early_drain() {
+    check_early_drain(&socket(3, 16, 1, 10_000, "drain"), 3);
+}
+
+#[test]
+fn shmem_timeout_names_missing_rank() {
+    check_timeout_names_missing(&shmem(2, 16, 1, 150));
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_timeout_names_missing_rank() {
+    check_timeout_names_missing(&socket(2, 16, 1, 150, "timeout"));
+}

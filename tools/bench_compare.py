@@ -18,8 +18,8 @@ Two metric families are compared, both lower-is-better:
 
 * micro benches: ``ns_per_op`` keyed by bench name;
 * engine runs: ``rtf`` (real-time factor) keyed by the full config tuple
-  (model, strategy, exec, comm, comm_depth, ranks_per_area, ranks,
-  threads).
+  (model, strategy, exec, comm, comm_depth, transport, ranks_per_area,
+  ranks, threads).
 
 A config regresses when the relative delta exceeds the tolerance *and*
 the absolute delta exceeds a noise floor.  Smoke-profile runs (tiny
@@ -77,6 +77,10 @@ def engine_map(doc):
             e.get("exec"),
             e.get("comm"),
             e.get("comm_depth", 1),
+            # shared-memory vs multi-process socket runs are different
+            # machines as far as timing goes; default "shmem" keeps old
+            # baselines readable
+            e.get("transport", "shmem"),
             # hierarchical configs (areas spanning rank groups) are a
             # distinct schedule; default 1 keeps old baselines readable
             e.get("ranks_per_area", 1),
@@ -95,7 +99,7 @@ def missing_configs(baseline, current):
         gone.append(f"micro: {name}")
     base_eng, cur_eng = engine_map(baseline), engine_map(current)
     for key in sorted(set(base_eng) - set(cur_eng), key=str):
-        gone.append("engine: {}/{}/{}/{}/d{}/R{}/M{}/T{}".format(*key))
+        gone.append("engine: {}/{}/{}/{}/d{}/{}/R{}/M{}/T{}".format(*key))
     return gone
 
 
@@ -133,7 +137,7 @@ def compare(baseline, current, tolerance, smoke_fail_factor=None):
 
     base_eng, cur_eng = engine_map(baseline), engine_map(current)
     for key in sorted(set(base_eng) & set(cur_eng), key=str):
-        name = "{}/{}/{}/{}/d{}/R{}/M{}/T{}".format(*key)
+        name = "{}/{}/{}/{}/d{}/{}/R{}/M{}/T{}".format(*key)
         judge("engine", name, base_eng[key], cur_eng[key],
               ENGINE_FLOOR_RTF)
 

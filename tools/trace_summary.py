@@ -157,6 +157,17 @@ def check_stats(doc):
             problems.append(f"stats report is missing {section!r}")
     if problems:
         return problems
+    # transport is a recent addition to the config block — reports from
+    # older binaries simply lack it, which stays valid (schema-stable);
+    # absent means the in-process shared-memory backend
+    cfg = doc["config"]
+    transport = cfg.get("transport", "shmem")
+    if not isinstance(transport, str) or not transport:
+        problems.append(
+            f"config.transport is {transport!r}, expected a name like "
+            "'shmem' or 'socket'")
+        return problems
+    print(f"stats: transport {transport}, {cfg.get('m_ranks')} rank(s)")
     stragglers = doc["stragglers"]
     # each ledger is {"waits": [per blamed rank], "lateness_secs": [..]};
     # fold them and check the report's own top entry is their argmax

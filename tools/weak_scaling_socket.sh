@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Weak-scaling sweep over the multi-process socket transport: for each
+# rank count M in the config, `nsim launch` spawns M OS processes on a
+# model with one area per rank (constant work per rank), and the wall
+# time of the whole launch is recorded.  Output is a JSON document
+# (schema nsim-weak-scaling-v1) meant to be uploaded as an advisory CI
+# artifact — never a gate: shared-runner timings are noise.
+#
+# usage: weak_scaling_socket.sh CONFIG OUT_JSON   (run from rust/)
+# The binary defaults to target/release/nsim; override with NSIM_BIN.
+set -euo pipefail
+
+usage="usage: weak_scaling_socket.sh CONFIG OUT_JSON (run from rust/)"
+cfg="${1:?$usage}"
+out="${2:?$usage}"
+bin="${NSIM_BIN:-target/release/nsim}"
+
+if [ ! -x "$bin" ]; then
+  echo "error: $bin not found or not executable (build release first," \
+    "or set NSIM_BIN)" >&2
+  exit 1
+fi
+
+read -r model n_per_area t_model seed ranks <<EOF
+$(python3 -c 'import json, sys
+c = json.load(open(sys.argv[1]))
+print(c["model"], c["n_per_area"], c["t_model_ms"], c["seed"],
+      ",".join(str(m) for m in c["ranks"]))' "$cfg")
+EOF
+
+rows=""
+for m in ${ranks//,/ }; do
+  echo "== weak scaling: M=$m processes" \
+    "($model, $n_per_area neurons/area, $m areas) =="
+  t0=$(date +%s.%N)
+  "$bin" launch --ranks "$m" --model "$model" \
+    --n-per-area "$n_per_area" --areas "$m" \
+    --t-model "$t_model" --seed "$seed"
+  t1=$(date +%s.%N)
+  wall=$(awk -v a="$t0" -v b="$t1" 'BEGIN { printf "%.3f", b - a }')
+  rows="$rows $m:$wall"
+done
+
+python3 -c 'import json, sys
+out, model, n, t, rows = sys.argv[1:6]
+runs = []
+for item in rows.split():
+    m, wall = item.split(":")
+    runs.append({"ranks": int(m), "areas": int(m),
+                 "wall_s": float(wall)})
+doc = {
+    "schema": "nsim-weak-scaling-v1",
+    "transport": "socket",
+    "model": model,
+    "n_per_area": int(n),
+    "t_model_ms": float(t),
+    "runs": runs,
+}
+with open(out, "w") as f:
+    json.dump(doc, f, indent=2)
+    f.write("\n")
+print(f"wrote {out} ({len(runs)} runs)")' \
+  "$out" "$model" "$n_per_area" "$t_model" "$rows"
