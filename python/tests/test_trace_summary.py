@@ -150,6 +150,29 @@ def test_stats_transport_printed_and_defaulted(capsys):
     assert "transport shmem" in capsys.readouterr().out
 
 
+def test_stats_job_suffixed_documents_accepted(capsys):
+    # per-job documents from `nsim serve --stats-json` stamp config.job
+    # with the deterministic server id; the validator accepts and
+    # surfaces it
+    doc = _stats()
+    doc["config"]["job"] = "job-3"
+    assert ts.check_stats(doc) == []
+    assert "job job-3" in capsys.readouterr().out
+    # direct CLI documents lack the key entirely: still valid
+    # (schema-stable optionality, mirroring config.transport)
+    doc = _stats()
+    assert "job" not in doc["config"]
+    assert ts.check_stats(doc) == []
+    assert "job" not in capsys.readouterr().out
+
+
+def test_stats_malformed_job_rejected():
+    for bad in ("3", "rank-3", "", 7, "job-"):
+        doc = _stats()
+        doc["config"]["job"] = bad
+        assert any("config.job" in p for p in ts.check_stats(doc)), bad
+
+
 def test_stats_malformed_transport_rejected():
     doc = _stats()
     doc["config"]["transport"] = 7

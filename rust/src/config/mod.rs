@@ -5,6 +5,7 @@
 //! overridden from CLI options — the launcher (`main.rs`) composes all
 //! three.
 
+use crate::obs::TraceMode;
 use crate::util::cli::Args;
 use crate::util::json::{self, Json};
 use anyhow::{bail, Context, Result};
@@ -540,6 +541,11 @@ pub struct RunConfig {
     /// Record trace spans for every phase step and communication
     /// operation (`--trace <path>`; off = one branch per site).
     pub trace: bool,
+    /// Trace-buffer bounding (`--trace-mode unbounded|ring[:N]`):
+    /// `ring` keeps only the most recent N spans per rank sink so a
+    /// long-running traced process (the job server) stays bounded
+    /// instead of growing past the sink capacity without limit.
+    pub trace_mode: TraceMode,
     /// Watchdog deadline in seconds applied to every communicator wait
     /// (barrier-framed collective phases and split-phase completion
     /// rendezvous).  `None` (the default) keeps today's unbounded waits;
@@ -581,6 +587,7 @@ impl Default for RunConfig {
             record_spikes: false,
             record_cycle_times: false,
             trace: false,
+            trace_mode: TraceMode::Unbounded,
             comm_timeout: None,
             checkpoint_every: 0,
             checkpoint_path: "nsim.ckpt".to_string(),
@@ -630,6 +637,9 @@ impl RunConfig {
         // the launcher, which writes the trace after the run)
         if args.str_opt("trace").is_some() {
             self.trace = true;
+        }
+        if let Some(s) = args.str_opt("trace-mode") {
+            self.trace_mode = parse_trace_mode(&s)?;
         }
         if let Some(t) = args.f64_opt("comm-timeout")? {
             self.comm_timeout = Some(t);
@@ -709,6 +719,9 @@ impl RunConfig {
         }
         if let Some(b) = v.get("trace").and_then(Json::as_bool) {
             cfg.trace = b;
+        }
+        if let Some(s) = v.get("trace_mode").and_then(Json::as_str) {
+            cfg.trace_mode = parse_trace_mode(s)?;
         }
         if let Some(x) = v.get("comm_timeout").and_then(Json::as_f64) {
             cfg.comm_timeout = Some(x);
@@ -792,18 +805,52 @@ impl RunConfig {
                  checkpoint_every > 0"
             );
         }
+        // Only checkpoint *writing* is shmem-only: the snapshot
+        // collectives assemble rank parts through one shared in-process
+        // CkptCtx, which cannot span process boundaries.  Restoring is
+        // per-rank file reads and works over any transport.
         if self.transport == TransportKind::Socket
-            && (self.checkpoint_every > 0 || self.restore.is_some())
+            && self.checkpoint_every > 0
         {
             bail!(
-                "checkpoint/restore is not supported over the socket \
-                 transport yet: snapshots are written through the \
-                 shared-memory checkpoint context.  Run with \
-                 --transport shmem, or drop --checkpoint-every/--restore"
+                "checkpoint writing is not supported over the socket \
+                 transport: the snapshot collectives assemble rank \
+                 parts through the shared-memory checkpoint context, \
+                 which cannot span processes.  --restore works over \
+                 socket (each rank process restores its own part from \
+                 the snapshot file); checkpoints themselves must be \
+                 written by a shmem run — the serving layer's \
+                 shmem-backed resume path does exactly that.  Drop \
+                 --checkpoint-every or run with --transport shmem"
             );
         }
         self.faults.validate(self.m_ranks, self.comm_timeout)?;
         Ok(())
+    }
+}
+
+/// Parse a `--trace-mode` / `"trace_mode"` value: `unbounded`, `ring`
+/// (default per-sink capacity) or `ring:N` (keep the last N spans per
+/// rank sink).
+pub fn parse_trace_mode(s: &str) -> Result<TraceMode> {
+    match s {
+        "unbounded" => Ok(TraceMode::Unbounded),
+        "ring" => Ok(TraceMode::Ring(crate::obs::SINK_CAPACITY)),
+        other => match other.strip_prefix("ring:") {
+            Some(n) => {
+                let cap: usize = n.parse().with_context(|| {
+                    format!("bad ring capacity {n:?} in trace mode")
+                })?;
+                if cap == 0 {
+                    bail!("trace-mode ring capacity must be >= 1");
+                }
+                Ok(TraceMode::Ring(cap))
+            }
+            None => bail!(
+                "unknown trace mode {other:?} (expected unbounded, \
+                 ring, or ring:N)"
+            ),
+        },
     }
 }
 
@@ -1239,29 +1286,81 @@ mod tests {
     }
 
     #[test]
-    fn socket_transport_rejects_checkpointing() {
+    fn socket_transport_rejects_checkpoint_writing_only() {
+        // writing checkpoints stays rejected: the snapshot collectives
+        // assemble parts through the shared-memory checkpoint context
         let cfg = RunConfig {
             transport: TransportKind::Socket,
             checkpoint_every: 2,
             ..RunConfig::default()
         };
-        let err = cfg.validate().unwrap_err();
+        let err = format!("{:#}", cfg.validate().unwrap_err());
+        assert!(err.contains("socket"), "unexpected error: {err}");
+        // the wording names the unsupported piece and the supported
+        // escape hatch — the serving layer relies on both halves
         assert!(
-            format!("{err:#}").contains("socket"),
-            "unexpected error: {err:#}"
+            err.contains("shared-memory checkpoint context"),
+            "error must name the snapshot collectives' shmem context: \
+             {err}"
         );
+        assert!(
+            err.contains("--restore works over socket"),
+            "error must say restore is supported: {err}"
+        );
+        assert!(
+            err.contains("serving layer"),
+            "error must point at the serving layer's shmem-backed \
+             resume path: {err}"
+        );
+        // restoring is per-rank file reads — allowed over socket (the
+        // wholesale rejection this replaces banned it too)
         let cfg = RunConfig {
             transport: TransportKind::Socket,
             restore: Some("prev.ckpt".to_string()),
             ..RunConfig::default()
         };
-        assert!(cfg.validate().is_err());
+        assert!(cfg.validate().is_ok());
         // plain socket runs validate fine
         let cfg = RunConfig {
             transport: TransportKind::Socket,
             ..RunConfig::default()
         };
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn trace_mode_parsing() {
+        assert_eq!(RunConfig::default().trace_mode, TraceMode::Unbounded);
+
+        let args =
+            Args::parse(["run", "--trace-mode", "ring"]).unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert_eq!(
+            cfg.trace_mode,
+            TraceMode::Ring(crate::obs::SINK_CAPACITY)
+        );
+
+        let args =
+            Args::parse(["run", "--trace-mode", "ring:128"]).unwrap();
+        let cfg = RunConfig::default().override_from_args(&args).unwrap();
+        assert_eq!(cfg.trace_mode, TraceMode::Ring(128));
+
+        let v = json::parse(r#"{"trace_mode": "ring:64"}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.trace_mode, TraceMode::Ring(64));
+
+        let v = json::parse(r#"{"trace_mode": "unbounded"}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.trace_mode, TraceMode::Unbounded);
+
+        for bad in ["ring:0", "ring:none", "reservoir"] {
+            let args =
+                Args::parse(["run", "--trace-mode", bad]).unwrap();
+            assert!(
+                RunConfig::default().override_from_args(&args).is_err(),
+                "trace mode {bad:?} should be rejected"
+            );
+        }
     }
 
     #[test]

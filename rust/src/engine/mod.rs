@@ -79,8 +79,65 @@ use crate::util::timers::PhaseTimes;
 use anyhow::{Context, Result};
 use checkpoint::{CkptCtx, Fingerprint, Snapshot};
 use rank::{CkptSched, RankResult, RankState, RunOpts};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 use std::time::Duration;
 use update::Updater;
+
+/// Mid-run progress snapshot handed to [`SimHooks::progress`]: how far
+/// the run is and the interval statistics accumulated *so far* (the
+/// recorders are streaming, so the snapshot is O(1) to take).  Emitted
+/// by rank 0 only, at epoch boundaries — all ranks pass the boundary
+/// together, so rank 0's cycle counter speaks for the whole run.
+#[derive(Debug, Clone)]
+pub struct Progress {
+    /// Cycles completed (the boundary just passed).
+    pub cycle: u64,
+    /// Total cycles of the run.
+    pub s_cycles: u64,
+    /// Streaming compute-interval statistics up to `cycle`.
+    pub intervals: TierIntervalSummary,
+}
+
+/// Progress callback: invoked on rank 0's coordinator thread, so it
+/// must be cheap and must not block on the ranks it is reporting about.
+pub type ProgressFn = dyn Fn(Progress) + Send + Sync;
+
+/// Optional runtime hooks for long-running callers (the serving layer):
+/// cooperative cancellation and periodic progress reports.  The default
+/// (no hooks) adds **zero** collectives and zero per-cycle branches
+/// beyond one `Option` check, so plain CLI runs are unchanged.
+#[derive(Clone, Default)]
+pub struct SimHooks {
+    /// Raise to request cancellation.  The ranks agree on the flag
+    /// collectively at an epoch boundary (an `allreduce_min` over
+    /// "have I seen it?"), so every rank unwinds from the *same* cycle
+    /// and no rank is left blocked in a collective — the run fails
+    /// with a typed [`Cancelled`] error.
+    pub cancel: Option<Arc<AtomicBool>>,
+    /// Progress callback, fired by rank 0 every
+    /// `progress_every_epochs` epochs.
+    pub progress: Option<Arc<ProgressFn>>,
+    /// Epoch period of the progress callback (0 is treated as 1).
+    pub progress_every_epochs: u64,
+}
+
+/// Typed error a cancelled run unwinds with: every rank raises it at
+/// the same (epoch-boundary) cycle, so callers can downcast the
+/// simulation error to distinguish "asked to stop" from real failures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cancelled {
+    /// The cycle the ranks agreed to stop at.
+    pub cycle: u64,
+}
+
+impl std::fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "simulation cancelled at cycle {}", self.cycle)
+    }
+}
+
+impl std::error::Error for Cancelled {}
 
 /// Outcome of a functional simulation.
 pub struct SimResult {
@@ -216,6 +273,59 @@ pub fn run_shape(
     Ok((s_cycles, epoch_cycles, steps_per_cycle))
 }
 
+/// Identity of the simulated state: a snapshot only restores into a
+/// run that rebuilds the exact same deterministic structures.  Both
+/// backends derive it through this one function so a snapshot written
+/// by the in-process engine resumes in a socket-rank process and vice
+/// versa.
+fn fingerprint_for(
+    spec: &ModelSpec,
+    cfg: &RunConfig,
+    epoch_cycles: u64,
+    steps_per_cycle: u64,
+) -> Fingerprint {
+    Fingerprint {
+        model: spec.name.clone(),
+        n_neurons: spec.total_neurons(),
+        m_ranks: cfg.m_ranks as u32,
+        threads_per_rank: cfg.threads_per_rank as u32,
+        ranks_per_area: cfg.ranks_per_area as u32,
+        strategy: cfg.strategy.name().to_string(),
+        seed: cfg.seed,
+        epoch_cycles,
+        steps_per_cycle,
+        record_spikes: cfg.record_spikes,
+    }
+}
+
+/// Load and verify the snapshot named by `cfg.restore` (if any): the
+/// fingerprint must match this run's, the snapshot cycle must leave
+/// something to resume, and the part count must equal the rank count.
+fn load_restore_snapshot(
+    cfg: &RunConfig,
+    fingerprint: &Fingerprint,
+    s_cycles: u64,
+) -> Result<Option<Snapshot>> {
+    let Some(path) = &cfg.restore else {
+        return Ok(None);
+    };
+    let snap = Snapshot::read_verified(path)?;
+    snap.fingerprint.check_matches(fingerprint)?;
+    anyhow::ensure!(
+        snap.cycle < s_cycles,
+        "snapshot was taken at cycle {} but this run simulates \
+         only {s_cycles} cycles — nothing left to resume",
+        snap.cycle,
+    );
+    anyhow::ensure!(
+        snap.parts.len() == cfg.m_ranks,
+        "snapshot holds {} rank parts but this run uses {} ranks",
+        snap.parts.len(),
+        cfg.m_ranks,
+    );
+    Ok(Some(snap))
+}
+
 /// One rank's share of a run, generic over the transport: split the
 /// local communicator (dual pathways), build the rank state
 /// collectively, validate the pipeline depth against the realized delay
@@ -235,6 +345,7 @@ fn run_rank<T: SplitTransport>(
     tracer: Tracer,
     s_cycles: u64,
     start_cycle: u64,
+    hooks: &SimHooks,
 ) -> Result<RankResult> {
     // hierarchical communicators: dual-pathway runs split one local
     // communicator per area group off the global world (collective:
@@ -296,6 +407,7 @@ fn run_rank<T: SplitTransport>(
             faults: cfg.faults.for_rank(r),
             ckpt,
             tracer,
+            hooks,
         },
     )
 }
@@ -305,12 +417,22 @@ fn run_rank<T: SplitTransport>(
 /// `updater_factory` builds the update executor once; `None` selects it
 /// from `cfg.update_path` (Native, or the XLA path via the runtime).
 pub fn simulate(spec: &ModelSpec, cfg: &RunConfig) -> Result<SimResult> {
+    simulate_hooked(spec, cfg, &SimHooks::default())
+}
+
+/// As [`simulate`], with runtime hooks (cancellation + progress) for
+/// long-running callers such as the serving layer.
+pub fn simulate_hooked(
+    spec: &ModelSpec,
+    cfg: &RunConfig,
+    hooks: &SimHooks,
+) -> Result<SimResult> {
     let updater = match cfg.update_path {
         UpdatePath::Native => Updater::Native,
         UpdatePath::Xla => crate::runtime::updater::xla_updater(spec)
             .context("building XLA updater (run `make artifacts`?)")?,
     };
-    simulate_with(spec, cfg, &updater)
+    simulate_with_hooks(spec, cfg, &updater, hooks)
 }
 
 /// As [`simulate`], with an explicit update executor.
@@ -318,6 +440,16 @@ pub fn simulate_with(
     spec: &ModelSpec,
     cfg: &RunConfig,
     updater: &Updater,
+) -> Result<SimResult> {
+    simulate_with_hooks(spec, cfg, updater, &SimHooks::default())
+}
+
+/// The in-process backend: explicit update executor *and* hooks.
+pub fn simulate_with_hooks(
+    spec: &ModelSpec,
+    cfg: &RunConfig,
+    updater: &Updater,
+    hooks: &SimHooks,
 ) -> Result<SimResult> {
     cfg.validate()?;
     anyhow::ensure!(
@@ -332,38 +464,9 @@ pub fn simulate_with(
 
     // identity of the simulated state: a snapshot only restores into a
     // run that rebuilds the exact same deterministic structures
-    let fingerprint = Fingerprint {
-        model: spec.name.clone(),
-        n_neurons: spec.total_neurons(),
-        m_ranks: cfg.m_ranks as u32,
-        threads_per_rank: cfg.threads_per_rank as u32,
-        ranks_per_area: cfg.ranks_per_area as u32,
-        strategy: cfg.strategy.name().to_string(),
-        seed: cfg.seed,
-        epoch_cycles,
-        steps_per_cycle,
-        record_spikes: cfg.record_spikes,
-    };
-    let snapshot = match &cfg.restore {
-        Some(path) => {
-            let snap = Snapshot::read_verified(path)?;
-            snap.fingerprint.check_matches(&fingerprint)?;
-            anyhow::ensure!(
-                snap.cycle < s_cycles,
-                "snapshot was taken at cycle {} but this run simulates \
-                 only {s_cycles} cycles — nothing left to resume",
-                snap.cycle,
-            );
-            anyhow::ensure!(
-                snap.parts.len() == cfg.m_ranks,
-                "snapshot holds {} rank parts but this run uses {} ranks",
-                snap.parts.len(),
-                cfg.m_ranks,
-            );
-            Some(snap)
-        }
-        None => None,
-    };
+    let fingerprint =
+        fingerprint_for(spec, cfg, epoch_cycles, steps_per_cycle);
+    let snapshot = load_restore_snapshot(cfg, &fingerprint, s_cycles)?;
     let start_cycle = snapshot.as_ref().map_or(0, |s| s.cycle);
     // resume from the grown quota so the transport's mailbox capacity
     // (and hence its growth trajectory) continues where it left off
@@ -378,7 +481,7 @@ pub fn simulate_with(
         )
     });
 
-    let trace_buf = cfg.trace.then(|| TraceBuf::new(cfg.m_ranks));
+    let trace_buf = cfg.trace.then(|| TraceBuf::with_mode(cfg.m_ranks, cfg.trace_mode));
     let world = WorldBuilder::new(cfg.m_ranks)
         .quota(quota)
         .depth(cfg.comm_depth)
@@ -412,6 +515,7 @@ pub fn simulate_with(
                             .map_or_else(Tracer::off, |b| Tracer::new(b, r)),
                         s_cycles,
                         start_cycle,
+                        hooks,
                     )
                 })
             })
@@ -511,11 +615,24 @@ pub fn simulate_socket(
             .context("building XLA updater (run `make artifacts`?)")?,
     };
     let placement = placement_for(spec, cfg)?;
-    let (s_cycles, epoch_cycles, _steps_per_cycle) =
+    let (s_cycles, epoch_cycles, steps_per_cycle) =
         run_shape(spec, cfg)?;
-    let trace_buf = cfg.trace.then(|| TraceBuf::new(cfg.m_ranks));
+    // restore works over the socket transport: every process reads the
+    // (shared-filesystem) snapshot and restores its own rank part —
+    // no collective is needed beyond what a cold start already does.
+    // Only *writing* checkpoints stays shmem-only (the snapshot
+    // collectives assemble parts through a shared CkptCtx), which
+    // RunConfig::validate still rejects.
+    let fingerprint =
+        fingerprint_for(spec, cfg, epoch_cycles, steps_per_cycle);
+    let snapshot = load_restore_snapshot(cfg, &fingerprint, s_cycles)?;
+    let start_cycle = snapshot.as_ref().map_or(0, |s| s.cycle);
+    let quota = snapshot
+        .as_ref()
+        .map_or(cfg.comm_quota, |s| s.quota as usize);
+    let trace_buf = cfg.trace.then(|| TraceBuf::with_mode(cfg.m_ranks, cfg.trace_mode));
     let comm = SocketWorldBuilder::new(cfg.m_ranks, rank, dir)
-        .quota(cfg.comm_quota)
+        .quota(quota)
         .depth(cfg.comm_depth)
         .timeout(cfg.comm_timeout.map(Duration::from_secs_f64))
         .connect()
@@ -527,13 +644,14 @@ pub fn simulate_socket(
         rank,
         &comm,
         &updater,
-        None,
+        snapshot.as_ref(),
         None,
         trace_buf
             .as_ref()
             .map_or_else(Tracer::off, |b| Tracer::new(b, rank)),
         s_cycles,
-        0,
+        start_cycle,
+        &SimHooks::default(),
     )?;
 
     let mut rank_times = vec![PhaseTimes::new(); cfg.m_ranks];

@@ -148,6 +148,7 @@ use crate::comm::{
 use crate::config::{CommMode, ExecMode, RankFaults, Strategy};
 use crate::engine::checkpoint::{ByteReader, ByteWriter, CkptCtx};
 use crate::engine::neuron::NeuronBlock;
+use crate::engine::{Cancelled, Progress, SimHooks};
 use crate::engine::receive::{
     bucket_runs, merge_routed, sort_canonical, sort_run, RoutedSpike, RunSet,
 };
@@ -406,6 +407,65 @@ pub struct RankResult {
 struct RankObs {
     tracer: Tracer,
     intervals: TierIntervals,
+    /// Caller-supplied runtime hooks (cancellation token + progress
+    /// callback) — default (none) for plain CLI runs.
+    hooks: SimHooks,
+    /// Total cycles of the run, for the progress payload.
+    s_cycles: u64,
+}
+
+impl RankObs {
+    /// Fire the mid-run progress hook: rank 0 only, at the configured
+    /// epoch period, right after the interval recorder absorbed the
+    /// boundary cycle.  The interval summary is a non-consuming O(1)
+    /// snapshot of the streaming recorders.
+    fn maybe_progress(&self, rank: usize, s: u64, epoch_cycles: u64) {
+        let Some(cb) = self.hooks.progress.as_ref() else {
+            return;
+        };
+        if rank != 0 {
+            return;
+        }
+        let every =
+            self.hooks.progress_every_epochs.max(1) * epoch_cycles;
+        if (s + 1) % every == 0 {
+            cb(Progress {
+                cycle: s + 1,
+                s_cycles: self.s_cycles,
+                intervals: self.intervals.summary(),
+            });
+        }
+    }
+}
+
+/// Collective cancellation check at the top of an epoch-boundary
+/// cycle.  Every rank reaches this collective at the same cycle (the
+/// token is either present on all ranks or on none), and all of them
+/// unwind together only once the *minimum* over "have I seen the
+/// flag?" is 1 — i.e. the last rank has observed it.  An asymmetric
+/// exit would leave the other ranks blocked in the cycle's collectives;
+/// agreeing first means the error path below is exactly the one the
+/// comm-error unwind already exercises.
+fn check_cancel<T: Transport>(
+    hooks: &SimHooks,
+    comm: &T,
+    s: u64,
+    epoch_cycles: u64,
+) -> Result<()> {
+    let Some(flag) = hooks.cancel.as_ref() else {
+        return Ok(());
+    };
+    if s % epoch_cycles != 0 {
+        return Ok(());
+    }
+    let seen = flag.load(Ordering::Relaxed) as u64;
+    let all = comm
+        .allreduce_min_u64(seen)
+        .context("cancellation agreement reduction")?;
+    if all == 1 {
+        return Err(Cancelled { cycle: s }.into());
+    }
+    Ok(())
 }
 
 /// The rank-side view of the engine's checkpoint schedule: the shared
@@ -430,6 +490,9 @@ pub struct RunOpts<'a> {
     /// Span tracer for this rank ([`Tracer::off`] when `--trace` is
     /// absent — one branch per span site, no clock reads).
     pub tracer: Tracer,
+    /// Runtime hooks (cancellation + progress); the default no-hook
+    /// value adds no collectives and no per-cycle work.
+    pub hooks: &'a SimHooks,
 }
 
 /// Apply the injected compute-straggler factor for `epoch`: sleep so
@@ -1336,6 +1399,8 @@ impl RankState {
         let mut obs = RankObs {
             tracer: opts.tracer.clone(),
             intervals: TierIntervals::default(),
+            hooks: opts.hooks.clone(),
+            s_cycles: opts.s_cycles,
         };
         let period = opts
             .ckpt
@@ -1644,6 +1709,14 @@ impl RankState {
 
         for s in start..end {
             let first_step = s * self.steps_per_cycle;
+            // cooperative cancellation: agree collectively at epoch
+            // boundaries, then unwind through the comm-error exit
+            if let Err(e) =
+                check_cancel(&obs.hooks, comm, s, self.epoch_cycles)
+            {
+                outcome = Err(e);
+                break;
+            }
             // drain early deposits and complete due overlapped exchanges
             // before the deliver phase (charged to their own phases, not
             // this cycle's timer)
@@ -1700,6 +1773,7 @@ impl RankState {
             }
             obs.intervals
                 .record_cycle(cycle_secs, (s + 1) % self.epoch_cycles == 0);
+            obs.maybe_progress(self.rank, s, self.epoch_cycles);
 
             // ---- communicate ---------------------------------------------
             if let Err(e) = self.communicate(
@@ -1830,6 +1904,16 @@ impl RankState {
             let mut outcome: Result<()> = Ok(());
 
             for s in start..end {
+                // cooperative cancellation: agree collectively at epoch
+                // boundaries, then unwind through the comm-error exit
+                // (workers stay parked at the *runs ready* barrier, the
+                // position the stop gate below releases them from)
+                if let Err(e) =
+                    check_cancel(&obs.hooks, comm, s, self.epoch_cycles)
+                {
+                    outcome = Err(e);
+                    break;
+                }
                 // drain early deposits and complete due exchanges
                 // before handing the runs out
                 if let Err(e) = self.service_exchanges(
@@ -1919,6 +2003,7 @@ impl RankState {
                     cycle_secs,
                     (s + 1) % self.epoch_cycles == 0,
                 );
+                obs.maybe_progress(self.rank, s, self.epoch_cycles);
 
                 // ---- communicate -----------------------------------------
                 if let Err(e) = self.communicate(
@@ -2035,6 +2120,15 @@ impl RankState {
 
             for s in start..end {
                 let first_step = s * steps;
+                // cooperative cancellation: agree collectively at epoch
+                // boundaries, then unwind through the comm-error exit
+                // (workers stay idle at their command receive)
+                if let Err(e) =
+                    check_cancel(&obs.hooks, comm, s, self.epoch_cycles)
+                {
+                    outcome = Err(e);
+                    break;
+                }
                 // drain early deposits and complete due exchanges
                 // before delivery
                 if let Err(e) = self.service_exchanges(
@@ -2138,6 +2232,7 @@ impl RankState {
                     cycle_secs,
                     (s + 1) % self.epoch_cycles == 0,
                 );
+                obs.maybe_progress(self.rank, s, self.epoch_cycles);
 
                 // ---- communicate -----------------------------------------
                 if let Err(e) = self.communicate(

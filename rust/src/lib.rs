@@ -40,6 +40,7 @@ pub mod comm;
 pub mod obs;
 pub mod engine;
 pub mod runtime;
+pub mod serve;
 pub mod vcluster;
 pub mod theory;
 pub mod figures;

@@ -4,6 +4,9 @@
 //! Subcommands:
 //!   simulate   run the functional engine on a bundled model
 //!   launch     run one OS process per rank over the socket transport
+//!   serve      long-running job server over a Unix-domain socket
+//!   submit     client for `serve`: submit/status/cancel/fetch jobs
+//!   scenarios  list the scenario catalog (built-ins + configs/scenarios)
 //!   figure     regenerate one figure of the paper (see --list)
 //!   figures    regenerate every figure
 //!   theory     print the analytical predictions (eqs 7/11/12/13-17)
@@ -29,6 +32,9 @@ fn run() -> Result<()> {
     match args.subcommand() {
         Some("simulate") => cmd_simulate(&args),
         Some("launch") => cmd_launch(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("scenarios") => cmd_scenarios(&args),
         Some("figure") => cmd_figure(&args),
         Some("figures") => cmd_figures(&args),
         Some("theory") => cmd_theory(&args),
@@ -59,6 +65,8 @@ fn print_usage() {
                     this process runs rank r; usually set by launch)\n\
                     [--record-spikes]\n\
                     [--spikes-out path]              spike train as text\n\
+                    [--lesion-area name [--lesion-factor f]]  scale (or\n\
+                    sever, f=0) one area's long-range pathways\n\
                     [--record-cycle-times]           raw per-cycle vectors\n\
                     [--trace out.json]               Perfetto span trace\n\
                     [--stats-json out.json]          machine-readable report\n\
@@ -74,6 +82,22 @@ fn print_usage() {
                     transport, merge their --spikes-out files, and\n\
                     propagate any child failure (per-process --trace /\n\
                     --stats-json outputs get a .rank<r> suffix)\n\
+           serve    --socket path [--workers N] [--workdir dir]\n\
+                    [--scenario-dir dir]  scenario catalog overlay\n\
+                    [--stats-json base] [--trace base]  per-job outputs\n\
+                    (suffixed .job-<n>) [--trace-mode unbounded|ring[:N]]\n\
+                    [--checkpoint-every epochs]  default job checkpointing\n\
+                    run a job server on a Unix-domain socket; stop it\n\
+                    with `nsim submit --shutdown`\n\
+           submit   --socket path --scenario name [--params JSON]\n\
+                    [--sweep JSON]  fan one submission into a grid\n\
+                    [--follow] [--spikes-out base]  stream to terminal\n\
+                    state, write per-job spike trains\n\
+                    | --list | --status id | --cancel id\n\
+                    | --result id [--spikes-out path] | --shutdown\n\
+           scenarios [--dir dir] [--json]\n\
+                    list the scenario catalog (built-ins overlaid by\n\
+                    --dir, default configs/scenarios)\n\
            figure <name> [--t-model ms] [--seed n] [--out dir]\n\
            figures [--t-model ms] [--out dir]\n\
            theory [--d D] [--ranks M] [--threads T] [--ranks-per-area R]\n\
@@ -91,7 +115,12 @@ fn build_model(
     let name = args.str_or("model", "sanity");
     let scale = args.f64_or("scale", 0.01)?;
     let d_min_inter = args.f64_or("d-min-inter", 1.0)?;
-    match name.as_str() {
+    let lesion_area = args.str_opt("lesion-area");
+    let lesion_factor = args.f64_opt("lesion-factor")?;
+    if lesion_area.is_none() && lesion_factor.is_some() {
+        bail!("--lesion-factor without --lesion-area");
+    }
+    let spec = match name.as_str() {
         "sanity" => {
             let n = args.usize_or("n-per-area", 500)? as u32;
             let areas = args.usize_or("areas", m_ranks.max(2))?;
@@ -108,6 +137,12 @@ fn build_model(
         }
         "mam" => models::mam(scale, d_min_inter),
         other => bail!("unknown model {other:?}"),
+    }?;
+    // perturbation variants: scale (or sever, factor 0) one area's
+    // long-range pathways — same draws, same topology, scaled weights
+    match lesion_area {
+        Some(area) => spec.with_lesion(&area, lesion_factor.unwrap_or(0.0)),
+        None => Ok(spec),
     }
 }
 
@@ -520,6 +555,218 @@ fn cmd_launch(args: &Args) -> Result<()> {
         println!("launch: merged {} spikes -> {base}", all.len());
     }
     println!("launch: all {ranks} ranks completed");
+    Ok(())
+}
+
+/// `nsim serve`: run the job server until a client sends `shutdown`.
+#[cfg(unix)]
+fn cmd_serve(args: &Args) -> Result<()> {
+    use nsim::serve::server::{self, ServeOpts};
+    let socket = args.str_or("socket", "nsim-serve.sock");
+    let mut opts = ServeOpts::new(&socket);
+    opts.workers = args.usize_or("workers", 2)?;
+    opts.workdir = args.str_or("workdir", ".").into();
+    opts.scenario_dir =
+        Some(args.str_or("scenario-dir", "configs/scenarios").into());
+    opts.stats_base = args.str_opt("stats-json");
+    opts.trace_base = args.str_opt("trace");
+    if let Some(mode) = args.str_opt("trace-mode") {
+        opts.trace_mode = nsim::config::parse_trace_mode(&mode)?;
+    }
+    opts.checkpoint_every = args.u64_or("checkpoint-every", 0)?;
+    args.finish()?;
+    let workers = opts.workers;
+    let handle = server::start(opts)?;
+    println!("serve: listening on {socket} with {workers} workers");
+    handle.join();
+    println!("serve: shut down");
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    bail!("`nsim serve` needs Unix-domain sockets (Unix only)")
+}
+
+/// Parse a `--params` / `--sweep` CLI value: a JSON object literal.
+#[cfg(unix)]
+fn parse_json_object(
+    what: &str,
+    text: Option<&str>,
+) -> Result<std::collections::BTreeMap<String, nsim::util::json::Json>> {
+    let Some(text) = text else { return Ok(Default::default()) };
+    let v = nsim::util::json::parse(text)
+        .with_context(|| format!("parsing --{what}"))?;
+    v.as_obj()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("--{what} must be a JSON object"))
+}
+
+/// `nsim submit`: client ops against a running `nsim serve`.
+#[cfg(unix)]
+fn cmd_submit(args: &Args) -> Result<()> {
+    use nsim::serve::Client;
+    use nsim::util::json;
+
+    let socket = args.str_or("socket", "nsim-serve.sock");
+    let list = args.flag("list");
+    let status = args.str_opt("status");
+    let cancel = args.str_opt("cancel");
+    let result = args.str_opt("result");
+    let shutdown = args.flag("shutdown");
+    let scenario = args.str_opt("scenario");
+    let params_text = args.str_opt("params");
+    let sweep_text = args.str_opt("sweep");
+    let follow = args.flag("follow");
+    let verbose = args.flag("verbose");
+    let spikes_out = args.str_opt("spikes-out");
+    args.finish()?;
+
+    let mut client = Client::connect(std::path::Path::new(&socket))?;
+    if list {
+        println!("{}", json::to_string_pretty(&client.jobs()?));
+        return Ok(());
+    }
+    if let Some(id) = status {
+        println!("{}", json::to_string_pretty(&client.status(&id)?));
+        return Ok(());
+    }
+    if let Some(id) = cancel {
+        let resp = client.cancel(&id)?;
+        println!(
+            "cancel {id}: was {}",
+            resp.get("was")
+                .and_then(json::Json::as_str)
+                .unwrap_or("unknown")
+        );
+        return Ok(());
+    }
+    if let Some(id) = result {
+        let resp = client.result(&id)?;
+        let state = resp
+            .get("state")
+            .and_then(json::Json::as_str)
+            .unwrap_or("unknown");
+        if let (Some(path), Some(spikes)) = (
+            &spikes_out,
+            resp.get("spikes").and_then(json::Json::as_str),
+        ) {
+            std::fs::write(path, spikes)
+                .with_context(|| format!("writing {path}"))?;
+            println!("result {id}: {state}, spikes -> {path}");
+        } else {
+            println!("result {id}: {state}");
+            if let Some(e) =
+                resp.get("error").and_then(json::Json::as_str)
+            {
+                println!("  error: {e}");
+            }
+        }
+        return Ok(());
+    }
+    if shutdown {
+        client.shutdown()?;
+        println!("server shutting down");
+        return Ok(());
+    }
+
+    let Some(scenario) = scenario else {
+        bail!(
+            "submit needs --scenario (or one of --list --status \
+             --cancel --result --shutdown)"
+        );
+    };
+    let params = parse_json_object("params", params_text.as_deref())?;
+    let sweep = parse_json_object("sweep", sweep_text.as_deref())?;
+    let ids = client.submit(&scenario, &params, &sweep, follow)?;
+    println!("submitted: {}", ids.join(" "));
+    if !follow {
+        return Ok(());
+    }
+    let ends = client.follow_until_complete(|ev| {
+        match ev.get("event").and_then(json::Json::as_str) {
+            Some("state") => {
+                let job = ev
+                    .get("job")
+                    .and_then(json::Json::as_str)
+                    .unwrap_or("?");
+                let state = ev
+                    .get("state")
+                    .and_then(json::Json::as_str)
+                    .unwrap_or("?");
+                println!("{job}: {state}");
+            }
+            Some("resume") => {
+                let job = ev
+                    .get("job")
+                    .and_then(json::Json::as_str)
+                    .unwrap_or("?");
+                println!("{job}: resuming from checkpoint");
+            }
+            Some("progress") if verbose => {
+                let job = ev
+                    .get("job")
+                    .and_then(json::Json::as_str)
+                    .unwrap_or("?");
+                let cycle = ev
+                    .get("cycle")
+                    .and_then(json::Json::as_usize)
+                    .unwrap_or(0);
+                let total = ev
+                    .get("s_cycles")
+                    .and_then(json::Json::as_usize)
+                    .unwrap_or(0);
+                println!("{job}: cycle {cycle}/{total}");
+            }
+            _ => {}
+        }
+    })?;
+    for end in &ends {
+        if let (Some(base), Some(spikes)) = (&spikes_out, &end.spikes) {
+            let path = if ends.len() == 1 {
+                base.clone()
+            } else {
+                format!("{base}.{}", end.job)
+            };
+            std::fs::write(&path, spikes)
+                .with_context(|| format!("writing {path}"))?;
+            println!("{}: spikes -> {path}", end.job);
+        }
+    }
+    let bad: Vec<&str> = ends
+        .iter()
+        .filter(|e| e.state != "done")
+        .map(|e| e.job.as_str())
+        .collect();
+    if !bad.is_empty() {
+        bail!("jobs did not complete: {}", bad.join(" "));
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_submit(_args: &Args) -> Result<()> {
+    bail!("`nsim submit` needs Unix-domain sockets (Unix only)")
+}
+
+/// `nsim scenarios`: list the catalog without a server.
+fn cmd_scenarios(args: &Args) -> Result<()> {
+    let dir = args.str_or("dir", "configs/scenarios");
+    let as_json = args.flag("json");
+    args.finish()?;
+    let cat = nsim::serve::Catalog::load(Some(std::path::Path::new(
+        &dir,
+    )))?;
+    if as_json {
+        println!(
+            "{}",
+            nsim::util::json::to_string_pretty(&cat.to_json())
+        );
+        return Ok(());
+    }
+    for s in cat.iter() {
+        println!("{:<18} {}", s.name, s.description);
+    }
     Ok(())
 }
 

@@ -64,9 +64,13 @@ pub fn incoming_connections(
             if idx >= range.start {
                 idx += range.end - range.start;
             }
+            // lesions scale long-range weights only — the draw
+            // sequence (and thus topology) is identical to the intact
+            // network's
+            let scale = spec.inter_weight_scale(spec.area_of(idx), area);
             out.push(Conn {
                 source: idx,
-                weight: spec.weight_of(idx),
+                weight: spec.weight_of(idx) * scale,
                 delay_steps: spec.delay_inter.draw_steps(&mut rng, spec.h_ms),
                 intra: false,
             });
@@ -215,6 +219,55 @@ mod tests {
         assert_eq!(count_synapses(&s), 400 * 45);
         let s1 = spec(1, 100);
         assert_eq!(count_synapses(&s1), 100 * 30);
+    }
+
+    #[test]
+    fn lesion_scales_inter_weights_only_topology_unchanged() {
+        let intact = spec(3, 100);
+        let lesioned = spec(3, 100).with_lesion("A1", 0.5).unwrap();
+        assert_ne!(intact.name, lesioned.name); // fingerprint safety
+        for gid in 0..300u32 {
+            let a = incoming_connections(&intact, 42, gid);
+            let b = incoming_connections(&lesioned, 42, gid);
+            assert_eq!(a.len(), b.len());
+            for (ca, cb) in a.iter().zip(&b) {
+                // identical draws: same sources, same delays
+                assert_eq!(ca.source, cb.source);
+                assert_eq!(ca.delay_steps, cb.delay_steps);
+                assert_eq!(ca.intra, cb.intra);
+                let touches = !ca.intra
+                    && (intact.area_of(ca.source) == 1 || intact.area_of(gid) == 1);
+                if touches {
+                    assert_eq!(cb.weight, ca.weight * 0.5);
+                } else {
+                    assert_eq!(cb.weight, ca.weight);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lesion_factor_zero_severs_pathways() {
+        let severed = spec(2, 100).with_lesion("A0", 0.0).unwrap();
+        for gid in 0..200u32 {
+            for c in incoming_connections(&severed, 7, gid) {
+                if !c.intra {
+                    // every inter connection touches A0 in a 2-area net
+                    assert_eq!(c.weight, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lesion_rejects_unknown_area_and_bad_factor() {
+        let err = spec(2, 10).with_lesion("V1", 0.5).unwrap_err();
+        assert!(err.to_string().contains("not an area"), "{err}");
+        let err = spec(2, 10).with_lesion("A0", 0.3).unwrap_err();
+        assert!(err.to_string().contains("1/256"), "{err}");
+        assert!(spec(2, 10).with_lesion("A0", 1.5).is_err());
+        assert!(spec(2, 10).with_lesion("A0", -0.5).is_err());
+        assert!(spec(2, 10).with_lesion("A0", 0.25).is_ok());
     }
 
     #[test]

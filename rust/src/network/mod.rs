@@ -17,7 +17,7 @@ pub mod spec;
 pub mod build;
 
 pub use build::{incoming_connections, Conn};
-pub use spec::{AreaSpec, DelayDist, LifParams, ModelSpec, NeuronKind};
+pub use spec::{AreaSpec, DelayDist, Lesion, LifParams, ModelSpec, NeuronKind};
 
 /// Global neuron id (order of creation, as in NEST).
 pub type Gid = u32;

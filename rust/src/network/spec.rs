@@ -155,6 +155,21 @@ impl Default for WeightRule {
     }
 }
 
+/// A perturbation of one area's long-range (inter-area) pathways: every
+/// inter-area connection with the lesioned area at either endpoint has
+/// its weight scaled by `factor`; `factor == 0` severs the pathways
+/// outright.  The connection *draws* are untouched — the lesioned
+/// network has the exact same topology and RNG stream as the intact
+/// one, so lesion effects are attributable to the weights alone.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Lesion {
+    /// Index of the lesioned area.
+    pub area: usize,
+    /// Inter-area weight scale in [0, 1], an exact multiple of 1/256 so
+    /// scaled weights stay exact binary fractions (DESIGN.md §6).
+    pub factor: f32,
+}
+
 /// A multi-area network specification.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
@@ -169,6 +184,8 @@ pub struct ModelSpec {
     pub delay_inter: DelayDist,
     /// Resolution step [ms].
     pub h_ms: f64,
+    /// Lesions applied on top of the wiring rule (usually empty).
+    pub lesions: Vec<Lesion>,
     /// Cached area GID offsets (areas[i] spans offsets[i]..offsets[i+1]).
     offsets: Vec<Gid>,
 }
@@ -216,8 +233,58 @@ impl ModelSpec {
             delay_intra,
             delay_inter,
             h_ms,
+            lesions: Vec::new(),
             offsets,
         })
+    }
+
+    /// Apply a lesion to the named area's long-range pathways.  The
+    /// factor must be an exact multiple of 1/256 in [0, 1] so scaled
+    /// weights remain exact binary fractions (order-independent f64
+    /// sums, DESIGN.md §6).  The model is renamed so checkpoints of a
+    /// lesioned run can never be restored into the intact network (the
+    /// snapshot fingerprint includes the model name).
+    pub fn with_lesion(mut self, area_name: &str, factor: f64) -> Result<ModelSpec> {
+        let area = self
+            .areas
+            .iter()
+            .position(|a| a.name == area_name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "lesion target '{}' is not an area of model '{}' (areas: {})",
+                    area_name,
+                    self.name,
+                    self.areas
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+        let scaled = factor * 256.0;
+        if !(0.0..=1.0).contains(&factor) || scaled.fract() != 0.0 {
+            bail!(
+                "lesion factor {} must be a multiple of 1/256 in [0, 1] \
+                 (exact binary fractions keep spike trains deterministic)",
+                factor
+            );
+        }
+        self.name = format!("{}+lesion-{}-{}of256", self.name, area_name, scaled as u32);
+        self.lesions.push(Lesion { area, factor: factor as f32 });
+        Ok(self)
+    }
+
+    /// Combined lesion scale for an inter-area connection between
+    /// `src_area` and `dst_area` (1.0 when no lesion touches either
+    /// endpoint).
+    pub fn inter_weight_scale(&self, src_area: usize, dst_area: usize) -> f32 {
+        let mut scale = 1.0f32;
+        for l in &self.lesions {
+            if l.area == src_area || l.area == dst_area {
+                scale *= l.factor;
+            }
+        }
+        scale
     }
 
     pub fn n_areas(&self) -> usize {

@@ -121,6 +121,37 @@ pub struct SpanEvent {
     pub ctx: SpanCtx,
 }
 
+/// Bounding mode of the trace buffer.
+///
+/// One-shot CLI runs default to [`TraceMode::Unbounded`] — the sink
+/// grows past its pre-allocated capacity if the run is long, and
+/// nothing is lost.  Long-running processes (the job server tracing
+/// for days) use [`TraceMode::Ring`]: each rank sink keeps only its
+/// most recent N spans, evicting oldest-first, so memory is bounded by
+/// `m_ranks × N` spans no matter how long the process lives.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Grow without bound (one-shot runs; nothing evicted).
+    #[default]
+    Unbounded,
+    /// Keep only the most recent N spans per rank sink.
+    Ring(usize),
+}
+
+/// Pre-allocated spans per sink — growth beyond this doubles the `Vec`
+/// in unbounded mode (rare, amortized O(1); steady state allocates
+/// nothing) and is the default ring capacity of `--trace-mode ring`.
+pub const SINK_CAPACITY: usize = 1 << 14;
+
+/// One rank's span sink.  In ring mode `events` acts as a circular
+/// buffer once it reaches capacity: `next` is the oldest retained
+/// span's index (= the next overwrite position); in unbounded mode
+/// `next` stays 0 and `events` is a plain append log.
+struct Sink {
+    events: Vec<SpanEvent>,
+    next: usize,
+}
+
 /// The shared per-run trace buffer: one pre-allocated sink per rank,
 /// all stamped against a single [`Instant`] origin so cross-rank spans
 /// align on one timeline.  A rank only ever pushes into its own sink
@@ -129,19 +160,39 @@ pub struct SpanEvent {
 /// [`TraceBuf::drain`] at run end is safe without `unsafe`.
 pub struct TraceBuf {
     origin: Instant,
-    sinks: Vec<Mutex<Vec<SpanEvent>>>,
+    mode: TraceMode,
+    sinks: Vec<Mutex<Sink>>,
 }
 
 impl TraceBuf {
-    /// Pre-allocated spans per sink — growth beyond this doubles the
-    /// `Vec` (rare, amortized O(1); steady state allocates nothing).
-    pub const SINK_CAPACITY: usize = 1 << 14;
+    /// Pre-allocated spans per sink (see the module-level
+    /// [`SINK_CAPACITY`]).
+    pub const SINK_CAPACITY: usize = SINK_CAPACITY;
 
     pub fn new(m_ranks: usize) -> Arc<TraceBuf> {
+        Self::with_mode(m_ranks, TraceMode::Unbounded)
+    }
+
+    /// A trace buffer with an explicit bounding mode
+    /// (`--trace-mode`).
+    pub fn with_mode(m_ranks: usize, mode: TraceMode) -> Arc<TraceBuf> {
+        // ring capacities can be huge ("bound me at a million spans");
+        // pre-allocate at most the standard sink size and let the ring
+        // grow toward its cap on demand
+        let prealloc = match mode {
+            TraceMode::Unbounded => SINK_CAPACITY,
+            TraceMode::Ring(cap) => cap.max(1).min(SINK_CAPACITY),
+        };
         Arc::new(TraceBuf {
             origin: Instant::now(),
+            mode,
             sinks: (0..m_ranks)
-                .map(|_| Mutex::new(Vec::with_capacity(Self::SINK_CAPACITY)))
+                .map(|_| {
+                    Mutex::new(Sink {
+                        events: Vec::with_capacity(prealloc),
+                        next: 0,
+                    })
+                })
                 .collect(),
         })
     }
@@ -158,16 +209,39 @@ impl TraceBuf {
 
     #[inline]
     pub fn push(&self, sink: usize, ev: SpanEvent) {
-        self.sinks[sink].lock().unwrap().push(ev);
+        let mut s = self.sinks[sink].lock().unwrap();
+        match self.mode {
+            TraceMode::Unbounded => s.events.push(ev),
+            TraceMode::Ring(cap) => {
+                let cap = cap.max(1);
+                if s.events.len() < cap {
+                    s.events.push(ev);
+                } else {
+                    // full: overwrite the oldest retained span
+                    let i = s.next;
+                    s.events[i] = ev;
+                    s.next = (i + 1) % cap;
+                }
+            }
+        }
     }
 
     /// Drain every sink into one list ordered by
     /// `(pid, tid, start, -duration)` so enclosing spans precede the
-    /// spans they contain.
+    /// spans they contain.  Wrapped ring sinks are rotated
+    /// oldest-first before the global sort, so the result is a
+    /// well-formed (suffix of a) timeline either way.
     pub fn drain(&self) -> Vec<SpanEvent> {
         let mut out = Vec::new();
         for s in &self.sinks {
-            out.append(&mut s.lock().unwrap());
+            let mut sink = s.lock().unwrap();
+            let next = std::mem::take(&mut sink.next);
+            let mut evs = std::mem::take(&mut sink.events);
+            if next > 0 {
+                // the ring wrapped: [next..] holds the oldest spans
+                evs.rotate_left(next);
+            }
+            out.append(&mut evs);
         }
         out.sort_by(|a, b| {
             (a.pid, a.tid)
@@ -302,6 +376,99 @@ mod tests {
         assert_eq!(spans.len(), 1);
         assert!(spans[0].dur_us >= 1000.0, "dur {}", spans[0].dur_us);
         assert_eq!(spans[0].ctx.cycle, 7);
+    }
+
+    fn ev(ts: f64, cycle: u64) -> SpanEvent {
+        SpanEvent {
+            name: "seg",
+            pid: 0,
+            tid: 0,
+            ts_us: ts,
+            dur_us: 1.0,
+            ctx: SpanCtx::cycle(cycle),
+        }
+    }
+
+    #[test]
+    fn ring_mode_evicts_oldest_first() {
+        let buf = TraceBuf::with_mode(1, TraceMode::Ring(4));
+        for i in 0..10u64 {
+            buf.push(0, ev(i as f64, i));
+        }
+        let spans = buf.drain();
+        // only the newest 4 survive, oldest-first
+        assert_eq!(spans.len(), 4);
+        let cycles: Vec<u64> = spans.iter().map(|s| s.ctx.cycle).collect();
+        assert_eq!(cycles, vec![6, 7, 8, 9]);
+        assert!(buf.drain().is_empty());
+    }
+
+    #[test]
+    fn ring_mode_below_capacity_keeps_everything() {
+        let buf = TraceBuf::with_mode(1, TraceMode::Ring(8));
+        for i in 0..5u64 {
+            buf.push(0, ev(i as f64, i));
+        }
+        let spans = buf.drain();
+        assert_eq!(spans.len(), 5);
+        assert_eq!(spans[0].ctx.cycle, 0);
+        assert_eq!(spans[4].ctx.cycle, 4);
+    }
+
+    #[test]
+    fn wrapped_ring_exports_well_formed_chrome_trace() {
+        let buf = TraceBuf::with_mode(2, TraceMode::Ring(3));
+        // wrap rank 0 twice over; leave rank 1 un-wrapped
+        for i in 0..8u64 {
+            buf.push(0, ev(i as f64, i));
+        }
+        buf.push(
+            1,
+            SpanEvent {
+                name: "seg",
+                pid: 1,
+                tid: 0,
+                ts_us: 2.5,
+                dur_us: 0.5,
+                ctx: SpanCtx::cycle(100),
+            },
+        );
+        let spans = buf.drain();
+        assert_eq!(spans.len(), 4);
+        let json = trace::trace_json(&spans, 2);
+        let evs = json
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        // m_ranks metadata events + one X event per retained span
+        assert_eq!(evs.len(), 2 + spans.len());
+        let mut last_ts: std::collections::BTreeMap<u64, f64> =
+            std::collections::BTreeMap::new();
+        let mut x_events = 0;
+        for e in evs {
+            let ph = e.get("ph").and_then(|v| v.as_str()).expect("ph");
+            if ph == "M" {
+                continue;
+            }
+            assert_eq!(ph, "X");
+            x_events += 1;
+            assert!(e.get("name").and_then(|v| v.as_str()).is_some());
+            let pid = e.get("pid").and_then(|v| v.as_u64()).expect("pid");
+            let ts = e.get("ts").and_then(|v| v.as_f64()).expect("ts");
+            assert!(e.get("dur").and_then(|v| v.as_f64()).expect("dur") >= 0.0);
+            // per-rank timestamps stay monotonic after the wrap
+            if let Some(prev) = last_ts.insert(pid, ts) {
+                assert!(ts >= prev, "pid {pid}: ts {ts} < prev {prev}");
+            }
+        }
+        assert_eq!(x_events, spans.len());
+        // wrap kept the newest rank-0 spans in timeline order
+        let r0: Vec<u64> = spans
+            .iter()
+            .filter(|s| s.pid == 0)
+            .map(|s| s.ctx.cycle)
+            .collect();
+        assert_eq!(r0, vec![5, 6, 7]);
     }
 
     #[test]

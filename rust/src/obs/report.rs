@@ -191,26 +191,40 @@ fn stragglers_json(res: &SimResult) -> Json {
 
 /// Build the full stats document for one finished run.
 pub fn run_report(model_name: &str, cfg: &RunConfig, res: &SimResult) -> Json {
+    run_report_for_job(model_name, cfg, res, None)
+}
+
+/// [`run_report`] with an optional serving-layer job id stamped into
+/// the config block (`config.job`, e.g. `"job-3"`).  Absent for direct
+/// CLI runs — consumers treat the field as optional, mirroring
+/// `config.transport`.
+pub fn run_report_for_job(
+    model_name: &str,
+    cfg: &RunConfig,
+    res: &SimResult,
+    job: Option<&str>,
+) -> Json {
+    let mut config = vec![
+        ("model", model_name.into()),
+        ("strategy", cfg.strategy.name().into()),
+        ("exec", cfg.exec.name().into()),
+        ("comm", cfg.comm.name().into()),
+        ("comm_depth", cfg.comm_depth.into()),
+        ("transport", cfg.transport.name().into()),
+        ("ranks_per_area", cfg.ranks_per_area.into()),
+        ("m_ranks", cfg.m_ranks.into()),
+        ("threads_per_rank", cfg.threads_per_rank.into()),
+        ("t_model_ms", Json::Num(cfg.t_model_ms)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("trace", cfg.trace.into()),
+        ("record_cycle_times", cfg.record_cycle_times.into()),
+    ];
+    if let Some(id) = job {
+        config.push(("job", id.into()));
+    }
     Json::obj(vec![
         ("schema", SCHEMA.into()),
-        (
-            "config",
-            Json::obj(vec![
-                ("model", model_name.into()),
-                ("strategy", cfg.strategy.name().into()),
-                ("exec", cfg.exec.name().into()),
-                ("comm", cfg.comm.name().into()),
-                ("comm_depth", cfg.comm_depth.into()),
-                ("transport", cfg.transport.name().into()),
-                ("ranks_per_area", cfg.ranks_per_area.into()),
-                ("m_ranks", cfg.m_ranks.into()),
-                ("threads_per_rank", cfg.threads_per_rank.into()),
-                ("t_model_ms", Json::Num(cfg.t_model_ms)),
-                ("seed", Json::Num(cfg.seed as f64)),
-                ("trace", cfg.trace.into()),
-                ("record_cycle_times", cfg.record_cycle_times.into()),
-            ]),
-        ),
+        ("config", Json::obj(config)),
         (
             "result",
             Json::obj(vec![
@@ -332,6 +346,22 @@ mod tests {
         let text = crate::util::json::to_string_pretty(&doc);
         let back = crate::util::json::parse(&text).unwrap();
         assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn job_field_only_present_for_server_jobs() {
+        let cfg = RunConfig { m_ranks: 2, ..Default::default() };
+        let res = tiny_result(2);
+        // direct runs: no job key at all (schema-stable optionality)
+        let doc = run_report("sanity", &cfg, &res);
+        assert!(doc.get("config").unwrap().get("job").is_none());
+        // server jobs: config.job carries the deterministic id
+        let doc = run_report_for_job("sanity", &cfg, &res, Some("job-3"));
+        assert_eq!(
+            doc.get("config").unwrap().get("job").unwrap().as_str(),
+            Some("job-3")
+        );
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(SCHEMA));
     }
 
     #[test]

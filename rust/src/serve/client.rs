@@ -1,0 +1,212 @@
+//! Client side of the serve protocol (`nsim submit`): connect to the
+//! server socket, send one-shot ops, or follow an event stream until
+//! every submitted job is terminal.
+
+use super::proto::{self};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+/// A connection to a running job server.
+pub struct Client {
+    stream: UnixStream,
+}
+
+/// Outcome of following a job to its terminal state.
+#[derive(Clone, Debug)]
+pub struct JobEnd {
+    pub job: String,
+    pub state: String,
+    /// Spike train text (`done` jobs only).
+    pub spikes: Option<String>,
+    /// Stats document (`done` jobs only).
+    pub stats: Option<Json>,
+    pub error: Option<String>,
+}
+
+impl Client {
+    pub fn connect(socket: &Path) -> Result<Client> {
+        let stream = UnixStream::connect(socket).with_context(|| {
+            format!(
+                "connecting to serve socket {} (is `nsim serve` \
+                 running?)",
+                socket.display()
+            )
+        })?;
+        Ok(Client { stream })
+    }
+
+    /// One request/response round trip.  Error responses become typed
+    /// `anyhow` errors carrying the server's `kind`.
+    pub fn request(&mut self, req: &Json) -> Result<Json> {
+        proto::write_frame(&mut self.stream, req)?;
+        let resp = proto::read_frame(&mut self.stream)?
+            .context("server closed the connection mid-request")?;
+        check_ok(resp)
+    }
+
+    /// Read one event frame off a followed stream (`None` on EOF).
+    pub fn read_event(&mut self) -> Result<Option<Json>> {
+        proto::read_frame(&mut self.stream)
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.request(&Json::obj(vec![("op", "ping".into())]))?;
+        Ok(())
+    }
+
+    /// The server's scenario catalog.
+    pub fn scenarios(&mut self) -> Result<Json> {
+        let resp =
+            self.request(&Json::obj(vec![("op", "scenarios".into())]))?;
+        resp.get("scenarios")
+            .cloned()
+            .context("scenarios response without a catalog")
+    }
+
+    /// Submit one scenario (optionally a sweep); returns the job ids.
+    /// With `follow`, the connection turns into an event stream —
+    /// consume it with [`Client::follow_until_complete`].
+    pub fn submit(
+        &mut self,
+        scenario: &str,
+        params: &BTreeMap<String, Json>,
+        sweep: &BTreeMap<String, Json>,
+        follow: bool,
+    ) -> Result<Vec<String>> {
+        let mut req = vec![
+            ("op", Json::Str("submit".to_string())),
+            ("scenario", scenario.into()),
+        ];
+        if !params.is_empty() {
+            req.push(("params", Json::Obj(params.clone())));
+        }
+        if !sweep.is_empty() {
+            req.push(("sweep", Json::Obj(sweep.clone())));
+        }
+        if follow {
+            req.push(("follow", Json::Bool(true)));
+        }
+        let resp = self.request(&Json::obj(req))?;
+        let ids = resp
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .context("submit response without job ids")?
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+        Ok(ids)
+    }
+
+    /// Drain a followed event stream until the server's `complete`
+    /// frame, returning every job's terminal outcome (and passing each
+    /// event to `on_event` for display).
+    pub fn follow_until_complete(
+        &mut self,
+        mut on_event: impl FnMut(&Json),
+    ) -> Result<Vec<JobEnd>> {
+        let mut ends: BTreeMap<String, JobEnd> = BTreeMap::new();
+        loop {
+            let ev = self
+                .read_event()?
+                .context("server closed the stream before complete")?;
+            if ev.get("ok").and_then(Json::as_bool) == Some(false) {
+                bail!(
+                    "server aborted the stream: {}",
+                    ev.get("error")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown error")
+                );
+            }
+            on_event(&ev);
+            let event =
+                ev.get("event").and_then(Json::as_str).unwrap_or("");
+            if event == "complete" {
+                return Ok(ends.into_values().collect());
+            }
+            if event != "state" {
+                continue;
+            }
+            let (Some(job), Some(state)) = (
+                ev.get("job").and_then(Json::as_str),
+                ev.get("state").and_then(Json::as_str),
+            ) else {
+                continue;
+            };
+            if ["done", "failed", "cancelled"].contains(&state) {
+                ends.insert(
+                    job.to_string(),
+                    JobEnd {
+                        job: job.to_string(),
+                        state: state.to_string(),
+                        spikes: ev
+                            .get("spikes")
+                            .and_then(Json::as_str)
+                            .map(str::to_string),
+                        stats: ev.get("stats").cloned(),
+                        error: ev
+                            .get("error")
+                            .and_then(Json::as_str)
+                            .map(str::to_string),
+                    },
+                );
+            }
+        }
+    }
+
+    pub fn status(&mut self, job: &str) -> Result<Json> {
+        let resp = self.request(&Json::obj(vec![
+            ("op", "status".into()),
+            ("job", job.into()),
+        ]))?;
+        resp.get("status")
+            .cloned()
+            .context("status response without a status block")
+    }
+
+    pub fn cancel(&mut self, job: &str) -> Result<Json> {
+        self.request(&Json::obj(vec![
+            ("op", "cancel".into()),
+            ("job", job.into()),
+        ]))
+    }
+
+    pub fn result(&mut self, job: &str) -> Result<Json> {
+        self.request(&Json::obj(vec![
+            ("op", "result".into()),
+            ("job", job.into()),
+        ]))
+    }
+
+    pub fn jobs(&mut self) -> Result<Json> {
+        let resp =
+            self.request(&Json::obj(vec![("op", "jobs".into())]))?;
+        resp.get("jobs").cloned().context("jobs response without list")
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.request(&Json::obj(vec![("op", "shutdown".into())]))?;
+        Ok(())
+    }
+}
+
+/// Turn an `ok: false` response into a typed error.
+fn check_ok(resp: Json) -> Result<Json> {
+    match resp.get("ok").and_then(Json::as_bool) {
+        Some(true) => Ok(resp),
+        Some(false) => {
+            let kind = resp
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown");
+            let msg = resp
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unspecified server error");
+            bail!("[{kind}] {msg}")
+        }
+        None => bail!("malformed server response (no \"ok\" field)"),
+    }
+}

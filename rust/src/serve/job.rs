@@ -1,0 +1,464 @@
+//! Job lifecycle and registry: every submission becomes a job with a
+//! deterministic id (`job-0`, `job-1`, ...) walking the state machine
+//! `queued → building → running → done | failed | cancelled`, with
+//! every transition (and periodic progress) published as an event frame
+//! to attached watchers.
+//!
+//! The registry is the single synchronization point between handler
+//! threads (submit/status/cancel/watch) and the bounded worker pool
+//! (claim next queued job, publish transitions): one mutex over the
+//! table plus a condvar the workers park on.  Watchers never miss
+//! events — subscribing atomically replays the job's event history and
+//! registers the live channel under the same lock.
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// Job lifecycle states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Building,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Building => "building",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobState::Done | JobState::Failed | JobState::Cancelled
+        )
+    }
+}
+
+/// Stored result of a finished job, served by the `result` op and
+/// carried in the terminal `done` event.
+#[derive(Clone, Debug)]
+pub struct JobOutput {
+    /// The spike train in the canonical `"{step} {gid}\n"` text form —
+    /// byte-identical to `nsim simulate --spikes-out`.
+    pub spikes_text: String,
+    /// The `nsim-stats-v1` document (with `config.job` stamped).
+    pub stats: Json,
+}
+
+struct JobEntry {
+    scenario: String,
+    params: BTreeMap<String, Json>,
+    state: JobState,
+    error: Option<String>,
+    cancel: Arc<AtomicBool>,
+    output: Option<JobOutput>,
+    /// Every event published so far, replayed to late watchers.
+    history: Vec<Json>,
+    subscribers: Vec<mpsc::Sender<Json>>,
+}
+
+#[derive(Default)]
+struct TableInner {
+    jobs: BTreeMap<String, JobEntry>,
+    /// Submission order; `ids` sort lexicographically only up to 9
+    /// jobs, so the queue carries the order explicitly.
+    queue: VecDeque<String>,
+    next_id: u64,
+    shutdown: bool,
+}
+
+/// The shared job table (see module docs).
+#[derive(Default)]
+pub struct JobTable {
+    inner: Mutex<TableInner>,
+    work: Condvar,
+}
+
+fn state_event(id: &str, state: JobState) -> Json {
+    Json::obj(vec![
+        ("event", "state".into()),
+        ("job", id.into()),
+        ("state", state.name().into()),
+    ])
+}
+
+fn publish(entry: &mut JobEntry, ev: Json) {
+    entry
+        .subscribers
+        .retain(|s| s.send(ev.clone()).is_ok());
+    entry.history.push(ev);
+}
+
+impl JobTable {
+    pub fn new() -> Arc<JobTable> {
+        Arc::new(JobTable::default())
+    }
+
+    /// Enqueue a job; returns its id, or `None` when shutting down.
+    pub fn submit(
+        &self,
+        scenario: &str,
+        params: BTreeMap<String, Json>,
+    ) -> Option<String> {
+        let mut t = self.inner.lock().unwrap();
+        if t.shutdown {
+            return None;
+        }
+        let id = format!("job-{}", t.next_id);
+        t.next_id += 1;
+        let mut entry = JobEntry {
+            scenario: scenario.to_string(),
+            params,
+            state: JobState::Queued,
+            error: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+            output: None,
+            history: Vec::new(),
+            subscribers: Vec::new(),
+        };
+        publish(&mut entry, state_event(&id, JobState::Queued));
+        t.jobs.insert(id.clone(), entry);
+        t.queue.push_back(id.clone());
+        drop(t);
+        self.work.notify_one();
+        Some(id)
+    }
+
+    /// Worker side: block until a runnable job is queued (skipping jobs
+    /// cancelled while still queued) or shutdown; returns the claimed
+    /// job id with its scenario, params and cancel gate.
+    #[allow(clippy::type_complexity)]
+    pub fn claim(
+        &self,
+    ) -> Option<(String, String, BTreeMap<String, Json>, Arc<AtomicBool>)>
+    {
+        let mut t = self.inner.lock().unwrap();
+        loop {
+            while let Some(id) = t.queue.pop_front() {
+                let Some(e) = t.jobs.get(&id) else { continue };
+                // cancelled while queued: already terminal, skip
+                if e.state != JobState::Queued {
+                    continue;
+                }
+                return Some((
+                    id.clone(),
+                    e.scenario.clone(),
+                    e.params.clone(),
+                    e.cancel.clone(),
+                ));
+            }
+            if t.shutdown {
+                return None;
+            }
+            t = self.work.wait(t).unwrap();
+        }
+    }
+
+    /// Publish a non-terminal transition (`building`, `running`).
+    pub fn set_state(&self, id: &str, state: JobState) {
+        debug_assert!(!state.is_terminal());
+        let mut t = self.inner.lock().unwrap();
+        if let Some(e) = t.jobs.get_mut(id) {
+            if e.state.is_terminal() {
+                return;
+            }
+            e.state = state;
+            publish(e, state_event(id, state));
+        }
+    }
+
+    /// Publish an auxiliary event (progress frames, resume notices).
+    pub fn publish_event(&self, id: &str, ev: Json) {
+        let mut t = self.inner.lock().unwrap();
+        if let Some(e) = t.jobs.get_mut(id) {
+            publish(e, ev);
+        }
+    }
+
+    /// Terminal transition: `done` with the stored output.  The event
+    /// carries the full spike train and stats document — the streamed
+    /// result a follower writes to disk.
+    pub fn finish_done(&self, id: &str, output: JobOutput) {
+        let mut t = self.inner.lock().unwrap();
+        let Some(e) = t.jobs.get_mut(id) else { return };
+        if e.state.is_terminal() {
+            return;
+        }
+        e.state = JobState::Done;
+        let n_spikes =
+            output.spikes_text.lines().count();
+        let ev = Json::obj(vec![
+            ("event", "state".into()),
+            ("job", id.into()),
+            ("state", "done".into()),
+            ("n_spikes", n_spikes.into()),
+            ("spikes", output.spikes_text.as_str().into()),
+            ("stats", output.stats.clone()),
+        ]);
+        e.output = Some(output);
+        publish(e, ev);
+    }
+
+    /// Terminal transition: `failed` with the error text.
+    pub fn finish_failed(&self, id: &str, error: String) {
+        let mut t = self.inner.lock().unwrap();
+        let Some(e) = t.jobs.get_mut(id) else { return };
+        if e.state.is_terminal() {
+            return;
+        }
+        e.state = JobState::Failed;
+        let ev = Json::obj(vec![
+            ("event", "state".into()),
+            ("job", id.into()),
+            ("state", "failed".into()),
+            ("error", error.as_str().into()),
+        ]);
+        e.error = Some(error);
+        publish(e, ev);
+    }
+
+    /// Terminal transition: `cancelled`.
+    pub fn finish_cancelled(&self, id: &str) {
+        let mut t = self.inner.lock().unwrap();
+        let Some(e) = t.jobs.get_mut(id) else { return };
+        if e.state.is_terminal() {
+            return;
+        }
+        e.state = JobState::Cancelled;
+        publish(e, state_event(id, JobState::Cancelled));
+    }
+
+    /// Request cancellation.  A queued job goes terminal immediately;
+    /// a building/running job has its cancel gate raised and goes
+    /// terminal when the engine unwinds through the agreement
+    /// reduction.  Returns the state observed, or `None` for an
+    /// unknown id.
+    pub fn cancel(&self, id: &str) -> Option<JobState> {
+        let mut t = self.inner.lock().unwrap();
+        let e = t.jobs.get_mut(id)?;
+        let seen = e.state;
+        if seen.is_terminal() {
+            return Some(seen);
+        }
+        e.cancel.store(true, Ordering::Relaxed);
+        if seen == JobState::Queued {
+            e.state = JobState::Cancelled;
+            publish(e, state_event(id, JobState::Cancelled));
+        }
+        Some(seen)
+    }
+
+    /// Subscribe to one or more jobs atomically: the returned history
+    /// holds every event already published (across all requested ids,
+    /// in publish order per job), and the receiver delivers everything
+    /// after — no gap, no duplicate.  `None` if any id is unknown.
+    pub fn watch(
+        &self,
+        ids: &[String],
+    ) -> Option<(Vec<Json>, mpsc::Receiver<Json>)> {
+        let mut t = self.inner.lock().unwrap();
+        if !ids.iter().all(|id| t.jobs.contains_key(id)) {
+            return None;
+        }
+        let (tx, rx) = mpsc::channel();
+        let mut history = Vec::new();
+        for id in ids {
+            let e = t.jobs.get_mut(id).unwrap();
+            history.extend(e.history.iter().cloned());
+            if !e.state.is_terminal() {
+                e.subscribers.push(tx.clone());
+            }
+        }
+        Some((history, rx))
+    }
+
+    /// One job's status document.
+    pub fn status(&self, id: &str) -> Option<Json> {
+        let t = self.inner.lock().unwrap();
+        let e = t.jobs.get(id)?;
+        let mut fields = vec![
+            ("job", id.into()),
+            ("scenario", e.scenario.as_str().into()),
+            ("state", e.state.name().into()),
+        ];
+        if let Some(err) = &e.error {
+            fields.push(("error", err.as_str().into()));
+        }
+        Some(Json::obj(fields))
+    }
+
+    /// A finished job's stored output (state, output-if-done).
+    pub fn result(
+        &self,
+        id: &str,
+    ) -> Option<(JobState, Option<JobOutput>, Option<String>)> {
+        let t = self.inner.lock().unwrap();
+        let e = t.jobs.get(id)?;
+        Some((e.state, e.output.clone(), e.error.clone()))
+    }
+
+    /// Listing of all jobs in id order.
+    pub fn jobs_json(&self) -> Json {
+        let t = self.inner.lock().unwrap();
+        let mut rows: Vec<(u64, Json)> = t
+            .jobs
+            .iter()
+            .map(|(id, e)| {
+                let n: u64 = id
+                    .strip_prefix("job-")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(u64::MAX);
+                (
+                    n,
+                    Json::obj(vec![
+                        ("job", id.as_str().into()),
+                        ("scenario", e.scenario.as_str().into()),
+                        ("state", e.state.name().into()),
+                    ]),
+                )
+            })
+            .collect();
+        rows.sort_by_key(|(n, _)| *n);
+        Json::Arr(rows.into_iter().map(|(_, v)| v).collect())
+    }
+
+    /// Params a worker needs to re-resolve a claimed job (kept for
+    /// status introspection).
+    pub fn params_of(&self, id: &str) -> Option<BTreeMap<String, Json>> {
+        let t = self.inner.lock().unwrap();
+        t.jobs.get(id).map(|e| e.params.clone())
+    }
+
+    /// Stop accepting submissions and wake every parked worker so the
+    /// pool can drain.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.work.notify_all();
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.inner.lock().unwrap().shutdown
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev_state(ev: &Json) -> (&str, &str) {
+        (
+            ev.get("job").unwrap().as_str().unwrap(),
+            ev.get("state").unwrap().as_str().unwrap(),
+        )
+    }
+
+    #[test]
+    fn lifecycle_publishes_every_transition() {
+        let t = JobTable::new();
+        let id = t.submit("s", BTreeMap::new()).unwrap();
+        assert_eq!(id, "job-0");
+        let (hist, rx) = t.watch(std::slice::from_ref(&id)).unwrap();
+        assert_eq!(hist.len(), 1);
+        assert_eq!(ev_state(&hist[0]), ("job-0", "queued"));
+        t.set_state(&id, JobState::Building);
+        t.set_state(&id, JobState::Running);
+        t.finish_done(
+            &id,
+            JobOutput {
+                spikes_text: "1 2\n3 4\n".to_string(),
+                stats: Json::Null,
+            },
+        );
+        let evs: Vec<Json> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(ev_state(&evs[0]), ("job-0", "building"));
+        assert_eq!(ev_state(&evs[1]), ("job-0", "running"));
+        assert_eq!(ev_state(&evs[2]), ("job-0", "done"));
+        assert_eq!(evs[2].get("n_spikes").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            evs[2].get("spikes").unwrap().as_str(),
+            Some("1 2\n3 4\n")
+        );
+        // terminal state is sticky
+        t.finish_failed(&id, "late".into());
+        let (state, out, err) = t.result(&id).unwrap();
+        assert_eq!(state, JobState::Done);
+        assert!(out.is_some());
+        assert!(err.is_none());
+    }
+
+    #[test]
+    fn queued_cancellation_is_immediate_and_skipped_by_workers() {
+        let t = JobTable::new();
+        let a = t.submit("s", BTreeMap::new()).unwrap();
+        let b = t.submit("s", BTreeMap::new()).unwrap();
+        assert_eq!(t.cancel(&a), Some(JobState::Queued));
+        let (_, _, _, _) = {
+            let claimed = t.claim().unwrap();
+            assert_eq!(claimed.0, b, "cancelled job must be skipped");
+            claimed
+        };
+        assert_eq!(
+            t.status(&a).unwrap().get("state").unwrap().as_str(),
+            Some("cancelled")
+        );
+        // unknown ids answer None, not panic
+        assert!(t.cancel("job-99").is_none());
+        assert!(t.status("job-99").is_none());
+        assert!(t.watch(&["job-99".to_string()]).is_none());
+    }
+
+    #[test]
+    fn running_cancellation_raises_the_gate_only() {
+        let t = JobTable::new();
+        let id = t.submit("s", BTreeMap::new()).unwrap();
+        let (_, _, _, cancel) = t.claim().unwrap();
+        t.set_state(&id, JobState::Running);
+        assert_eq!(t.cancel(&id), Some(JobState::Running));
+        assert!(cancel.load(Ordering::Relaxed), "gate must be raised");
+        // still running until the engine unwinds
+        assert_eq!(
+            t.status(&id).unwrap().get("state").unwrap().as_str(),
+            Some("running")
+        );
+        t.finish_cancelled(&id);
+        assert_eq!(
+            t.status(&id).unwrap().get("state").unwrap().as_str(),
+            Some("cancelled")
+        );
+    }
+
+    #[test]
+    fn watch_replays_history_without_gaps_or_duplicates() {
+        let t = JobTable::new();
+        let id = t.submit("s", BTreeMap::new()).unwrap();
+        t.set_state(&id, JobState::Building);
+        let (hist, rx) = t.watch(std::slice::from_ref(&id)).unwrap();
+        assert_eq!(hist.len(), 2);
+        t.set_state(&id, JobState::Running);
+        let evs: Vec<Json> = rx.try_iter().collect();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(ev_state(&evs[0]), (id.as_str(), "running"));
+    }
+
+    #[test]
+    fn shutdown_drains_claims_and_rejects_submissions() {
+        let t = JobTable::new();
+        t.shutdown();
+        assert!(t.submit("s", BTreeMap::new()).is_none());
+        assert!(t.claim().is_none());
+    }
+}

@@ -1,0 +1,36 @@
+//! The serving layer: `nsim serve` turns the engine into a
+//! long-running job server.
+//!
+//! Clients connect over a Unix-domain socket and speak length-prefixed
+//! JSON frames ([`proto`]): submit jobs drawn from a named scenario
+//! catalog ([`scenario`]), watch lifecycle events
+//! (`queued → building → running → done/failed/cancelled`, plus
+//! periodic `progress` frames built from the engine's streaming
+//! interval recorders), cancel, and fetch results — the final frame of
+//! a successful job carries the spike train byte-identical to a direct
+//! `nsim simulate --spikes-out` run plus the `nsim-stats-v1` document
+//! with `config.job` stamped.
+//!
+//! A bounded worker pool ([`server`]) runs at most N jobs concurrently
+//! through the ordinary in-process engine; cancellation rides the
+//! engine's cooperative stop gate, per-job timeouts reuse it through a
+//! deadline thread, and jobs configured with `checkpoint_every` are
+//! retried once from their last snapshot if a (fault-injected) crash
+//! takes them down.  [`client`] is the `nsim submit` side.
+
+pub mod job;
+pub mod proto;
+pub mod scenario;
+
+#[cfg(unix)]
+pub mod client;
+#[cfg(unix)]
+pub mod server;
+
+pub use job::{JobOutput, JobState, JobTable};
+pub use scenario::{Catalog, Scenario};
+
+#[cfg(unix)]
+pub use client::Client;
+#[cfg(unix)]
+pub use server::{start, ServeOpts, ServerHandle};

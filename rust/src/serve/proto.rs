@@ -1,0 +1,144 @@
+//! Wire protocol of the job server: length-prefixed JSON frames over a
+//! Unix-domain socket, in the same pure-Rust no-new-deps style as
+//! `comm::socket`.
+//!
+//! Every frame is a little-endian `len: u32` header followed by `len`
+//! bytes of UTF-8 JSON.  Requests are objects with an `"op"` key;
+//! responses carry `"ok": true` plus op-specific fields, or
+//! `"ok": false` with a typed `"kind"` and human-readable `"error"` —
+//! a malformed request gets an error frame back, never a dead
+//! connection.  A `submit` with `"follow": true` (and `watch`) turns
+//! the connection into an event stream: `{"event": ...}` frames until
+//! every followed job reaches a terminal state.
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Upper bound on one frame (64 MiB) — final result frames carry whole
+/// spike trains, but anything beyond this is a protocol violation, not
+/// a big job.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Typed error kinds carried in `"kind"` of an error response.
+pub mod kind {
+    /// The request frame is not a JSON object with a known shape.
+    pub const BAD_REQUEST: &str = "bad-request";
+    /// The submission names a scenario the catalog does not have.
+    pub const UNKNOWN_SCENARIO: &str = "unknown-scenario";
+    /// A job id the server has never issued (or already forgot).
+    pub const UNKNOWN_JOB: &str = "unknown-job";
+    /// Scenario parameters failed validation.
+    pub const BAD_PARAMS: &str = "bad-params";
+    /// The server is shutting down and accepts no new jobs.
+    pub const SHUTDOWN: &str = "server-shutdown";
+}
+
+/// Write one frame.
+pub fn write_frame<W: Write>(w: &mut W, v: &Json) -> Result<()> {
+    let payload = json::to_string(v);
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME_BYTES {
+        bail!(
+            "frame of {} bytes exceeds the {} byte limit",
+            bytes.len(),
+            MAX_FRAME_BYTES
+        );
+    }
+    w.write_all(&(bytes.len() as u32).to_le_bytes())
+        .context("writing frame header")?;
+    w.write_all(bytes).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame.  `Ok(None)` means the peer closed the connection
+/// cleanly (EOF at a frame boundary); a torn frame or oversized header
+/// is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0;
+    while got < hdr.len() {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("connection closed mid frame header"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading frame header"),
+        }
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!(
+            "frame header announces {len} bytes (limit \
+             {MAX_FRAME_BYTES}) — not a serve-protocol peer?"
+        );
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    let text = String::from_utf8(payload).context("frame is not UTF-8")?;
+    let v = json::parse(&text).context("frame is not valid JSON")?;
+    Ok(Some(v))
+}
+
+/// `{"ok": true, ...fields}`.
+pub fn ok(fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true))];
+    all.extend(fields);
+    Json::obj(all)
+}
+
+/// `{"ok": false, "kind": kind, "error": msg}` — the typed rejection
+/// every protocol error turns into.
+pub fn err(kind: &str, msg: impl std::fmt::Display) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("kind", kind.into()),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip() {
+        let v = Json::obj(vec![
+            ("op", "submit".into()),
+            ("scenario", "sanity-smoke".into()),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).unwrap();
+        write_frame(&mut buf, &Json::Bool(true)).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), Some(v));
+        assert_eq!(read_frame(&mut r).unwrap(), Some(Json::Bool(true)));
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn torn_and_oversized_frames_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::Num(1.0)).unwrap();
+        // cut the payload short
+        let torn = &buf[..buf.len() - 1];
+        let mut r = torn;
+        assert!(read_frame(&mut r).is_err());
+        // an absurd header is rejected before allocating
+        let huge = (MAX_FRAME_BYTES as u32 + 1).to_le_bytes();
+        let mut r = &huge[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn error_frames_are_typed() {
+        let e = err(kind::UNKNOWN_SCENARIO, "no scenario \"nope\"");
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            e.get("kind").unwrap().as_str(),
+            Some("unknown-scenario")
+        );
+        assert!(e.get("error").unwrap().as_str().unwrap().contains("nope"));
+    }
+}

@@ -1,0 +1,511 @@
+//! The scenario catalog: named, parameterizable simulation setups the
+//! job server accepts (`configs/scenarios/*.json`, listed by
+//! `nsim scenarios`).
+//!
+//! A scenario is a model block (which bundled network to instantiate,
+//! with which knobs, optionally lesioned) plus a [`RunConfig`] JSON
+//! block of defaults.  A submission names a scenario and optionally
+//! overrides parameters; a sweep fans one submission out into the
+//! cartesian product of per-parameter value lists, one job per grid
+//! point.  Parameter routing is by key: model keys go to the network
+//! constructor, `timeout_secs` to the job runner, everything else must
+//! be a known config key — unknown keys are a typed `bad-params`
+//! rejection, not a silent ignore.
+
+use crate::config::{FaultPlan, RunConfig, TransportKind};
+use crate::network::ModelSpec;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parameter keys routed to the model constructor.
+pub const MODEL_KEYS: &[&str] = &[
+    "scale",
+    "areas",
+    "n_per_area",
+    "d_min_inter_ms",
+    "lesion_area",
+    "lesion_factor",
+];
+
+/// Parameter keys routed into the [`RunConfig`] JSON (a curated subset
+/// of `RunConfig::from_json` — the serving layer owns transport,
+/// recording and checkpoint paths itself).
+pub const CONFIG_KEYS: &[&str] = &[
+    "strategy",
+    "ranks",
+    "threads",
+    "t_model_ms",
+    "seed",
+    "exec",
+    "comm",
+    "comm_depth",
+    "comm_quota",
+    "ranks_per_area",
+    "comm_timeout",
+    "checkpoint_every",
+    "kill_at",
+];
+
+/// Parameter keys the job runner consumes directly.
+pub const JOB_KEYS: &[&str] = &["timeout_secs"];
+
+/// One catalog entry.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    /// Model block: `kind` plus constructor knobs ([`MODEL_KEYS`]).
+    pub model: BTreeMap<String, Json>,
+    /// `RunConfig` JSON defaults ([`CONFIG_KEYS`] subset).
+    pub config: BTreeMap<String, Json>,
+}
+
+/// Job-runner knobs resolved from a submission.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobKnobs {
+    /// Wall-clock deadline; past it the job's cancel gate fires and the
+    /// job reports failed.
+    pub timeout_secs: Option<f64>,
+}
+
+impl Scenario {
+    /// Parse one scenario document (`configs/scenarios/*.json` shape):
+    /// `{"name": ..., "description": ..., "model": {"kind": ...},
+    /// "config": {...}}`.
+    pub fn from_json(v: &Json) -> Result<Scenario> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .context("scenario needs a string \"name\"")?
+            .to_string();
+        let description = v
+            .get("description")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let model = v
+            .get("model")
+            .and_then(Json::as_obj)
+            .with_context(|| {
+                format!("scenario {name:?} needs a \"model\" object")
+            })?
+            .clone();
+        let kind = model
+            .get("kind")
+            .and_then(Json::as_str)
+            .with_context(|| {
+                format!("scenario {name:?} model needs a \"kind\"")
+            })?;
+        for key in model.keys() {
+            if key != "kind" && !MODEL_KEYS.contains(&key.as_str()) {
+                bail!("scenario {name:?}: unknown model key {key:?}");
+            }
+        }
+        if !["sanity", "deep-pipeline", "mam-benchmark", "mam"]
+            .contains(&kind)
+        {
+            bail!("scenario {name:?}: unknown model kind {kind:?}");
+        }
+        let config = match v.get("config") {
+            Some(c) => c
+                .as_obj()
+                .with_context(|| {
+                    format!("scenario {name:?} \"config\" must be an object")
+                })?
+                .clone(),
+            None => BTreeMap::new(),
+        };
+        for key in config.keys() {
+            if !CONFIG_KEYS.contains(&key.as_str()) {
+                bail!("scenario {name:?}: unknown config key {key:?}");
+            }
+        }
+        Ok(Scenario { name, description, model, config })
+    }
+
+    /// Resolve a submission's parameter overrides into the network,
+    /// run config and job knobs.  The server forces `record_spikes`
+    /// (results stream back) and the shmem transport (jobs run
+    /// in-process; that is also what makes `--checkpoint-every` legal).
+    pub fn instantiate(
+        &self,
+        params: &BTreeMap<String, Json>,
+    ) -> Result<(ModelSpec, RunConfig, JobKnobs)> {
+        let mut model = self.model.clone();
+        let mut config = self.config.clone();
+        let mut knobs = JobKnobs::default();
+        for (k, v) in params {
+            if MODEL_KEYS.contains(&k.as_str()) {
+                model.insert(k.clone(), v.clone());
+            } else if CONFIG_KEYS.contains(&k.as_str()) {
+                config.insert(k.clone(), v.clone());
+            } else if k == "timeout_secs" {
+                knobs.timeout_secs = Some(
+                    v.as_f64()
+                        .filter(|t| t.is_finite() && *t > 0.0)
+                        .context("timeout_secs must be a positive number")?,
+                );
+            } else {
+                bail!(
+                    "unknown parameter {k:?} (model keys: {}; config \
+                     keys: {}; job keys: {})",
+                    MODEL_KEYS.join(", "),
+                    CONFIG_KEYS.join(", "),
+                    JOB_KEYS.join(", "),
+                );
+            }
+        }
+
+        // kill_at is a CLI-style fault spec layered onto the config
+        // after RunConfig::from_json (which has no such key)
+        let kill_at = config.remove("kill_at");
+        let mut cfg = RunConfig::from_json(&Json::Obj(config))
+            .with_context(|| {
+                format!("scenario {:?} run config", self.name)
+            })?;
+        if let Some(spec) = kill_at {
+            let spec = spec
+                .as_str()
+                .context("kill_at must be a \"rank:epoch[,...]\" string")?;
+            cfg.faults.kills.extend(FaultPlan::parse_kills(spec)?);
+        }
+        cfg.record_spikes = true;
+        cfg.transport = TransportKind::Shmem;
+        cfg.validate()?;
+
+        let spec = build_model(&model, cfg.m_ranks)
+            .with_context(|| format!("scenario {:?} model", self.name))?;
+        Ok((spec, cfg, knobs))
+    }
+
+    /// Catalog-listing document for one entry.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("description", self.description.as_str().into()),
+            ("model", Json::Obj(self.model.clone())),
+            ("config", Json::Obj(self.config.clone())),
+        ])
+    }
+}
+
+/// Instantiate the model block (defaults mirror `nsim simulate`'s
+/// `build_model`).
+fn build_model(
+    model: &BTreeMap<String, Json>,
+    m_ranks: usize,
+) -> Result<ModelSpec> {
+    let kind = model
+        .get("kind")
+        .and_then(Json::as_str)
+        .context("model block needs a \"kind\"")?;
+    let num = |key: &str, default: f64| -> Result<f64> {
+        match model.get(key) {
+            Some(v) => v
+                .as_f64()
+                .with_context(|| format!("model {key:?} must be a number")),
+            None => Ok(default),
+        }
+    };
+    let scale = num("scale", 0.01)?;
+    let d_min_inter = num("d_min_inter_ms", 1.0)?;
+    let areas = num("areas", m_ranks.max(2) as f64)? as usize;
+    let spec = match kind {
+        "sanity" => {
+            crate::models::sanity_net(num("n_per_area", 500.0)? as u32, areas)?
+        }
+        "deep-pipeline" => crate::models::deep_pipeline_net(
+            num("n_per_area", 240.0)? as u32,
+            areas,
+        )?,
+        "mam-benchmark" => {
+            crate::models::mam_benchmark(areas, scale, d_min_inter)?
+        }
+        "mam" => crate::models::mam(scale, d_min_inter)?,
+        other => bail!("unknown model kind {other:?}"),
+    };
+    match model.get("lesion_area").and_then(Json::as_str) {
+        Some(area) => {
+            let factor = num("lesion_factor", 0.0)?;
+            spec.with_lesion(area, factor)
+        }
+        None => {
+            if model.contains_key("lesion_factor") {
+                bail!("lesion_factor without lesion_area");
+            }
+            Ok(spec)
+        }
+    }
+}
+
+/// Expand a sweep (`{"param": [v1, v2, ...], ...}`) over base params
+/// into the cartesian product of per-parameter values — one parameter
+/// map per grid point, in deterministic order (keys sorted, values in
+/// list order, last key fastest).
+pub fn expand_sweep(
+    base: &BTreeMap<String, Json>,
+    sweep: &BTreeMap<String, Vec<Json>>,
+) -> Vec<BTreeMap<String, Json>> {
+    let mut grid = vec![base.clone()];
+    for (key, values) in sweep {
+        let mut next = Vec::with_capacity(grid.len() * values.len().max(1));
+        for point in &grid {
+            for v in values {
+                let mut p = point.clone();
+                p.insert(key.clone(), v.clone());
+                next.push(p);
+            }
+        }
+        grid = next;
+    }
+    grid
+}
+
+/// Built-in catalog entries, in the exact `configs/scenarios/*.json`
+/// file format (each doubles as documentation of the schema).  Files in
+/// the scenario directory overlay these by name.
+const BUILTINS: &[&str] = &[
+    r#"{
+        "name": "mam-ground-state",
+        "description": "multi-area model ground state: 32-area LIF net at a laptop scale, structure-aware placement",
+        "model": {"kind": "mam", "scale": 0.002},
+        "config": {"strategy": "structure-aware", "ranks": 2,
+                   "threads": 2, "t_model_ms": 20.0, "seed": 12}
+    }"#,
+    r#"{
+        "name": "deliver-heavy",
+        "description": "dense sanity LIF net where spike delivery dominates (the bench A/B workload)",
+        "model": {"kind": "sanity", "n_per_area": 500, "areas": 4},
+        "config": {"strategy": "conventional", "ranks": 2, "threads": 2,
+                   "t_model_ms": 50.0, "seed": 12}
+    }"#,
+    r#"{
+        "name": "deep-pipeline",
+        "description": "tight ~5 ms delays over a 1 ms cycle: multi-cycle slack for depth-D split-phase pipelining",
+        "model": {"kind": "deep-pipeline", "n_per_area": 240, "areas": 4},
+        "config": {"strategy": "conventional", "ranks": 2, "threads": 2,
+                   "comm": "overlap", "comm_depth": 2,
+                   "t_model_ms": 50.0, "seed": 12}
+    }"#,
+    r#"{
+        "name": "mam-lesion-v1",
+        "description": "MAM-benchmark perturbation: V1-analogue area A00 with its long-range pathways scaled to 1/2",
+        "model": {"kind": "mam-benchmark", "scale": 0.01, "areas": 4,
+                  "lesion_area": "A00", "lesion_factor": 0.5},
+        "config": {"strategy": "structure-aware", "ranks": 2,
+                   "threads": 2, "t_model_ms": 20.0, "seed": 12}
+    }"#,
+];
+
+/// The scenario catalog: built-ins plus an optional directory overlay.
+#[derive(Clone, Debug)]
+pub struct Catalog {
+    scenarios: BTreeMap<String, Scenario>,
+}
+
+impl Catalog {
+    /// Only the compiled-in scenarios (hermetic — no filesystem).
+    pub fn builtin() -> Catalog {
+        let mut scenarios = BTreeMap::new();
+        for text in BUILTINS {
+            let v = json::parse(text).expect("builtin scenario JSON");
+            let s = Scenario::from_json(&v).expect("builtin scenario");
+            scenarios.insert(s.name.clone(), s);
+        }
+        Catalog { scenarios }
+    }
+
+    /// Built-ins overlaid with every `*.json` in `dir` (same-name files
+    /// replace built-ins).  A missing directory is fine — the catalog
+    /// is then just the built-ins; a malformed file is an error.
+    pub fn load(dir: Option<&std::path::Path>) -> Result<Catalog> {
+        let mut cat = Catalog::builtin();
+        let Some(dir) = dir else { return Ok(cat) };
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(cat)
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("reading scenario dir {}", dir.display())
+                })
+            }
+        };
+        let mut paths: Vec<_> = entries
+            .collect::<std::io::Result<Vec<_>>>()
+            .with_context(|| {
+                format!("listing scenario dir {}", dir.display())
+            })?
+            .into_iter()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        paths.sort();
+        for p in paths {
+            let text = std::fs::read_to_string(&p)
+                .with_context(|| format!("reading {}", p.display()))?;
+            let v = json::parse(&text)
+                .with_context(|| format!("parsing {}", p.display()))?;
+            let s = Scenario::from_json(&v)
+                .with_context(|| format!("scenario file {}", p.display()))?;
+            cat.scenarios.insert(s.name.clone(), s);
+        }
+        Ok(cat)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Scenario> {
+        self.scenarios.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.scenarios.keys().map(String::as_str).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Scenario> {
+        self.scenarios.values()
+    }
+
+    /// The `scenarios` op response payload.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.scenarios.values().map(Scenario::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_catalog_has_the_promised_entries() {
+        let cat = Catalog::builtin();
+        for name in [
+            "mam-ground-state",
+            "deliver-heavy",
+            "deep-pipeline",
+            "mam-lesion-v1",
+        ] {
+            assert!(cat.get(name).is_some(), "missing builtin {name}");
+        }
+        let listing = cat.to_json();
+        assert_eq!(
+            listing.as_arr().unwrap().len(),
+            cat.names().len()
+        );
+    }
+
+    #[test]
+    fn instantiate_applies_defaults_and_server_invariants() {
+        let cat = Catalog::builtin();
+        let s = cat.get("deliver-heavy").unwrap();
+        let (spec, cfg, knobs) =
+            s.instantiate(&BTreeMap::new()).unwrap();
+        assert_eq!(spec.n_areas(), 4);
+        assert!(cfg.record_spikes, "results must stream back");
+        assert_eq!(cfg.transport, TransportKind::Shmem);
+        assert!(knobs.timeout_secs.is_none());
+    }
+
+    #[test]
+    fn params_route_by_key_and_unknowns_are_rejected() {
+        let cat = Catalog::builtin();
+        let s = cat.get("deliver-heavy").unwrap();
+        let mut p = BTreeMap::new();
+        p.insert("n_per_area".to_string(), Json::Num(40.0));
+        p.insert("t_model_ms".to_string(), Json::Num(10.0));
+        p.insert("timeout_secs".to_string(), Json::Num(30.0));
+        let (spec, cfg, knobs) = s.instantiate(&p).unwrap();
+        assert_eq!(spec.total_neurons(), 160);
+        assert_eq!(cfg.t_model_ms, 10.0);
+        assert_eq!(knobs.timeout_secs, Some(30.0));
+
+        let mut p = BTreeMap::new();
+        p.insert("bogus_knob".to_string(), Json::Num(1.0));
+        let err = s.instantiate(&p).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unknown parameter"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn lesion_scenario_renames_model() {
+        let cat = Catalog::builtin();
+        let s = cat.get("mam-lesion-v1").unwrap();
+        let (spec, _, _) = s.instantiate(&BTreeMap::new()).unwrap();
+        assert!(
+            spec.name.contains("lesion-A00"),
+            "lesioned model must be fingerprint-distinct: {}",
+            spec.name
+        );
+        assert_eq!(spec.lesions.len(), 1);
+        // an off-grid factor is a typed rejection
+        let mut p = BTreeMap::new();
+        p.insert("lesion_factor".to_string(), Json::Num(0.3));
+        assert!(s.instantiate(&p).is_err());
+    }
+
+    #[test]
+    fn kill_at_param_needs_watchdog_and_lands_in_faults() {
+        let cat = Catalog::builtin();
+        let s = cat.get("deliver-heavy").unwrap();
+        let mut p = BTreeMap::new();
+        p.insert("kill_at".to_string(), Json::Str("1:2".to_string()));
+        // without a watchdog the survivors would hang: rejected
+        assert!(s.instantiate(&p).is_err());
+        p.insert("comm_timeout".to_string(), Json::Num(5.0));
+        let (_, cfg, _) = s.instantiate(&p).unwrap();
+        assert_eq!(cfg.faults.kills.len(), 1);
+        assert_eq!(cfg.faults.kills[0].rank, 1);
+        assert_eq!(cfg.faults.kills[0].epoch, 2);
+    }
+
+    #[test]
+    fn sweep_expands_to_the_cartesian_grid_in_order() {
+        let mut base = BTreeMap::new();
+        base.insert("t_model_ms".to_string(), Json::Num(10.0));
+        let mut sweep = BTreeMap::new();
+        sweep.insert(
+            "seed".to_string(),
+            vec![Json::Num(1.0), Json::Num(2.0)],
+        );
+        sweep.insert(
+            "threads".to_string(),
+            vec![Json::Num(1.0), Json::Num(2.0), Json::Num(4.0)],
+        );
+        let grid = expand_sweep(&base, &sweep);
+        assert_eq!(grid.len(), 6);
+        // keys iterate sorted: seed is the outer loop, threads inner
+        assert_eq!(grid[0].get("seed"), Some(&Json::Num(1.0)));
+        assert_eq!(grid[0].get("threads"), Some(&Json::Num(1.0)));
+        assert_eq!(grid[1].get("threads"), Some(&Json::Num(2.0)));
+        assert_eq!(grid[3].get("seed"), Some(&Json::Num(2.0)));
+        for p in &grid {
+            assert_eq!(p.get("t_model_ms"), Some(&Json::Num(10.0)));
+        }
+        // no sweep: the base point itself
+        assert_eq!(expand_sweep(&base, &BTreeMap::new()).len(), 1);
+    }
+
+    #[test]
+    fn scenario_files_reject_unknown_keys() {
+        let v = json::parse(
+            r#"{"name": "x", "model": {"kind": "sanity",
+                "frobnicate": 1}}"#,
+        )
+        .unwrap();
+        assert!(Scenario::from_json(&v).is_err());
+        let v = json::parse(
+            r#"{"name": "x", "model": {"kind": "sanity"},
+                "config": {"warp_factor": 9}}"#,
+        )
+        .unwrap();
+        assert!(Scenario::from_json(&v).is_err());
+        let v = json::parse(
+            r#"{"name": "x", "model": {"kind": "unknown-net"}}"#,
+        )
+        .unwrap();
+        assert!(Scenario::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,770 @@
+//! The job server behind `nsim serve`: a Unix-domain socket accepting
+//! frames ([`proto`](super::proto)), a bounded worker pool draining the
+//! [`JobTable`], and per-client handler threads translating ops into
+//! table calls.
+//!
+//! Jobs run through the ordinary in-process engine
+//! (`engine::simulate_hooked`) with the serving hooks attached:
+//! cooperative cancellation (the engine's stop gate) and per-epoch
+//! progress reports republished as `progress` event frames.  Crash
+//! resilience reuses the checkpoint machinery — a job configured with
+//! `checkpoint_every` that dies from an injected kill is retried once
+//! from its last snapshot (kill faults stripped, so the fault does not
+//! re-fire at the restored epoch), and the resumed train is
+//! bit-identical to an uninterrupted run because snapshots carry the
+//! spikes recorded so far.
+
+use super::job::{JobOutput, JobState, JobTable};
+use super::proto::{self, kind};
+use super::scenario::{expand_sweep, Catalog};
+use crate::config::RunConfig;
+use crate::engine;
+use crate::obs::TraceMode;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Server configuration (the `nsim serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Unix-domain socket path to listen on.
+    pub socket: PathBuf,
+    /// Worker pool size: at most this many jobs run concurrently.
+    pub workers: usize,
+    /// Directory for per-job scratch files (checkpoints).
+    pub workdir: PathBuf,
+    /// Optional scenario directory overlaying the built-in catalog.
+    pub scenario_dir: Option<PathBuf>,
+    /// Per-job stats documents land at `<base>.job-<n>` (the server-side
+    /// analogue of `nsim launch`'s `.rank<r>` suffixing).
+    pub stats_base: Option<String>,
+    /// Per-job Chrome traces land at `<base>.job-<n>`.
+    pub trace_base: Option<String>,
+    /// Trace buffering mode for traced jobs (ring mode keeps servers
+    /// bounded on long jobs).
+    pub trace_mode: TraceMode,
+    /// Default `checkpoint_every` applied to jobs that do not set their
+    /// own (0 = no default checkpointing).
+    pub checkpoint_every: u64,
+}
+
+impl ServeOpts {
+    pub fn new(socket: impl Into<PathBuf>) -> ServeOpts {
+        ServeOpts {
+            socket: socket.into(),
+            workers: 2,
+            workdir: PathBuf::from("."),
+            scenario_dir: None,
+            stats_base: None,
+            trace_base: None,
+            trace_mode: TraceMode::Ring(crate::obs::SINK_CAPACITY),
+            checkpoint_every: 0,
+        }
+    }
+}
+
+/// Everything the worker and handler threads share.
+struct Ctx {
+    opts: ServeOpts,
+    catalog: Catalog,
+    table: Arc<JobTable>,
+    stop: AtomicBool,
+}
+
+/// A running server: join it (blocks until shutdown) or shut it down.
+pub struct ServerHandle {
+    ctx: Arc<Ctx>,
+    accept: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Bind the socket, start the worker pool and the accept loop.
+pub fn start(opts: ServeOpts) -> Result<ServerHandle> {
+    let catalog = Catalog::load(opts.scenario_dir.as_deref())?;
+    std::fs::create_dir_all(&opts.workdir).with_context(|| {
+        format!("creating workdir {}", opts.workdir.display())
+    })?;
+    // a stale socket file from a dead server blocks bind(2)
+    let _ = std::fs::remove_file(&opts.socket);
+    let listener = UnixListener::bind(&opts.socket).with_context(|| {
+        format!("binding serve socket {}", opts.socket.display())
+    })?;
+    listener
+        .set_nonblocking(true)
+        .context("setting serve socket nonblocking")?;
+
+    let n_workers = opts.workers.max(1);
+    let ctx = Arc::new(Ctx {
+        opts,
+        catalog,
+        table: JobTable::new(),
+        stop: AtomicBool::new(false),
+    });
+
+    let workers = (0..n_workers)
+        .map(|w| {
+            let ctx = ctx.clone();
+            thread::Builder::new()
+                .name(format!("serve-worker-{w}"))
+                .spawn(move || worker_loop(&ctx))
+                .expect("spawning serve worker")
+        })
+        .collect();
+
+    let accept = {
+        let ctx = ctx.clone();
+        thread::Builder::new()
+            .name("serve-accept".to_string())
+            .spawn(move || accept_loop(listener, &ctx))
+            .expect("spawning serve accept loop")
+    };
+
+    Ok(ServerHandle { ctx, accept: Some(accept), workers })
+}
+
+impl ServerHandle {
+    /// The job table (for in-process embedding and tests).
+    pub fn table(&self) -> Arc<JobTable> {
+        self.ctx.table.clone()
+    }
+
+    /// Has a `shutdown` op (or [`ServerHandle::shutdown`]) been seen?
+    pub fn stopping(&self) -> bool {
+        self.ctx.stop.load(Ordering::Relaxed)
+    }
+
+    /// Request shutdown: stop accepting, drain the workers.
+    pub fn shutdown(&self) {
+        self.ctx.table.shutdown();
+        self.ctx.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Block until the accept loop and every worker exit (after
+    /// [`ServerHandle::shutdown`] or a client `shutdown` op), then
+    /// remove the socket file.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&self.ctx.opts.socket);
+    }
+}
+
+fn accept_loop(listener: UnixListener, ctx: &Arc<Ctx>) {
+    while !ctx.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let ctx = ctx.clone();
+                let _ = thread::Builder::new()
+                    .name("serve-client".to_string())
+                    .spawn(move || handle_client(stream, &ctx));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+fn worker_loop(ctx: &Arc<Ctx>) {
+    while let Some((id, scenario, params, cancel)) = ctx.table.claim() {
+        run_job(ctx, &id, &scenario, &params, &cancel);
+    }
+}
+
+/// Checkpoint scratch path of one job.
+fn ckpt_path(ctx: &Ctx, id: &str) -> PathBuf {
+    ctx.opts.workdir.join(format!("{id}.ckpt"))
+}
+
+/// Run one claimed job through the engine, publishing every transition.
+fn run_job(
+    ctx: &Arc<Ctx>,
+    id: &str,
+    scenario: &str,
+    params: &BTreeMap<String, Json>,
+    cancel: &Arc<AtomicBool>,
+) {
+    let table = &ctx.table;
+    let Some(s) = ctx.catalog.get(scenario) else {
+        table.finish_failed(
+            id,
+            format!("scenario {scenario:?} vanished from the catalog"),
+        );
+        return;
+    };
+    table.set_state(id, JobState::Building);
+    let (spec, mut cfg, knobs) = match s.instantiate(params) {
+        Ok(parts) => parts,
+        Err(e) => {
+            table.finish_failed(id, format!("{e:#}"));
+            return;
+        }
+    };
+
+    // serving-layer output plumbing: per-job checkpoint scratch file,
+    // per-job trace buffer
+    if cfg.checkpoint_every == 0 {
+        cfg.checkpoint_every = ctx.opts.checkpoint_every;
+    }
+    if cfg.checkpoint_every > 0 {
+        cfg.checkpoint_path =
+            ckpt_path(ctx, id).to_string_lossy().into_owned();
+    }
+    if ctx.opts.trace_base.is_some() {
+        cfg.trace = true;
+        cfg.trace_mode = ctx.opts.trace_mode;
+    }
+    if let Err(e) = cfg.validate() {
+        table.finish_failed(id, format!("{e:#}"));
+        return;
+    }
+
+    table.set_state(id, JobState::Running);
+
+    // wall-clock deadline: past it, raise the job's own cancel gate —
+    // the engine unwinds with Cancelled, which the timeout flag
+    // reclassifies as a failure
+    let timed_out = Arc::new(AtomicBool::new(false));
+    let sim_done = Arc::new(AtomicBool::new(false));
+    let deadline_thread = knobs.timeout_secs.map(|secs| {
+        let cancel = cancel.clone();
+        let timed_out = timed_out.clone();
+        let sim_done = sim_done.clone();
+        let deadline = Instant::now() + Duration::from_secs_f64(secs);
+        thread::spawn(move || {
+            while !sim_done.load(Ordering::Relaxed) {
+                if Instant::now() >= deadline {
+                    timed_out.store(true, Ordering::Relaxed);
+                    cancel.store(true, Ordering::Relaxed);
+                    return;
+                }
+                thread::sleep(Duration::from_millis(50));
+            }
+        })
+    });
+
+    let hooks = engine::SimHooks {
+        cancel: Some(cancel.clone()),
+        progress: Some({
+            let table = table.clone();
+            let id = id.to_string();
+            Arc::new(move |p: engine::Progress| {
+                table.publish_event(
+                    &id,
+                    Json::obj(vec![
+                        ("event", "progress".into()),
+                        ("job", id.as_str().into()),
+                        ("cycle", (p.cycle as usize).into()),
+                        ("s_cycles", (p.s_cycles as usize).into()),
+                        ("intervals", p.intervals.to_json()),
+                    ]),
+                );
+            })
+        }),
+        progress_every_epochs: 1,
+    };
+
+    let outcome = run_with_resume(ctx, id, &spec, &cfg, &hooks);
+
+    sim_done.store(true, Ordering::Relaxed);
+    if let Some(h) = deadline_thread {
+        let _ = h.join();
+    }
+
+    match outcome {
+        Ok((res, final_cfg)) => {
+            let mut spikes_text =
+                String::with_capacity(res.spikes.len() * 12);
+            for &(step, gid) in &res.spikes {
+                use std::fmt::Write as _;
+                let _ = writeln!(spikes_text, "{step} {gid}");
+            }
+            let stats = crate::obs::report::run_report_for_job(
+                &spec.name,
+                &final_cfg,
+                &res,
+                Some(id),
+            );
+            if let Some(base) = &ctx.opts.stats_base {
+                let path = format!("{base}.{id}");
+                let _ = std::fs::write(
+                    &path,
+                    crate::util::json::to_string_pretty(&stats) + "\n",
+                );
+            }
+            if let Some(base) = &ctx.opts.trace_base {
+                let _ = crate::obs::trace::write_chrome_trace(
+                    Path::new(&format!("{base}.{id}")),
+                    &res.spans,
+                    res.m_ranks,
+                );
+            }
+            let _ = std::fs::remove_file(ckpt_path(ctx, id));
+            table.finish_done(id, JobOutput { spikes_text, stats });
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(ckpt_path(ctx, id));
+            if e.downcast_ref::<engine::Cancelled>().is_some() {
+                if timed_out.load(Ordering::Relaxed) {
+                    table.finish_failed(
+                        id,
+                        format!(
+                            "job exceeded its {}s wall-clock timeout",
+                            knobs.timeout_secs.unwrap_or(0.0)
+                        ),
+                    );
+                } else {
+                    table.finish_cancelled(id);
+                }
+            } else {
+                table.finish_failed(id, format!("{e:#}"));
+            }
+        }
+    }
+}
+
+/// One engine run with a single checkpoint-resume retry.
+///
+/// A job whose config injects kill faults dies mid-run (the surviving
+/// ranks surface a watchdog error, which masks the killed rank's own
+/// bail — the first error in rank order wins).  If the job was
+/// checkpointing, retry once from the latest snapshot with the kill
+/// faults stripped — a restore at the kill epoch would otherwise
+/// re-fire the fault forever.  Cancellation is never retried.
+fn run_with_resume(
+    ctx: &Arc<Ctx>,
+    id: &str,
+    spec: &crate::network::ModelSpec,
+    cfg: &RunConfig,
+    hooks: &engine::SimHooks,
+) -> Result<(engine::SimResult, RunConfig)> {
+    match engine::simulate_hooked(spec, cfg, hooks) {
+        Ok(res) => Ok((res, cfg.clone())),
+        Err(e) if e.downcast_ref::<engine::Cancelled>().is_some() => {
+            Err(e)
+        }
+        Err(e) => {
+            let ckpt = ckpt_path(ctx, id);
+            if cfg.faults.kills.is_empty()
+                || cfg.checkpoint_every == 0
+                || !ckpt.exists()
+            {
+                return Err(e);
+            }
+            let mut retry = cfg.clone();
+            retry.faults.kills.clear();
+            retry.restore = Some(retry.checkpoint_path.clone());
+            ctx.table.publish_event(
+                id,
+                Json::obj(vec![
+                    ("event", "resume".into()),
+                    ("job", id.into()),
+                    ("error", format!("{e:#}").as_str().into()),
+                    (
+                        "restore",
+                        retry.checkpoint_path.as_str().into(),
+                    ),
+                ]),
+            );
+            let res = engine::simulate_hooked(spec, &retry, hooks)
+                .with_context(|| {
+                    format!("resuming from {}", retry.checkpoint_path)
+                })?;
+            Ok((res, retry))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// client handler
+
+/// Serve one connection: a request/response loop that turns into an
+/// event stream for `submit --follow` and `watch`.
+fn handle_client(mut stream: UnixStream, ctx: &Arc<Ctx>) {
+    loop {
+        let req = match proto::read_frame(&mut stream) {
+            Ok(Some(v)) => v,
+            Ok(None) => return,
+            Err(e) => {
+                // typed rejection, then close: the framing is torn, so
+                // nothing further on this connection can be parsed
+                let _ = proto::write_frame(
+                    &mut stream,
+                    &proto::err(kind::BAD_REQUEST, format!("{e:#}")),
+                );
+                return;
+            }
+        };
+        let Some(op) = req.get("op").and_then(Json::as_str) else {
+            if proto::write_frame(
+                &mut stream,
+                &proto::err(
+                    kind::BAD_REQUEST,
+                    "request needs a string \"op\"",
+                ),
+            )
+            .is_err()
+            {
+                return;
+            }
+            continue;
+        };
+        let keep_going = match op {
+            "ping" => reply(&mut stream, proto::ok(vec![])),
+            "scenarios" => reply(
+                &mut stream,
+                proto::ok(vec![(
+                    "scenarios",
+                    ctx.catalog.to_json(),
+                )]),
+            ),
+            "submit" => handle_submit(&mut stream, ctx, &req),
+            "status" => handle_status(&mut stream, ctx, &req),
+            "result" => handle_result(&mut stream, ctx, &req),
+            "cancel" => handle_cancel(&mut stream, ctx, &req),
+            "jobs" => reply(
+                &mut stream,
+                proto::ok(vec![("jobs", ctx.table.jobs_json())]),
+            ),
+            "watch" => handle_watch(&mut stream, ctx, &req),
+            "shutdown" => {
+                let _ =
+                    proto::write_frame(&mut stream, &proto::ok(vec![]));
+                ctx.table.shutdown();
+                ctx.stop.store(true, Ordering::Relaxed);
+                return;
+            }
+            other => reply(
+                &mut stream,
+                proto::err(
+                    kind::BAD_REQUEST,
+                    format!("unknown op {other:?}"),
+                ),
+            ),
+        };
+        if !keep_going {
+            return;
+        }
+    }
+}
+
+/// Write one response; `false` means the peer went away.
+fn reply(stream: &mut UnixStream, v: Json) -> bool {
+    proto::write_frame(stream, &v).is_ok()
+}
+
+fn job_id_of(req: &Json) -> Option<&str> {
+    req.get("job").and_then(Json::as_str)
+}
+
+fn handle_status(
+    stream: &mut UnixStream,
+    ctx: &Arc<Ctx>,
+    req: &Json,
+) -> bool {
+    let Some(id) = job_id_of(req) else {
+        return reply(
+            stream,
+            proto::err(kind::BAD_REQUEST, "status needs a \"job\" id"),
+        );
+    };
+    match ctx.table.status(id) {
+        Some(st) => reply(stream, proto::ok(vec![("status", st)])),
+        None => reply(
+            stream,
+            proto::err(kind::UNKNOWN_JOB, format!("no job {id:?}")),
+        ),
+    }
+}
+
+fn handle_result(
+    stream: &mut UnixStream,
+    ctx: &Arc<Ctx>,
+    req: &Json,
+) -> bool {
+    let Some(id) = job_id_of(req) else {
+        return reply(
+            stream,
+            proto::err(kind::BAD_REQUEST, "result needs a \"job\" id"),
+        );
+    };
+    let Some((state, output, error)) = ctx.table.result(id) else {
+        return reply(
+            stream,
+            proto::err(kind::UNKNOWN_JOB, format!("no job {id:?}")),
+        );
+    };
+    let mut fields = vec![
+        ("job", id.into()),
+        ("state", state.name().into()),
+    ];
+    if let Some(out) = output {
+        fields.push(("spikes", out.spikes_text.as_str().into()));
+        fields.push(("stats", out.stats));
+    }
+    if let Some(err) = error {
+        fields.push(("error", err.as_str().into()));
+    }
+    reply(stream, proto::ok(fields))
+}
+
+fn handle_cancel(
+    stream: &mut UnixStream,
+    ctx: &Arc<Ctx>,
+    req: &Json,
+) -> bool {
+    let Some(id) = job_id_of(req) else {
+        return reply(
+            stream,
+            proto::err(kind::BAD_REQUEST, "cancel needs a \"job\" id"),
+        );
+    };
+    match ctx.table.cancel(id) {
+        Some(seen) => reply(
+            stream,
+            proto::ok(vec![
+                ("job", id.into()),
+                ("was", seen.name().into()),
+            ]),
+        ),
+        None => reply(
+            stream,
+            proto::err(kind::UNKNOWN_JOB, format!("no job {id:?}")),
+        ),
+    }
+}
+
+/// `submit`: validate the whole sweep grid *before* enqueuing anything
+/// (a bad grid point is a typed `bad-params` rejection with nothing
+/// started), then enqueue one job per grid point and optionally follow.
+fn handle_submit(
+    stream: &mut UnixStream,
+    ctx: &Arc<Ctx>,
+    req: &Json,
+) -> bool {
+    let Some(scenario) = req.get("scenario").and_then(Json::as_str)
+    else {
+        return reply(
+            stream,
+            proto::err(
+                kind::BAD_REQUEST,
+                "submit needs a string \"scenario\"",
+            ),
+        );
+    };
+    let Some(s) = ctx.catalog.get(scenario) else {
+        return reply(
+            stream,
+            proto::err(
+                kind::UNKNOWN_SCENARIO,
+                format!(
+                    "no scenario {scenario:?} (have: {})",
+                    ctx.catalog.names().join(", ")
+                ),
+            ),
+        );
+    };
+    let params = match req.get("params") {
+        None => BTreeMap::new(),
+        Some(v) => match v.as_obj() {
+            Some(o) => o.clone(),
+            None => {
+                return reply(
+                    stream,
+                    proto::err(
+                        kind::BAD_REQUEST,
+                        "\"params\" must be an object",
+                    ),
+                )
+            }
+        },
+    };
+    let mut sweep: BTreeMap<String, Vec<Json>> = BTreeMap::new();
+    if let Some(v) = req.get("sweep") {
+        let Some(obj) = v.as_obj() else {
+            return reply(
+                stream,
+                proto::err(
+                    kind::BAD_REQUEST,
+                    "\"sweep\" must be an object of value lists",
+                ),
+            );
+        };
+        for (k, vals) in obj {
+            match vals.as_arr() {
+                Some(list) if !list.is_empty() => {
+                    sweep.insert(k.clone(), list.clone());
+                }
+                _ => {
+                    return reply(
+                        stream,
+                        proto::err(
+                            kind::BAD_REQUEST,
+                            format!(
+                                "sweep key {k:?} must map to a \
+                                 non-empty array"
+                            ),
+                        ),
+                    )
+                }
+            }
+        }
+    }
+
+    let grid = expand_sweep(&params, &sweep);
+    for point in &grid {
+        if let Err(e) = s.instantiate(point) {
+            return reply(
+                stream,
+                proto::err(kind::BAD_PARAMS, format!("{e:#}")),
+            );
+        }
+    }
+
+    let mut ids = Vec::with_capacity(grid.len());
+    for point in grid {
+        match ctx.table.submit(scenario, point) {
+            Some(id) => ids.push(id),
+            None => {
+                return reply(
+                    stream,
+                    proto::err(
+                        kind::SHUTDOWN,
+                        "server is shutting down",
+                    ),
+                )
+            }
+        }
+    }
+    let ok = proto::ok(vec![(
+        "jobs",
+        Json::Arr(ids.iter().map(|i| i.as_str().into()).collect()),
+    )]);
+    if !reply(stream, ok) {
+        return false;
+    }
+    if req.get("follow").and_then(Json::as_bool) == Some(true) {
+        // submit() recorded every event so far in the history the
+        // watch below replays — no gap between enqueue and follow
+        let Some((history, rx)) = ctx.table.watch(&ids) else {
+            return false;
+        };
+        return stream_events(stream, ctx, &ids, history, rx);
+    }
+    true
+}
+
+fn handle_watch(
+    stream: &mut UnixStream,
+    ctx: &Arc<Ctx>,
+    req: &Json,
+) -> bool {
+    let ids: Vec<String> = match req.get("jobs").and_then(Json::as_arr)
+    {
+        Some(list) => list
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect(),
+        None => match job_id_of(req) {
+            Some(id) => vec![id.to_string()],
+            None => {
+                return reply(
+                    stream,
+                    proto::err(
+                        kind::BAD_REQUEST,
+                        "watch needs \"job\" or \"jobs\"",
+                    ),
+                )
+            }
+        },
+    };
+    let Some((history, rx)) = ctx.table.watch(&ids) else {
+        return reply(
+            stream,
+            proto::err(kind::UNKNOWN_JOB, "unknown job in watch set"),
+        );
+    };
+    stream_events(stream, ctx, &ids, history, rx)
+}
+
+/// Forward history + live events until every followed job is terminal,
+/// then a final `{"event": "complete"}` frame.  The connection stays
+/// usable for further ops afterwards.
+fn stream_events(
+    stream: &mut UnixStream,
+    ctx: &Arc<Ctx>,
+    ids: &[String],
+    history: Vec<Json>,
+    rx: mpsc::Receiver<Json>,
+) -> bool {
+    let wanted: BTreeSet<&str> =
+        ids.iter().map(String::as_str).collect();
+    let mut terminal: BTreeSet<String> = BTreeSet::new();
+    let mut deliver = |stream: &mut UnixStream,
+                       ev: &Json,
+                       terminal: &mut BTreeSet<String>|
+     -> bool {
+        if let (Some(job), Some(state)) = (
+            ev.get("job").and_then(Json::as_str),
+            ev.get("state").and_then(Json::as_str),
+        ) {
+            if wanted.contains(job)
+                && ["done", "failed", "cancelled"].contains(&state)
+            {
+                terminal.insert(job.to_string());
+            }
+        }
+        proto::write_frame(stream, ev).is_ok()
+    };
+    for ev in &history {
+        if !deliver(stream, ev, &mut terminal) {
+            return false;
+        }
+    }
+    while terminal.len() < wanted.len() {
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(ev) => {
+                if !deliver(stream, &ev, &mut terminal) {
+                    return false;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if ctx.stop.load(Ordering::Relaxed) {
+                    let _ = proto::write_frame(
+                        stream,
+                        &proto::err(
+                            kind::SHUTDOWN,
+                            "server is shutting down",
+                        ),
+                    );
+                    return false;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    proto::write_frame(
+        stream,
+        &Json::obj(vec![
+            ("event", "complete".into()),
+            (
+                "jobs",
+                Json::Arr(
+                    ids.iter().map(|i| i.as_str().into()).collect(),
+                ),
+            ),
+        ]),
+    )
+    .is_ok()
+}

@@ -1,0 +1,544 @@
+//! End-to-end tests of the serving layer: `nsim serve`'s job server
+//! must be a *layer over* the engine, not a fork of it — the spike
+//! train a job streams back is byte-identical to the direct
+//! `nsim simulate` run of the same config, for every catalog scenario,
+//! including with jobs running concurrently.  Plus the lifecycle side:
+//! cancellation mid-run frees the worker slot and reports `cancelled`,
+//! malformed submissions get typed error frames (never a dead
+//! connection), per-job timeouts fail the job, a kill-injected job
+//! resumes from its checkpoint, and per-job `--stats-json`/`--trace`
+//! outputs land under deterministic `job-<n>` suffixes.
+
+#![cfg(unix)]
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::{Duration, Instant};
+
+use nsim::engine;
+use nsim::serve::{start, Catalog, Client, ServeOpts, ServerHandle};
+use nsim::util::json::{self, Json};
+
+fn nsim_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_nsim")
+}
+
+/// Unique scratch path under the system temp dir.
+fn tmp_path(tag: &str) -> PathBuf {
+    static NEXT: std::sync::atomic::AtomicU64 =
+        std::sync::atomic::AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "nsim-serve-{}-{n}-{tag}",
+        std::process::id()
+    ))
+}
+
+/// A server on a fresh socket with its own scratch workdir.
+fn start_server(tag: &str, configure: impl FnOnce(&mut ServeOpts)) -> (ServerHandle, PathBuf) {
+    let socket = tmp_path(&format!("{tag}.sock"));
+    let mut opts = ServeOpts::new(&socket);
+    opts.workdir = tmp_path(&format!("{tag}.work"));
+    configure(&mut opts);
+    let handle = start(opts).expect("starting job server");
+    (handle, socket)
+}
+
+/// The reference result: instantiate the scenario exactly as the server
+/// does and run it through the plain engine, formatting the spike train
+/// with the canonical `"{step} {gid}\n"` lines `--spikes-out` writes.
+fn reference_spikes_text(
+    scenario: &str,
+    params: &BTreeMap<String, Json>,
+) -> String {
+    let cat = Catalog::builtin();
+    let s = cat.get(scenario).expect("scenario in builtin catalog");
+    let (spec, cfg, _) = s.instantiate(params).expect("instantiate");
+    let res = engine::simulate(&spec, &cfg).expect("reference run");
+    let mut text = String::with_capacity(res.spikes.len() * 12);
+    for &(step, gid) in &res.spikes {
+        let _ = writeln!(text, "{step} {gid}");
+    }
+    text
+}
+
+fn p(entries: &[(&str, Json)]) -> BTreeMap<String, Json> {
+    entries
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.clone()))
+        .collect()
+}
+
+/// Submit with follow and return every job's terminal outcome.
+fn submit_and_follow(
+    socket: &PathBuf,
+    scenario: &str,
+    params: &BTreeMap<String, Json>,
+    sweep: &BTreeMap<String, Json>,
+) -> (Vec<nsim::serve::client::JobEnd>, Vec<Json>) {
+    let mut client = Client::connect(socket).expect("connect");
+    client
+        .submit(scenario, params, sweep, true)
+        .expect("submit");
+    let mut events = Vec::new();
+    let ends = client
+        .follow_until_complete(|ev| events.push(ev.clone()))
+        .expect("follow");
+    (ends, events)
+}
+
+fn shutdown(handle: ServerHandle) {
+    handle.shutdown();
+    handle.join();
+}
+
+// ---------------------------------------------------------------------
+// equivalence: serving is a layer over the engine
+
+/// For every builtin catalog scenario, the spike train streamed through
+/// `serve`/`submit` is byte-identical to the direct run of the same
+/// config.  Params shrink each scenario so debug-mode CI stays fast —
+/// the shrink goes through the same parameter routing a user's would.
+#[test]
+fn every_catalog_scenario_streams_identical_to_direct_run() {
+    let shrink: &[(&str, BTreeMap<String, Json>)] = &[
+        ("mam-ground-state", p(&[("t_model_ms", Json::Num(5.0))])),
+        (
+            "deliver-heavy",
+            p(&[
+                ("n_per_area", Json::Num(150.0)),
+                ("t_model_ms", Json::Num(10.0)),
+            ]),
+        ),
+        (
+            "deep-pipeline",
+            p(&[
+                ("n_per_area", Json::Num(120.0)),
+                ("t_model_ms", Json::Num(10.0)),
+            ]),
+        ),
+        ("mam-lesion-v1", p(&[("t_model_ms", Json::Num(10.0))])),
+    ];
+    let cat = Catalog::builtin();
+    assert_eq!(
+        cat.names().len(),
+        shrink.len(),
+        "new builtin scenario? cover it here"
+    );
+
+    let (handle, socket) = start_server("every", |_| {});
+    for (scenario, params) in shrink {
+        let (ends, events) =
+            submit_and_follow(&socket, scenario, params, &BTreeMap::new());
+        assert_eq!(ends.len(), 1, "{scenario}");
+        let end = &ends[0];
+        assert_eq!(end.state, "done", "{scenario}: {:?}", end.error);
+        let want = reference_spikes_text(scenario, params);
+        assert!(!want.is_empty(), "{scenario}: silent reference net");
+        assert_eq!(
+            end.spikes.as_deref(),
+            Some(want.as_str()),
+            "{scenario}: streamed train differs from the direct run"
+        );
+        // the stats document is the nsim-stats-v1 report with the job
+        // id stamped into the config block
+        let stats = end.stats.as_ref().expect("stats document");
+        assert_eq!(
+            stats.get("schema").and_then(Json::as_str),
+            Some("nsim-stats-v1")
+        );
+        assert_eq!(
+            stats
+                .get("config")
+                .and_then(|c| c.get("job"))
+                .and_then(Json::as_str),
+            Some(end.job.as_str())
+        );
+        // periodic progress frames arrived while the job ran
+        let progressed = events.iter().any(|ev| {
+            ev.get("event").and_then(Json::as_str) == Some("progress")
+                && ev.get("job").and_then(Json::as_str)
+                    == Some(end.job.as_str())
+        });
+        assert!(progressed, "{scenario}: no progress frames streamed");
+    }
+    shutdown(handle);
+}
+
+/// The streamed result is byte-identical to what the *actual CLI*
+/// writes with `--spikes-out` — the same bytes `cmp` checks in the CI
+/// `serve-smoke` job.
+#[test]
+fn streamed_result_matches_direct_cli_run() {
+    let params = p(&[
+        ("n_per_area", Json::Num(150.0)),
+        ("t_model_ms", Json::Num(10.0)),
+    ]);
+    let (handle, socket) = start_server("cli", |_| {});
+    let (ends, _) = submit_and_follow(
+        &socket,
+        "deliver-heavy",
+        &params,
+        &BTreeMap::new(),
+    );
+    shutdown(handle);
+    assert_eq!(ends[0].state, "done", "{:?}", ends[0].error);
+    let streamed = ends[0].spikes.clone().expect("spike train");
+
+    let out_path = tmp_path("cli.spikes");
+    let output = Command::new(nsim_bin())
+        .args(["simulate", "--model", "sanity"])
+        .args(["--n-per-area", "150", "--areas", "4"])
+        .args(["--strategy", "conventional"])
+        .args(["--ranks", "2", "--threads", "2"])
+        .args(["--t-model", "10", "--seed", "12"])
+        .args(["--spikes-out", &out_path.to_string_lossy()])
+        .output()
+        .expect("running nsim simulate");
+    assert!(
+        output.status.success(),
+        "direct CLI run failed:\n{}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let direct = std::fs::read_to_string(&out_path).expect("spike file");
+    let _ = std::fs::remove_file(&out_path);
+    assert_eq!(streamed, direct, "streamed bytes != direct CLI bytes");
+}
+
+/// Two jobs running concurrently (2 workers, submitted as one sweep)
+/// stream the same trains their solo runs produce — no interleaving,
+/// no cross-job perturbation.
+#[test]
+fn concurrent_jobs_are_bit_identical_to_solo_runs() {
+    let base = p(&[("n_per_area", Json::Num(150.0))]);
+    // sweep over t_model: two jobs with distinct references, claimed by
+    // the two workers at the same time
+    let sweep = p(&[(
+        "t_model_ms",
+        Json::Arr(vec![Json::Num(10.0), Json::Num(15.0)]),
+    )]);
+    let (handle, socket) = start_server("conc", |o| o.workers = 2);
+    let (ends, _) =
+        submit_and_follow(&socket, "deliver-heavy", &base, &sweep);
+    shutdown(handle);
+    assert_eq!(ends.len(), 2);
+    for (end, t_model) in ends.iter().zip([10.0, 15.0]) {
+        assert_eq!(end.state, "done", "{}: {:?}", end.job, end.error);
+        let mut params = base.clone();
+        params.insert("t_model_ms".to_string(), Json::Num(t_model));
+        let want = reference_spikes_text("deliver-heavy", &params);
+        assert_eq!(
+            end.spikes.as_deref(),
+            Some(want.as_str()),
+            "{}: concurrent train differs from solo run",
+            end.job
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// lifecycle: cancellation, timeouts, typed rejections, resume
+
+/// Cancelling a running job reports `cancelled` and frees the worker
+/// slot: a follow-up job on the same single-worker server completes.
+#[test]
+fn cancellation_mid_run_frees_the_worker_slot() {
+    let (handle, socket) = start_server("cancel", |o| o.workers = 1);
+    let mut submitter = Client::connect(&socket).expect("connect");
+    // long enough that the cancel lands mid-run (cancellation is
+    // checked at every epoch boundary)
+    let long = p(&[
+        ("n_per_area", Json::Num(150.0)),
+        ("t_model_ms", Json::Num(60000.0)),
+    ]);
+    let ids = submitter
+        .submit("deliver-heavy", &long, &BTreeMap::new(), false)
+        .expect("submit");
+    let id = ids[0].clone();
+
+    let mut ctl = Client::connect(&socket).expect("connect");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = ctl.status(&id).expect("status");
+        match st.get("state").and_then(Json::as_str) {
+            Some("running") => break,
+            Some("done") | Some("failed") | Some("cancelled") => {
+                panic!("job went terminal before cancel: {st:?}")
+            }
+            _ => {}
+        }
+        assert!(Instant::now() < deadline, "job never started running");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let resp = ctl.cancel(&id).expect("cancel");
+    assert_eq!(resp.get("was").and_then(Json::as_str), Some("running"));
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = ctl.status(&id).expect("status");
+        let state = st.get("state").and_then(Json::as_str);
+        if state == Some("cancelled") {
+            break;
+        }
+        assert_ne!(state, Some("done"), "cancelled job reported done");
+        assert_ne!(
+            state,
+            Some("failed"),
+            "cancelled job reported failed: {st:?}"
+        );
+        assert!(Instant::now() < deadline, "cancel never landed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // the single worker is free again: a small job completes
+    let small = p(&[
+        ("n_per_area", Json::Num(120.0)),
+        ("t_model_ms", Json::Num(5.0)),
+    ]);
+    let (ends, _) = submit_and_follow(
+        &socket,
+        "deliver-heavy",
+        &small,
+        &BTreeMap::new(),
+    );
+    assert_eq!(ends[0].state, "done", "{:?}", ends[0].error);
+    shutdown(handle);
+}
+
+/// A job past its `timeout_secs` wall-clock deadline fails (with the
+/// timeout named), it does not report `cancelled`.
+#[test]
+fn job_timeout_fails_the_job() {
+    let (handle, socket) = start_server("timeout", |_| {});
+    let params = p(&[
+        ("n_per_area", Json::Num(150.0)),
+        ("t_model_ms", Json::Num(60000.0)),
+        ("timeout_secs", Json::Num(0.2)),
+    ]);
+    let (ends, _) = submit_and_follow(
+        &socket,
+        "deliver-heavy",
+        &params,
+        &BTreeMap::new(),
+    );
+    shutdown(handle);
+    assert_eq!(ends[0].state, "failed");
+    let err = ends[0].error.as_deref().unwrap_or_default();
+    assert!(err.contains("timeout"), "error must name the timeout: {err}");
+}
+
+/// Malformed frames and bad submissions are typed error frames, never a
+/// dead connection: after a rejected op the same connection keeps
+/// serving.
+#[test]
+fn malformed_jobs_are_rejected_with_typed_errors() {
+    let (handle, socket) = start_server("reject", |_| {});
+    let mut client = Client::connect(&socket).expect("connect");
+
+    // unknown scenario: typed unknown-scenario naming the catalog
+    let err = client
+        .submit("no-such-net", &BTreeMap::new(), &BTreeMap::new(), false)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown-scenario"), "{msg}");
+    assert!(msg.contains("deliver-heavy"), "must list the catalog: {msg}");
+
+    // bad params: typed bad-params before anything is enqueued
+    let err = client
+        .submit(
+            "deliver-heavy",
+            &p(&[("warp_factor", Json::Num(9.0))]),
+            &BTreeMap::new(),
+            false,
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("bad-params"), "{err:#}");
+
+    // a bad sweep grid point rejects the whole submission atomically
+    let err = client
+        .submit(
+            "deliver-heavy",
+            &BTreeMap::new(),
+            &p(&[("lesion_factor", Json::Arr(vec![Json::Num(0.3)]))]),
+            false,
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("bad-params"), "{err:#}");
+    let jobs = client.jobs().expect("jobs");
+    assert_eq!(
+        jobs.as_arr().map(Vec::len),
+        Some(0),
+        "rejected submissions must enqueue nothing"
+    );
+
+    // ops on unknown jobs: typed unknown-job
+    let err = client.status("job-99").unwrap_err();
+    assert!(format!("{err:#}").contains("unknown-job"), "{err:#}");
+    let err = client.cancel("job-99").unwrap_err();
+    assert!(format!("{err:#}").contains("unknown-job"), "{err:#}");
+
+    // a request that is not even an object: typed bad-request, and the
+    // connection still answers a ping afterwards
+    let resp = client.request(&Json::Num(42.0)).unwrap_err();
+    assert!(format!("{resp:#}").contains("bad-request"), "{resp:#}");
+    client.ping().expect("connection must survive rejections");
+
+    // raw garbage that parses as no JSON at all: an error frame comes
+    // back before the server hangs up (torn framing cannot recover)
+    use std::io::{Read, Write};
+    let mut raw =
+        std::os::unix::net::UnixStream::connect(&socket).expect("raw");
+    let garbage = b"not json";
+    raw.write_all(&(garbage.len() as u32).to_le_bytes()).unwrap();
+    raw.write_all(garbage).unwrap();
+    let mut hdr = [0u8; 4];
+    raw.read_exact(&mut hdr).expect("typed error frame, not EOF");
+    let len = u32::from_le_bytes(hdr) as usize;
+    let mut payload = vec![0u8; len];
+    raw.read_exact(&mut payload).unwrap();
+    let v = json::parse(std::str::from_utf8(&payload).unwrap()).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(
+        v.get("kind").and_then(Json::as_str),
+        Some("bad-request")
+    );
+    shutdown(handle);
+}
+
+/// A job killed by the existing `--kill-at` fault plan restarts from
+/// its checkpoint (one `resume` event) and completes with the reference
+/// train of an uninterrupted run.
+#[test]
+fn killed_job_resumes_from_checkpoint_with_reference_train() {
+    let (handle, socket) = start_server("resume", |_| {});
+    let faulty = p(&[
+        ("n_per_area", Json::Num(150.0)),
+        ("t_model_ms", Json::Num(40.0)),
+        ("kill_at", Json::Str("1:2".to_string())),
+        ("comm_timeout", Json::Num(5.0)),
+        ("checkpoint_every", Json::Num(1.0)),
+    ]);
+    let (ends, events) = submit_and_follow(
+        &socket,
+        "deliver-heavy",
+        &faulty,
+        &BTreeMap::new(),
+    );
+    shutdown(handle);
+    assert_eq!(ends[0].state, "done", "{:?}", ends[0].error);
+    let resumed = events.iter().any(|ev| {
+        ev.get("event").and_then(Json::as_str) == Some("resume")
+    });
+    assert!(resumed, "no resume event — did the kill fire?");
+
+    // reference: the same config without the fault or checkpointing
+    let clean = p(&[
+        ("n_per_area", Json::Num(150.0)),
+        ("t_model_ms", Json::Num(40.0)),
+    ]);
+    let want = reference_spikes_text("deliver-heavy", &clean);
+    assert_eq!(
+        ends[0].spikes.as_deref(),
+        Some(want.as_str()),
+        "resumed train differs from the uninterrupted run"
+    );
+}
+
+// ---------------------------------------------------------------------
+// per-job outputs and the catalog CLI
+
+/// Per-job stats/trace outputs land under deterministic `job-<n>`
+/// suffixes (the server-side analogue of `nsim launch`'s `.rank<r>`),
+/// with `config.job` stamped into each stats document.
+#[test]
+fn per_job_outputs_get_job_suffixes() {
+    let stats_base = tmp_path("stats.json");
+    let trace_base = tmp_path("trace.json");
+    let (handle, socket) = start_server("outputs", |o| {
+        o.workers = 1;
+        o.stats_base = Some(stats_base.to_string_lossy().into_owned());
+        o.trace_base = Some(trace_base.to_string_lossy().into_owned());
+    });
+    let params = p(&[
+        ("n_per_area", Json::Num(120.0)),
+        ("t_model_ms", Json::Num(5.0)),
+    ]);
+    let sweep = p(&[(
+        "seed",
+        Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]),
+    )]);
+    let (ends, _) =
+        submit_and_follow(&socket, "deliver-heavy", &params, &sweep);
+    shutdown(handle);
+    assert_eq!(ends.len(), 2);
+    for (end, n) in ends.iter().zip(0..) {
+        assert_eq!(end.state, "done", "{:?}", end.error);
+        assert_eq!(end.job, format!("job-{n}"), "deterministic ids");
+        let stats_path =
+            format!("{}.job-{n}", stats_base.to_string_lossy());
+        let text = std::fs::read_to_string(&stats_path)
+            .unwrap_or_else(|e| panic!("reading {stats_path}: {e}"));
+        let doc = json::parse(&text).expect("stats JSON");
+        assert_eq!(
+            doc.get("config")
+                .and_then(|c| c.get("job"))
+                .and_then(Json::as_str),
+            Some(format!("job-{n}").as_str())
+        );
+        let trace_path =
+            format!("{}.job-{n}", trace_base.to_string_lossy());
+        let text = std::fs::read_to_string(&trace_path)
+            .unwrap_or_else(|e| panic!("reading {trace_path}: {e}"));
+        let doc = json::parse(&text).expect("trace JSON");
+        assert!(
+            doc.get("traceEvents")
+                .and_then(Json::as_arr)
+                .is_some_and(|evs| !evs.is_empty()),
+            "trace must carry spans"
+        );
+        let _ = std::fs::remove_file(&stats_path);
+        let _ = std::fs::remove_file(&trace_path);
+    }
+}
+
+/// `nsim scenarios` lists the built-in catalog, overlays `--dir` files
+/// by name, and `--json` emits the machine-readable catalog.
+#[test]
+fn scenarios_cli_lists_builtins_and_overlays() {
+    let dir = tmp_path("cat");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("custom.json"),
+        r#"{"name": "custom-net",
+            "description": "an overlay scenario",
+            "model": {"kind": "sanity", "n_per_area": 64},
+            "config": {"t_model_ms": 5.0}}"#,
+    )
+    .unwrap();
+    let output = Command::new(nsim_bin())
+        .args(["scenarios", "--dir", &dir.to_string_lossy()])
+        .output()
+        .expect("running nsim scenarios");
+    assert!(output.status.success());
+    let text = String::from_utf8_lossy(&output.stdout);
+    for name in [
+        "mam-ground-state",
+        "deliver-heavy",
+        "deep-pipeline",
+        "mam-lesion-v1",
+        "custom-net",
+    ] {
+        assert!(text.contains(name), "listing misses {name}:\n{text}");
+    }
+    let output = Command::new(nsim_bin())
+        .args(["scenarios", "--dir", &dir.to_string_lossy(), "--json"])
+        .output()
+        .expect("running nsim scenarios --json");
+    assert!(output.status.success());
+    let doc =
+        json::parse(&String::from_utf8_lossy(&output.stdout)).unwrap();
+    assert!(doc.as_arr().is_some_and(|a| a.len() == 5));
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 from collections import defaultdict
 
@@ -167,7 +168,18 @@ def check_stats(doc):
             f"config.transport is {transport!r}, expected a name like "
             "'shmem' or 'socket'")
         return problems
-    print(f"stats: transport {transport}, {cfg.get('m_ranks')} rank(s)")
+    # config.job is stamped by the serving layer on per-job documents
+    # (the `.job-<n>` suffixed files `nsim serve --stats-json` writes);
+    # direct CLI reports simply lack it, which stays valid
+    job = cfg.get("job")
+    if job is not None and not re.fullmatch(r"job-\d+", str(job)):
+        problems.append(
+            f"config.job is {job!r}, expected a server job id like "
+            "'job-3'")
+        return problems
+    tag = f", job {job}" if job is not None else ""
+    print(f"stats: transport {transport}, {cfg.get('m_ranks')} rank(s)"
+          f"{tag}")
     stragglers = doc["stragglers"]
     # each ledger is {"waits": [per blamed rank], "lateness_secs": [..]};
     # fold them and check the report's own top entry is their argmax
